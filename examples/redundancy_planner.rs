@@ -1,0 +1,62 @@
+//! Redundancy-planner walkthrough: how the optimal operating point
+//! moves with the service-time family and its parameters — the
+//! decision procedure the paper's §VI derives.
+//!
+//! ```bash
+//! cargo run --release --example redundancy_planner
+//! ```
+
+use replica::dist::ServiceDist;
+use replica::experiments::regimes;
+use replica::metrics::{fnum, Table};
+use replica::planner::{Objective, Planner};
+
+fn main() {
+    let n = 100;
+
+    // 1. Regime tables straight from the theorems.
+    regimes::sexp_mean_table(n, 0.05, &[0.1, 0.5, 1.0, 2.0, 5.0, 14.0, 20.0]).print();
+    println!();
+    regimes::sexp_cov_table(n, 0.05, &[0.2, 0.5, 3.0, 40.0]).print();
+    println!();
+    regimes::pareto_table(n, 1.0, &[1.5, 2.5, 3.5, 5.0, 7.0]).print();
+    println!();
+    regimes::tradeoff_table(n).print();
+
+    // 2. A worked plan for each family.
+    println!();
+    let mut t = Table::new(
+        "planner decisions (N=100, objective = mean completion)",
+        vec!["service dist", "B*", "replication", "E[T]", "speedup vs B=N"],
+    );
+    for tau in [
+        ServiceDist::exp(1.0),
+        ServiceDist::shifted_exp(0.05, 1.0),
+        ServiceDist::shifted_exp(1.0, 5.0),
+        ServiceDist::pareto(1.0, 1.5),
+        ServiceDist::pareto(1.0, 7.0),
+        ServiceDist::weibull(0.6, 1.0),
+    ] {
+        let plan = Planner::new(n, tau.clone()).plan(Objective::MeanCompletion);
+        t.row(vec![
+            tau.label(),
+            plan.batches.to_string(),
+            plan.replication.to_string(),
+            fnum(plan.predicted_mean),
+            format!("{}x", fnum(plan.speedup_vs_no_redundancy)),
+        ]);
+    }
+    t.print();
+
+    // 3. The Pareto front a system administrator picks from.
+    println!();
+    let planner = Planner::new(n, ServiceDist::shifted_exp(0.05, 1.0));
+    let mut front = Table::new(
+        "mean/CoV Pareto front, tau ~ SExp(0.05, 1), N=100",
+        vec!["B", "E[T]", "CoV[T]"],
+    );
+    for p in planner.tradeoff_front() {
+        front.row(vec![p.batches.to_string(), fnum(p.mean), fnum(p.cov)]);
+    }
+    front.print();
+}

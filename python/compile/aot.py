@@ -1,0 +1,97 @@
+"""AOT compile path: lower L2 entrypoints to HLO *text* artifacts.
+
+Run once by ``make artifacts``; the Rust coordinator loads the text via
+``HloModuleProto::from_text_file`` and executes on the PJRT CPU client.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+the image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--d 64] [--m 256]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+DTYPE = jnp.float32
+DTYPE_NAME = "f32"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, DTYPE)
+
+
+def entrypoints(m: int, d: int):
+    """(name, fn, arg_specs, output arity) for every artifact we emit.
+
+    Two shard sizes are emitted for each per-worker task: the primary
+    ``m`` and a half-size shard, so the coordinator can serve batches at
+    two granularities without re-lowering.
+    """
+    eps = []
+    for mm in sorted({m, max(8, m // 2)}):
+        eps.append((f"partial_grad_m{mm}_d{d}", model.partial_grad,
+                    [_spec(d), _spec(mm, d), _spec(mm)], 1))
+        eps.append((f"partial_grad_loss_m{mm}_d{d}", model.partial_grad_loss,
+                    [_spec(d), _spec(mm, d), _spec(mm)], 2))
+        eps.append((f"full_step_m{mm}_d{d}", model.full_step,
+                    [_spec(d), _spec(mm, d), _spec(mm), _spec()], 2))
+    eps.append((f"sgd_update_d{d}", model.sgd_update,
+                [_spec(d), _spec(d), _spec()], 1))
+    return eps
+
+
+def lower_all(out_dir: str, m: int, d: int) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"dtype": DTYPE_NAME, "d": d, "m": m, "entries": []}
+    for name, fn, specs, n_out in entrypoints(m, d):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["entries"].append({
+            "name": name,
+            "file": fname,
+            "args": [{"shape": list(s.shape), "dtype": DTYPE_NAME} for s in specs],
+            "outputs": n_out,
+        })
+        print(f"  lowered {name}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--d", type=int, default=64, help="feature dimension")
+    ap.add_argument("--m", type=int, default=256, help="primary shard rows")
+    args = ap.parse_args()
+    manifest = lower_all(args.out_dir, args.m, args.d)
+    print(f"wrote {len(manifest['entries'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""L1 Pallas kernels: the partial-gradient hot-spot of distributed GD.
+
+TPU-first design (see DESIGN.md SS Hardware-Adaptation):
+
+* The shard matrix ``X (m, d)`` streams HBM->VMEM in row tiles of
+  ``block_m`` rows via ``BlockSpec``; ``beta (d,)`` and the ``(d,)``
+  gradient accumulator stay resident in VMEM for the whole grid.
+* Each grid step performs two MXU-shaped contractions over the tile:
+  ``r = X_t @ beta - y_t`` and ``g += X_t^T @ r`` -- the canonical
+  "normal equations" tiling, so arithmetic intensity grows with ``d``.
+* The fused variant also accumulates ``0.5 * ||r||^2`` so the residual is
+  computed once (no recomputation between grad and loss -- an L2 perf
+  item in DESIGN.md SS Perf).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels lower to plain HLO. Correctness vs
+``kernels.ref`` is enforced by pytest + hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_M = 128
+
+
+def _grid(m: int, block_m: int) -> int:
+    """Number of row tiles (ceil division)."""
+    return (m + block_m - 1) // block_m
+
+
+def _masked_tile(x_ref, y_ref, step, block_m: int, m: int):
+    """Load a row tile with grid-padding rows *zeroed*.
+
+    The last grid step may run past ``m``; padded rows hold garbage (NaN
+    under interpret mode), and ``NaN * 0 == NaN``, so the mask must be a
+    ``where``-select on the inputs rather than a multiplicative mask on
+    the residual.
+    """
+    row = step * block_m + jax.lax.broadcasted_iota(jnp.int32, (block_m,), 0)
+    valid = row < m
+    x_t = jnp.where(valid[:, None], x_ref[...], 0)
+    y_t = jnp.where(valid, y_ref[...], 0)
+    return x_t, y_t
+
+
+def _partial_gradient_kernel(x_ref, beta_ref, y_ref, g_ref, *, block_m: int, m: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    x_t, y_t = _masked_tile(x_ref, y_ref, step, block_m, m)
+    residual = x_t @ beta_ref[...] - y_t
+    g_ref[...] += x_t.T @ residual
+
+
+def _grad_and_loss_kernel(x_ref, beta_ref, y_ref, g_ref, loss_ref, *, block_m: int, m: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    x_t, y_t = _masked_tile(x_ref, y_ref, step, block_m, m)
+    residual = x_t @ beta_ref[...] - y_t
+    g_ref[...] += x_t.T @ residual
+    loss_ref[...] += 0.5 * jnp.sum(residual * residual, keepdims=True)
+
+
+def _specs(block_m: int, d: int):
+    """Input BlockSpecs shared by both kernels: X tiled, beta/y per-tile."""
+    return [
+        pl.BlockSpec((block_m, d), lambda i: (i, 0)),  # X: row tiles
+        pl.BlockSpec((d,), lambda i: (0,)),  # beta: VMEM-resident
+        pl.BlockSpec((block_m,), lambda i: (i,)),  # y: row tiles
+    ]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def partial_gradient(beta: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray,
+                     *, block_m: int = DEFAULT_BLOCK_M) -> jnp.ndarray:
+    """Unnormalized partial gradient ``X^T (X beta - y)`` via Pallas.
+
+    Args:
+      beta: model vector, shape ``(d,)``.
+      x: shard design matrix, shape ``(m, d)``.
+      y: shard targets, shape ``(m,)``.
+      block_m: rows per VMEM tile (grid is ``ceil(m / block_m)``).
+
+    Returns:
+      Gradient of shape ``(d,)`` matching ``ref.partial_gradient_ref``.
+    """
+    m, d = x.shape
+    block_m = min(block_m, m)
+    kernel = functools.partial(_partial_gradient_kernel, block_m=block_m, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=(_grid(m, block_m),),
+        in_specs=_specs(block_m, d),
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        interpret=True,
+    )(x, beta, y)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def grad_and_loss(beta: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray,
+                  *, block_m: int = DEFAULT_BLOCK_M):
+    """Fused unnormalized (gradient, loss): one pass over the shard.
+
+    Returns ``(g, loss)`` with shapes ``((d,), (1,))`` matching
+    ``ref.grad_and_loss_ref``.
+    """
+    m, d = x.shape
+    block_m = min(block_m, m)
+    kernel = functools.partial(_grad_and_loss_kernel, block_m=block_m, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=(_grid(m, block_m),),
+        in_specs=_specs(block_m, d),
+        out_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+        ],
+        interpret=True,
+    )(x, beta, y)
+
+
+def vmem_footprint_bytes(m: int, d: int, block_m: int = DEFAULT_BLOCK_M,
+                         dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step (see DESIGN.md SS Perf).
+
+    X tile + y tile + beta + gradient accumulator + loss accumulator.
+    """
+    block_m = min(block_m, m)
+    return dtype_bytes * (block_m * d + block_m + d + d + 1)

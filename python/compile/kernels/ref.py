@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness reference).
+
+The workload is the paper's motivating distributed-gradient-descent job
+(Sec. II-B, eq. (2)): a worker holds a shard ``(X, y)`` of the dataset and
+computes the partial gradient of the squared loss
+
+    L(beta; X, y) = 0.5 * ||X @ beta - y||^2
+
+All reference functions return *unnormalized sums* (no division by the
+shard size); layer 2 (`compile.model`) owns normalization so the kernel
+and the oracle stay bit-comparable.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def partial_gradient_ref(beta: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Unnormalized partial gradient  X^T (X beta - y)  of shape (d,)."""
+    residual = x @ beta - y
+    return x.T @ residual
+
+
+def partial_loss_ref(beta: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Unnormalized partial squared loss  0.5 ||X beta - y||^2, shape (1,)."""
+    residual = x @ beta - y
+    return 0.5 * jnp.sum(residual * residual, keepdims=True)
+
+
+def grad_and_loss_ref(beta: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray):
+    """Fused (gradient, loss) pair sharing one residual computation."""
+    residual = x @ beta - y
+    grad = x.T @ residual
+    loss = 0.5 * jnp.sum(residual * residual, keepdims=True)
+    return grad, loss
+
+
+def sgd_update_ref(beta: jnp.ndarray, grad: jnp.ndarray, lr: jnp.ndarray) -> jnp.ndarray:
+    """Plain gradient step  beta - lr * grad."""
+    return beta - lr * grad

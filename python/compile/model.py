@@ -1,0 +1,50 @@
+"""L2: the JAX compute graph for the paper's distributed-GD workload.
+
+The paper (Sec. II-B, eq. (2)) motivates its replication analysis with
+distributed gradient descent: the master holds the model ``beta``, the
+dataset is chunked into shards, and every worker computes the gradient of
+the loss over its shard. These functions are the *per-worker task* and
+the master's update rule; they call the L1 Pallas kernels and are lowered
+once by ``compile.aot`` to HLO-text artifacts the Rust coordinator
+executes via PJRT.
+
+All entrypoints return tuples (lowered with ``return_tuple=True``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels import gradient as K
+
+
+def partial_grad(beta: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray):
+    """Per-worker task: mean partial gradient over the shard, shape (d,)."""
+    m = x.shape[0]
+    g = K.partial_gradient(beta, x, y)
+    return (g / jnp.asarray(m, x.dtype),)
+
+
+def partial_grad_loss(beta: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray):
+    """Per-worker task returning (mean gradient (d,), mean loss (1,))."""
+    m = x.shape[0]
+    g, loss = K.grad_and_loss(beta, x, y)
+    inv_m = jnp.asarray(1.0 / m, x.dtype)
+    return (g * inv_m, loss * inv_m)
+
+
+def sgd_update(beta: jnp.ndarray, g: jnp.ndarray, lr: jnp.ndarray):
+    """Master update: beta' = beta - lr * g (lr is a scalar array)."""
+    return (beta - lr * g,)
+
+
+def full_step(beta: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray, lr: jnp.ndarray):
+    """Single-worker reference path: one fused GD step.
+
+    Returns (beta', mean loss (1,)); used by the runtime as the
+    no-replication baseline and by tests as the end-to-end oracle.
+    """
+    m = x.shape[0]
+    g, loss = K.grad_and_loss(beta, x, y)
+    inv_m = jnp.asarray(1.0 / m, x.dtype)
+    return (beta - lr * (g * inv_m), loss * inv_m)

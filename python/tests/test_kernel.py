@@ -1,0 +1,125 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compiled hot path; hypothesis
+sweeps shapes, block sizes, and dtypes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gradient as K
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def make_data(m, d, dtype=jnp.float32, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k1, (m, d), dtype)
+    beta = jax.random.normal(k2, (d,), dtype)
+    y = jax.random.normal(k3, (m,), dtype)
+    return beta, x, y
+
+
+def tol(dtype):
+    # bf16 has ~8 mantissa bits; tile-order changes the accumulation, so
+    # allow a couple of ULPs of relative slack.
+    return dict(rtol=6e-2, atol=5e-1) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=300),
+    d=st.integers(min_value=1, max_value=96),
+    block_m=st.sampled_from([8, 32, 128]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_partial_gradient_matches_ref(m, d, block_m, seed):
+    beta, x, y = make_data(m, d, seed=seed)
+    got = K.partial_gradient(beta, x, y, block_m=block_m)
+    want = ref.partial_gradient_ref(beta, x, y)
+    np.testing.assert_allclose(got, want, **tol(jnp.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=300),
+    d=st.integers(min_value=1, max_value=96),
+    block_m=st.sampled_from([8, 32, 128]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_grad_and_loss_matches_ref(m, d, block_m, seed):
+    beta, x, y = make_data(m, d, seed=seed)
+    g, loss = K.grad_and_loss(beta, x, y, block_m=block_m)
+    g_ref, loss_ref = ref.grad_and_loss_ref(beta, x, y)
+    np.testing.assert_allclose(g, g_ref, **tol(jnp.float32))
+    np.testing.assert_allclose(loss, loss_ref, **tol(jnp.float32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,d", [(64, 16), (200, 33)])
+def test_dtypes(dtype, m, d):
+    beta, x, y = make_data(m, d, dtype=dtype, seed=7)
+    g = K.partial_gradient(beta, x, y, block_m=32)
+    want = ref.partial_gradient_ref(beta, x, y)
+    np.testing.assert_allclose(
+        np.asarray(g, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+    assert g.dtype == dtype
+
+
+def test_exact_fit_gives_zero_gradient():
+    """If y = X beta exactly, the gradient and loss must be ~0."""
+    beta, x, _ = make_data(128, 24, seed=3)
+    y = x @ beta
+    g, loss = K.grad_and_loss(beta, x, y, block_m=32)
+    np.testing.assert_allclose(g, np.zeros(24), atol=1e-3)
+    np.testing.assert_allclose(loss, np.zeros(1), atol=1e-3)
+
+
+def test_zero_beta_gradient_is_minus_xty():
+    beta = jnp.zeros((24,), jnp.float32)
+    _, x, y = make_data(100, 24, seed=4)
+    g = K.partial_gradient(beta, x, y, block_m=32)
+    np.testing.assert_allclose(g, -(x.T @ y), rtol=2e-4, atol=2e-4)
+
+
+def test_single_row_shard():
+    beta, x, y = make_data(1, 8, seed=5)
+    g = K.partial_gradient(beta, x, y, block_m=128)
+    np.testing.assert_allclose(g, ref.partial_gradient_ref(beta, x, y), rtol=2e-4, atol=2e-4)
+
+
+def test_block_larger_than_m_is_clamped():
+    beta, x, y = make_data(17, 5, seed=6)
+    g = K.partial_gradient(beta, x, y, block_m=512)
+    np.testing.assert_allclose(g, ref.partial_gradient_ref(beta, x, y), rtol=2e-4, atol=2e-4)
+
+
+def test_ragged_tail_block_is_masked():
+    """m deliberately not divisible by block_m: padding rows contribute 0."""
+    beta, x, y = make_data(130, 16, seed=8)
+    g_ragged = K.partial_gradient(beta, x, y, block_m=64)  # grid of 3, last partial
+    g_exact = K.partial_gradient(beta, x, y, block_m=130)  # single block
+    np.testing.assert_allclose(g_ragged, g_exact, rtol=2e-4, atol=2e-4)
+
+
+def test_gradient_is_linear_in_y():
+    """g(beta, X, y1+y2) + X^T(X beta) = g(beta,X,y1) + g(beta,X,y2) sanity."""
+    beta, x, y1 = make_data(96, 12, seed=9)
+    _, _, y2 = make_data(96, 12, seed=10)
+    g12 = K.partial_gradient(beta, x, y1 + y2, block_m=32)
+    g1 = K.partial_gradient(beta, x, y1, block_m=32)
+    g2 = K.partial_gradient(beta, x, y2, block_m=32)
+    extra = x.T @ (x @ beta)  # the X^T X beta term double-counted in g1+g2
+    np.testing.assert_allclose(g12, g1 + g2 - extra, rtol=1e-3, atol=1e-3)
+
+
+def test_vmem_footprint_estimate():
+    fp = K.vmem_footprint_bytes(m=4096, d=128, block_m=128)
+    # 128x128 tile + vectors: must fit comfortably under 4 MiB (DESIGN SS Perf)
+    assert fp < 4 * 1024 * 1024
+    assert fp == 4 * (128 * 128 + 128 + 128 + 128 + 1)

@@ -1,0 +1,98 @@
+"""L2 correctness: model entrypoints vs jax.grad and end-to-end GD descent."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import gradient as K
+
+
+def make_problem(m, d, seed=0, noise=0.0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k1, (m, d), jnp.float32)
+    beta_star = jax.random.normal(k2, (d,), jnp.float32)
+    y = x @ beta_star + noise * jax.random.normal(k3, (m,), jnp.float32)
+    return x, y, beta_star
+
+
+def mean_loss(beta, x, y):
+    r = x @ beta - y
+    return 0.5 * jnp.mean(r * r) * 1.0  # scalar
+
+
+def test_partial_grad_equals_autodiff():
+    x, y, _ = make_problem(200, 32, seed=1, noise=0.3)
+    beta = jnp.zeros((32,), jnp.float32)
+    (g,) = model.partial_grad(beta, x, y)
+    # autodiff of the mean loss: note model normalizes by m, and
+    # d/dbeta [0.5/m ||r||^2] = X^T r / m
+    g_auto = jax.grad(lambda b: 0.5 / x.shape[0] * jnp.sum((x @ b - y) ** 2))(beta)
+    np.testing.assert_allclose(g, g_auto, rtol=2e-4, atol=2e-4)
+
+
+def test_partial_grad_loss_consistency():
+    x, y, _ = make_problem(128, 16, seed=2, noise=0.1)
+    beta = jnp.ones((16,), jnp.float32) * 0.1
+    g, loss = model.partial_grad_loss(beta, x, y)
+    (g_only,) = model.partial_grad(beta, x, y)
+    np.testing.assert_allclose(g, g_only, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(loss[0], mean_loss(beta, x, y), rtol=2e-4, atol=2e-4)
+
+
+def test_sgd_update():
+    beta = jnp.arange(8, dtype=jnp.float32)
+    g = jnp.ones((8,), jnp.float32)
+    (b2,) = model.sgd_update(beta, g, jnp.asarray(0.5, jnp.float32))
+    np.testing.assert_allclose(b2, beta - 0.5)
+
+
+def test_full_step_equals_partial_plus_update():
+    x, y, _ = make_problem(96, 12, seed=3, noise=0.05)
+    beta = jnp.zeros((12,), jnp.float32)
+    lr = jnp.asarray(0.01, jnp.float32)
+    b_full, loss_full = model.full_step(beta, x, y, lr)
+    g, loss = model.partial_grad_loss(beta, x, y)
+    (b_two,) = model.sgd_update(beta, g, lr)
+    np.testing.assert_allclose(b_full, b_two, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(loss_full, loss, rtol=1e-5, atol=1e-5)
+
+
+def test_gd_converges_to_ground_truth():
+    """A few hundred full steps on noiseless data recover beta*."""
+    x, y, beta_star = make_problem(256, 8, seed=4, noise=0.0)
+    beta = jnp.zeros((8,), jnp.float32)
+    lr = jnp.asarray(0.05, jnp.float32)
+    losses = []
+    for _ in range(300):
+        beta, loss = model.full_step(beta, x, y, lr)
+        losses.append(float(loss[0]))
+    assert losses[-1] < 1e-6
+    assert losses[-1] < losses[0] * 1e-4
+    np.testing.assert_allclose(beta, beta_star, rtol=1e-2, atol=1e-2)
+
+
+def test_loss_curve_monotone_under_small_lr():
+    x, y, _ = make_problem(128, 6, seed=5, noise=0.2)
+    beta = jnp.zeros((6,), jnp.float32)
+    lr = jnp.asarray(0.01, jnp.float32)
+    prev = float("inf")
+    for _ in range(50):
+        beta, loss = model.full_step(beta, x, y, lr)
+        assert float(loss[0]) <= prev + 1e-6
+        prev = float(loss[0])
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(8, 128), d=st.integers(1, 24), seed=st.integers(0, 999))
+def test_aggregated_shards_equal_global_gradient(m, d, seed):
+    """Master-side invariant: the mean of per-shard mean-gradients over
+    equal shards equals the global mean gradient (what replication must
+    preserve regardless of which replica answers)."""
+    x, y, _ = make_problem(2 * m, d, seed=seed, noise=0.5)
+    beta = jax.random.normal(jax.random.PRNGKey(seed + 1), (d,), jnp.float32)
+    (g_all,) = model.partial_grad(beta, x, y)
+    (g1,) = model.partial_grad(beta, x[:m], y[:m])
+    (g2,) = model.partial_grad(beta, x[m:], y[m:])
+    np.testing.assert_allclose((g1 + g2) / 2, g_all, rtol=5e-4, atol=5e-4)

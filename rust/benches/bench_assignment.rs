@@ -1,0 +1,31 @@
+//! Bench/regeneration: Lemma 2/3 — balanced vs unbalanced assignments
+//! across the three stochastically-convex families.
+
+use replica::dist::ServiceDist;
+use replica::experiments::assignment;
+use replica::metrics::bench;
+
+fn main() {
+    for tau in [
+        ServiceDist::exp(1.0),
+        ServiceDist::shifted_exp(0.1, 1.0),
+        ServiceDist::pareto(1.0, 2.5),
+    ] {
+        let rows = assignment::run(8, 2, &tau, 30_000, 11).expect("assignment");
+        assignment::table(8, 2, &tau, &rows).print();
+        println!();
+    }
+
+    // N=12, B=3: the richer partition lattice
+    let tau = ServiceDist::exp(1.0);
+    let rows = assignment::run(12, 3, &tau, 10_000, 13).expect("assignment");
+    assignment::table(12, 3, &tau, &rows).print();
+    println!();
+
+    let batch = ServiceDist::scaled(4.0, ServiceDist::exp(1.0));
+    bench("numeric_mean_var_assignment [4,4,4]", 40.0, || {
+        std::hint::black_box(
+            replica::analysis::closed_form::numeric_mean_var_assignment(&[4, 4, 4], &batch),
+        );
+    });
+}

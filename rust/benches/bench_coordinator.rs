@@ -1,0 +1,120 @@
+//! Bench: end-to-end coordinator — round latency across the
+//! diversity–parallelism spectrum on the live thread-pool system, plus
+//! raw PJRT gradient-execution latency when artifacts are present.
+
+use std::sync::Arc;
+
+use replica::coordinator::{
+    ComputeBackend, Coordinator, Dataset, GdConfig, NativeBackend, PjrtBackend,
+};
+use replica::dist::ServiceDist;
+use replica::metrics::{bench, fnum, Table};
+use replica::runtime::{artifacts_available, artifacts_dir, GradientOps, RuntimeService};
+
+fn main() {
+    let workers = 8;
+    let (m, d) = (64, 16);
+    let rounds = 40;
+    let straggler = ServiceDist::pareto(0.02, 1.3);
+
+    // ---- spectrum latency on the live coordinator (native backend) ----
+    let mut t = Table::new(
+        "live coordinator: mean round latency across the spectrum \
+         (N=8 threads, heavy-tail stragglers, native backend)",
+        vec!["B", "replication", "mean latency (ms)", "discarded/round"],
+    );
+    for b in [1usize, 2, 4, 8] {
+        let cfg = GdConfig {
+            workers,
+            batches: b,
+            rounds,
+            lr: 0.1,
+            straggler: straggler.clone(),
+            time_scale: 2e-3,
+            seed: 7,
+        };
+        let ds = Dataset::synthetic(workers, m, d, 0.05, 3);
+        let mut coord =
+            Coordinator::new(cfg, ds, Arc::new(NativeBackend::new(m, d))).expect("coord");
+        let rep = coord.run().expect("run");
+        t.row(vec![
+            b.to_string(),
+            (workers / b).to_string(),
+            fnum(rep.mean_latency() * 1e3),
+            fnum(rep.total_discarded as f64 / rounds as f64),
+        ]);
+    }
+    t.print();
+    println!();
+
+    // ---- backend micro-latency ----
+    let native = NativeBackend::new(m, d);
+    let ds = Dataset::synthetic(1, m, d, 0.05, 5);
+    let beta = vec![0.1f32; d];
+    bench("native partial_grad_loss (64x16)", 30.0, || {
+        std::hint::black_box(
+            native.partial_grad_loss(&beta, &ds.shards[0].x, &ds.shards[0].y).unwrap(),
+        );
+    });
+
+    if artifacts_available() {
+        let service = RuntimeService::start(&artifacts_dir()).expect("runtime");
+        let manifest = service.handle().manifest().clone();
+        let ops = GradientOps::new(service.handle(), manifest.m).expect("ops");
+        let pjrt = PjrtBackend::new(ops);
+        let dsp = Dataset::synthetic(1, manifest.m, manifest.d, 0.05, 6);
+        let beta = vec![0.1f32; manifest.d];
+        let label = format!(
+            "pjrt partial_grad_loss ({}x{}) via runtime thread",
+            manifest.m, manifest.d
+        );
+        bench(&label, 60.0, || {
+            std::hint::black_box(
+                pjrt.partial_grad_loss(&beta, &dsp.shards[0].x, &dsp.shards[0].y).unwrap(),
+            );
+        });
+        // §Perf: cached-shard variant — x/y stay device-resident, only
+        // beta crosses the boundary each call
+        let label2 = format!(
+            "pjrt partial_grad_loss CACHED shard ({}x{})",
+            manifest.m, manifest.d
+        );
+        bench(&label2, 60.0, || {
+            std::hint::black_box(
+                pjrt.ops()
+                    .partial_grad_loss_cached(&beta, 0, &dsp.shards[0].x, &dsp.shards[0].y)
+                    .unwrap(),
+            );
+        });
+        // dispatch-overhead probe: sgd_update moves only ~512 B, so its
+        // latency ≈ the fixed PJRT/channel dispatch cost
+        let g = vec![0.01f32; manifest.d];
+        bench("pjrt sgd_update (d-vector only) dispatch probe", 60.0, || {
+            std::hint::black_box(pjrt.ops().sgd_update(&beta, &g, 0.1).unwrap());
+        });
+
+        // end-to-end pjrt coordinator round latency at the planned point
+        let cfg = GdConfig {
+            workers: 4,
+            batches: 2,
+            rounds: 20,
+            lr: 0.1,
+            straggler: ServiceDist::shifted_exp(0.001, 1000.0),
+            time_scale: 1e-4,
+            seed: 9,
+        };
+        let ds = Dataset::synthetic(4, manifest.m, manifest.d, 0.05, 7);
+        let ops = GradientOps::new(service.handle(), manifest.m).expect("ops");
+        let mut coord =
+            Coordinator::new(cfg, ds, Arc::new(PjrtBackend::new(ops))).expect("coord");
+        let rep = coord.run().expect("run");
+        println!(
+            "pjrt e2e: {} rounds, mean latency {} ms, final loss {}",
+            rep.rounds.len(),
+            fnum(rep.mean_latency() * 1e3),
+            fnum(rep.final_global_loss)
+        );
+    } else {
+        println!("(artifacts missing — run `make artifacts` for the PJRT benches)");
+    }
+}

@@ -1,0 +1,25 @@
+//! Bench/regeneration: Fig. 3 — coverage probability of random
+//! assignment (Lemma 1), plus timing of the occupancy recurrence.
+
+use replica::experiments::fig3;
+use replica::metrics::bench;
+
+fn main() {
+    fig3::table(&fig3::PAPER_NS).print();
+    println!();
+
+    // representative curve values (the paper's N=100 line)
+    let series = fig3::run(&[100]);
+    println!("Fig 3 series, N=100 (B, Pr[cover]):");
+    for (b, p) in series[0].points.iter().step_by(10) {
+        println!("  B={b:<4} p={:.6}", p[0]);
+    }
+    println!();
+
+    bench("coverage_probability(N=100, B=50)", 30.0, || {
+        std::hint::black_box(replica::analysis::coverage::coverage_probability(100, 50));
+    });
+    bench("coverage_probability(N=1000, B=300)", 60.0, || {
+        std::hint::black_box(replica::analysis::coverage::coverage_probability(1000, 300));
+    });
+}

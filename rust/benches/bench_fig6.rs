@@ -1,0 +1,29 @@
+//! Bench/regeneration: Fig. 6 + eq. (17) — overlapping vs
+//! non-overlapping batches (N=6, B=3).
+
+use replica::batching::Policy;
+use replica::dist::ServiceDist;
+use replica::experiments::fig6;
+use replica::metrics::bench;
+use replica::sim::montecarlo::simulate_policy;
+
+fn main() {
+    let mus = [0.25, 0.5, 1.0, 2.0, 4.0];
+    let rows = fig6::run(&mus, 60_000, 42).expect("fig6");
+    fig6::table(&rows).print();
+    println!();
+
+    let tau = ServiceDist::exp(1.0);
+    for policy in [
+        Policy::BalancedNonOverlapping { batches: 3 },
+        Policy::CyclicOverlapping { batches: 3 },
+        Policy::HybridOverlapping { batches: 3 },
+    ] {
+        let name = format!("simulate_policy N=6 {} (1k reps)", policy.name());
+        bench(&name, 40.0, || {
+            std::hint::black_box(
+                simulate_policy(6, &policy, &tau, 1_000, 7).expect("sim"),
+            );
+        });
+    }
+}

@@ -1,0 +1,20 @@
+//! Bench/regeneration: Figs. 7–8 — E[T] and CoV[T] vs B for
+//! shifted-exponential service times (N=100, Δ=0.05).
+
+use replica::experiments::fig7_8;
+use replica::metrics::bench;
+
+fn main() {
+    fig7_8::table(&fig7_8::PAPER_MUS).print();
+    println!();
+
+    println!("Monte-Carlo cross-check, mu = 1.0 (8k reps per point):");
+    for (b, analytic, sim, ci) in fig7_8::mc_crosscheck(1.0, 8_000, 1).expect("mc") {
+        println!("  B={b:<4} analytic={analytic:.4}  simulated={sim:.4} ± {ci:.4}");
+    }
+    println!();
+
+    bench("sexp closed-form sweep (N=100, all B)", 20.0, || {
+        std::hint::black_box(fig7_8::sweep(100, 0.05, 1.0));
+    });
+}

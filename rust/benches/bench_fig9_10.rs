@@ -1,0 +1,23 @@
+//! Bench/regeneration: Figs. 9–10 — E[T] and CoV[T] vs B for Pareto
+//! service times (N=100, σ=1).
+
+use replica::experiments::fig9_10;
+use replica::metrics::bench;
+
+fn main() {
+    fig9_10::table(&fig9_10::PAPER_ALPHAS).print();
+    println!();
+
+    println!("Monte-Carlo cross-check, alpha = 3.5 (8k reps per point):");
+    for (b, analytic, sim, ci) in fig9_10::mc_crosscheck(3.5, 8_000, 2).expect("mc") {
+        println!("  B={b:<4} analytic={analytic:.4}  simulated={sim:.4} ± {ci:.4}");
+    }
+    println!();
+
+    bench("pareto closed-form sweep (N=100, all B)", 20.0, || {
+        std::hint::black_box(fig9_10::sweep(100, 1.0, 2.5));
+    });
+    bench("pareto_alpha_star(N=100) root find", 20.0, || {
+        std::hint::black_box(replica::analysis::optimizer::pareto_alpha_star(100));
+    });
+}

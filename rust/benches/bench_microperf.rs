@@ -1,0 +1,79 @@
+//! Micro-benchmarks of the simulation hot path (the §Perf targets in
+//! DESIGN.md): RNG, distribution sampling, single-job simulation,
+//! closed forms, numeric integration.
+
+use replica::analysis::closed_form;
+use replica::batching::Policy;
+use replica::dist::ServiceDist;
+use replica::metrics::bench;
+use replica::sim::JobSimulator;
+use replica::util::rng::Pcg64;
+
+fn main() {
+    let mut rng = Pcg64::new(1);
+
+    let r = bench("Pcg64::next_u64 x1000", 20.0, || {
+        let mut acc = 0u64;
+        for _ in 0..1000 {
+            acc = acc.wrapping_add(rng.next_u64());
+        }
+        std::hint::black_box(acc);
+    });
+    println!("  -> {:.1} M u64/s", 1e-6 * 1000.0 * r.per_second());
+
+    for tau in [
+        ServiceDist::exp(1.0),
+        ServiceDist::shifted_exp(0.05, 1.0),
+        ServiceDist::pareto(1.0, 2.0),
+        ServiceDist::weibull(0.7, 1.0),
+    ] {
+        let label = format!("{} sample x1000", tau.label());
+        let r = bench(&label, 20.0, || {
+            let mut acc = 0.0;
+            for _ in 0..1000 {
+                acc += tau.sample(&mut rng);
+            }
+            std::hint::black_box(acc);
+        });
+        println!("  -> {:.1} M samples/s", 1e-6 * 1000.0 * r.per_second());
+    }
+
+    // single-job simulation throughput across spectrum points
+    for (n, b) in [(100usize, 1usize), (100, 10), (100, 100)] {
+        let layout = Policy::BalancedNonOverlapping { batches: b }
+            .layout(n, &mut rng)
+            .unwrap();
+        let sim = JobSimulator::new(layout, ServiceDist::shifted_exp(0.05, 1.0));
+        let label = format!("JobSimulator::sample N={n} B={b}");
+        let r = bench(&label, 30.0, || {
+            std::hint::black_box(sim.sample(&mut rng));
+        });
+        println!(
+            "  -> {:.2} M batch-services/s",
+            1e-6 * n as f64 * r.per_second()
+        );
+    }
+
+    bench("closed_form::sexp_mean full sweep N=100", 10.0, || {
+        for b in replica::analysis::optimizer::feasible_b(100) {
+            std::hint::black_box(closed_form::sexp_mean(100, b, 0.05, 1.0));
+        }
+    });
+    bench("closed_form::pareto_cov N=100 B=10", 10.0, || {
+        std::hint::black_box(closed_form::pareto_cov(100, 10, 2.5));
+    });
+    bench("numeric_mean_var_t N=20 B=4 (weibull)", 100.0, || {
+        std::hint::black_box(closed_form::numeric_mean_var_t(
+            20,
+            4,
+            &ServiceDist::weibull(0.7, 1.0),
+        ));
+    });
+    bench("lgamma x1000", 10.0, || {
+        let mut acc = 0.0;
+        for i in 1..=1000 {
+            acc += replica::util::math::lgamma(i as f64 * 0.37);
+        }
+        std::hint::black_box(acc);
+    });
+}

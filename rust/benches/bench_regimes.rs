@@ -1,0 +1,32 @@
+//! Bench/regeneration: Theorem 6/7/9 regime tables and the optimizer.
+
+use replica::dist::ServiceDist;
+use replica::experiments::regimes;
+use replica::metrics::bench;
+use replica::planner::{Objective, Planner};
+
+fn main() {
+    regimes::sexp_mean_table(100, 0.05, &[0.1, 0.5, 1.0, 2.0, 5.0, 14.0, 20.0]).print();
+    println!();
+    regimes::sexp_cov_table(100, 0.05, &[0.2, 0.5, 3.0, 40.0]).print();
+    println!();
+    regimes::pareto_table(100, 1.0, &[1.5, 2.5, 3.5, 5.0, 7.0]).print();
+    println!();
+    regimes::tradeoff_table(100).print();
+    println!();
+    // extension: the paper's open problem (concave service families)
+    replica::experiments::open_problem::table(8, 2).expect("open problem").print();
+    println!();
+
+    let planner = Planner::new(100, ServiceDist::shifted_exp(0.05, 1.0));
+    bench("Planner::plan mean (SExp, N=100)", 20.0, || {
+        std::hint::black_box(planner.plan(Objective::MeanCompletion));
+    });
+    let planner_p = Planner::new(100, ServiceDist::pareto(1.0, 2.5));
+    bench("Planner::plan mean (Pareto, N=100)", 20.0, || {
+        std::hint::black_box(planner_p.plan(Objective::MeanCompletion));
+    });
+    bench("Planner::tradeoff_front (N=100)", 20.0, || {
+        std::hint::black_box(planner.tradeoff_front());
+    });
+}

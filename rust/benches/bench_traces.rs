@@ -1,0 +1,58 @@
+//! Bench/regeneration: §VII trace experiments — Figs. 11, 12, 13 and
+//! the headline speedup.
+
+use replica::experiments::traces_exp;
+use replica::metrics::{bench, fnum};
+use replica::traces::JobAnalysis;
+
+fn main() {
+    let reps = 10_000;
+    let seed = 42;
+    let trace = traces_exp::standard_trace(seed);
+
+    // Fig 11 summary (full CCDF series exported by `replica experiment traces --out`)
+    println!("Fig 11: per-job tail classification");
+    for a in JobAnalysis::all(&trace) {
+        println!(
+            "  job {:<2} tasks={} mean={:>9}s p99={:>10}s tail={} (excess CoV {:.2}, Hill alpha {:.2})",
+            a.job_id,
+            a.n_tasks,
+            fnum(a.mean),
+            fnum(a.p99),
+            if a.is_heavy_tail() { "heavy" } else { "exp  " },
+            a.fit.excess_cov,
+            a.fit.tail_alpha,
+        );
+    }
+    println!();
+
+    traces_exp::table(
+        "Fig 12: normalized E[T] vs B — exponential-tail jobs",
+        &trace,
+        &traces_exp::EXP_TAIL_JOBS,
+        reps,
+        seed,
+    )
+    .expect("fig12")
+    .print();
+    println!();
+    traces_exp::table(
+        "Fig 13: normalized E[T] vs B — heavy-tail jobs",
+        &trace,
+        &traces_exp::HEAVY_TAIL_JOBS,
+        reps,
+        seed,
+    )
+    .expect("fig13")
+    .print();
+    println!();
+    let headline = traces_exp::headline_speedup(&trace, reps, seed).expect("headline");
+    println!("headline speedup (best heavy-tail job): {}x\n", fnum(headline));
+
+    bench("JobAnalysis::all (10 jobs x 100 tasks)", 30.0, || {
+        std::hint::black_box(JobAnalysis::all(&trace));
+    });
+    bench("job_sweep heavy job (1k reps/point)", 60.0, || {
+        std::hint::black_box(traces_exp::job_sweep(&trace, 7, 1_000, 3).expect("sweep"));
+    });
+}

@@ -1,0 +1,374 @@
+//! Closed forms for job compute time under balanced non-overlapping
+//! replication with the size-dependent batch model `T_batch = (N/B)·τ`
+//! (paper §VI).
+//!
+//! With N workers, B batches (B | N), batch size N/B and replication
+//! degree N/B:
+//!
+//! * τ ~ Exp(μ):   `E[T] = H_B/μ` (eq. 26), `CoV = √H₂/H₁` (eq. 18)
+//! * τ ~ SExp(Δ,μ): `E[T] = NΔ/B + H_B/μ` (eq. 19),
+//!   `CoV = √H₂ / (NΔμ/B + H₁)` (eq. 21)
+//! * τ ~ Pareto(σ,α): `E[T] = (Nσ/B)·Γ(B+1)Γ(1−B/(Nα))/Γ(B+1−B/(Nα))`
+//!   (eq. 22), CoV per eq. (24)
+//!
+//! plus a numeric integrator for arbitrary distributions/assignments
+//! used to cross-validate the formulas and to handle empirical τ.
+
+use crate::analysis::harmonic::{h1, h2};
+use crate::dist::ServiceDist;
+use crate::util::math::lgamma;
+
+/// E\[T\] for τ ~ Exp(μ) (eq. 26). Independent of N: replication exactly
+/// cancels the size-dependent slowdown.
+pub fn exp_mean(b: usize, mu: f64) -> f64 {
+    h1(b) / mu
+}
+
+/// Var\[T\] for τ ~ Exp(μ): maximum of B i.i.d. Exp(μ).
+pub fn exp_var(b: usize, mu: f64) -> f64 {
+    h2(b) / (mu * mu)
+}
+
+/// CoV\[T\] for τ ~ Exp (eq. 18) — scale-free.
+pub fn exp_cov(b: usize) -> f64 {
+    h2(b).sqrt() / h1(b)
+}
+
+/// E\[T\] for τ ~ SExp(Δ, μ) (eq. 19 / 33).
+pub fn sexp_mean(n: usize, b: usize, delta: f64, mu: f64) -> f64 {
+    n as f64 * delta / b as f64 + h1(b) / mu
+}
+
+/// Var\[T\] for τ ~ SExp: the shift is deterministic, so the variance is
+/// that of the max of B exponentials.
+pub fn sexp_var(b: usize, mu: f64) -> f64 {
+    h2(b) / (mu * mu)
+}
+
+/// CoV\[T\] for τ ~ SExp (eq. 21).
+pub fn sexp_cov(n: usize, b: usize, delta: f64, mu: f64) -> f64 {
+    h2(b).sqrt() / (n as f64 * delta * mu / b as f64 + h1(b))
+}
+
+/// E\[T\] for τ ~ Pareto(σ, α) (eq. 22). Requires `B/(Nα) < 1` for a
+/// finite mean; returns ∞ otherwise.
+pub fn pareto_mean(n: usize, b: usize, sigma: f64, alpha: f64) -> f64 {
+    let (n, bf) = (n as f64, b as f64);
+    let inv_a = bf / (n * alpha); // 1/α' of the batch-level Pareto
+    if inv_a >= 1.0 {
+        return f64::INFINITY;
+    }
+    (n * sigma / bf)
+        * (lgamma(bf + 1.0) + lgamma(1.0 - inv_a) - lgamma(bf + 1.0 - inv_a)).exp()
+}
+
+/// Var\[T\] for τ ~ Pareto (eq. 76). Requires `2B/(Nα) < 1`.
+pub fn pareto_var(n: usize, b: usize, sigma: f64, alpha: f64) -> f64 {
+    let (nf, bf) = (n as f64, b as f64);
+    let inv_a = bf / (nf * alpha);
+    if 2.0 * inv_a >= 1.0 {
+        return f64::INFINITY;
+    }
+    let scale = nf * sigma / bf;
+    let e2 = scale
+        * scale
+        * (lgamma(bf + 1.0) + lgamma(1.0 - 2.0 * inv_a) - lgamma(bf + 1.0 - 2.0 * inv_a))
+            .exp();
+    let m = pareto_mean(n, b, sigma, alpha);
+    e2 - m * m
+}
+
+/// CoV\[T\] for τ ~ Pareto — independent of σ.
+///
+/// Note: the paper's printed eq. (24) is inconsistent with its own
+/// variance derivation (eqs. 75–76): at B = 1 it yields
+/// `CoV² = x/(1−2x)` (x = B/(Nα)) instead of the correct
+/// `x²/(1−2x)` for a Pareto maximum. We therefore derive CoV from
+/// eqs. (61) and (76) directly, in log-space:
+///
+/// `CoV² = Γ(1−2x)·Γ(B+1−x)² / (Γ(B+1)·Γ(B+1−2x)·Γ(1−x)²) − 1`.
+///
+/// This corrected form reproduces Theorem 10 (monotone increasing in B,
+/// minimum at full diversity) and matches Monte-Carlo simulation; the
+/// typo'd form does not match simulation.
+pub fn pareto_cov(n: usize, b: usize, alpha: f64) -> f64 {
+    let (nf, bf) = (n as f64, b as f64);
+    let x = bf / (nf * alpha);
+    if 2.0 * x >= 1.0 {
+        return f64::INFINITY;
+    }
+    let log_ratio = lgamma(1.0 - 2.0 * x) + 2.0 * lgamma(bf + 1.0 - x)
+        - lgamma(bf + 1.0)
+        - lgamma(bf + 1.0 - 2.0 * x)
+        - 2.0 * lgamma(1.0 - x);
+    (log_ratio.exp() - 1.0).max(0.0).sqrt()
+}
+
+/// Dispatch E\[T\](B) for any analytic τ family under the balanced
+/// non-overlapping policy; falls back to numeric integration for
+/// non-closed families.
+pub fn mean_t(n: usize, b: usize, tau: &ServiceDist) -> f64 {
+    match tau {
+        ServiceDist::Exp { mu } => exp_mean(b, *mu),
+        ServiceDist::ShiftedExp { delta, mu } => sexp_mean(n, b, *delta, *mu),
+        ServiceDist::Pareto { sigma, alpha } => pareto_mean(n, b, *sigma, *alpha),
+        other => numeric_mean_t(n, b, other),
+    }
+}
+
+/// Dispatch CoV\[T\](B), mirroring [`mean_t`].
+pub fn cov_t(n: usize, b: usize, tau: &ServiceDist) -> f64 {
+    match tau {
+        ServiceDist::Exp { .. } => exp_cov(b),
+        ServiceDist::ShiftedExp { delta, mu } => sexp_cov(n, b, *delta, *mu),
+        ServiceDist::Pareto { alpha, .. } => pareto_cov(n, b, *alpha),
+        other => {
+            let (m, v) = numeric_mean_var_t(n, b, other);
+            v.sqrt() / m
+        }
+    }
+}
+
+/// Numeric E\[T\] for the balanced policy with arbitrary τ: batch service
+/// is `(N/B)·τ`, replicated on N/B workers, T = max over B batches.
+pub fn numeric_mean_t(n: usize, b: usize, tau: &ServiceDist) -> f64 {
+    numeric_mean_var_t(n, b, tau).0
+}
+
+/// Numeric (E\[T\], Var\[T\]) by integrating the survival function of
+/// `T = max_i min_{j≤N/B} (N/B)·τ_ij`.
+pub fn numeric_mean_var_t(n: usize, b: usize, tau: &ServiceDist) -> (f64, f64) {
+    assert!(b >= 1 && n >= b && n % b == 0, "balanced policy needs B | N");
+    let r = n / b; // replicas per batch
+    let batch = ServiceDist::scaled((n / b) as f64, tau.clone());
+    // Survival of one batch's compute time (min over r replicas):
+    //   S_batch(t) = S(t)^r ; CDF of the job: (1 − S^r)^B.
+    let s_job = |t: f64| -> f64 {
+        let s = batch.ccdf(t);
+        1.0 - (1.0 - s.powi(r as i32)).powi(b as i32)
+    };
+    mean_var_from_survival(s_job, &batch, r, b)
+}
+
+/// Numeric (E\[T\], Var\[T\]) for an *arbitrary assignment vector*
+/// `n_i` (workers per batch): T = max_i min_{j≤n_i} batch_i — used by the
+/// majorization experiments (Lemma 2).
+pub fn numeric_mean_var_assignment(
+    assignment: &[usize],
+    batch: &ServiceDist,
+) -> (f64, f64) {
+    assert!(!assignment.is_empty());
+    assert!(assignment.iter().all(|&x| x >= 1));
+    let s_job = |t: f64| -> f64 {
+        let s = batch.ccdf(t);
+        let mut prod = 1.0;
+        for &ni in assignment {
+            prod *= 1.0 - s.powi(ni as i32);
+        }
+        1.0 - prod
+    };
+    let rmin = *assignment.iter().max().unwrap();
+    mean_var_from_survival(s_job, batch, rmin, assignment.len())
+}
+
+/// Integrate E[T] = ∫ S(t) dt and E[T²] = ∫ 2 t S(t) dt by trapezoid on
+/// an adaptive grid reaching the far tail of the *max* distribution.
+fn mean_var_from_survival<F: Fn(f64) -> f64>(
+    s_job: F,
+    batch: &ServiceDist,
+    _r: usize,
+    b: usize,
+) -> (f64, f64) {
+    // Upper limit: the max of B batch-minima is below the batch's own
+    // extreme quantile with overwhelming probability. Push far into the
+    // tail (heavy tails need room), then extend until S < 1e-9.
+    let mut hi = batch.quantile(1.0 - 1e-9 / (b as f64).max(1.0));
+    if !hi.is_finite() || hi <= 0.0 {
+        hi = 1e6;
+    }
+    while s_job(hi) > 1e-9 && hi < 1e15 {
+        hi *= 2.0;
+    }
+    let steps = 50_000usize;
+    let dt = hi / steps as f64;
+    let mut e1 = 0.0;
+    let mut e2 = 0.0;
+    let mut prev_s = s_job(0.0);
+    for i in 1..=steps {
+        let t = i as f64 * dt;
+        let s = s_job(t);
+        // trapezoid on S(t) and on 2 t S(t)
+        e1 += 0.5 * (prev_s + s) * dt;
+        let tm = t - 0.5 * dt;
+        e2 += 2.0 * tm * 0.5 * (prev_s + s) * dt;
+        prev_s = s;
+    }
+    (e1, e2 - e1 * e1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::ServiceDist;
+
+    fn close_rel(a: f64, b: f64, tol: f64) {
+        assert!(
+            (a - b).abs() / b.abs().max(1e-12) < tol,
+            "{a} vs {b} (rel {})",
+            (a - b).abs() / b.abs().max(1e-12)
+        );
+    }
+
+    #[test]
+    fn exp_b1_is_plain_mean() {
+        // B=1: max of one Exp(μ) = 1/μ
+        assert!((exp_mean(1, 2.0) - 0.5).abs() < 1e-12);
+        assert!((exp_cov(1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exp_mean_is_monotone_increasing_in_b() {
+        // Theorem 3: full diversity (B=1) minimizes E[T]
+        let mut prev = 0.0;
+        for b in 1..=100 {
+            let m = exp_mean(b, 1.0);
+            assert!(m > prev);
+            prev = m;
+        }
+    }
+
+    #[test]
+    fn exp_cov_is_monotone_decreasing_in_b() {
+        // Theorem 4: full parallelism minimizes CoV
+        let mut prev = f64::INFINITY;
+        for b in 1..=1000 {
+            let c = exp_cov(b);
+            assert!(c < prev, "B={b}");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn sexp_reduces_to_exp_when_delta_zero() {
+        for b in [1usize, 2, 10, 50] {
+            close_rel(sexp_mean(100, b, 0.0, 2.0), exp_mean(b, 2.0), 1e-12);
+            close_rel(sexp_cov(100, b, 0.0, 2.0), exp_cov(b), 1e-12);
+        }
+    }
+
+    #[test]
+    fn sexp_b_extremes_match_theorem6_proof() {
+        // Proof of Thm 6: B=1 → NΔ + 1/μ ; B=2 → NΔ/2 + 3/(2μ)
+        let (n, d, mu) = (100, 0.05, 1.0);
+        close_rel(sexp_mean(n, 1, d, mu), n as f64 * d + 1.0 / mu, 1e-12);
+        close_rel(sexp_mean(n, 2, d, mu), n as f64 * d / 2.0 + 1.5 / mu, 1e-12);
+    }
+
+    #[test]
+    fn pareto_b1_equals_scaled_pareto_mean() {
+        // B=1: T = min over N workers of N·σ Pareto → mean = ... eq(22)
+        // with B=1 reduces to Nσ·Γ(2)Γ(1−1/(Nα))/Γ(2−1/(Nα)) = Nσ/(1−1/(Nα))·(1/1)
+        let (n, sigma, alpha) = (10usize, 1.0, 2.0);
+        let inv = 1.0 / (n as f64 * alpha);
+        let want = n as f64 * sigma / (1.0 - inv);
+        close_rel(pareto_mean(n, 1, sigma, alpha), want, 1e-10);
+    }
+
+    #[test]
+    fn pareto_mean_infinite_when_tail_too_heavy() {
+        // B/(Nα) ≥ 1 → infinite mean
+        assert!(pareto_mean(4, 4, 1.0, 0.9).is_infinite());
+        assert!(pareto_mean(100, 100, 1.0, 1.0).is_infinite());
+    }
+
+    #[test]
+    fn pareto_cov_independent_of_sigma() {
+        let c1 = pareto_cov(100, 10, 2.5);
+        // same α, any σ: identical (eq. 24 has no σ)
+        let m1 = pareto_mean(100, 10, 1.0, 2.5);
+        let v1 = pareto_var(100, 10, 1.0, 2.5);
+        close_rel(v1.sqrt() / m1, c1, 1e-9);
+        let m2 = pareto_mean(100, 10, 7.0, 2.5);
+        let v2 = pareto_var(100, 10, 7.0, 2.5);
+        close_rel(v2.sqrt() / m2, c1, 1e-9);
+    }
+
+    #[test]
+    fn pareto_cov_increasing_in_b_theorem10() {
+        // Theorem 10: CoV minimized at full diversity (B=1), increasing in B
+        let n = 100;
+        let alpha = 3.0;
+        let mut prev = 0.0;
+        for b in [1usize, 2, 4, 5, 10, 20, 25, 50, 100] {
+            let c = pareto_cov(n, b, alpha);
+            assert!(c > prev, "B={b}: {c} <= {prev}");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn numeric_integrator_matches_exp_closed_form() {
+        let tau = ServiceDist::exp(1.0);
+        for (n, b) in [(10usize, 1usize), (10, 2), (10, 5), (10, 10)] {
+            let (m, v) = numeric_mean_var_t(n, b, &tau);
+            close_rel(m, exp_mean(b, 1.0), 2e-3);
+            close_rel(v, exp_var(b, 1.0), 2e-2);
+        }
+    }
+
+    #[test]
+    fn numeric_integrator_matches_sexp_closed_form() {
+        let tau = ServiceDist::shifted_exp(0.05, 1.0);
+        for (n, b) in [(20usize, 2usize), (20, 4), (20, 10)] {
+            let (m, _v) = numeric_mean_var_t(n, b, &tau);
+            close_rel(m, sexp_mean(n, b, 0.05, 1.0), 2e-3);
+        }
+    }
+
+    #[test]
+    fn numeric_integrator_matches_pareto_closed_form() {
+        let tau = ServiceDist::pareto(1.0, 3.0);
+        for (n, b) in [(20usize, 2usize), (20, 4), (20, 10)] {
+            let (m, _v) = numeric_mean_var_t(n, b, &tau);
+            close_rel(m, pareto_mean(n, b, 1.0, 3.0), 5e-3);
+        }
+    }
+
+    #[test]
+    fn assignment_integrator_balanced_matches_policy_form() {
+        let tau = ServiceDist::exp(1.0);
+        let batch = ServiceDist::scaled(5.0, tau.clone()); // N/B = 5
+        // N=10, B=2, balanced: (5,5)
+        let (m_bal, _) = numeric_mean_var_assignment(&[5, 5], &batch);
+        let (m_pol, _) = numeric_mean_var_t(10, 2, &tau);
+        close_rel(m_bal, m_pol, 1e-6);
+    }
+
+    #[test]
+    fn lemma2_balanced_beats_unbalanced_numerically() {
+        // Lemma 2/3: (5,5) ⪯ (6,4) ⪯ (9,1) ⇒ E[T] ordered the same way
+        let batch = ServiceDist::scaled(5.0, ServiceDist::exp(1.0));
+        let (m55, _) = numeric_mean_var_assignment(&[5, 5], &batch);
+        let (m64, _) = numeric_mean_var_assignment(&[6, 4], &batch);
+        let (m91, _) = numeric_mean_var_assignment(&[9, 1], &batch);
+        assert!(m55 < m64, "{m55} !< {m64}");
+        assert!(m64 < m91, "{m64} !< {m91}");
+    }
+
+    #[test]
+    fn dispatchers_agree_with_family_functions() {
+        let n = 100;
+        let b = 10;
+        close_rel(mean_t(n, b, &ServiceDist::exp(2.0)), exp_mean(b, 2.0), 1e-12);
+        close_rel(
+            mean_t(n, b, &ServiceDist::shifted_exp(0.05, 1.0)),
+            sexp_mean(n, b, 0.05, 1.0),
+            1e-12,
+        );
+        close_rel(
+            cov_t(n, b, &ServiceDist::pareto(1.0, 3.0)),
+            pareto_cov(n, b, 3.0),
+            1e-12,
+        );
+    }
+}

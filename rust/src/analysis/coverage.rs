@@ -1,0 +1,190 @@
+//! Lemma 1 (Fig. 3): batch coverage under random assignment.
+//!
+//! If each of N workers draws one of B batches uniformly at random with
+//! replacement (the policy of Li et al. \[72\]), the probability that
+//! *every* batch is drawn at least once is
+//!
+//! `Pr{n ≤ N} = B!/Bᴺ · S(N, B)`
+//!
+//! with `S` the Stirling number of the second kind. Computed by a
+//! stable occupancy recurrence (the inclusion–exclusion form
+//! `Σ (−1)^{B−k} C(B,k)(k/B)^N` cancels catastrophically at N ≥ 200).
+
+
+/// `Pr{all B batches covered by N random draws}` (eq. 6).
+///
+/// Computed by the forward occupancy recurrence rather than the
+/// alternating Stirling sum: after each draw, `p[j]` is the probability
+/// that exactly `j` distinct batches have been seen,
+/// `p'[j] = p[j]·j/B + p[j−1]·(B−j+1)/B`. All-positive arithmetic, so
+/// it is numerically stable for N, B in the hundreds where the
+/// inclusion–exclusion form loses all precision to cancellation.
+/// O(N·B) time.
+pub fn coverage_probability(n_workers: usize, b: usize) -> f64 {
+    if b == 0 {
+        return 1.0; // vacuous
+    }
+    if n_workers < b {
+        return 0.0; // pigeonhole
+    }
+    if b == 1 {
+        return 1.0;
+    }
+    let bf = b as f64;
+    let mut p = vec![0.0f64; b + 1];
+    p[0] = 1.0;
+    for _ in 0..n_workers {
+        for j in (1..=b).rev() {
+            p[j] = p[j] * (j as f64 / bf) + p[j - 1] * ((b - j + 1) as f64 / bf);
+        }
+        p[0] = 0.0;
+    }
+    p[b].clamp(0.0, 1.0)
+}
+
+/// Exact Stirling number of the second kind `S(n, k)` for small n via
+/// the triangular recurrence (u128 — exact up to n ≈ 26 for mid k).
+pub fn stirling2_exact(n: usize, k: usize) -> u128 {
+    if k > n {
+        return 0;
+    }
+    if n == 0 && k == 0 {
+        return 1;
+    }
+    if k == 0 {
+        return 0;
+    }
+    let mut row: Vec<u128> = vec![0; k + 1];
+    row[0] = 1; // S(0,0)
+    for i in 1..=n {
+        // iterate j downward so we use the previous row's values
+        let hi = k.min(i);
+        for j in (1..=hi).rev() {
+            row[j] = (j as u128) * row[j] + row[j - 1];
+        }
+        row[0] = 0;
+    }
+    row[k]
+}
+
+/// Expected number of random draws to cover all B batches (classic
+/// coupon collector): `B · H_B`.
+pub fn expected_draws_to_cover(b: usize) -> f64 {
+    b as f64 * super::harmonic::h1(b)
+}
+
+/// Smallest N such that `coverage_probability(N, B) ≥ target`.
+pub fn workers_for_coverage(b: usize, target: f64) -> usize {
+    assert!((0.0..1.0).contains(&target));
+    let mut n = b;
+    while coverage_probability(n, b) < target {
+        n += 1;
+        if n > 1_000_000 {
+            break;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stirling_known_values() {
+        assert_eq!(stirling2_exact(0, 0), 1);
+        assert_eq!(stirling2_exact(4, 2), 7);
+        assert_eq!(stirling2_exact(5, 3), 25);
+        assert_eq!(stirling2_exact(6, 3), 90);
+        assert_eq!(stirling2_exact(10, 5), 42525);
+        assert_eq!(stirling2_exact(3, 5), 0);
+    }
+
+    #[test]
+    fn coverage_matches_exact_stirling() {
+        // Pr = B!/B^N * S(N,B) — cross-check the log-space sum vs exact
+        for (n, b) in [(4usize, 2usize), (6, 3), (10, 4), (12, 5), (20, 6)] {
+            let exact = {
+                let s = stirling2_exact(n, b) as f64;
+                let bf: f64 = (1..=b).map(|i| i as f64).product();
+                s * bf / (b as f64).powi(n as i32)
+            };
+            let got = coverage_probability(n, b);
+            assert!((got - exact).abs() < 1e-10, "N={n} B={b}: {got} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn boundary_cases() {
+        assert_eq!(coverage_probability(3, 5), 0.0); // N < B impossible
+        assert_eq!(coverage_probability(5, 1), 1.0);
+        // all distinct: 5!/5^5 (float-tolerant: log-space summation)
+        let f: f64 = (1..=5).map(|i| i as f64).product();
+        assert!((coverage_probability(5, 5) - f / 5f64.powi(5)).abs() < 1e-12);
+        assert_eq!(coverage_probability(0, 0), 1.0);
+    }
+
+    #[test]
+    fn coverage_monotone_in_n_and_decreasing_in_b() {
+        for b in [5usize, 10, 20] {
+            let mut prev = 0.0;
+            for n in b..(6 * b) {
+                let p = coverage_probability(n, b);
+                assert!(p >= prev - 1e-12, "not monotone at N={n} B={b}");
+                prev = p;
+            }
+        }
+        // fixed N: more batches are harder to cover
+        let mut prev = 1.0;
+        for b in 1..50 {
+            let p = coverage_probability(100, b);
+            assert!(p <= prev + 1e-12, "B={b}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn paper_observation_n100_b10() {
+        // Fig. 3: with N=100, B=10 is covered with high probability but
+        // larger B quickly fails.
+        assert!(coverage_probability(100, 10) > 0.99);
+        assert!(coverage_probability(100, 30) < 0.6);
+        assert!(coverage_probability(100, 50) < 0.05);
+    }
+
+    #[test]
+    fn coverage_matches_monte_carlo() {
+        use crate::util::rng::Pcg64;
+        let (n, b) = (30usize, 8usize);
+        let mut rng = Pcg64::new(99);
+        let trials = 200_000;
+        let mut covered = 0usize;
+        for _ in 0..trials {
+            let mut seen = 0u64;
+            for _ in 0..n {
+                seen |= 1 << rng.below(b as u64);
+            }
+            if seen == (1 << b) - 1 {
+                covered += 1;
+            }
+        }
+        let emp = covered as f64 / trials as f64;
+        let exact = coverage_probability(n, b);
+        assert!((emp - exact).abs() < 0.005, "{emp} vs {exact}");
+    }
+
+    #[test]
+    fn expected_draws_is_b_times_harmonic() {
+        assert!((expected_draws_to_cover(1) - 1.0).abs() < 1e-12);
+        assert!((expected_draws_to_cover(2) - 3.0).abs() < 1e-12);
+        // B=10: 10·H_10 ≈ 29.29
+        assert!((expected_draws_to_cover(10) - 29.2897).abs() < 1e-3);
+    }
+
+    #[test]
+    fn workers_for_coverage_inverse() {
+        let n = workers_for_coverage(10, 0.99);
+        assert!(coverage_probability(n, 10) >= 0.99);
+        assert!(coverage_probability(n - 1, 10) < 0.99);
+    }
+}

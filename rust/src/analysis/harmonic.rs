@@ -1,0 +1,79 @@
+//! Generalized harmonic numbers.
+//!
+//! `H_{(B,1)} = Σ_{k=1..B} 1/k` and `H_{(B,2)} = Σ_{k=1..B} 1/k²` appear
+//! throughout §VI (Theorems 3–7): the expected maximum of B i.i.d.
+//! exponentials is `H_{(B,1)}/μ` and its variance `H_{(B,2)}/μ²`.
+
+use crate::util::math::{digamma, EULER_GAMMA};
+
+/// First-order harmonic number `H_B = Σ_{k=1..B} 1/k` (exact summation).
+pub fn h1(b: usize) -> f64 {
+    (1..=b).map(|k| 1.0 / k as f64).sum()
+}
+
+/// Second-order harmonic number `Σ_{k=1..B} 1/k²` (exact summation).
+pub fn h2(b: usize) -> f64 {
+    (1..=b).map(|k| 1.0 / (k as f64 * k as f64)).sum()
+}
+
+/// Partial harmonic sum `Σ_{k=a..b} 1/k` (inclusive), e.g. the
+/// `Σ_{k=N/2+1}^{N} 1/k` boundary in Theorem 6.
+pub fn h1_range(a: usize, b: usize) -> f64 {
+    (a..=b).map(|k| 1.0 / k as f64).sum()
+}
+
+/// Asymptotic `H_B ≈ ln B + γ` (used by Corollary 2's continuous
+/// relaxation).
+pub fn h1_approx(b: f64) -> f64 {
+    b.ln() + EULER_GAMMA
+}
+
+/// `H_B` via digamma: `H_B = ψ(B+1) + γ` — exact for integer B, defined
+/// for fractional arguments (used in continuous optimizers).
+pub fn h1_digamma(b: f64) -> f64 {
+    digamma(b + 1.0) + EULER_GAMMA
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_exact() {
+        assert_eq!(h1(0), 0.0);
+        assert_eq!(h1(1), 1.0);
+        assert!((h1(2) - 1.5).abs() < 1e-15);
+        assert!((h1(4) - 25.0 / 12.0).abs() < 1e-15);
+        assert_eq!(h2(1), 1.0);
+        assert!((h2(2) - 1.25).abs() < 1e-15);
+        assert!((h2(3) - 49.0 / 36.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn h2_converges_to_pi2_over_6() {
+        let limit = std::f64::consts::PI.powi(2) / 6.0;
+        assert!((h2(100_000) - limit).abs() < 1e-4);
+    }
+
+    #[test]
+    fn range_sum_consistent() {
+        assert!((h1_range(51, 100) - (h1(100) - h1(50))).abs() < 1e-12);
+        // Theorem 6: Σ_{N/2+1..N} ≈ ln 2 for large N
+        assert!((h1_range(501, 1000) - 2.0_f64.ln()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn digamma_form_matches_summation() {
+        for b in [1usize, 2, 5, 10, 100, 1000] {
+            assert!(
+                (h1_digamma(b as f64) - h1(b)).abs() < 1e-9,
+                "b={b}"
+            );
+        }
+    }
+
+    #[test]
+    fn approx_close_for_large_b() {
+        assert!((h1_approx(1000.0) - h1(1000)).abs() < 1e-3);
+    }
+}

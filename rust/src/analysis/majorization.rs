@@ -1,0 +1,147 @@
+//! Majorization (Definitions 3–6, Lemmas 2–3).
+//!
+//! An assignment vector `N̄ = (N₁,…,N_B)` gives the number of workers
+//! hosting each batch. Lemma 2: if `N̄₁ ⪰ N̄₂` (majorizes) then
+//! `E[T(N̄₁)] ≥ E[T(N̄₂)]` for stochastically decreasing-convex service
+//! times. Lemma 3: the balanced vector is majorized by every other
+//! assignment — hence optimal.
+
+/// Does `a` majorize `b`? Both must have equal length and equal sums.
+pub fn majorizes(a: &[usize], b: &[usize]) -> bool {
+    assert_eq!(a.len(), b.len(), "vectors must have equal length");
+    let mut sa: Vec<usize> = a.to_vec();
+    let mut sb: Vec<usize> = b.to_vec();
+    sa.sort_unstable_by(|x, y| y.cmp(x));
+    sb.sort_unstable_by(|x, y| y.cmp(x));
+    if sa.iter().sum::<usize>() != sb.iter().sum::<usize>() {
+        return false;
+    }
+    let (mut pa, mut pb) = (0usize, 0usize);
+    for i in 0..sa.len() {
+        pa += sa[i];
+        pb += sb[i];
+        if pa < pb {
+            return false;
+        }
+    }
+    true
+}
+
+/// The balanced assignment `(N/B, …, N/B)`. Panics unless B | N.
+pub fn balanced(n: usize, b: usize) -> Vec<usize> {
+    assert!(b >= 1 && n % b == 0, "balanced assignment needs B | N");
+    vec![n / b; b]
+}
+
+/// Is the vector balanced (all entries equal)?
+pub fn is_balanced(v: &[usize]) -> bool {
+    v.windows(2).all(|w| w[0] == w[1])
+}
+
+/// All compositions of `n` into exactly `b` positive parts, as sorted
+/// (descending) multisets — i.e. all distinct assignment shapes. Small
+/// n/b only (test + experiment use).
+pub fn all_assignments(n: usize, b: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    let mut cur = Vec::with_capacity(b);
+    fn rec(remaining: usize, parts: usize, max: usize, cur: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if parts == 1 {
+            if remaining >= 1 && remaining <= max {
+                cur.push(remaining);
+                out.push(cur.clone());
+                cur.pop();
+            }
+            return;
+        }
+        // keep parts non-increasing to enumerate shapes once
+        let hi = max.min(remaining - (parts - 1));
+        for v in (1..=hi).rev() {
+            cur.push(v);
+            rec(remaining - v, parts - 1, v, cur, out);
+            cur.pop();
+        }
+    }
+    if b >= 1 && n >= b {
+        rec(n, b, n, &mut cur, &mut out);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn textbook_examples() {
+        assert!(majorizes(&[3, 1], &[2, 2]));
+        assert!(!majorizes(&[2, 2], &[3, 1]));
+        assert!(majorizes(&[4, 0, 0], &[2, 1, 1])); // degenerate zeros allowed here
+        assert!(majorizes(&[2, 2], &[2, 2])); // reflexive
+        assert!(!majorizes(&[3, 1], &[2, 1])); // different sums
+    }
+
+    #[test]
+    fn order_insensitive() {
+        assert!(majorizes(&[1, 3], &[2, 2]));
+        assert!(majorizes(&[1, 5, 2], &[3, 3, 2]));
+    }
+
+    #[test]
+    fn lemma3_balanced_is_majorized_by_all() {
+        // every assignment of N=12 into B=3 parts majorizes (4,4,4)
+        let bal = balanced(12, 3);
+        for a in all_assignments(12, 3) {
+            assert!(majorizes(&a, &bal), "{a:?} should majorize {bal:?}");
+        }
+    }
+
+    #[test]
+    fn balanced_constructor() {
+        assert_eq!(balanced(12, 4), vec![3, 3, 3, 3]);
+        assert!(is_balanced(&balanced(100, 10)));
+        assert!(!is_balanced(&[2, 3]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn balanced_requires_divisibility() {
+        balanced(10, 3);
+    }
+
+    #[test]
+    fn all_assignments_cover_partitions() {
+        // partitions of 6 into 3 positive parts: 4+1+1, 3+2+1, 2+2+2
+        let a = all_assignments(6, 3);
+        assert_eq!(a.len(), 3);
+        assert!(a.contains(&vec![4, 1, 1]));
+        assert!(a.contains(&vec![3, 2, 1]));
+        assert!(a.contains(&vec![2, 2, 2]));
+    }
+
+    #[test]
+    fn majorization_is_transitive_property() {
+        forall("majorization transitive", 200, |rng| {
+            // random partitions of n into b parts
+            let b = rng.range(2, 5);
+            let n = b * rng.range(2, 6);
+            let parts = all_assignments(n, b);
+            let x = rng.choose(&parts).clone();
+            let y = rng.choose(&parts).clone();
+            let z = rng.choose(&parts).clone();
+            if majorizes(&x, &y) && majorizes(&y, &z) {
+                assert!(majorizes(&x, &z), "{x:?} {y:?} {z:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn extreme_assignment_majorizes_everything() {
+        let n = 10;
+        let b = 3;
+        let extreme = vec![n - (b - 1), 1, 1];
+        for a in all_assignments(n, b) {
+            assert!(majorizes(&extreme, &a), "{extreme:?} vs {a:?}");
+        }
+    }
+}

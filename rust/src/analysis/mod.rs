@@ -1,0 +1,19 @@
+//! Closed-form analysis from the paper.
+//!
+//! * [`harmonic`] — generalized harmonic numbers `H_{(B,1)}, H_{(B,2)}`.
+//! * [`coverage`] — Lemma 1: coupon-collector coverage probability of
+//!   random batch-to-worker assignment (Fig. 3).
+//! * [`closed_form`] — E\[T\] and CoV\[T\] for the balanced
+//!   non-overlapping policy under the size-dependent service model:
+//!   eqs. (18), (19), (21), (22), (24), (26), plus a numeric
+//!   order-statistics integrator for arbitrary distributions.
+//! * [`optimizer`] — the discrete optimizers and regime classification
+//!   of Theorems 3–10 and Corollaries 2–4.
+//! * [`majorization`] — the majorization partial order behind Lemmas
+//!   2–3 (balanced assignment is majorized by every other assignment).
+
+pub mod closed_form;
+pub mod coverage;
+pub mod harmonic;
+pub mod majorization;
+pub mod optimizer;

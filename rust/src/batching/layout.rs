@@ -1,0 +1,165 @@
+//! Materialized task-to-worker layouts.
+
+use std::collections::BTreeSet;
+
+use crate::util::error::{Error, Result};
+
+/// Task index in `0..N`.
+pub type TaskId = usize;
+/// Worker index in `0..N`.
+pub type WorkerId = usize;
+/// Batch index.
+pub type BatchId = usize;
+
+/// A materialized assignment: which tasks each worker executes, and the
+/// batch structure used for completion tracking.
+///
+/// Completion semantics (paper §II-B): a worker reports once *all* its
+/// assigned tasks finish; the job completes when every task has been
+/// reported by at least one finished worker.
+#[derive(Clone, Debug)]
+pub struct Layout {
+    /// Total number of tasks (= worker budget N in the paper's model).
+    pub n_tasks: usize,
+    /// `worker_tasks[w]` = sorted task ids worker `w` executes.
+    pub worker_tasks: Vec<Vec<TaskId>>,
+    /// `batches[b]` = sorted task ids of batch `b` (batch structure; for
+    /// overlapping policies batches coincide with workers).
+    pub batches: Vec<Vec<TaskId>>,
+    /// `batch_workers[b]` = workers hosting exactly batch `b`.
+    pub batch_workers: Vec<Vec<WorkerId>>,
+}
+
+impl Layout {
+    /// Number of workers.
+    pub fn n_workers(&self) -> usize {
+        self.worker_tasks.len()
+    }
+
+    /// Batch size (uniform across batches by construction).
+    pub fn batch_size(&self) -> usize {
+        self.batches.first().map_or(0, |b| b.len())
+    }
+
+    /// Replication degree of each task: how many workers host it.
+    pub fn task_replication(&self) -> Vec<usize> {
+        let mut rep = vec![0usize; self.n_tasks];
+        for tasks in &self.worker_tasks {
+            for &t in tasks {
+                rep[t] += 1;
+            }
+        }
+        rep
+    }
+
+    /// The assignment vector `N̄ = (N₁,…,N_B)` — workers per batch.
+    pub fn assignment_vector(&self) -> Vec<usize> {
+        self.batch_workers.iter().map(|ws| ws.len()).collect()
+    }
+
+    /// Is every task hosted by at least one worker? (Random assignment
+    /// can violate this — the coverage failure of Lemma 1.)
+    pub fn covers_all_tasks(&self) -> bool {
+        self.task_replication().iter().all(|&r| r > 0)
+    }
+
+    /// Structural sanity checks used by tests and the coordinator.
+    pub fn validate(&self) -> Result<()> {
+        if self.worker_tasks.is_empty() {
+            return Err(Error::Policy("layout has no workers".into()));
+        }
+        let size = self.batch_size();
+        for (b, tasks) in self.batches.iter().enumerate() {
+            if tasks.len() != size {
+                return Err(Error::Policy(format!(
+                    "batch {b} has size {} != {size}",
+                    tasks.len()
+                )));
+            }
+            let set: BTreeSet<_> = tasks.iter().collect();
+            if set.len() != tasks.len() {
+                return Err(Error::Policy(format!("batch {b} has duplicate tasks")));
+            }
+            if tasks.iter().any(|&t| t >= self.n_tasks) {
+                return Err(Error::Policy(format!("batch {b} has out-of-range task")));
+            }
+        }
+        for (w, tasks) in self.worker_tasks.iter().enumerate() {
+            if tasks.windows(2).any(|p| p[0] >= p[1]) {
+                return Err(Error::Policy(format!("worker {w} tasks not sorted/unique")));
+            }
+        }
+        for (b, workers) in self.batch_workers.iter().enumerate() {
+            for &w in workers {
+                if self.worker_tasks[w] != self.batches[b] {
+                    return Err(Error::Policy(format!(
+                        "worker {w} listed for batch {b} but executes different tasks"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Given the set of finished workers, is the job complete (every
+    /// task recovered from at least one finished worker)?
+    pub fn complete(&self, finished: &[bool]) -> bool {
+        debug_assert_eq!(finished.len(), self.n_workers());
+        let mut covered = vec![false; self.n_tasks];
+        for (w, tasks) in self.worker_tasks.iter().enumerate() {
+            if finished[w] {
+                for &t in tasks {
+                    covered[t] = true;
+                }
+            }
+        }
+        covered.into_iter().all(|c| c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_layout() -> Layout {
+        // N=4, B=2, balanced: batches {0,1},{2,3}, workers 0,1 -> b0; 2,3 -> b1
+        Layout {
+            n_tasks: 4,
+            worker_tasks: vec![vec![0, 1], vec![0, 1], vec![2, 3], vec![2, 3]],
+            batches: vec![vec![0, 1], vec![2, 3]],
+            batch_workers: vec![vec![0, 1], vec![2, 3]],
+        }
+    }
+
+    #[test]
+    fn replication_and_vector() {
+        let l = tiny_layout();
+        assert_eq!(l.task_replication(), vec![2, 2, 2, 2]);
+        assert_eq!(l.assignment_vector(), vec![2, 2]);
+        assert!(l.covers_all_tasks());
+        l.validate().unwrap();
+    }
+
+    #[test]
+    fn completion_logic_first_copy_wins() {
+        let l = tiny_layout();
+        assert!(!l.complete(&[true, false, false, false])); // batch 1 missing
+        assert!(l.complete(&[true, false, false, true])); // one worker per batch
+        assert!(l.complete(&[false, true, true, false]));
+        assert!(!l.complete(&[false, false, false, false]));
+    }
+
+    #[test]
+    fn validate_catches_duplicates() {
+        let mut l = tiny_layout();
+        l.batches[0] = vec![0, 0];
+        assert!(l.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_mismatched_batch_worker() {
+        let mut l = tiny_layout();
+        l.batch_workers[0] = vec![2]; // worker 2 executes batch 1, not 0
+        assert!(l.validate().is_err());
+    }
+}

@@ -1,0 +1,41 @@
+//! Task replication policies (paper §III, §V).
+//!
+//! A policy is a two-stage process: (1) group the N tasks into batches,
+//! (2) assign batches to the N workers. [`Policy`] enumerates every
+//! scheme the paper analyzes:
+//!
+//! * balanced non-overlapping (the provably optimal one, Theorems 1–2)
+//! * unbalanced non-overlapping (for the majorization experiments)
+//! * random non-overlapping (coupon-collector, Li et al. \[72\])
+//! * cyclic overlapping (scheme 1 of Fig. 5; gradient coding \[41\])
+//! * hybrid overlapping (scheme 2 of Fig. 5)
+//!
+//! [`Layout`] is the materialized result: for each worker, the set of
+//! task ids it must execute; plus the batch structure needed by the
+//! completion logic.
+
+mod layout;
+mod policies;
+mod spectrum;
+
+pub use layout::{BatchId, Layout, TaskId, WorkerId};
+pub use policies::Policy;
+pub use spectrum::{operating_points, OperatingPoint};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn module_level_smoke() {
+        let mut rng = Pcg64::new(0);
+        for policy in [
+            Policy::BalancedNonOverlapping { batches: 3 },
+            Policy::CyclicOverlapping { batches: 3 },
+        ] {
+            let layout = policy.layout(6, &mut rng).unwrap();
+            layout.validate().unwrap();
+        }
+    }
+}

@@ -1,0 +1,321 @@
+//! Policy definitions and layout materialization.
+
+use crate::batching::layout::Layout;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Pcg64;
+
+/// A task-replication policy (paper §III and §V / Fig. 5).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// B non-overlapping batches of size N/B, each replicated on N/B
+    /// workers (the optimal policy of Theorems 1–2). Requires B | N.
+    BalancedNonOverlapping { batches: usize },
+    /// B non-overlapping batches of size N/B with an explicit assignment
+    /// vector (workers per batch, summing to N) — the majorization
+    /// experiments of Lemma 2.
+    UnbalancedNonOverlapping { assignment: Vec<usize> },
+    /// B non-overlapping batches; every worker draws one uniformly at
+    /// random with replacement (Li et al. \[72\]; coverage analyzed by
+    /// Lemma 1). May leave tasks uncovered.
+    RandomNonOverlapping { batches: usize },
+    /// Scheme 1 of Fig. 5: N cyclic overlapping batches of size N/B,
+    /// one per worker (the gradient-coding layout \[41\]).
+    CyclicOverlapping { batches: usize },
+    /// Scheme 2 of Fig. 5: a cyclic group over the first N−N/B tasks
+    /// plus one replicated non-overlapping batch on the remaining
+    /// workers.
+    HybridOverlapping { batches: usize },
+}
+
+impl Policy {
+    /// Human-readable name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::BalancedNonOverlapping { .. } => "balanced-nonoverlap",
+            Policy::UnbalancedNonOverlapping { .. } => "unbalanced-nonoverlap",
+            Policy::RandomNonOverlapping { .. } => "random-nonoverlap",
+            Policy::CyclicOverlapping { .. } => "cyclic-overlap",
+            Policy::HybridOverlapping { .. } => "hybrid-overlap",
+        }
+    }
+
+    /// Number of distinct batches the policy uses.
+    pub fn batch_count(&self, n: usize) -> usize {
+        match self {
+            Policy::BalancedNonOverlapping { batches }
+            | Policy::RandomNonOverlapping { batches } => *batches,
+            Policy::UnbalancedNonOverlapping { assignment } => assignment.len(),
+            Policy::CyclicOverlapping { .. } => n,
+            Policy::HybridOverlapping { batches } => n - n / *batches + 1,
+        }
+    }
+
+    /// Materialize the layout for `n` tasks on `n` workers.
+    pub fn layout(&self, n: usize, rng: &mut Pcg64) -> Result<Layout> {
+        match self {
+            Policy::BalancedNonOverlapping { batches } => {
+                let b = *batches;
+                check_divides(n, b)?;
+                let assignment = vec![n / b; b];
+                nonoverlapping(n, &assignment)
+            }
+            Policy::UnbalancedNonOverlapping { assignment } => {
+                let b = assignment.len();
+                check_divides(n, b)?;
+                if assignment.iter().sum::<usize>() != n {
+                    return Err(Error::Policy(format!(
+                        "assignment {:?} must sum to N={n}",
+                        assignment
+                    )));
+                }
+                if assignment.iter().any(|&x| x == 0) {
+                    return Err(Error::Policy(
+                        "assignment entries must be >= 1 (zero leaves a batch uncovered)"
+                            .into(),
+                    ));
+                }
+                nonoverlapping(n, assignment)
+            }
+            Policy::RandomNonOverlapping { batches } => {
+                let b = *batches;
+                check_divides(n, b)?;
+                let batch_tasks = chop(n, b);
+                let mut worker_tasks = Vec::with_capacity(n);
+                let mut batch_workers = vec![Vec::new(); b];
+                for w in 0..n {
+                    let pick = rng.below(b as u64) as usize;
+                    worker_tasks.push(batch_tasks[pick].clone());
+                    batch_workers[pick].push(w);
+                }
+                Ok(Layout { n_tasks: n, worker_tasks, batches: batch_tasks, batch_workers })
+            }
+            Policy::CyclicOverlapping { batches } => {
+                let b = *batches;
+                check_divides(n, b)?;
+                let size = n / b;
+                let mut worker_tasks = Vec::with_capacity(n);
+                let mut batch_tasks = Vec::with_capacity(n);
+                let mut batch_workers = Vec::with_capacity(n);
+                for w in 0..n {
+                    let mut tasks: Vec<usize> = (0..size).map(|i| (w + i) % n).collect();
+                    tasks.sort_unstable();
+                    worker_tasks.push(tasks.clone());
+                    batch_tasks.push(tasks);
+                    batch_workers.push(vec![w]);
+                }
+                Ok(Layout { n_tasks: n, worker_tasks, batches: batch_tasks, batch_workers })
+            }
+            Policy::HybridOverlapping { batches } => {
+                let b = *batches;
+                check_divides(n, b)?;
+                let size = n / b;
+                if size >= n {
+                    return Err(Error::Policy(
+                        "hybrid scheme needs B >= 2 (batch smaller than task set)".into(),
+                    ));
+                }
+                let head = n - size; // cyclic region (tasks 0..head)
+                let mut worker_tasks = Vec::with_capacity(n);
+                let mut batch_tasks = Vec::new();
+                let mut batch_workers = Vec::new();
+                // cyclic group over the head tasks, one batch per worker
+                for w in 0..head {
+                    let mut tasks: Vec<usize> =
+                        (0..size).map(|i| (w + i) % head).collect();
+                    tasks.sort_unstable();
+                    worker_tasks.push(tasks.clone());
+                    batch_tasks.push(tasks);
+                    batch_workers.push(vec![w]);
+                }
+                // one replicated tail batch on the remaining `size` workers
+                let tail: Vec<usize> = (head..n).collect();
+                for _w in head..n {
+                    worker_tasks.push(tail.clone());
+                }
+                batch_tasks.push(tail);
+                batch_workers.push((head..n).collect());
+                Ok(Layout { n_tasks: n, worker_tasks, batches: batch_tasks, batch_workers })
+            }
+        }
+    }
+}
+
+fn check_divides(n: usize, b: usize) -> Result<()> {
+    if b == 0 || b > n || n % b != 0 {
+        return Err(Error::Policy(format!("B={b} must divide N={n} (1 ≤ B ≤ N)")));
+    }
+    Ok(())
+}
+
+/// Chop tasks `0..n` into `b` contiguous batches of size n/b.
+fn chop(n: usize, b: usize) -> Vec<Vec<usize>> {
+    let size = n / b;
+    (0..b).map(|i| (i * size..(i + 1) * size).collect()).collect()
+}
+
+/// Build a non-overlapping layout from an assignment vector.
+fn nonoverlapping(n: usize, assignment: &[usize]) -> Result<Layout> {
+    let b = assignment.len();
+    let batch_tasks = chop(n, b);
+    let mut worker_tasks = Vec::with_capacity(n);
+    let mut batch_workers = vec![Vec::new(); b];
+    let mut w = 0usize;
+    for (i, &cnt) in assignment.iter().enumerate() {
+        for _ in 0..cnt {
+            worker_tasks.push(batch_tasks[i].clone());
+            batch_workers[i].push(w);
+            w += 1;
+        }
+    }
+    Ok(Layout { n_tasks: n, worker_tasks, batches: batch_tasks, batch_workers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn balanced_layout_structure() {
+        let mut rng = Pcg64::new(0);
+        let l = Policy::BalancedNonOverlapping { batches: 3 }.layout(6, &mut rng).unwrap();
+        l.validate().unwrap();
+        assert_eq!(l.batches.len(), 3);
+        assert_eq!(l.batch_size(), 2);
+        assert_eq!(l.assignment_vector(), vec![2, 2, 2]);
+        assert_eq!(l.task_replication(), vec![2; 6]);
+        assert!(l.covers_all_tasks());
+    }
+
+    #[test]
+    fn balanced_full_diversity_and_parallelism() {
+        let mut rng = Pcg64::new(0);
+        // B=1: every worker hosts the whole job
+        let l = Policy::BalancedNonOverlapping { batches: 1 }.layout(4, &mut rng).unwrap();
+        assert!(l.worker_tasks.iter().all(|t| t.len() == 4));
+        assert_eq!(l.assignment_vector(), vec![4]);
+        // B=N: no redundancy
+        let l = Policy::BalancedNonOverlapping { batches: 4 }.layout(4, &mut rng).unwrap();
+        assert_eq!(l.task_replication(), vec![1; 4]);
+    }
+
+    #[test]
+    fn unbalanced_respects_vector() {
+        let mut rng = Pcg64::new(0);
+        let l = Policy::UnbalancedNonOverlapping { assignment: vec![4, 1, 1] }
+            .layout(6, &mut rng)
+            .unwrap();
+        l.validate().unwrap();
+        assert_eq!(l.assignment_vector(), vec![4, 1, 1]);
+        // batch size is still N/B = 2
+        assert_eq!(l.batch_size(), 2);
+    }
+
+    #[test]
+    fn unbalanced_rejects_bad_vectors() {
+        let mut rng = Pcg64::new(0);
+        assert!(Policy::UnbalancedNonOverlapping { assignment: vec![3, 2] }
+            .layout(6, &mut rng)
+            .is_err()); // sums to 5
+        assert!(Policy::UnbalancedNonOverlapping { assignment: vec![6, 0] }
+            .layout(6, &mut rng)
+            .is_err()); // zero entry
+    }
+
+    #[test]
+    fn cyclic_matches_fig5_scheme1() {
+        let mut rng = Pcg64::new(0);
+        let l = Policy::CyclicOverlapping { batches: 3 }.layout(6, &mut rng).unwrap();
+        l.validate().unwrap();
+        // W1..W6 host (1,2),(2,3),...,(6,1) in 0-based: w hosts {w, w+1 mod 6}
+        assert_eq!(l.worker_tasks[0], vec![0, 1]);
+        assert_eq!(l.worker_tasks[4], vec![4, 5]);
+        assert_eq!(l.worker_tasks[5], vec![0, 5]);
+        assert_eq!(l.task_replication(), vec![2; 6]);
+        // each batch shares a task with 2(N/B - 1) = 2 other batches
+        let overlaps = |a: &Vec<usize>, b: &Vec<usize>| a.iter().any(|t| b.contains(t));
+        for i in 0..6 {
+            let cnt = (0..6)
+                .filter(|&j| j != i && overlaps(&l.batches[i], &l.batches[j]))
+                .count();
+            assert_eq!(cnt, 2, "batch {i}");
+        }
+    }
+
+    #[test]
+    fn hybrid_matches_fig5_scheme2() {
+        let mut rng = Pcg64::new(0);
+        let l = Policy::HybridOverlapping { batches: 3 }.layout(6, &mut rng).unwrap();
+        l.validate().unwrap();
+        // first 4 workers cyclic over tasks 0..4, last 2 share batch {4,5}
+        assert_eq!(l.worker_tasks[0], vec![0, 1]);
+        assert_eq!(l.worker_tasks[3], vec![0, 3]);
+        assert_eq!(l.worker_tasks[4], vec![4, 5]);
+        assert_eq!(l.worker_tasks[5], vec![4, 5]);
+        assert_eq!(l.task_replication(), vec![2; 6]);
+        assert_eq!(l.batches.len(), 5);
+    }
+
+    #[test]
+    fn random_layout_statistics() {
+        // coverage frequency should match Lemma 1
+        let (n, b) = (20usize, 4usize);
+        let mut rng = Pcg64::new(5);
+        let trials = 20_000;
+        let mut covered = 0;
+        for _ in 0..trials {
+            let l = Policy::RandomNonOverlapping { batches: b }.layout(n, &mut rng).unwrap();
+            l.validate().unwrap();
+            if l.covers_all_tasks() {
+                covered += 1;
+            }
+        }
+        let emp = covered as f64 / trials as f64;
+        let exact = crate::analysis::coverage::coverage_probability(n, b);
+        assert!((emp - exact).abs() < 0.01, "{emp} vs {exact}");
+    }
+
+    #[test]
+    fn divisibility_enforced() {
+        let mut rng = Pcg64::new(0);
+        for p in [
+            Policy::BalancedNonOverlapping { batches: 3 },
+            Policy::RandomNonOverlapping { batches: 3 },
+            Policy::CyclicOverlapping { batches: 3 },
+        ] {
+            assert!(p.layout(10, &mut rng).is_err(), "{}", p.name());
+        }
+        assert!(Policy::BalancedNonOverlapping { batches: 0 }.layout(6, &mut rng).is_err());
+    }
+
+    #[test]
+    fn all_policies_are_fair_when_feasible() {
+        // every task replicated the same number of times (the fairness
+        // property §V assumes) — except random, which is unfair by design
+        forall("policy fairness", 40, |rng| {
+            let b = *rng.choose(&[1usize, 2, 3, 4, 6]);
+            let n = b * rng.range(1, 5);
+            for p in [
+                Policy::BalancedNonOverlapping { batches: b },
+                Policy::CyclicOverlapping { batches: b },
+            ] {
+                if let Ok(l) = p.layout(n, rng) {
+                    l.validate().unwrap();
+                    let rep = l.task_replication();
+                    assert!(
+                        rep.windows(2).all(|w| w[0] == w[1]),
+                        "{} N={n} B={b}: {rep:?}",
+                        p.name()
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn hybrid_needs_b_at_least_2() {
+        let mut rng = Pcg64::new(0);
+        assert!(Policy::HybridOverlapping { batches: 1 }.layout(6, &mut rng).is_err());
+    }
+}

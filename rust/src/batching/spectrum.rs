@@ -1,0 +1,77 @@
+//! The diversity–parallelism spectrum (paper §I, §VI).
+//!
+//! Every feasible batch count B (a divisor of N) is one operating
+//! point: B = 1 is *full diversity* (the whole job replicated on every
+//! worker), B = N is *full parallelism* (no redundancy).
+
+use crate::analysis::optimizer::feasible_b;
+
+/// One operating point in the spectrum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OperatingPoint {
+    /// Batch count B.
+    pub batches: usize,
+    /// Tasks per batch (= N/B).
+    pub batch_size: usize,
+    /// Replication degree of each batch under the balanced policy
+    /// (= N/B).
+    pub replication: usize,
+}
+
+impl OperatingPoint {
+    pub fn is_full_diversity(&self) -> bool {
+        self.batches == 1
+    }
+
+    pub fn is_full_parallelism(&self) -> bool {
+        self.replication == 1
+    }
+
+    /// Redundancy fraction: how much of the cluster's total work is
+    /// redundant (0 at full parallelism, (N−1)/N at full diversity).
+    pub fn redundancy(&self, n: usize) -> f64 {
+        1.0 - self.batches as f64 / n as f64
+    }
+}
+
+/// All operating points for a worker budget N, ordered from full
+/// diversity to full parallelism.
+pub fn operating_points(n: usize) -> Vec<OperatingPoint> {
+    feasible_b(n)
+        .into_iter()
+        .map(|b| OperatingPoint { batches: b, batch_size: n / b, replication: n / b })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spectrum_for_100() {
+        let pts = operating_points(100);
+        assert_eq!(pts.len(), 9); // divisors of 100
+        assert!(pts[0].is_full_diversity());
+        assert!(pts.last().unwrap().is_full_parallelism());
+        assert_eq!(pts[0].batch_size, 100);
+        assert_eq!(pts.last().unwrap().batch_size, 1);
+        for p in &pts {
+            assert_eq!(p.batches * p.batch_size, 100);
+            assert_eq!(p.replication, p.batch_size);
+        }
+    }
+
+    #[test]
+    fn redundancy_fraction() {
+        let pts = operating_points(10);
+        assert_eq!(pts[0].redundancy(10), 0.9);
+        assert_eq!(pts.last().unwrap().redundancy(10), 0.0);
+    }
+
+    #[test]
+    fn prime_n_has_two_points() {
+        let pts = operating_points(7);
+        assert_eq!(pts.len(), 2);
+        assert!(pts[0].is_full_diversity() && pts[1].is_full_parallelism());
+    }
+}

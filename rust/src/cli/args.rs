@@ -1,0 +1,124 @@
+//! Tiny argv parser: positional words + `--flag value` pairs
+//! (`--flag=value` also accepted; bare `--flag` is a boolean).
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Error, Result};
+
+/// Parsed command-line arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags that were read at least once (unknown-flag detection).
+    consumed: std::collections::BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse argv (without the program name).
+    pub fn parse(argv: Vec<String>) -> Result<Args> {
+        let mut a = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(flag) = tok.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    let v = it.next().unwrap();
+                    a.flags.insert(flag.to_string(), v);
+                } else {
+                    a.flags.insert(flag.to_string(), "true".to_string());
+                }
+            } else {
+                a.positionals.push(tok);
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+
+    /// String flag.
+    pub fn get(&mut self, key: &str) -> Option<String> {
+        self.consumed.insert(key.to_string());
+        self.flags.get(key).cloned()
+    }
+
+    /// Typed flag with default.
+    pub fn get_usize(&mut self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|e| Error::Config(format!("--{key} {v}: {e}"))),
+        }
+    }
+
+    pub fn get_u64(&mut self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse::<u64>().map_err(|e| Error::Config(format!("--{key} {v}: {e}")))
+            }
+        }
+    }
+
+    pub fn get_f64(&mut self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse::<f64>().map_err(|e| Error::Config(format!("--{key} {v}: {e}")))
+            }
+        }
+    }
+
+    pub fn get_f32(&mut self, key: &str, default: f32) -> Result<f32> {
+        Ok(self.get_f64(key, default as f64)? as f32)
+    }
+
+    pub fn get_bool(&mut self, key: &str) -> bool {
+        self.get(key).map_or(false, |v| v == "true" || v == "1" || v == "yes")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from).collect()).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let mut a = parse("experiment fig3 --reps 500 --out=/tmp/x --verbose");
+        assert_eq!(a.positional(0), Some("experiment"));
+        assert_eq!(a.positional(1), Some("fig3"));
+        assert_eq!(a.get_usize("reps", 1).unwrap(), 500);
+        assert_eq!(a.get("out").unwrap(), "/tmp/x");
+        assert!(a.get_bool("verbose"));
+        assert!(!a.get_bool("quiet"));
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let mut a = parse("plan --mu 1.5 --delta 0.05");
+        assert_eq!(a.get_f64("mu", 0.0).unwrap(), 1.5);
+        assert_eq!(a.get_f64("delta", 0.0).unwrap(), 0.05);
+    }
+
+    #[test]
+    fn bad_typed_value_is_error() {
+        let mut a = parse("x --reps many");
+        assert!(a.get_usize("reps", 1).is_err());
+    }
+
+    #[test]
+    fn boolean_at_end() {
+        let mut a = parse("cmd --flag");
+        assert!(a.get_bool("flag"));
+    }
+}

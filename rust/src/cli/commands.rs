@@ -1,0 +1,435 @@
+//! CLI subcommand implementations.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::batching::Policy;
+use crate::cli::args::Args;
+use crate::config::SystemConfig;
+use crate::coordinator::{Coordinator, Dataset, GdConfig, NativeBackend, PjrtBackend};
+use crate::dist::ServiceDist;
+use crate::experiments::{self, DEFAULT_REPS};
+use crate::metrics::{export_csv, fnum, Table};
+use crate::planner::{Objective, Planner};
+use crate::runtime::{artifacts_dir, GradientOps, RuntimeService};
+use crate::sim::montecarlo::simulate_policy;
+use crate::traces::{load_trace, write_trace, GeneratorConfig, JobAnalysis};
+use crate::util::error::{Error, Result};
+
+/// Resolve the service distribution from flags or `--config`.
+fn service_from(args: &mut Args) -> Result<ServiceDist> {
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(&path)?;
+        return Ok(SystemConfig::from_toml(&text)?.service);
+    }
+    let family = args.get("family").unwrap_or_else(|| "sexp".to_string());
+    Ok(match family.as_str() {
+        "exp" => ServiceDist::exp(args.get_f64("mu", 1.0)?),
+        "sexp" => {
+            ServiceDist::shifted_exp(args.get_f64("delta", 0.05)?, args.get_f64("mu", 1.0)?)
+        }
+        "pareto" => {
+            ServiceDist::pareto(args.get_f64("sigma", 1.0)?, args.get_f64("alpha", 2.0)?)
+        }
+        "weibull" => {
+            ServiceDist::weibull(args.get_f64("shape", 0.8)?, args.get_f64("scale", 1.0)?)
+        }
+        "gamma" => ServiceDist::gamma_dist(
+            args.get_f64("shape", 2.0)?,
+            args.get_f64("scale", 1.0)?,
+        ),
+        "bimodal" => ServiceDist::bimodal(
+            args.get_f64("p_slow", 0.1)?,
+            (args.get_f64("fast_delta", 0.1)?, args.get_f64("fast_mu", 10.0)?),
+            (args.get_f64("slow_delta", 5.0)?, args.get_f64("slow_mu", 1.0)?),
+        ),
+        other => return Err(Error::Config(format!("unknown family '{other}'"))),
+    })
+}
+
+fn objective_from(args: &mut Args) -> Result<Objective> {
+    match args.get("objective").as_deref() {
+        None | Some("mean") => Ok(Objective::MeanCompletion),
+        Some("cov") => Ok(Objective::Predictability),
+        Some(o) if o.starts_with("tradeoff=") => {
+            let w = o["tradeoff=".len()..]
+                .parse::<f64>()
+                .map_err(|e| Error::Config(format!("bad tradeoff weight: {e}")))?;
+            Ok(Objective::Tradeoff(w))
+        }
+        Some(other) => Err(Error::Config(format!("unknown objective '{other}'"))),
+    }
+}
+
+pub fn plan(args: &mut Args) -> Result<()> {
+    let n = args.get_usize("workers", 100)?;
+    let tau = service_from(args)?;
+    let objective = objective_from(args)?;
+    let planner = Planner::new(n, tau.clone());
+    let plan = planner.plan(objective);
+    let mut t = Table::new(
+        &format!("Redundancy plan: N={n}, tau ~ {}", tau.label()),
+        vec!["field", "value"],
+    );
+    t.row(vec!["batches B*".into(), plan.batches.to_string()]);
+    t.row(vec!["batch size".into(), plan.batch_size.to_string()]);
+    t.row(vec!["replication".into(), plan.replication.to_string()]);
+    t.row(vec!["policy".into(), plan.policy.name().into()]);
+    t.row(vec!["predicted E[T]".into(), fnum(plan.predicted_mean)]);
+    t.row(vec!["predicted CoV".into(), fnum(plan.predicted_cov)]);
+    t.row(vec![
+        "speedup vs B=N".into(),
+        format!("{}x", fnum(plan.speedup_vs_no_redundancy)),
+    ]);
+    if let Some(r) = plan.regime {
+        t.row(vec!["regime".into(), format!("{r:?}")]);
+    }
+    t.print();
+    Ok(())
+}
+
+pub fn simulate(args: &mut Args) -> Result<()> {
+    let n = args.get_usize("workers", 100)?;
+    let b = args.get_usize("batches", n)?;
+    let reps = args.get_usize("reps", DEFAULT_REPS)?;
+    let seed = args.get_u64("seed", 0)?;
+    let tau = service_from(args)?;
+    let est = simulate_policy(
+        n,
+        &Policy::BalancedNonOverlapping { batches: b },
+        &tau,
+        reps,
+        seed,
+    )?;
+    let mut t = Table::new(
+        &format!("Simulation: N={n}, B={b}, tau ~ {}, {reps} reps", tau.label()),
+        vec!["metric", "value"],
+    );
+    t.row(vec!["mean".into(), format!("{} ± {}", fnum(est.mean), fnum(est.ci95))]);
+    t.row(vec!["CoV".into(), fnum(est.cov)]);
+    t.row(vec!["p50".into(), fnum(est.p50)]);
+    t.row(vec!["p95".into(), fnum(est.p95)]);
+    t.row(vec!["p99".into(), fnum(est.p99)]);
+    t.row(vec!["failure rate".into(), fnum(est.failure_rate)]);
+    t.print();
+    Ok(())
+}
+
+pub fn sweep(args: &mut Args) -> Result<()> {
+    let n = args.get_usize("workers", 100)?;
+    let tau = service_from(args)?;
+    let planner = Planner::new(n, tau.clone());
+    let mut t = Table::new(
+        &format!("Spectrum sweep: N={n}, tau ~ {}", tau.label()),
+        vec!["B", "batch size", "E[T]", "CoV[T]", "speedup vs B=N"],
+    );
+    let sweep = planner.sweep();
+    let baseline = sweep.last().expect("non-empty").mean;
+    for p in &sweep {
+        t.row(vec![
+            p.batches.to_string(),
+            (n / p.batches).to_string(),
+            fnum(p.mean),
+            fnum(p.cov),
+            format!("{}x", fnum(baseline / p.mean)),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+pub fn trace(args: &mut Args) -> Result<()> {
+    match args.positional(1) {
+        Some("gen") => {
+            let out = PathBuf::from(
+                args.get("out").unwrap_or_else(|| "trace.csv".to_string()),
+            );
+            let tasks = args.get_usize("tasks", 100)?;
+            let seed = args.get_u64("seed", 42)?;
+            let trace = GeneratorConfig::paper_workload(tasks, seed).generate();
+            write_trace(&out, &trace)?;
+            println!(
+                "wrote {} events ({} jobs x {tasks} tasks) to {}",
+                trace.events.len(),
+                trace.job_ids().len(),
+                out.display()
+            );
+            Ok(())
+        }
+        Some("analyze") => {
+            let path = PathBuf::from(args.get("trace").ok_or_else(|| {
+                Error::Config("trace analyze needs --trace FILE".into())
+            })?);
+            let trace = load_trace(&path)?;
+            let mut t = Table::new(
+                &format!("Trace analysis: {}", path.display()),
+                vec!["job", "tasks", "mean", "min", "p99", "tail", "fitted"],
+            );
+            for a in JobAnalysis::all(&trace) {
+                t.row(vec![
+                    a.job_id.to_string(),
+                    a.n_tasks.to_string(),
+                    fnum(a.mean),
+                    fnum(a.min),
+                    fnum(a.p99),
+                    if a.is_heavy_tail() { "heavy" } else { "exp" }.to_string(),
+                    a.fit.best().label(),
+                ]);
+            }
+            t.print();
+            Ok(())
+        }
+        other => Err(Error::Config(format!(
+            "trace needs a subcommand gen|analyze, got {other:?}"
+        ))),
+    }
+}
+
+pub fn experiment(args: &mut Args) -> Result<()> {
+    let which = args.positional(1).unwrap_or("all").to_string();
+    let reps = args.get_usize("reps", DEFAULT_REPS)?;
+    let seed = args.get_u64("seed", 42)?;
+    let out = args.get("out").map(PathBuf::from);
+    let run_one = |id: &str| -> Result<()> {
+        match id {
+            "fig3" => {
+                experiments::fig3::table(&experiments::fig3::PAPER_NS).print();
+                if let Some(dir) = &out {
+                    std::fs::create_dir_all(dir)?;
+                    export_csv(
+                        &dir.join("fig3.csv"),
+                        &experiments::fig3::run(&experiments::fig3::PAPER_NS),
+                    )?;
+                }
+            }
+            "fig6" => {
+                let rows =
+                    experiments::fig6::run(&[0.25, 0.5, 1.0, 2.0, 4.0], reps, seed)?;
+                experiments::fig6::table(&rows).print();
+                if let Some(dir) = &out {
+                    std::fs::create_dir_all(dir)?;
+                    export_csv(&dir.join("fig6.csv"), &experiments::fig6::series(&rows))?;
+                }
+            }
+            "fig7_8" => {
+                experiments::fig7_8::table(&experiments::fig7_8::PAPER_MUS).print();
+                if let Some(dir) = &out {
+                    std::fs::create_dir_all(dir)?;
+                    export_csv(
+                        &dir.join("fig7.csv"),
+                        &experiments::fig7_8::fig7_series(&experiments::fig7_8::PAPER_MUS),
+                    )?;
+                    export_csv(
+                        &dir.join("fig8.csv"),
+                        &experiments::fig7_8::fig8_series(&experiments::fig7_8::PAPER_MUS),
+                    )?;
+                }
+            }
+            "fig9_10" => {
+                experiments::fig9_10::table(&experiments::fig9_10::PAPER_ALPHAS).print();
+                if let Some(dir) = &out {
+                    std::fs::create_dir_all(dir)?;
+                    export_csv(
+                        &dir.join("fig9.csv"),
+                        &experiments::fig9_10::fig9_series(&experiments::fig9_10::PAPER_ALPHAS),
+                    )?;
+                    export_csv(
+                        &dir.join("fig10.csv"),
+                        &experiments::fig9_10::fig10_series(&experiments::fig9_10::PAPER_ALPHAS),
+                    )?;
+                }
+            }
+            "regimes" => {
+                experiments::regimes::sexp_mean_table(
+                    100,
+                    0.05,
+                    &[0.1, 0.5, 1.0, 2.0, 5.0, 14.0, 20.0],
+                )
+                .print();
+                experiments::regimes::sexp_cov_table(100, 0.05, &[0.2, 0.5, 3.0, 40.0])
+                    .print();
+                experiments::regimes::pareto_table(100, 1.0, &[1.5, 2.5, 3.5, 5.0, 7.0])
+                    .print();
+                experiments::regimes::tradeoff_table(100).print();
+            }
+            "assignment" => {
+                for tau in [
+                    ServiceDist::exp(1.0),
+                    ServiceDist::shifted_exp(0.1, 1.0),
+                    ServiceDist::pareto(1.0, 2.5),
+                ] {
+                    let rows = experiments::assignment::run(8, 2, &tau, reps, seed)?;
+                    experiments::assignment::table(8, 2, &tau, &rows).print();
+                }
+            }
+            "open-problem" => {
+                experiments::open_problem::table(8, 2)?.print();
+                experiments::open_problem::table(12, 3)?.print();
+            }
+            "traces" => {
+                let trace = experiments::traces_exp::standard_trace(seed);
+                experiments::traces_exp::table(
+                    "Fig 12: normalized E[T] vs B — exponential-tail jobs",
+                    &trace,
+                    &experiments::traces_exp::EXP_TAIL_JOBS,
+                    reps,
+                    seed,
+                )?
+                .print();
+                experiments::traces_exp::table(
+                    "Fig 13: normalized E[T] vs B — heavy-tail jobs",
+                    &trace,
+                    &experiments::traces_exp::HEAVY_TAIL_JOBS,
+                    reps,
+                    seed,
+                )?
+                .print();
+                let headline =
+                    experiments::traces_exp::headline_speedup(&trace, reps, seed)?;
+                println!("headline speedup (best heavy-tail job): {}x", fnum(headline));
+                if let Some(dir) = &out {
+                    std::fs::create_dir_all(dir)?;
+                    export_csv(
+                        &dir.join("fig11.csv"),
+                        &experiments::traces_exp::fig11_series(&trace),
+                    )?;
+                }
+            }
+            other => return Err(Error::Config(format!("unknown experiment '{other}'"))),
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for id in
+            ["fig3", "fig6", "fig7_8", "fig9_10", "regimes", "assignment", "open-problem", "traces"]
+        {
+            run_one(id)?;
+            println!();
+        }
+        Ok(())
+    } else {
+        run_one(&which)
+    }
+}
+
+pub fn gd_train(args: &mut Args) -> Result<()> {
+    let workers = args.get_usize("workers", 16)?;
+    let batches = args.get_usize("batches", 4)?;
+    let rounds = args.get_usize("rounds", 100)?;
+    let lr = args.get_f32("lr", 0.1)?;
+    let seed = args.get_u64("seed", 0)?;
+    let time_scale = args.get_f64("time-scale", 1e-3)?;
+    let backend_kind = args.get("backend").unwrap_or_else(|| "pjrt".to_string());
+    let tau = service_from(args)?;
+
+    // keep the RuntimeService alive for the whole run
+    let mut _service_keepalive = None;
+    let (backend, m, d): (Arc<dyn crate::coordinator::ComputeBackend>, usize, usize) =
+        match backend_kind.as_str() {
+            "native" => {
+                let (m, d) = (args.get_usize("m", 64)?, args.get_usize("d", 16)?);
+                (Arc::new(NativeBackend::new(m, d)), m, d)
+            }
+            "pjrt" => {
+                let service = RuntimeService::start(&artifacts_dir())?;
+                let manifest = service.handle().manifest().clone();
+                let ops = GradientOps::new(service.handle(), manifest.m)?;
+                let (m, d) = (ops.m, ops.d);
+                let backend = Arc::new(PjrtBackend::new(ops));
+                _service_keepalive = Some(service);
+                (backend, m, d)
+            }
+            other => return Err(Error::Config(format!("unknown backend '{other}'"))),
+        };
+
+    let dataset = Dataset::synthetic(workers, m, d, 0.1, seed ^ 0xD5);
+    let cfg = GdConfig { workers, batches, rounds, lr, straggler: tau, time_scale, seed };
+    let mut coord = Coordinator::new(cfg, dataset, backend)?;
+    let report = coord.run()?;
+
+    let mut t = Table::new(
+        &format!("Distributed GD: N={workers}, B={batches}, {rounds} rounds, backend={backend_kind}"),
+        vec!["round", "loss", "latency_ms"],
+    );
+    let stride = (rounds / 10).max(1);
+    for (i, r) in report.rounds.iter().enumerate() {
+        if i % stride == 0 || i + 1 == rounds {
+            t.row(vec![i.to_string(), fnum(r.loss), fnum(r.latency * 1e3)]);
+        }
+    }
+    t.print();
+    println!("final global loss: {}", fnum(report.final_global_loss));
+    println!("mean round latency: {} ms", fnum(report.mean_latency() * 1e3));
+    println!("late replicas discarded: {}", report.total_discarded);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from).collect()).unwrap()
+    }
+
+    #[test]
+    fn service_from_flags() {
+        let mut a = args("plan --family pareto --sigma 2 --alpha 1.5");
+        match service_from(&mut a).unwrap() {
+            ServiceDist::Pareto { sigma, alpha } => assert_eq!((sigma, alpha), (2.0, 1.5)),
+            other => panic!("{}", other.label()),
+        }
+        let mut a = args("plan");
+        assert!(matches!(service_from(&mut a).unwrap(), ServiceDist::ShiftedExp { .. }));
+        let mut a = args("plan --family nope");
+        assert!(service_from(&mut a).is_err());
+    }
+
+    #[test]
+    fn objective_parsing() {
+        let mut a = args("plan");
+        assert_eq!(objective_from(&mut a).unwrap(), Objective::MeanCompletion);
+        let mut a = args("plan --objective cov");
+        assert_eq!(objective_from(&mut a).unwrap(), Objective::Predictability);
+        let mut a = args("plan --objective tradeoff=0.3");
+        assert_eq!(objective_from(&mut a).unwrap(), Objective::Tradeoff(0.3));
+        let mut a = args("plan --objective speed");
+        assert!(objective_from(&mut a).is_err());
+    }
+
+    #[test]
+    fn plan_and_sweep_run() {
+        plan(&mut args("plan --workers 20 --family exp --mu 1")).unwrap();
+        sweep(&mut args("sweep --workers 20 --family exp --mu 1")).unwrap();
+        simulate(&mut args("simulate --workers 12 --batches 3 --family exp --reps 500"))
+            .unwrap();
+    }
+
+    #[test]
+    fn trace_gen_and_analyze_roundtrip() {
+        let dir = std::env::temp_dir().join("replica_cli_trace");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        trace(&mut args(&format!(
+            "trace gen --out {} --tasks 30 --seed 5",
+            path.display()
+        )))
+        .unwrap();
+        trace(&mut args(&format!("trace analyze --trace {}", path.display()))).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gd_train_native_backend() {
+        gd_train(&mut args(
+            "gd-train --workers 4 --batches 2 --rounds 5 --backend native --m 8 --d 3 \
+             --family sexp --delta 0.01 --mu 10 --time-scale 0.0001",
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn unknown_experiment_is_error() {
+        assert!(experiment(&mut args("experiment fig99")).is_err());
+    }
+}

@@ -1,0 +1,65 @@
+//! Command-line interface (hand-rolled; no clap offline).
+//!
+//! ```text
+//! replica plan       --workers 100 --family pareto --alpha 1.5 [--objective mean|cov|tradeoff=0.5]
+//! replica simulate   --workers 100 --batches 10 --family sexp --delta 0.05 --mu 1 [--reps 20000]
+//! replica sweep      --workers 100 --family sexp --delta 0.05 --mu 1
+//! replica trace gen      --out trace.csv [--tasks 100] [--seed 42]
+//! replica trace analyze  --trace trace.csv
+//! replica experiment <fig3|fig6|fig7_8|fig9_10|regimes|assignment|traces|all> [--reps N] [--out dir]
+//! replica gd-train   --workers 16 --batches 4 --rounds 100 [--backend pjrt|native]
+//! ```
+
+mod args;
+mod commands;
+
+pub use args::Args;
+
+use crate::util::error::{Error, Result};
+
+/// Entry point used by `main.rs`. Returns the process exit code.
+pub fn run(argv: Vec<String>) -> Result<()> {
+    crate::util::logging::init();
+    let mut args = Args::parse(argv)?;
+    let cmd = args.positional(0).map(String::from);
+    match cmd.as_deref() {
+        Some("plan") => commands::plan(&mut args),
+        Some("simulate") => commands::simulate(&mut args),
+        Some("sweep") => commands::sweep(&mut args),
+        Some("trace") => commands::trace(&mut args),
+        Some("experiment") => commands::experiment(&mut args),
+        Some("gd-train") => commands::gd_train(&mut args),
+        Some("help") | None => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        Some(other) => Err(Error::Config(format!("unknown command '{other}' (try `replica help`)"))),
+    }
+}
+
+pub const HELP: &str = "\
+replica — efficient replication for straggler mitigation (paper reproduction)
+
+USAGE:
+  replica <command> [flags]
+
+COMMANDS:
+  plan        choose the optimal redundancy level for a service-time model
+  simulate    Monte-Carlo estimate of job compute time at one operating point
+  sweep       E[T] and CoV across the full diversity-parallelism spectrum
+  trace       gen | analyze Google-cluster-shaped traces
+  experiment  regenerate a paper figure (fig3, fig6, fig7_8, fig9_10,
+              regimes, assignment, traces, all)
+  gd-train    run live distributed GD through the coordinator (+PJRT)
+  help        this text
+
+COMMON FLAGS:
+  --workers N           worker budget (default 100)
+  --batches B           batch count (must divide N)
+  --family F            exp | sexp | pareto | weibull | bimodal
+  --mu X --delta X --alpha X --sigma X --shape X --scale X
+  --objective O         mean | cov | tradeoff=W
+  --reps N              Monte-Carlo replications
+  --seed N              RNG seed
+  --config FILE         load [system]/[service] sections from TOML
+";

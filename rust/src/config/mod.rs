@@ -1,0 +1,193 @@
+//! Typed configuration + a small TOML-subset parser.
+//!
+//! The CLI and examples read experiment/system settings from
+//! `replica.toml`-style files (flat `key = value` pairs under
+//! `[section]` headers — the subset we need; no serde offline).
+
+mod parse;
+
+pub use parse::{parse_toml, TomlValue};
+
+use crate::dist::ServiceDist;
+use crate::util::error::{Error, Result};
+
+/// System-level configuration for the coordinator / simulator.
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    /// Worker budget N.
+    pub workers: usize,
+    /// Batch count B (None = let the planner choose).
+    pub batches: Option<usize>,
+    /// Task service-time model.
+    pub service: ServiceDist,
+    /// RNG seed.
+    pub seed: u64,
+    /// Monte-Carlo replications for simulated estimates.
+    pub replications: usize,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            workers: 100,
+            batches: None,
+            service: ServiceDist::shifted_exp(0.05, 1.0),
+            seed: 0,
+            replications: 10_000,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Validate cross-field invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            return Err(Error::Config("workers must be >= 1".into()));
+        }
+        if let Some(b) = self.batches {
+            if b == 0 || self.workers % b != 0 {
+                return Err(Error::Config(format!(
+                    "batches B={b} must divide workers N={}",
+                    self.workers
+                )));
+            }
+        }
+        if self.replications == 0 {
+            return Err(Error::Config("replications must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    /// Build from a parsed TOML document. Recognized keys (all optional,
+    /// defaults above):
+    ///
+    /// ```toml
+    /// [system]
+    /// workers = 100
+    /// batches = 10           # omit to auto-plan
+    /// seed = 42
+    /// replications = 20000
+    ///
+    /// [service]
+    /// family = "sexp"        # exp | sexp | pareto | weibull | bimodal
+    /// mu = 1.0
+    /// delta = 0.05
+    /// sigma = 1.0
+    /// alpha = 2.0
+    /// shape = 0.8
+    /// scale = 1.0
+    /// p_slow = 0.1
+    /// ```
+    pub fn from_toml(text: &str) -> Result<SystemConfig> {
+        let doc = parse_toml(text)?;
+        let mut cfg = SystemConfig::default();
+        if let Some(v) = doc.get("system.workers") {
+            cfg.workers = v.as_int()? as usize;
+        }
+        if let Some(v) = doc.get("system.batches") {
+            cfg.batches = Some(v.as_int()? as usize);
+        }
+        if let Some(v) = doc.get("system.seed") {
+            cfg.seed = v.as_int()? as u64;
+        }
+        if let Some(v) = doc.get("system.replications") {
+            cfg.replications = v.as_int()? as usize;
+        }
+        let get_f = |key: &str, default: f64| -> Result<f64> {
+            match doc.get(key) {
+                Some(v) => v.as_float(),
+                None => Ok(default),
+            }
+        };
+        if let Some(family) = doc.get("service.family") {
+            let fam = family.as_str()?;
+            cfg.service = match fam {
+                "exp" => ServiceDist::exp(get_f("service.mu", 1.0)?),
+                "sexp" => ServiceDist::shifted_exp(
+                    get_f("service.delta", 0.05)?,
+                    get_f("service.mu", 1.0)?,
+                ),
+                "pareto" => ServiceDist::pareto(
+                    get_f("service.sigma", 1.0)?,
+                    get_f("service.alpha", 2.0)?,
+                ),
+                "weibull" => ServiceDist::weibull(
+                    get_f("service.shape", 0.8)?,
+                    get_f("service.scale", 1.0)?,
+                ),
+                "bimodal" => ServiceDist::bimodal(
+                    get_f("service.p_slow", 0.1)?,
+                    (get_f("service.fast_delta", 0.1)?, get_f("service.fast_mu", 10.0)?),
+                    (get_f("service.slow_delta", 5.0)?, get_f("service.slow_mu", 1.0)?),
+                ),
+                other => {
+                    return Err(Error::Config(format!("unknown service family '{other}'")))
+                }
+            };
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        SystemConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn from_toml_full() {
+        let cfg = SystemConfig::from_toml(
+            r#"
+            # comment
+            [system]
+            workers = 50
+            batches = 10
+            seed = 7
+            replications = 500
+
+            [service]
+            family = "pareto"
+            sigma = 2.0
+            alpha = 1.5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.workers, 50);
+        assert_eq!(cfg.batches, Some(10));
+        assert_eq!(cfg.seed, 7);
+        match cfg.service {
+            ServiceDist::Pareto { sigma, alpha } => {
+                assert_eq!((sigma, alpha), (2.0, 1.5));
+            }
+            _ => panic!("wrong family"),
+        }
+    }
+
+    #[test]
+    fn invalid_batches_rejected() {
+        let err = SystemConfig::from_toml(
+            "[system]\nworkers = 10\nbatches = 3\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("divide"));
+    }
+
+    #[test]
+    fn unknown_family_rejected() {
+        let err =
+            SystemConfig::from_toml("[service]\nfamily = \"zipf\"\n").unwrap_err();
+        assert!(err.to_string().contains("zipf"));
+    }
+
+    #[test]
+    fn empty_toml_gives_defaults() {
+        let cfg = SystemConfig::from_toml("").unwrap();
+        assert_eq!(cfg.workers, 100);
+        assert!(cfg.batches.is_none());
+    }
+}

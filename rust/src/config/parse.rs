@@ -1,0 +1,192 @@
+//! Flat TOML-subset parser: `[section]` headers + `key = value` pairs.
+//!
+//! Values: integers, floats, booleans, double-quoted strings. Keys are
+//! exposed as `"section.key"`. Comments (`#`) and blank lines ignored.
+//! This covers every config file the crate ships; it is *not* a general
+//! TOML implementation.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Error, Result};
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl TomlValue {
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            other => Err(Error::Parse(format!("expected integer, got {other:?}"))),
+        }
+    }
+
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            other => Err(Error::Parse(format!("expected float, got {other:?}"))),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => Err(Error::Parse(format!("expected bool, got {other:?}"))),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => Err(Error::Parse(format!("expected string, got {other:?}"))),
+        }
+    }
+}
+
+/// A parsed document: dotted-path -> value.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, dotted: &str) -> Option<&TomlValue> {
+        self.values.get(dotted)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse_toml(text: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| Error::Parse(format!("line {}: unclosed [section]", lineno + 1)))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| Error::Parse(format!("line {}: expected key = value", lineno + 1)))?;
+        let key = line[..eq].trim();
+        let value = line[eq + 1..].trim();
+        if key.is_empty() {
+            return Err(Error::Parse(format!("line {}: empty key", lineno + 1)));
+        }
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        doc.values.insert(full_key, parse_value(value, lineno + 1)?);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<TomlValue> {
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| Error::Parse(format!("line {lineno}: unterminated string")))?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(Error::Parse(format!("line {lineno}: cannot parse value '{s}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_document() {
+        let doc = parse_toml(
+            r#"
+            top = 1
+            [a]
+            x = 1.5        # trailing comment
+            y = "hi # not a comment"
+            flag = true
+            big = 1_000_000
+            [b]
+            x = -3
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("top").unwrap(), &TomlValue::Int(1));
+        assert_eq!(doc.get("a.x").unwrap(), &TomlValue::Float(1.5));
+        assert_eq!(
+            doc.get("a.y").unwrap(),
+            &TomlValue::Str("hi # not a comment".into())
+        );
+        assert_eq!(doc.get("a.flag").unwrap(), &TomlValue::Bool(true));
+        assert_eq!(doc.get("a.big").unwrap(), &TomlValue::Int(1_000_000));
+        assert_eq!(doc.get("b.x").unwrap(), &TomlValue::Int(-3));
+        assert!(doc.get("b.y").is_none());
+    }
+
+    #[test]
+    fn scientific_floats() {
+        let doc = parse_toml("x = 1e-3\ny = 2.5E2\n").unwrap();
+        assert_eq!(doc.get("x").unwrap().as_float().unwrap(), 1e-3);
+        assert_eq!(doc.get("y").unwrap().as_float().unwrap(), 250.0);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse_toml("[unclosed\n").is_err());
+        assert!(parse_toml("novalue\n").is_err());
+        assert!(parse_toml("x = \"open\n").is_err());
+        assert!(parse_toml("x = what\n").is_err());
+        assert!(parse_toml(" = 3\n").is_err());
+    }
+
+    #[test]
+    fn type_coercions() {
+        let doc = parse_toml("i = 3\nf = 1.5\n").unwrap();
+        assert_eq!(doc.get("i").unwrap().as_float().unwrap(), 3.0);
+        assert!(doc.get("f").unwrap().as_int().is_err());
+    }
+}

@@ -1,0 +1,194 @@
+//! Compute backends for worker threads.
+//!
+//! [`PjrtBackend`] is the production path: gradients run inside the
+//! AOT-compiled XLA executable (JAX+Pallas lowered at build time).
+//! [`NativeBackend`] is a pure-Rust reference used for tests without
+//! artifacts and as the numeric cross-check of the PJRT path.
+
+use crate::runtime::GradientOps;
+use crate::util::error::Result;
+
+/// A per-shard gradient evaluator usable from any worker thread.
+pub trait ComputeBackend: Send + Sync {
+    /// Feature dimension d.
+    fn d(&self) -> usize;
+    /// Shard rows m.
+    fn m(&self) -> usize;
+    /// Mean gradient and mean loss over one shard
+    /// (`g = Xᵀ(Xβ−y)/m`, `loss = ‖Xβ−y‖²/2m`).
+    fn partial_grad_loss(&self, beta: &[f32], x: &[f32], y: &[f32])
+        -> Result<(Vec<f32>, f32)>;
+
+    /// Keyed variant: `shard_key` identifies immutable shard data so
+    /// backends may cache it device-side (§Perf). Defaults to the
+    /// uncached path.
+    fn partial_grad_loss_keyed(
+        &self,
+        _shard_key: u64,
+        beta: &[f32],
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<(Vec<f32>, f32)> {
+        self.partial_grad_loss(beta, x, y)
+    }
+}
+
+/// Pure-Rust reference backend.
+#[derive(Clone, Debug)]
+pub struct NativeBackend {
+    pub m: usize,
+    pub d: usize,
+}
+
+impl NativeBackend {
+    pub fn new(m: usize, d: usize) -> NativeBackend {
+        NativeBackend { m, d }
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn partial_grad_loss(
+        &self,
+        beta: &[f32],
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<(Vec<f32>, f32)> {
+        let (m, d) = (self.m, self.d);
+        debug_assert_eq!(beta.len(), d);
+        debug_assert_eq!(x.len(), m * d);
+        debug_assert_eq!(y.len(), m);
+        let mut grad = vec![0.0f32; d];
+        let mut loss = 0.0f32;
+        for r in 0..m {
+            let row = &x[r * d..(r + 1) * d];
+            let mut pred = 0.0f32;
+            for j in 0..d {
+                pred += row[j] * beta[j];
+            }
+            let resid = pred - y[r];
+            loss += 0.5 * resid * resid;
+            for j in 0..d {
+                grad[j] += row[j] * resid;
+            }
+        }
+        let inv_m = 1.0 / m as f32;
+        for g in grad.iter_mut() {
+            *g *= inv_m;
+        }
+        Ok((grad, loss * inv_m))
+    }
+}
+
+/// PJRT backend: delegates to the AOT artifact via the runtime thread.
+/// (`RuntimeHandle` is `Send + Sync`: an `mpsc::Sender` plus immutable
+/// manifest data.)
+#[derive(Clone)]
+pub struct PjrtBackend {
+    ops: GradientOps,
+}
+
+impl PjrtBackend {
+    pub fn new(ops: GradientOps) -> PjrtBackend {
+        PjrtBackend { ops }
+    }
+
+    pub fn ops(&self) -> &GradientOps {
+        &self.ops
+    }
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn d(&self) -> usize {
+        self.ops.d
+    }
+
+    fn m(&self) -> usize {
+        self.ops.m
+    }
+
+    fn partial_grad_loss(
+        &self,
+        beta: &[f32],
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<(Vec<f32>, f32)> {
+        self.ops.partial_grad_loss(beta, x, y)
+    }
+
+    fn partial_grad_loss_keyed(
+        &self,
+        shard_key: u64,
+        beta: &[f32],
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<(Vec<f32>, f32)> {
+        self.ops.partial_grad_loss_cached(beta, shard_key, x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::data::Dataset;
+
+    #[test]
+    fn native_backend_matches_analytic_gradient() {
+        // one shard, y = Xβ* exactly, evaluate at β = β* → zero grad/loss
+        let ds = Dataset::synthetic(1, 32, 6, 0.0, 3);
+        let nb = NativeBackend::new(32, 6);
+        let (g, loss) =
+            nb.partial_grad_loss(&ds.beta_star, &ds.shards[0].x, &ds.shards[0].y).unwrap();
+        assert!(loss < 1e-10, "loss {loss}");
+        assert!(g.iter().all(|v| v.abs() < 1e-4), "{g:?}");
+    }
+
+    #[test]
+    fn native_backend_zero_beta() {
+        // β = 0: g = −Xᵀy/m, loss = ‖y‖²/2m
+        let ds = Dataset::synthetic(1, 16, 4, 0.2, 5);
+        let nb = NativeBackend::new(16, 4);
+        let zero = vec![0.0f32; 4];
+        let s = &ds.shards[0];
+        let (g, loss) = nb.partial_grad_loss(&zero, &s.x, &s.y).unwrap();
+        let want_loss: f32 = s.y.iter().map(|v| 0.5 * v * v).sum::<f32>() / 16.0;
+        assert!((loss - want_loss).abs() < 1e-5);
+        let mut want_g = vec![0.0f32; 4];
+        for r in 0..16 {
+            for j in 0..4 {
+                want_g[j] -= s.x[r * 4 + j] * s.y[r] / 16.0;
+            }
+        }
+        for (a, b) in g.iter().zip(&want_g) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn backend_is_shareable_across_threads() {
+        use std::sync::Arc;
+        let ds = Arc::new(Dataset::synthetic(2, 8, 3, 0.1, 9));
+        let nb: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new(8, 3));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let nb = nb.clone();
+                let ds = ds.clone();
+                std::thread::spawn(move || {
+                    let beta = vec![0.1f32; 3];
+                    nb.partial_grad_loss(&beta, &ds.shards[0].x, &ds.shards[0].y).unwrap()
+                })
+            })
+            .collect();
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for r in &results[1..] {
+            assert_eq!(r.0, results[0].0);
+        }
+    }
+}

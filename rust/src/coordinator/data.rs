@@ -1,0 +1,107 @@
+//! Synthetic linear-regression datasets, sharded task-wise.
+//!
+//! Task `t` of the paper's N-parallelizable job = shard `t` here: the
+//! gradient over shard `t` is the unit of work that gets replicated.
+
+use crate::util::rng::Pcg64;
+
+/// One task's data shard (row-major `x`, length `m·d`; targets length
+/// `m`).
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+}
+
+/// A sharded regression dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub d: usize,
+    pub m_per_shard: usize,
+    pub shards: Vec<Shard>,
+    /// Ground-truth coefficients (for convergence checks).
+    pub beta_star: Vec<f32>,
+}
+
+impl Dataset {
+    /// Generate `n_shards` shards of `m` rows each: `y = X·β* + ε`,
+    /// `X ~ N(0,1)`, `ε ~ N(0, noise²)`.
+    pub fn synthetic(n_shards: usize, m: usize, d: usize, noise: f64, seed: u64) -> Dataset {
+        let mut rng = Pcg64::new(seed);
+        let beta_star: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let shards = (0..n_shards)
+            .map(|_| {
+                let mut x = Vec::with_capacity(m * d);
+                let mut y = Vec::with_capacity(m);
+                for _ in 0..m {
+                    let row: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                    let mut dot = 0.0f32;
+                    for (a, b) in row.iter().zip(&beta_star) {
+                        dot += a * b;
+                    }
+                    y.push(dot + (noise * rng.normal()) as f32);
+                    x.extend(row);
+                }
+                Shard { x, y }
+            })
+            .collect();
+        Dataset { d, m_per_shard: m, shards, beta_star }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Global mean loss of a model over all shards (reference metric).
+    pub fn global_loss(&self, beta: &[f32]) -> f64 {
+        let mut total = 0.0f64;
+        let mut rows = 0usize;
+        for s in &self.shards {
+            for r in 0..self.m_per_shard {
+                let mut pred = 0.0f32;
+                for j in 0..self.d {
+                    pred += s.x[r * self.d + j] * beta[j];
+                }
+                let e = (pred - s.y[r]) as f64;
+                total += 0.5 * e * e;
+                rows += 1;
+            }
+        }
+        total / rows as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let a = Dataset::synthetic(4, 16, 8, 0.1, 42);
+        let b = Dataset::synthetic(4, 16, 8, 0.1, 42);
+        assert_eq!(a.n_shards(), 4);
+        assert_eq!(a.shards[0].x.len(), 16 * 8);
+        assert_eq!(a.shards[0].y.len(), 16);
+        assert_eq!(a.beta_star, b.beta_star);
+        assert_eq!(a.shards[2].x, b.shards[2].x);
+        let c = Dataset::synthetic(4, 16, 8, 0.1, 43);
+        assert_ne!(a.shards[0].x, c.shards[0].x);
+    }
+
+    #[test]
+    fn ground_truth_has_noise_level_loss() {
+        let noiseless = Dataset::synthetic(4, 64, 6, 0.0, 7);
+        assert!(noiseless.global_loss(&noiseless.beta_star) < 1e-10);
+        let noisy = Dataset::synthetic(4, 256, 6, 0.5, 7);
+        let l = noisy.global_loss(&noisy.beta_star);
+        // E[0.5 ε²] = 0.5·0.25 = 0.125
+        assert!((l - 0.125).abs() < 0.03, "loss {l}");
+    }
+
+    #[test]
+    fn zero_model_has_large_loss() {
+        let ds = Dataset::synthetic(2, 64, 8, 0.0, 1);
+        let zero = vec![0.0f32; 8];
+        assert!(ds.global_loss(&zero) > ds.global_loss(&ds.beta_star) + 0.5);
+    }
+}

@@ -1,0 +1,382 @@
+//! The master: replication-aware round loop with first-copy-wins
+//! aggregation.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::batching::{Layout, Policy};
+use crate::coordinator::backend::ComputeBackend;
+use crate::coordinator::data::Dataset;
+use crate::coordinator::worker::{worker_loop, WorkItem, WorkResult};
+use crate::dist::ServiceDist;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Pcg64;
+
+/// Configuration of a distributed-GD run.
+#[derive(Clone, Debug)]
+pub struct GdConfig {
+    /// Worker budget N (= number of tasks/shards).
+    pub workers: usize,
+    /// Batch count B (B | N). Use the planner to choose.
+    pub batches: usize,
+    /// GD rounds to run.
+    pub rounds: usize,
+    /// Learning rate.
+    pub lr: f32,
+    /// Straggler model: per-task service time τ; a worker's delay is
+    /// `|batch| · τ` (the size-dependent model).
+    pub straggler: ServiceDist,
+    /// Wall-clock seconds per service-time unit (scale delays down so
+    /// experiments run fast; latency *ratios* are preserved).
+    pub time_scale: f64,
+    /// RNG seed (straggler delays).
+    pub seed: u64,
+}
+
+impl GdConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 || self.batches == 0 || self.workers % self.batches != 0 {
+            return Err(Error::Config(format!(
+                "batches B={} must divide workers N={}",
+                self.batches, self.workers
+            )));
+        }
+        if self.rounds == 0 {
+            return Err(Error::Config("rounds must be >= 1".into()));
+        }
+        if !(self.time_scale >= 0.0) {
+            return Err(Error::Config("time_scale must be >= 0".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Per-round statistics.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundStats {
+    /// Wall-clock round latency (seconds).
+    pub latency: f64,
+    /// Mean training loss reported this round.
+    pub loss: f64,
+    /// Replica results that arrived after their batch was already
+    /// covered (wasted work — the cost of redundancy).
+    pub discarded: usize,
+}
+
+/// Result of a full training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub rounds: Vec<RoundStats>,
+    pub final_beta: Vec<f32>,
+    /// Global dataset loss of the final model.
+    pub final_global_loss: f64,
+    /// Total results discarded by first-copy-wins.
+    pub total_discarded: usize,
+}
+
+impl TrainReport {
+    pub fn losses(&self) -> Vec<f64> {
+        self.rounds.iter().map(|r| r.loss).collect()
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        self.rounds.iter().map(|r| r.latency).sum::<f64>() / self.rounds.len().max(1) as f64
+    }
+}
+
+/// The master node: owns the worker pool and the round loop.
+pub struct Coordinator {
+    cfg: GdConfig,
+    dataset: Arc<Dataset>,
+    layout: Layout,
+    work_txs: Vec<Sender<WorkItem>>,
+    result_rx: Receiver<WorkResult>,
+    joins: Vec<JoinHandle<()>>,
+    rng: Pcg64,
+    beta: Vec<f32>,
+}
+
+impl Coordinator {
+    /// Spawn the worker pool. `dataset.n_shards()` must equal
+    /// `cfg.workers` (task t = shard t).
+    pub fn new(
+        cfg: GdConfig,
+        dataset: Dataset,
+        backend: Arc<dyn ComputeBackend>,
+    ) -> Result<Coordinator> {
+        cfg.validate()?;
+        if dataset.n_shards() != cfg.workers {
+            return Err(Error::Config(format!(
+                "dataset has {} shards but config wants N={} workers",
+                dataset.n_shards(),
+                cfg.workers
+            )));
+        }
+        if dataset.m_per_shard != backend.m() || dataset.d != backend.d() {
+            return Err(Error::Config(format!(
+                "dataset shape ({}, {}) does not match backend ({}, {})",
+                dataset.m_per_shard,
+                dataset.d,
+                backend.m(),
+                backend.d()
+            )));
+        }
+        let mut rng = Pcg64::new(cfg.seed);
+        let layout = Policy::BalancedNonOverlapping { batches: cfg.batches }
+            .layout(cfg.workers, &mut rng)?;
+        let dataset = Arc::new(dataset);
+        let (result_tx, result_rx) = channel::<WorkResult>();
+        let mut work_txs = Vec::with_capacity(cfg.workers);
+        let mut joins = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let (tx, rx) = channel::<WorkItem>();
+            work_txs.push(tx);
+            let backend = backend.clone();
+            let dataset = dataset.clone();
+            let result_tx = result_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("replica-worker-{w}"))
+                .spawn(move || worker_loop(w, backend, dataset, rx, result_tx))
+                .map_err(|e| Error::Coordinator(format!("spawn worker {w}: {e}")))?;
+            joins.push(join);
+        }
+        let d = dataset.d;
+        Ok(Coordinator {
+            cfg,
+            dataset,
+            layout,
+            work_txs,
+            result_rx,
+            joins,
+            rng,
+            beta: vec![0.0f32; d],
+        })
+    }
+
+    /// The materialized replication layout.
+    pub fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    /// Current model.
+    pub fn beta(&self) -> &[f32] {
+        &self.beta
+    }
+
+    /// Run the configured number of rounds.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let mut rounds = Vec::with_capacity(self.cfg.rounds);
+        let mut total_discarded = 0usize;
+        let mut received = 0usize;
+        for round in 0..self.cfg.rounds {
+            let stats = self.run_round(round, &mut received)?;
+            total_discarded += stats.discarded;
+            rounds.push(stats);
+        }
+        // Drain the stragglers of the final round(s) so the discard
+        // accounting is exact and worker channels end empty. Every worker
+        // reports exactly once per round.
+        let expected = self.cfg.workers * self.cfg.rounds;
+        while received < expected {
+            let res = self
+                .result_rx
+                .recv()
+                .map_err(|_| Error::Coordinator("all workers hung up".into()))?;
+            received += 1;
+            total_discarded += 1;
+            if let Some(msg) = res.error {
+                return Err(Error::Coordinator(msg));
+            }
+        }
+        Ok(TrainReport {
+            final_global_loss: self.dataset.global_loss(&self.beta),
+            final_beta: self.beta.clone(),
+            rounds,
+            total_discarded,
+        })
+    }
+
+    fn run_round(&mut self, round: usize, received: &mut usize) -> Result<RoundStats> {
+        let b = self.cfg.batches;
+        let beta = Arc::new(self.beta.clone());
+        let start = Instant::now();
+
+        // Dispatch work to every worker with a sampled straggler delay.
+        for w in 0..self.cfg.workers {
+            let tasks = Arc::new(self.layout.worker_tasks[w].clone());
+            let service = tasks.len() as f64 * self.cfg.straggler.sample(&mut self.rng);
+            let delay = Duration::from_secs_f64(service * self.cfg.time_scale);
+            // find the batch this worker hosts
+            let batch = self
+                .layout
+                .batch_workers
+                .iter()
+                .position(|ws| ws.contains(&w))
+                .expect("every worker hosts a batch");
+            self.work_txs[w]
+                .send(WorkItem { round, batch, beta: beta.clone(), tasks, delay })
+                .map_err(|_| Error::Coordinator(format!("worker {w} hung up")))?;
+        }
+
+        // First-copy-wins collection.
+        let mut batch_done = vec![false; b];
+        let mut done = 0usize;
+        let mut grad_sum = vec![0.0f32; self.dataset.d];
+        let mut loss_sum = 0.0f64;
+        let mut discarded = 0usize;
+        while done < b {
+            let res = self
+                .result_rx
+                .recv()
+                .map_err(|_| Error::Coordinator("all workers hung up".into()))?;
+            *received += 1;
+            if let Some(msg) = res.error {
+                return Err(Error::Coordinator(msg));
+            }
+            if res.round != round || batch_done[res.batch] {
+                discarded += 1; // late replica (previous round or already covered)
+                continue;
+            }
+            batch_done[res.batch] = true;
+            done += 1;
+            for (a, g) in grad_sum.iter_mut().zip(&res.grad) {
+                *a += g;
+            }
+            loss_sum += res.loss as f64;
+        }
+
+        // Gradient step: mean over batches (batches partition the tasks).
+        let inv_b = 1.0 / b as f32;
+        for (beta_j, g_j) in self.beta.iter_mut().zip(&grad_sum) {
+            *beta_j -= self.cfg.lr * g_j * inv_b;
+        }
+        Ok(RoundStats {
+            latency: start.elapsed().as_secs_f64(),
+            loss: loss_sum / b as f64,
+            discarded,
+        })
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.work_txs.clear(); // close channels; workers exit
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::NativeBackend;
+
+    fn quick_cfg(workers: usize, batches: usize, rounds: usize) -> GdConfig {
+        GdConfig {
+            workers,
+            batches,
+            rounds,
+            lr: 0.1,
+            straggler: ServiceDist::shifted_exp(0.01, 10.0),
+            time_scale: 1e-4, // keep tests fast
+            seed: 7,
+        }
+    }
+
+    fn run(cfg: GdConfig, m: usize, d: usize, noise: f64, seed: u64) -> TrainReport {
+        let ds = Dataset::synthetic(cfg.workers, m, d, noise, seed);
+        let backend = Arc::new(NativeBackend::new(m, d));
+        let mut c = Coordinator::new(cfg, ds, backend).unwrap();
+        c.run().unwrap()
+    }
+
+    #[test]
+    fn gd_converges_with_replication() {
+        let report = run(quick_cfg(8, 2, 120), 16, 4, 0.0, 11);
+        let losses = report.losses();
+        assert!(losses[0] > 10.0 * losses[losses.len() - 1].max(1e-12));
+        assert!(report.final_global_loss < 1e-3, "{}", report.final_global_loss);
+    }
+
+    #[test]
+    fn replication_discards_late_copies() {
+        // B=2 on 8 workers → 4 replicas per batch → 3 discarded per batch
+        let report = run(quick_cfg(8, 2, 10), 8, 3, 0.1, 12);
+        // per round: 8 results, 2 winners → 6 discarded
+        assert_eq!(report.total_discarded, 10 * 6);
+    }
+
+    #[test]
+    fn full_parallelism_discards_nothing() {
+        let report = run(quick_cfg(4, 4, 8), 8, 3, 0.1, 13);
+        assert_eq!(report.total_discarded, 0);
+    }
+
+    #[test]
+    fn different_b_same_convergence_target() {
+        // replication changes latency, NOT the gradient math: all B
+        // values must converge to (near-)identical losses
+        let l2 = run(quick_cfg(8, 2, 80), 16, 4, 0.05, 14).final_global_loss;
+        let l8 = run(quick_cfg(8, 8, 80), 16, 4, 0.05, 14).final_global_loss;
+        assert!((l2 - l8).abs() / l8 < 0.05, "{l2} vs {l8}");
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(quick_cfg(8, 3, 1).validate().is_err());
+        assert!(quick_cfg(0, 1, 1).validate().is_err());
+        let mut c = quick_cfg(8, 2, 0);
+        assert!(c.validate().is_err());
+        c.rounds = 1;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn mismatched_dataset_rejected() {
+        let cfg = quick_cfg(8, 2, 1);
+        let ds = Dataset::synthetic(4, 16, 4, 0.0, 1); // wrong shard count
+        assert!(Coordinator::new(cfg, ds, Arc::new(NativeBackend::new(16, 4))).is_err());
+        let cfg = quick_cfg(8, 2, 1);
+        let ds = Dataset::synthetic(8, 16, 4, 0.0, 1);
+        // wrong backend shape
+        assert!(Coordinator::new(cfg, ds, Arc::new(NativeBackend::new(8, 4))).is_err());
+    }
+
+    #[test]
+    fn diversity_reduces_latency_under_stragglers() {
+        // Heavy-tailed stragglers + measurable delays: B=1 (full
+        // diversity) should beat B=N (no redundancy) on round latency.
+        // time_scale large enough that sampled delays (~10–100 ms)
+        // dominate thread-scheduling noise (~1 ms).
+        let straggler = ServiceDist::pareto(0.05, 1.1);
+        let base = GdConfig {
+            workers: 8,
+            batches: 1,
+            rounds: 12,
+            lr: 0.05,
+            straggler: straggler.clone(),
+            time_scale: 2e-2,
+            seed: 21,
+        };
+        let lat_div = {
+            let ds = Dataset::synthetic(8, 8, 3, 0.1, 2);
+            let mut c =
+                Coordinator::new(base.clone(), ds, Arc::new(NativeBackend::new(8, 3))).unwrap();
+            c.run().unwrap().mean_latency()
+        };
+        let lat_par = {
+            let mut cfg = base;
+            cfg.batches = 8;
+            let ds = Dataset::synthetic(8, 8, 3, 0.1, 2);
+            let mut c = Coordinator::new(cfg, ds, Arc::new(NativeBackend::new(8, 3))).unwrap();
+            c.run().unwrap().mean_latency()
+        };
+        assert!(
+            lat_div < lat_par,
+            "full diversity {lat_div:.4}s should beat full parallelism {lat_par:.4}s"
+        );
+    }
+}

@@ -1,0 +1,28 @@
+//! The live master–worker coordinator (L3).
+//!
+//! This is the deployable version of the paper's system (Fig. 1): a
+//! master thread drives synchronous distributed gradient descent over a
+//! pool of worker threads. Each round:
+//!
+//! 1. the master broadcasts the model `beta` and a replication layout
+//!    produced by the [`planner`](crate::planner);
+//! 2. every worker waits out a sampled straggler delay (the service-time
+//!    model under test), then computes its batch's gradient — through
+//!    the PJRT runtime ([`PjrtBackend`]) or the pure-Rust reference
+//!    backend ([`NativeBackend`]);
+//! 3. the master applies **first-copy-wins** per batch (eq. 8), ignores
+//!    late replicas, and steps the model once all batches are covered
+//!    (eq. 9).
+//!
+//! Worker threads are real OS threads with real (scaled) delays, so
+//! round latency genuinely follows `max_batch min_replica` — the
+//! quantity the paper analyzes.
+
+mod backend;
+mod data;
+mod master;
+mod worker;
+
+pub use backend::{ComputeBackend, NativeBackend, PjrtBackend};
+pub use data::{Dataset, Shard};
+pub use master::{Coordinator, GdConfig, RoundStats, TrainReport};

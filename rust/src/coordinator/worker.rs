@@ -1,0 +1,86 @@
+//! Worker threads: sleep out the straggler delay, compute the batch
+//! gradient, report to the master.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::backend::ComputeBackend;
+use crate::coordinator::data::Dataset;
+
+/// Work sent from master to one worker for one round.
+pub(crate) struct WorkItem {
+    pub round: usize,
+    pub batch: usize,
+    /// Model snapshot.
+    pub beta: Arc<Vec<f32>>,
+    /// Task (shard) ids in this worker's batch.
+    pub tasks: Arc<Vec<usize>>,
+    /// Straggler delay (already scaled to wall-clock seconds).
+    pub delay: Duration,
+}
+
+/// Result sent from a worker to the master.
+pub(crate) struct WorkResult {
+    pub round: usize,
+    /// Reporting worker id (kept for logging/metrics hooks).
+    #[allow(dead_code)]
+    pub worker: usize,
+    pub batch: usize,
+    /// Mean gradient over the batch's tasks.
+    pub grad: Vec<f32>,
+    /// Mean loss over the batch's tasks.
+    pub loss: f32,
+    /// Worker-side error message, if any.
+    pub error: Option<String>,
+}
+
+/// The worker thread body: loop over rounds until the channel closes.
+pub(crate) fn worker_loop(
+    id: usize,
+    backend: Arc<dyn ComputeBackend>,
+    dataset: Arc<Dataset>,
+    rx: Receiver<WorkItem>,
+    tx: Sender<WorkResult>,
+) {
+    while let Ok(item) = rx.recv() {
+        // Straggler injection: the sampled service delay.
+        if item.delay > Duration::ZERO {
+            std::thread::sleep(item.delay);
+        }
+        let d = backend.d();
+        let mut grad_sum = vec![0.0f32; d];
+        let mut loss_sum = 0.0f32;
+        let mut error = None;
+        for &t in item.tasks.iter() {
+            let shard = &dataset.shards[t];
+            match backend.partial_grad_loss_keyed(t as u64, &item.beta, &shard.x, &shard.y) {
+                Ok((g, l)) => {
+                    for (a, b) in grad_sum.iter_mut().zip(&g) {
+                        *a += b;
+                    }
+                    loss_sum += l;
+                }
+                Err(e) => {
+                    error = Some(format!("worker {id} task {t}: {e}"));
+                    break;
+                }
+            }
+        }
+        let k = item.tasks.len().max(1) as f32;
+        for g in grad_sum.iter_mut() {
+            *g /= k;
+        }
+        let send_result = tx.send(WorkResult {
+            round: item.round,
+            worker: id,
+            batch: item.batch,
+            grad: grad_sum,
+            loss: loss_sum / k,
+            error,
+        });
+        if send_result.is_err() {
+            break; // master is gone
+        }
+    }
+}

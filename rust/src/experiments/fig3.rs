@@ -1,0 +1,74 @@
+//! Fig. 3 — probability of covering B batches with N workers under
+//! random batch-to-worker assignment (Lemma 1).
+
+use crate::analysis::coverage::coverage_probability;
+use crate::metrics::{fnum, SeriesExport, Table};
+
+/// The paper's Fig. 3 worker budgets.
+pub const PAPER_NS: [usize; 4] = [20, 50, 100, 200];
+
+/// One curve per N: coverage probability at B = 1..=N.
+pub fn run(ns: &[usize]) -> Vec<SeriesExport> {
+    ns.iter()
+        .map(|&n| {
+            let mut s = SeriesExport::new(&format!("N={n}"), "B", vec!["coverage_prob"]);
+            for b in 1..=n {
+                s.push(b as f64, vec![coverage_probability(n, b)]);
+            }
+            s
+        })
+        .collect()
+}
+
+/// Printable summary: for each N, the largest B still covered with
+/// ≥ 99% / ≥ 50% probability (the paper's headline reading: N=100
+/// covers only B ≈ 10 reliably).
+pub fn table(ns: &[usize]) -> Table {
+    let mut t = Table::new(
+        "Fig 3: batch coverage under random assignment (Lemma 1)",
+        vec!["N", "max B @ 99%", "max B @ 50%", "P(cover B=N/10)", "P(cover B=N/2)"],
+    );
+    for &n in ns {
+        let max_b = |target: f64| {
+            (1..=n).rev().find(|&b| coverage_probability(n, b) >= target).unwrap_or(0)
+        };
+        t.row(vec![
+            n.to_string(),
+            max_b(0.99).to_string(),
+            max_b(0.50).to_string(),
+            fnum(coverage_probability(n, n / 10)),
+            fnum(coverage_probability(n, n / 2)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curves_have_paper_shape() {
+        let series = run(&PAPER_NS);
+        assert_eq!(series.len(), 4);
+        for s in &series {
+            // starts at 1 (B=1 always covered), decreasing in B
+            assert!((s.points[0].1[0] - 1.0).abs() < 1e-12);
+            for w in s.points.windows(2) {
+                assert!(w[1].1[0] <= w[0].1[0] + 1e-12);
+            }
+        }
+        // paper: N=100 covers B=10 w.h.p., larger B drops fast
+        let n100 = &series[2];
+        assert!(n100.points[9].1[0] > 0.99); // B=10
+        assert!(n100.points[29].1[0] < 0.6); // B=30
+    }
+
+    #[test]
+    fn table_rows_match_ns() {
+        let t = table(&PAPER_NS);
+        assert_eq!(t.n_rows(), 4);
+        let rendered = t.render();
+        assert!(rendered.contains("N"));
+    }
+}

@@ -1,0 +1,117 @@
+//! Fig. 6 + eq. (17) — overlapping vs non-overlapping batches (§V).
+//!
+//! The paper's N=6, B=3 case: scheme 1 (cyclic overlap), scheme 2
+//! (hybrid), scheme 3 (balanced non-overlap). The claim:
+//! `E[T³] < E[T²] < E[T¹]`.
+
+use crate::batching::Policy;
+use crate::dist::ServiceDist;
+use crate::metrics::{fnum, SeriesExport, Table};
+use crate::sim::montecarlo::simulate_policy;
+use crate::util::error::Result;
+
+/// Mean compute time of the three Fig. 5 schemes at one service rate.
+#[derive(Clone, Copy, Debug)]
+pub struct SchemeComparison {
+    pub mu: f64,
+    pub cyclic: f64,
+    pub hybrid: f64,
+    pub nonoverlap: f64,
+}
+
+/// Run the comparison over a μ sweep with `Exp(μ)` batch service times
+/// (the Fig. 6 x-axis), N=6, B=3.
+pub fn run(mus: &[f64], reps: usize, seed: u64) -> Result<Vec<SchemeComparison>> {
+    let n = 6;
+    let b = 3;
+    mus.iter()
+        .map(|&mu| {
+            let tau = ServiceDist::exp(mu);
+            let est = |policy: &Policy, salt: u64| -> Result<f64> {
+                Ok(simulate_policy(n, policy, &tau, reps, seed ^ salt)?.mean)
+            };
+            Ok(SchemeComparison {
+                mu,
+                cyclic: est(&Policy::CyclicOverlapping { batches: b }, 1)?,
+                hybrid: est(&Policy::HybridOverlapping { batches: b }, 2)?,
+                nonoverlap: est(&Policy::BalancedNonOverlapping { batches: b }, 3)?,
+            })
+        })
+        .collect()
+}
+
+/// Export curves (one per scheme).
+pub fn series(rows: &[SchemeComparison]) -> Vec<SeriesExport> {
+    let mut cyc = SeriesExport::new("scheme1_cyclic", "mu", vec!["mean_T"]);
+    let mut hyb = SeriesExport::new("scheme2_hybrid", "mu", vec!["mean_T"]);
+    let mut non = SeriesExport::new("scheme3_nonoverlap", "mu", vec!["mean_T"]);
+    for r in rows {
+        cyc.push(r.mu, vec![r.cyclic]);
+        hyb.push(r.mu, vec![r.hybrid]);
+        non.push(r.mu, vec![r.nonoverlap]);
+    }
+    vec![cyc, hyb, non]
+}
+
+/// Printable table.
+pub fn table(rows: &[SchemeComparison]) -> Table {
+    let mut t = Table::new(
+        "Fig 6 / eq 17: E[T] of overlap schemes (N=6, B=3, Exp(mu) service)",
+        vec!["mu", "scheme1 cyclic", "scheme2 hybrid", "scheme3 non-overlap", "eq17 holds"],
+    );
+    for r in rows {
+        let ok = r.nonoverlap < r.hybrid && r.hybrid < r.cyclic;
+        t.row(vec![
+            fnum(r.mu),
+            fnum(r.cyclic),
+            fnum(r.hybrid),
+            fnum(r.nonoverlap),
+            if ok { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq17_ordering_holds() {
+        // E[T3] < E[T2] < E[T1] across service rates
+        let rows = run(&[0.5, 1.0, 2.0], 60_000, 7).unwrap();
+        for r in &rows {
+            assert!(
+                r.nonoverlap < r.hybrid,
+                "mu={}: nonoverlap {} !< hybrid {}",
+                r.mu,
+                r.nonoverlap,
+                r.hybrid
+            );
+            assert!(
+                r.hybrid < r.cyclic,
+                "mu={}: hybrid {} !< cyclic {}",
+                r.mu,
+                r.hybrid,
+                r.cyclic
+            );
+        }
+    }
+
+    #[test]
+    fn means_scale_inversely_with_mu() {
+        let rows = run(&[1.0, 2.0], 30_000, 9).unwrap();
+        // Exp service: doubling μ halves all means
+        assert!((rows[0].nonoverlap / rows[1].nonoverlap - 2.0).abs() < 0.15);
+    }
+
+    #[test]
+    fn series_and_table_shapes() {
+        let rows = run(&[1.0], 5_000, 1).unwrap();
+        let s = series(&rows);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0].points.len(), 1);
+        let t = table(&rows);
+        assert!(t.render().contains("yes"));
+    }
+}

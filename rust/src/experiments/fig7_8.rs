@@ -1,0 +1,176 @@
+//! Figs. 7–8 — E\[T\] and CoV\[T\] vs B for shifted-exponential task
+//! service times (N=100, Δ=0.05, μ sweep), analytic closed forms with
+//! optional Monte-Carlo cross-check.
+
+use crate::analysis::closed_form::{sexp_cov, sexp_mean};
+use crate::analysis::optimizer::feasible_b;
+use crate::batching::Policy;
+use crate::dist::ServiceDist;
+use crate::metrics::{fnum, SeriesExport, Table};
+use crate::sim::montecarlo::simulate_policy;
+use crate::util::error::Result;
+
+/// Paper parameters.
+pub const N: usize = 100;
+pub const DELTA: f64 = 0.05;
+pub const PAPER_MUS: [f64; 4] = [0.1, 1.0, 5.0, 15.0];
+
+/// One figure row: (B, E\[T\], CoV\[T\]) for a given μ.
+pub fn sweep(n: usize, delta: f64, mu: f64) -> Vec<(usize, f64, f64)> {
+    feasible_b(n)
+        .into_iter()
+        .map(|b| (b, sexp_mean(n, b, delta, mu), sexp_cov(n, b, delta, mu)))
+        .collect()
+}
+
+/// Fig. 7 curves (one per μ): E\[T\] vs B.
+pub fn fig7_series(mus: &[f64]) -> Vec<SeriesExport> {
+    mus.iter()
+        .map(|&mu| {
+            let mut s = SeriesExport::new(&format!("mu={mu}"), "B", vec!["mean_T"]);
+            for (b, mean, _) in sweep(N, DELTA, mu) {
+                s.push(b as f64, vec![mean]);
+            }
+            s
+        })
+        .collect()
+}
+
+/// Fig. 8 curves (one per μ): CoV\[T\] vs B.
+pub fn fig8_series(mus: &[f64]) -> Vec<SeriesExport> {
+    mus.iter()
+        .map(|&mu| {
+            let mut s = SeriesExport::new(&format!("mu={mu}"), "B", vec!["cov_T"]);
+            for (b, _, cov) in sweep(N, DELTA, mu) {
+                s.push(b as f64, vec![cov]);
+            }
+            s
+        })
+        .collect()
+}
+
+/// Printable Fig. 7 table (rows = B, one column pair per μ) with the
+/// argmin marked.
+pub fn table(mus: &[f64]) -> Table {
+    let mut header: Vec<String> = vec!["B".into()];
+    for &mu in mus {
+        header.push(format!("E[T] mu={mu}"));
+        header.push(format!("CoV mu={mu}"));
+    }
+    let mut t = Table::new(
+        "Figs 7-8: E[T] and CoV[T] vs B, tau ~ SExp(0.05, mu), N=100",
+        header.iter().map(|s| s.as_str()).collect(),
+    );
+    let sweeps: Vec<Vec<(usize, f64, f64)>> =
+        mus.iter().map(|&mu| sweep(N, DELTA, mu)).collect();
+    let argmins: Vec<usize> = sweeps
+        .iter()
+        .map(|sw| {
+            sw.iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .map(|(b, _, _)| *b)
+                .unwrap()
+        })
+        .collect();
+    for (i, b) in feasible_b(N).into_iter().enumerate() {
+        let mut row = vec![b.to_string()];
+        for (j, sw) in sweeps.iter().enumerate() {
+            let star = if argmins[j] == b { "*" } else { "" };
+            row.push(format!("{}{star}", fnum(sw[i].1)));
+            row.push(fnum(sw[i].2));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Monte-Carlo cross-check of one μ curve: returns
+/// `(B, analytic, simulated, ci95)` rows.
+pub fn mc_crosscheck(
+    mu: f64,
+    reps: usize,
+    seed: u64,
+) -> Result<Vec<(usize, f64, f64, f64)>> {
+    let tau = ServiceDist::shifted_exp(DELTA, mu);
+    feasible_b(N)
+        .into_iter()
+        .map(|b| {
+            let est = simulate_policy(
+                N,
+                &Policy::BalancedNonOverlapping { batches: b },
+                &tau,
+                reps,
+                seed ^ b as u64,
+            )?;
+            Ok((b, sexp_mean(N, b, DELTA, mu), est.mean, est.ci95))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_minima_move_right_with_mu() {
+        // paper: the minimum of E[T] moves toward full parallelism as μ grows
+        let argmin = |mu: f64| {
+            sweep(N, DELTA, mu)
+                .into_iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        let b_01 = argmin(0.1);
+        let b_1 = argmin(1.0);
+        let b_5 = argmin(5.0);
+        let b_15 = argmin(15.0);
+        assert_eq!(b_01, 1, "mu=0.1 → full diversity");
+        assert!(b_1 > 1 && b_1 < N, "mu=1 interior, got {b_1}");
+        assert!(b_5 >= b_1, "{b_5} >= {b_1}");
+        assert_eq!(b_15, N, "mu=15 → full parallelism");
+    }
+
+    #[test]
+    fn fig8_cov_optimum_flips_near_mu_06() {
+        // Evaluating eq. (21) directly: the CoV optimum is at FULL
+        // PARALLELISM for small μ and FULL DIVERSITY for large μ, with
+        // the crossover at NΔμ ≈ 3.1 → μ ≈ 0.62 for N=100, Δ=0.05.
+        //
+        // NOTE: the paper's Fig. 8 prose states the opposite direction
+        // ("μ < 0.8 full diversity ... μ > 0.8 full parallelism"), which
+        // contradicts the paper's own eq. (21) and Theorem 7 (small Δμ →
+        // full parallelism). We follow eq. (21)/Theorem 7; see
+        // EXPERIMENTS.md.
+        let argmin = |mu: f64| {
+            sweep(N, DELTA, mu)
+                .into_iter()
+                .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+                .unwrap()
+                .0
+        };
+        assert_eq!(argmin(0.4), N); // small Δμ → full parallelism
+        assert_eq!(argmin(5.0), 1); // large Δμ → full diversity
+        // crossover bracket
+        assert_eq!(argmin(0.55), N);
+        assert_eq!(argmin(0.70), 1);
+    }
+
+    #[test]
+    fn mc_crosscheck_agrees() {
+        let rows = mc_crosscheck(1.0, 8_000, 3).unwrap();
+        for (b, analytic, simulated, ci) in rows {
+            assert!(
+                (analytic - simulated).abs() < (4.0 * ci).max(0.02 * analytic),
+                "B={b}: analytic {analytic} vs sim {simulated} (ci {ci})"
+            );
+        }
+    }
+
+    #[test]
+    fn table_has_star_markers() {
+        let t = table(&[0.1, 1.0]);
+        assert!(t.render().contains('*'));
+        assert_eq!(t.n_rows(), feasible_b(N).len());
+    }
+}

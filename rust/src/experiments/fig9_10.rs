@@ -1,0 +1,166 @@
+//! Figs. 9–10 — E\[T\] and CoV\[T\] vs B for Pareto task service times
+//! (N=100, σ=1, α sweep).
+
+use crate::analysis::closed_form::{pareto_cov, pareto_mean};
+use crate::analysis::optimizer::{feasible_b, pareto_alpha_star};
+use crate::batching::Policy;
+use crate::dist::ServiceDist;
+use crate::metrics::{fnum, SeriesExport, Table};
+use crate::sim::montecarlo::simulate_policy;
+use crate::util::error::Result;
+
+pub const N: usize = 100;
+pub const SIGMA: f64 = 1.0;
+pub const PAPER_ALPHAS: [f64; 5] = [1.5, 2.5, 3.5, 5.0, 7.0];
+
+/// (B, E\[T\], CoV\[T\]) sweep for one α.
+pub fn sweep(n: usize, sigma: f64, alpha: f64) -> Vec<(usize, f64, f64)> {
+    feasible_b(n)
+        .into_iter()
+        .map(|b| (b, pareto_mean(n, b, sigma, alpha), pareto_cov(n, b, alpha)))
+        .collect()
+}
+
+/// Fig. 9 curves: E\[T\] vs B per α.
+pub fn fig9_series(alphas: &[f64]) -> Vec<SeriesExport> {
+    alphas
+        .iter()
+        .map(|&alpha| {
+            let mut s = SeriesExport::new(&format!("alpha={alpha}"), "B", vec!["mean_T"]);
+            for (b, mean, _) in sweep(N, SIGMA, alpha) {
+                s.push(b as f64, vec![mean]);
+            }
+            s
+        })
+        .collect()
+}
+
+/// Fig. 10 curves: CoV\[T\] vs B per α (α > 2 for finite variance).
+pub fn fig10_series(alphas: &[f64]) -> Vec<SeriesExport> {
+    alphas
+        .iter()
+        .filter(|&&a| a > 2.0)
+        .map(|&alpha| {
+            let mut s = SeriesExport::new(&format!("alpha={alpha}"), "B", vec!["cov_T"]);
+            for (b, _, cov) in sweep(N, SIGMA, alpha) {
+                s.push(b as f64, vec![cov]);
+            }
+            s
+        })
+        .collect()
+}
+
+/// Printable table with argmin markers and the α* boundary.
+pub fn table(alphas: &[f64]) -> Table {
+    let a_star = pareto_alpha_star(N);
+    let mut header: Vec<String> = vec!["B".into()];
+    for &a in alphas {
+        header.push(format!("E[T] a={a}"));
+        header.push(format!("CoV a={a}"));
+    }
+    let mut t = Table::new(
+        &format!(
+            "Figs 9-10: E[T], CoV[T] vs B, tau ~ Pareto(1, alpha), N=100 (alpha* = {:.2})",
+            a_star
+        ),
+        header.iter().map(|s| s.as_str()).collect(),
+    );
+    let sweeps: Vec<Vec<(usize, f64, f64)>> =
+        alphas.iter().map(|&a| sweep(N, SIGMA, a)).collect();
+    let argmins: Vec<usize> = sweeps
+        .iter()
+        .map(|sw| {
+            sw.iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .map(|(b, _, _)| *b)
+                .unwrap()
+        })
+        .collect();
+    for (i, b) in feasible_b(N).into_iter().enumerate() {
+        let mut row = vec![b.to_string()];
+        for (j, sw) in sweeps.iter().enumerate() {
+            let star = if argmins[j] == b { "*" } else { "" };
+            row.push(format!("{}{star}", fnum(sw[i].1)));
+            row.push(fnum(sw[i].2));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Monte-Carlo cross-check for one α.
+pub fn mc_crosscheck(
+    alpha: f64,
+    reps: usize,
+    seed: u64,
+) -> Result<Vec<(usize, f64, f64, f64)>> {
+    let tau = ServiceDist::pareto(SIGMA, alpha);
+    feasible_b(N)
+        .into_iter()
+        .map(|b| {
+            let est = simulate_policy(
+                N,
+                &Policy::BalancedNonOverlapping { batches: b },
+                &tau,
+                reps,
+                seed ^ b as u64,
+            )?;
+            Ok((b, pareto_mean(N, b, SIGMA, alpha), est.mean, est.ci95))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_minima_move_right_with_alpha() {
+        let argmin = |alpha: f64| {
+            sweep(N, SIGMA, alpha)
+                .into_iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        let b15 = argmin(1.5);
+        let b35 = argmin(3.5);
+        let b7 = argmin(7.0);
+        assert!(b15 > 1 && b15 < N, "alpha=1.5 interior, got {b15}");
+        assert!(b35 >= b15);
+        // alpha=7 > alpha* ≈ 4.7 → full parallelism
+        assert_eq!(b7, N);
+    }
+
+    #[test]
+    fn fig10_cov_minimized_at_full_diversity() {
+        // Theorem 10: for every α > 2 the CoV argmin is B = 1
+        for alpha in [2.5, 3.5, 5.0, 7.0] {
+            let sw = sweep(N, SIGMA, alpha);
+            let (b_min, _, _) = sw
+                .iter()
+                .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+                .copied()
+                .unwrap();
+            assert_eq!(b_min, 1, "alpha={alpha}");
+        }
+    }
+
+    #[test]
+    fn heavy_alpha_below_2_has_infinite_cov() {
+        let sw = sweep(N, SIGMA, 1.5);
+        // variance infinite once 2B/(Nα) ≥ 1 → B ≥ 75: B=100 row
+        assert!(sw.last().unwrap().2.is_infinite());
+    }
+
+    #[test]
+    fn mc_crosscheck_agrees_for_light_tail() {
+        let rows = mc_crosscheck(3.5, 8_000, 5).unwrap();
+        for (b, analytic, simulated, ci) in rows {
+            assert!(
+                (analytic - simulated).abs() < (5.0 * ci).max(0.05 * analytic),
+                "B={b}: {analytic} vs {simulated} (ci {ci})"
+            );
+        }
+    }
+}

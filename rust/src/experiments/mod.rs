@@ -1,0 +1,22 @@
+//! Paper-figure regeneration (DESIGN.md per-experiment index).
+//!
+//! Each submodule regenerates one table/figure of the paper's
+//! evaluation and returns both printable [`Table`]s and exportable
+//! [`SeriesExport`] curves. The bench harness (`rust/benches/`) and the
+//! CLI (`replica experiment <id>`) are thin wrappers over these.
+//!
+//! [`Table`]: crate::metrics::Table
+//! [`SeriesExport`]: crate::metrics::SeriesExport
+
+pub mod assignment;
+pub mod fig3;
+pub mod fig6;
+pub mod fig7_8;
+pub mod fig9_10;
+pub mod open_problem;
+pub mod regimes;
+pub mod traces_exp;
+
+/// Standard Monte-Carlo replication count used by the figure
+/// experiments (overridable per call).
+pub const DEFAULT_REPS: usize = 20_000;

@@ -1,0 +1,127 @@
+//! Extension: the paper's open problem (§IV closing remark).
+//!
+//! "The case of concave random variables, e.g. weibull and gamma with
+//! shape parameters α > 1, is left as an open problem."
+//!
+//! We explore it numerically: does the balanced assignment still
+//! minimize E\[T\] when the batch service time is stochastically
+//! *concave*? Lemma 2's Schur-convexity argument needs convexity, so
+//! the ordering could in principle reverse. The experiment compares
+//! every assignment shape under Weibull/Gamma with shape > 1 via
+//! numeric integration + Monte-Carlo.
+
+use crate::analysis::closed_form::numeric_mean_var_assignment;
+use crate::analysis::majorization::{all_assignments, balanced};
+use crate::dist::ServiceDist;
+use crate::metrics::{fnum, Table};
+use crate::util::error::Result;
+
+/// One exploration row: assignment and its numeric E\[T\].
+#[derive(Clone, Debug)]
+pub struct ConcaveRow {
+    pub assignment: Vec<usize>,
+    pub mean: f64,
+}
+
+/// Numeric E\[T\] of every assignment shape for a concave batch
+/// service distribution, ascending by mean.
+pub fn explore(n: usize, b: usize, tau: &ServiceDist) -> Result<Vec<ConcaveRow>> {
+    assert!(n % b == 0);
+    let batch = ServiceDist::scaled((n / b) as f64, tau.clone());
+    let mut rows: Vec<ConcaveRow> = all_assignments(n, b)
+        .into_iter()
+        .map(|a| {
+            let (mean, _) = numeric_mean_var_assignment(&a, &batch);
+            ConcaveRow { assignment: a, mean }
+        })
+        .collect();
+    rows.sort_by(|x, y| x.mean.partial_cmp(&y.mean).unwrap());
+    Ok(rows)
+}
+
+/// Is the balanced assignment still optimal for this concave family?
+pub fn balanced_still_optimal(n: usize, b: usize, tau: &ServiceDist) -> Result<bool> {
+    let rows = explore(n, b, tau)?;
+    Ok(rows[0].assignment == balanced(n, b))
+}
+
+/// Printable exploration table across concave families.
+pub fn table(n: usize, b: usize) -> Result<Table> {
+    let mut t = Table::new(
+        &format!("Open problem: balanced optimality under CONCAVE service (N={n}, B={b})"),
+        vec!["family", "balanced optimal?", "best assignment", "worst/best ratio"],
+    );
+    for tau in [
+        ServiceDist::weibull(2.0, 1.0),
+        ServiceDist::weibull(4.0, 1.0),
+        ServiceDist::gamma_dist(2.0, 1.0),
+        ServiceDist::gamma_dist(8.0, 0.25),
+        // convex control rows
+        ServiceDist::exp(1.0),
+        ServiceDist::weibull(0.6, 1.0),
+    ] {
+        let rows = explore(n, b, &tau)?;
+        let best = &rows[0];
+        let worst = rows.last().unwrap();
+        t.row(vec![
+            tau.label(),
+            if best.assignment == balanced(n, b) { "yes" } else { "NO" }.to_string(),
+            format!("{:?}", best.assignment),
+            fnum(worst.mean / best.mean),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn convex_families_confirm_lemma2() {
+        assert!(balanced_still_optimal(8, 2, &ServiceDist::exp(1.0)).unwrap());
+        assert!(balanced_still_optimal(8, 2, &ServiceDist::weibull(0.6, 1.0)).unwrap());
+    }
+
+    #[test]
+    fn concave_families_explored() {
+        // Empirical finding (documented in EXPERIMENTS.md): balanced
+        // remains optimal for the concave families we test too — the
+        // paper's open question, answered affirmatively in these cases.
+        for tau in [ServiceDist::weibull(2.0, 1.0), ServiceDist::gamma_dist(2.0, 1.0)] {
+            let rows = explore(8, 2, &tau).unwrap();
+            assert_eq!(rows[0].assignment, vec![4, 4], "{}", tau.label());
+        }
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = table(6, 2).unwrap();
+        assert!(t.render().contains("Gamma"));
+    }
+
+    #[test]
+    fn monte_carlo_agrees_with_numeric_for_gamma() {
+        use crate::batching::Policy;
+        use crate::sim::montecarlo::simulate_policy;
+        let tau = ServiceDist::gamma_dist(2.0, 1.0);
+        let rows = explore(8, 2, &tau).unwrap();
+        for r in rows.iter().take(2) {
+            let est = simulate_policy(
+                8,
+                &Policy::UnbalancedNonOverlapping { assignment: r.assignment.clone() },
+                &tau,
+                30_000,
+                3,
+            )
+            .unwrap();
+            assert!(
+                (est.mean - r.mean).abs() / r.mean < 0.03,
+                "{:?}: mc {} vs numeric {}",
+                r.assignment,
+                est.mean,
+                r.mean
+            );
+        }
+    }
+}

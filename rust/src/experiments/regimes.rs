@@ -1,0 +1,156 @@
+//! Regime tables — Theorems 6, 7, 9 and Corollaries 2–3: where the
+//! optimum sits in the diversity–parallelism spectrum as the service
+//! parameters move.
+
+use crate::analysis::optimizer::{
+    feasible_b, optimal_b_cov, optimal_b_mean, pareto_alpha_star, sexp_cov_optimal_end,
+    sexp_cov_regime, sexp_mean_regime, Regime,
+};
+use crate::dist::ServiceDist;
+use crate::metrics::{fnum, Table};
+
+fn regime_str(r: Regime) -> &'static str {
+    match r {
+        Regime::FullDiversity => "full-diversity",
+        Regime::Middle => "middle",
+        Regime::FullParallelism => "full-parallelism",
+        Regime::EitherEnd => "either-end",
+    }
+}
+
+/// Theorem 6 table: SExp mean-optimal regime across μ (N, Δ fixed).
+pub fn sexp_mean_table(n: usize, delta: f64, mus: &[f64]) -> Table {
+    let mut t = Table::new(
+        &format!("Theorem 6: E[T]-optimal regime, tau ~ SExp({delta}, mu), N={n}"),
+        vec!["mu", "delta*mu", "regime (Thm 6)", "B* (search)", "E[T](B*)"],
+    );
+    for &mu in mus {
+        let tau = ServiceDist::shifted_exp(delta, mu);
+        let (b_star, val) = optimal_b_mean(n, &tau);
+        t.row(vec![
+            fnum(mu),
+            fnum(delta * mu),
+            regime_str(sexp_mean_regime(n, delta, mu)).to_string(),
+            b_star.to_string(),
+            fnum(val),
+        ]);
+    }
+    t
+}
+
+/// Theorem 7 / Corollary 3 table: SExp CoV-optimal regime.
+pub fn sexp_cov_table(n: usize, delta: f64, mus: &[f64]) -> Table {
+    let mut t = Table::new(
+        &format!("Theorem 7 / Cor 3: CoV-optimal regime, tau ~ SExp({delta}, mu), N={n}"),
+        vec!["mu", "delta*mu", "regime (Thm 7)", "resolved end", "B* (search)"],
+    );
+    for &mu in mus {
+        let tau = ServiceDist::shifted_exp(delta, mu);
+        let (b_star, _) = optimal_b_cov(n, &tau);
+        let regime = sexp_cov_regime(n, delta, mu);
+        let resolved = match regime {
+            Regime::EitherEnd => regime_str(sexp_cov_optimal_end(n, delta, mu)),
+            r => regime_str(r),
+        };
+        t.row(vec![
+            fnum(mu),
+            fnum(delta * mu),
+            regime_str(regime).to_string(),
+            resolved.to_string(),
+            b_star.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Theorem 9 table: Pareto mean-optimal regime across α, with α*.
+pub fn pareto_table(n: usize, sigma: f64, alphas: &[f64]) -> Table {
+    let a_star = pareto_alpha_star(n);
+    let mut t = Table::new(
+        &format!("Theorem 9: E[T]-optimal regime, tau ~ Pareto({sigma}, alpha), N={n}, alpha*={a_star:.2}"),
+        vec!["alpha", "predicted", "B* (search)", "E[T](B*)", "CoV B* (Thm 10)"],
+    );
+    for &alpha in alphas {
+        let tau = ServiceDist::pareto(sigma, alpha);
+        let (b_star, val) = optimal_b_mean(n, &tau);
+        let (b_cov, _) = optimal_b_cov(n, &tau);
+        let predicted = if alpha >= a_star { "full-parallelism" } else { "middle" };
+        t.row(vec![
+            fnum(alpha),
+            predicted.to_string(),
+            b_star.to_string(),
+            fnum(val),
+            b_cov.to_string(),
+        ]);
+    }
+    t
+}
+
+/// The headline trade-off table: for each family, the mean-optimal and
+/// CoV-optimal operating points side by side (§VI discussion: they can
+/// sit at opposite ends of the spectrum).
+pub fn tradeoff_table(n: usize) -> Table {
+    let mut t = Table::new(
+        &format!("Mean-vs-predictability trade-off (N={n})"),
+        vec!["service dist", "B* mean", "B* CoV", "opposite ends"],
+    );
+    let cases = vec![
+        ServiceDist::exp(1.0),
+        ServiceDist::shifted_exp(0.05, 0.1),
+        ServiceDist::shifted_exp(0.05, 1.0),
+        ServiceDist::shifted_exp(0.05, 20.0),
+        ServiceDist::pareto(1.0, 2.5),
+        ServiceDist::pareto(1.0, 7.0),
+    ];
+    for tau in cases {
+        let (bm, _) = optimal_b_mean(n, &tau);
+        let (bc, _) = optimal_b_cov(n, &tau);
+        let opposite = (bm == 1 && bc == n) || (bm == n && bc == 1);
+        t.row(vec![
+            tau.label(),
+            bm.to_string(),
+            bc.to_string(),
+            if opposite { "YES" } else { "no" }.to_string(),
+        ]);
+    }
+    t
+}
+
+/// All feasible B for quick display.
+pub fn spectrum_row(n: usize) -> String {
+    feasible_b(n).iter().map(|b| b.to_string()).collect::<Vec<_>>().join(", ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render_with_expected_rows() {
+        let t = sexp_mean_table(100, 0.05, &[0.1, 1.0, 15.0]);
+        assert_eq!(t.n_rows(), 3);
+        let r = t.render();
+        assert!(r.contains("full-diversity"));
+        assert!(r.contains("middle"));
+        assert!(r.contains("full-parallelism"));
+
+        let t = sexp_cov_table(100, 0.05, &[0.2, 3.0, 40.0]);
+        assert_eq!(t.n_rows(), 3);
+
+        let t = pareto_table(100, 1.0, &[1.5, 3.0, 7.0]);
+        let r = t.render();
+        assert!(r.contains("alpha*=4.7") || r.contains("alpha*=4.6") || r.contains("alpha*=4.8"));
+    }
+
+    #[test]
+    fn exp_family_is_opposite_ends() {
+        let t = tradeoff_table(100);
+        let r = t.render();
+        assert!(r.contains("YES"));
+    }
+
+    #[test]
+    fn spectrum_row_lists_divisors() {
+        assert_eq!(spectrum_row(6), "1, 2, 3, 6");
+    }
+}

@@ -1,0 +1,201 @@
+//! §VII trace experiments — Figs. 11, 12, 13.
+//!
+//! Fig. 11: CCDF of task service times for 10 jobs.
+//! Fig. 12: normalized E\[T\] vs B for exponential-tail jobs (1–5).
+//! Fig. 13: normalized E\[T\] vs B for heavy-tail jobs (6–10).
+//!
+//! The jobs come from a Google-trace-shaped synthetic workload (see
+//! `traces::generator`); the pipeline — extract service times, build
+//! the empirical distribution, sweep the redundancy level by
+//! trace-driven simulation — is the paper's.
+
+use crate::analysis::optimizer::feasible_b;
+use crate::batching::Policy;
+use crate::metrics::{fnum, SeriesExport, Table};
+use crate::sim::montecarlo::simulate_policy;
+use crate::traces::{job_ccdf, GeneratorConfig, JobAnalysis, Trace};
+use crate::util::error::Result;
+
+/// Jobs shown in Fig. 12 (exponential tail + the borderline job 5).
+pub const EXP_TAIL_JOBS: [u64; 5] = [1, 2, 3, 4, 5];
+/// Jobs shown in Fig. 13 (heavy tail).
+pub const HEAVY_TAIL_JOBS: [u64; 5] = [6, 7, 8, 9, 10];
+
+/// Generate the standard workload: 100 tasks per job (so the B sweep
+/// matches the paper's N=100 spectrum), fixed seed.
+pub fn standard_trace(seed: u64) -> Trace {
+    GeneratorConfig::paper_workload(100, seed).generate()
+}
+
+/// Fig. 11 series: one CCDF curve per job.
+pub fn fig11_series(trace: &Trace) -> Vec<SeriesExport> {
+    trace
+        .job_ids()
+        .into_iter()
+        .map(|j| {
+            let mut s = SeriesExport::new(&format!("job{j}"), "t_seconds", vec!["ccdf"]);
+            for (t, p) in job_ccdf(trace, j, 200) {
+                s.push(t, vec![p]);
+            }
+            s
+        })
+        .collect()
+}
+
+/// One job's redundancy sweep: normalized E\[T\](B) / E\[T\](B=N),
+/// trace-driven (empirical τ resampled bootstrap-style).
+pub fn job_sweep(
+    trace: &Trace,
+    job_id: u64,
+    reps: usize,
+    seed: u64,
+) -> Result<Vec<(usize, f64)>> {
+    let analysis = JobAnalysis::of(trace, job_id)
+        .ok_or_else(|| crate::util::error::Error::Config(format!("job {job_id} empty")))?;
+    let n = analysis.n_tasks;
+    let tau = analysis.service_dist();
+    let mut rows = Vec::new();
+    for b in feasible_b(n) {
+        let est = simulate_policy(
+            n,
+            &Policy::BalancedNonOverlapping { batches: b },
+            &tau,
+            reps,
+            seed ^ (job_id << 32) ^ b as u64,
+        )?;
+        rows.push((b, est.mean));
+    }
+    let baseline = rows.last().expect("non-empty").1; // B = N (no redundancy)
+    Ok(rows.into_iter().map(|(b, m)| (b, m / baseline)).collect())
+}
+
+/// Figs. 12/13 series for a set of jobs.
+pub fn sweep_series(
+    trace: &Trace,
+    jobs: &[u64],
+    reps: usize,
+    seed: u64,
+) -> Result<Vec<SeriesExport>> {
+    jobs.iter()
+        .map(|&j| {
+            let mut s =
+                SeriesExport::new(&format!("job{j}"), "B", vec!["normalized_mean_T"]);
+            for (b, m) in job_sweep(trace, j, reps, seed)? {
+                s.push(b as f64, vec![m]);
+            }
+            Ok(s)
+        })
+        .collect()
+}
+
+/// Printable table for one figure: rows = B, columns = jobs, argmin
+/// starred; last row reports the speedup at the optimum.
+pub fn table(
+    title: &str,
+    trace: &Trace,
+    jobs: &[u64],
+    reps: usize,
+    seed: u64,
+) -> Result<Table> {
+    let sweeps: Vec<Vec<(usize, f64)>> =
+        jobs.iter().map(|&j| job_sweep(trace, j, reps, seed)).collect::<Result<_>>()?;
+    let mut header = vec!["B".to_string()];
+    header.extend(jobs.iter().map(|j| format!("job {j}")));
+    let mut t = Table::new(title, header.iter().map(|s| s.as_str()).collect());
+    let argmins: Vec<usize> = sweeps
+        .iter()
+        .map(|sw| {
+            sw.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).map(|(b, _)| *b).unwrap()
+        })
+        .collect();
+    let bs: Vec<usize> = sweeps[0].iter().map(|(b, _)| *b).collect();
+    for (i, b) in bs.iter().enumerate() {
+        let mut row = vec![b.to_string()];
+        for (j, sw) in sweeps.iter().enumerate() {
+            let star = if argmins[j] == *b { "*" } else { "" };
+            row.push(format!("{}{star}", fnum(sw[i].1)));
+        }
+        t.row(row);
+    }
+    // speedup row: 1 / normalized-mean at the optimum
+    let mut row = vec!["speedup".to_string()];
+    for sw in &sweeps {
+        let best = sw.iter().map(|(_, m)| *m).fold(f64::INFINITY, f64::min);
+        row.push(format!("{}x", fnum(1.0 / best)));
+    }
+    t.row(row);
+    Ok(t)
+}
+
+/// The paper's headline: max speedup across the heavy-tail jobs.
+pub fn headline_speedup(trace: &Trace, reps: usize, seed: u64) -> Result<f64> {
+    let mut best = 1.0f64;
+    for &j in &HEAVY_TAIL_JOBS {
+        let sweep = job_sweep(trace, j, reps, seed)?;
+        let min = sweep.iter().map(|(_, m)| *m).fold(f64::INFINITY, f64::min);
+        best = best.max(1.0 / min);
+    }
+    Ok(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig11_has_ten_curves() {
+        let trace = standard_trace(1);
+        let series = fig11_series(&trace);
+        assert_eq!(series.len(), 10);
+        for s in &series {
+            assert!(!s.points.is_empty());
+        }
+    }
+
+    #[test]
+    fn fig12_exp_tail_jobs_prefer_high_parallelism() {
+        // Jobs with large shift (1–4): optimum at/near full parallelism.
+        let trace = standard_trace(2);
+        for &j in &[1u64, 4] {
+            let sweep = job_sweep(&trace, j, 4_000, 3).unwrap();
+            let (b_star, _) =
+                *sweep.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap();
+            assert!(b_star >= 50, "job {j}: B*={b_star}");
+        }
+    }
+
+    #[test]
+    fn fig13_heavy_tail_jobs_prefer_interior_redundancy() {
+        let trace = standard_trace(4);
+        for &j in &[7u64, 9] {
+            let sweep = job_sweep(&trace, j, 4_000, 5).unwrap();
+            let (b_star, norm) =
+                *sweep.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap();
+            assert!(b_star < 100, "job {j}: B*={b_star}");
+            assert!(norm < 0.8, "job {j}: redundancy should speed up ≥1.25x, got {norm}");
+        }
+    }
+
+    #[test]
+    fn headline_order_of_magnitude_speedup() {
+        // the paper's abstract: "speed up the computing job by an order
+        // of magnitude" on heavy-tail jobs
+        let trace = standard_trace(6);
+        let s = headline_speedup(&trace, 4_000, 7).unwrap();
+        assert!(s > 5.0, "headline speedup {s}");
+    }
+
+    #[test]
+    fn sweeps_are_normalized() {
+        let trace = standard_trace(8);
+        let sweep = job_sweep(&trace, 6, 2_000, 9).unwrap();
+        assert!((sweep.last().unwrap().1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_includes_speedup_row() {
+        let trace = standard_trace(10);
+        let t = table("fig13", &trace, &[6, 7], 1_000, 11).unwrap();
+        assert!(t.render().contains("speedup"));
+    }
+}

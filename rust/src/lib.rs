@@ -1,0 +1,61 @@
+//! # replica — efficient replication for straggler mitigation
+//!
+//! A production-style reproduction of *"Efficient Replication for
+//! Straggler Mitigation in Distributed Computing"* (Behrouzi-Far &
+//! Soljanin, 2020).
+//!
+//! The crate implements the paper's full system and every substrate it
+//! depends on:
+//!
+//! * [`dist`] — service-time distributions (Exponential,
+//!   Shifted-Exponential, Pareto, Weibull, Bimodal, Empirical) plus the
+//!   size-dependent batch model `T_batch = (N/B)·τ` of Gardner et al.
+//! * [`batching`] — the paper's §III task-replication policies:
+//!   balanced/unbalanced non-overlapping batches, random
+//!   (coupon-collector) assignment, cyclic and hybrid overlapping
+//!   schemes.
+//! * [`analysis`] — closed forms for E\[T\] and CoV\[T\] (eqs. 18, 19,
+//!   21, 22, 24, 26), Stirling-number coverage probabilities (Lemma 1),
+//!   majorization (Lemmas 2–3), and the discrete optimizers + regime
+//!   classification of Theorems 5–10.
+//! * [`sim`] — a discrete-event Monte-Carlo simulator for job compute
+//!   time under any policy/distribution pair.
+//! * [`planner`] — the redundancy planner: given N and a service-time
+//!   model (analytic or fitted from traces), chooses the batch count B
+//!   minimizing mean compute time, CoV, or a weighted trade-off.
+//! * [`coordinator`] — a live master–worker engine (threads + channels)
+//!   that applies a replication plan to real gradient computations
+//!   executed through [`runtime`] (PJRT/XLA artifacts compiled AOT from
+//!   JAX+Pallas; Python never runs at serve time).
+//! * [`traces`] — a Google-cluster-trace-shaped workload generator,
+//!   loader, and tail analyzer (§VII).
+//! * [`experiments`] — one module per paper figure/table; the bench
+//!   harness and CLI call into these.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use replica::dist::ServiceDist;
+//! use replica::planner::{Planner, Objective};
+//!
+//! // N = 100 workers, task service times ~ SExp(Δ=0.05, μ=1.0)
+//! let dist = ServiceDist::shifted_exp(0.05, 1.0);
+//! let plan = Planner::new(100, dist).plan(Objective::MeanCompletion);
+//! println!("optimal number of batches B = {}", plan.batches);
+//! ```
+
+pub mod analysis;
+pub mod batching;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dist;
+pub mod experiments;
+pub mod metrics;
+pub mod planner;
+pub mod runtime;
+pub mod sim;
+pub mod traces;
+pub mod util;
+
+pub use util::error::{Error, Result};

@@ -1,0 +1,11 @@
+//! `replica` — CLI entrypoint for the straggler-mitigation framework.
+//!
+//! See `replica help` (or [`replica::cli::HELP`]) for usage.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = replica::cli::run(argv) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,98 @@
+//! Minimal benchmarking helper for the `harness = false` bench binaries
+//! (no criterion offline — DESIGN.md §Substitutions).
+//!
+//! Measures wall-clock per iteration with warm-up, reports mean ±
+//! stddev over repeats, and returns the mean so benches can assert /
+//! derive throughput.
+
+use std::time::Instant;
+
+/// Result of one measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchResult {
+    /// Mean seconds per iteration.
+    pub secs_per_iter: f64,
+    /// Std-dev across repeat blocks.
+    pub stddev: f64,
+    pub iters: u64,
+}
+
+impl BenchResult {
+    pub fn per_second(&self) -> f64 {
+        1.0 / self.secs_per_iter
+    }
+}
+
+/// Time `f`, auto-calibrating the iteration count to ~`target_ms` per
+/// block, running 5 blocks. Prints a criterion-style line.
+pub fn bench<F: FnMut()>(name: &str, target_ms: f64, mut f: F) -> BenchResult {
+    // warm-up + calibration
+    let mut iters: u64 = 1;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt * 1e3 >= target_ms.min(50.0) || iters >= 1 << 30 {
+            let scale = (target_ms / 1e3 / (dt / iters as f64)).max(1.0);
+            iters = (scale as u64).clamp(1, 1 << 30);
+            break;
+        }
+        iters *= 4;
+    }
+    const BLOCKS: usize = 5;
+    let mut per_iter = Vec::with_capacity(BLOCKS);
+    for _ in 0..BLOCKS {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        per_iter.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    let mean = per_iter.iter().sum::<f64>() / BLOCKS as f64;
+    let var =
+        per_iter.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / BLOCKS as f64;
+    let result = BenchResult { secs_per_iter: mean, stddev: var.sqrt(), iters };
+    println!(
+        "bench {name:<48} {:>12}/iter  ± {:>10}  ({} iters/block)",
+        humanize(mean),
+        humanize(result.stddev),
+        iters
+    );
+    result
+}
+
+fn humanize(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} us", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let r = bench("noop-ish", 5.0, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.secs_per_iter > 0.0 && r.secs_per_iter < 0.01);
+        assert!(r.iters >= 1);
+    }
+
+    #[test]
+    fn humanize_units() {
+        assert!(humanize(2.0).ends_with('s'));
+        assert!(humanize(2e-3).ends_with("ms"));
+        assert!(humanize(2e-6).ends_with("us"));
+        assert!(humanize(2e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,115 @@
+//! CSV / JSON export of experiment series (so figures can be re-plotted
+//! outside the harness).
+
+use std::path::Path;
+
+use crate::util::csv::Table as CsvTable;
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+/// A named (x, y...) series, e.g. one curve of a paper figure.
+#[derive(Clone, Debug)]
+pub struct SeriesExport {
+    pub name: String,
+    pub x_label: String,
+    pub y_labels: Vec<String>,
+    /// rows of (x, ys...)
+    pub points: Vec<(f64, Vec<f64>)>,
+}
+
+impl SeriesExport {
+    pub fn new(name: &str, x_label: &str, y_labels: Vec<&str>) -> SeriesExport {
+        SeriesExport {
+            name: name.to_string(),
+            x_label: x_label.to_string(),
+            y_labels: y_labels.into_iter().map(String::from).collect(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, x: f64, ys: Vec<f64>) {
+        debug_assert_eq!(ys.len(), self.y_labels.len());
+        self.points.push((x, ys));
+    }
+}
+
+/// Write one or more series as a long-format CSV
+/// (`series,x,<y_labels...>`).
+pub fn export_csv(path: &Path, series: &[SeriesExport]) -> Result<()> {
+    let mut header = vec!["series".to_string(), "x".to_string()];
+    if let Some(first) = series.first() {
+        header.extend(first.y_labels.iter().cloned());
+    }
+    let mut table = CsvTable { header, rows: Vec::new() };
+    for s in series {
+        for (x, ys) in &s.points {
+            let mut row = vec![s.name.clone(), format!("{x}")];
+            row.extend(ys.iter().map(|y| format!("{y}")));
+            table.rows.push(row);
+        }
+    }
+    table.write_to(path)
+}
+
+/// Write series as a JSON document.
+pub fn export_json(path: &Path, series: &[SeriesExport]) -> Result<()> {
+    let arr = Json::Arr(
+        series
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::Str(s.name.clone())),
+                    ("x_label", Json::Str(s.x_label.clone())),
+                    (
+                        "y_labels",
+                        Json::Arr(s.y_labels.iter().map(|l| Json::Str(l.clone())).collect()),
+                    ),
+                    (
+                        "points",
+                        Json::Arr(
+                            s.points
+                                .iter()
+                                .map(|(x, ys)| {
+                                    let mut v = vec![Json::Num(*x)];
+                                    v.extend(ys.iter().map(|y| Json::Num(*y)));
+                                    Json::Arr(v)
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+    std::fs::write(path, arr.to_string_pretty())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_and_json_roundtrip() {
+        let dir = std::env::temp_dir().join("replica_export_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut s = SeriesExport::new("fig7_mu1", "B", vec!["mean", "ci95"]);
+        s.push(1.0, vec![5.2, 0.01]);
+        s.push(2.0, vec![3.1, 0.02]);
+
+        let csv_path = dir.join("s.csv");
+        export_csv(&csv_path, &[s.clone()]).unwrap();
+        let t = CsvTable::read_from(&csv_path).unwrap();
+        assert_eq!(t.header, vec!["series", "x", "mean", "ci95"]);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][0], "fig7_mu1");
+
+        let json_path = dir.join("s.json");
+        export_json(&json_path, &[s]).unwrap();
+        let text = std::fs::read_to_string(&json_path).unwrap();
+        let v = crate::util::json::parse(&text).unwrap();
+        let first = &v.as_arr().unwrap()[0];
+        assert_eq!(first.get("name").unwrap().as_str().unwrap(), "fig7_mu1");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

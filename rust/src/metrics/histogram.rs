@@ -1,0 +1,130 @@
+//! Fixed-bin and log-scale histograms (service-time CCDF plots, Fig 11).
+
+/// A histogram over `[lo, hi)` with uniform or log-spaced bins.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    log_scale: bool,
+    counts: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+    total: u64,
+}
+
+impl Histogram {
+    pub fn uniform(lo: f64, hi: f64, bins: usize) -> Histogram {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, log_scale: false, counts: vec![0; bins], underflow: 0, overflow: 0, total: 0 }
+    }
+
+    /// Log-spaced bins (lo must be > 0) — right scale for heavy tails.
+    pub fn logarithmic(lo: f64, hi: f64, bins: usize) -> Histogram {
+        assert!(hi > lo && lo > 0.0 && bins > 0);
+        Histogram { lo, hi, log_scale: true, counts: vec![0; bins], underflow: 0, overflow: 0, total: 0 }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.total += 1;
+        if x < self.lo {
+            self.underflow += 1;
+            return;
+        }
+        if x >= self.hi {
+            self.overflow += 1;
+            return;
+        }
+        let frac = if self.log_scale {
+            (x.ln() - self.lo.ln()) / (self.hi.ln() - self.lo.ln())
+        } else {
+            (x - self.lo) / (self.hi - self.lo)
+        };
+        let idx = ((frac * self.counts.len() as f64) as usize).min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Bin edges (len = bins + 1).
+    pub fn edges(&self) -> Vec<f64> {
+        let b = self.counts.len();
+        (0..=b)
+            .map(|i| {
+                let f = i as f64 / b as f64;
+                if self.log_scale {
+                    (self.lo.ln() + f * (self.hi.ln() - self.lo.ln())).exp()
+                } else {
+                    self.lo + f * (self.hi - self.lo)
+                }
+            })
+            .collect()
+    }
+
+    /// Empirical CCDF evaluated at each bin's lower edge:
+    /// `(edge, Pr{X > edge})` pairs — the Fig. 11 series.
+    pub fn ccdf_points(&self) -> Vec<(f64, f64)> {
+        let edges = self.edges();
+        let mut above = self.total - self.underflow; // count ≥ lo
+        let mut pts = Vec::with_capacity(self.counts.len());
+        for (i, &c) in self.counts.iter().enumerate() {
+            pts.push((edges[i], above as f64 / self.total.max(1) as f64));
+            above -= c;
+        }
+        pts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_binning() {
+        let mut h = Histogram::uniform(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.record(i as f64 + 0.5);
+        }
+        assert_eq!(h.counts(), &[1; 10]);
+        h.record(-1.0);
+        h.record(100.0);
+        assert_eq!(h.total(), 12);
+    }
+
+    #[test]
+    fn log_binning_spans_decades() {
+        let mut h = Histogram::logarithmic(1.0, 1000.0, 3);
+        h.record(2.0); // decade 1
+        h.record(20.0); // decade 2
+        h.record(200.0); // decade 3
+        assert_eq!(h.counts(), &[1, 1, 1]);
+        let e = h.edges();
+        assert!((e[1] - 10.0).abs() < 1e-9);
+        assert!((e[2] - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ccdf_monotone_decreasing() {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(1);
+        let mut h = Histogram::uniform(0.0, 5.0, 50);
+        for _ in 0..10_000 {
+            h.record(-rng.uniform_pos().ln()); // Exp(1)
+        }
+        let pts = h.ccdf_points();
+        assert!((pts[0].1 - 1.0).abs() < 0.01);
+        for w in pts.windows(2) {
+            assert!(w[1].1 <= w[0].1 + 1e-12);
+        }
+        // CCDF at t≈1 should be ≈ e^{-1}
+        let near_1 = pts.iter().min_by(|a, b| {
+            (a.0 - 1.0).abs().partial_cmp(&(b.0 - 1.0).abs()).unwrap()
+        });
+        assert!((near_1.unwrap().1 - (-1.0f64).exp()).abs() < 0.03);
+    }
+}

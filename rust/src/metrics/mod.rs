@@ -1,0 +1,14 @@
+//! Measurement substrates: streaming summaries, histograms, ASCII
+//! tables for the bench harness, and CSV/JSON export.
+
+pub mod bench;
+mod export;
+mod histogram;
+mod summary;
+mod table;
+
+pub use bench::{bench, BenchResult};
+pub use export::{export_csv, export_json, SeriesExport};
+pub use histogram::Histogram;
+pub use summary::Summary;
+pub use table::{fnum, Table};

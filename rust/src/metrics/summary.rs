@@ -1,0 +1,186 @@
+//! Streaming moment estimation (Welford) + order statistics.
+
+/// Online summary of a sample: mean/variance via Welford's algorithm,
+/// plus retained samples for exact quantiles (the experiment scale here
+/// — ≤ 10⁷ values — fits comfortably in memory).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    samples: Vec<f64>,
+    keep_samples: bool,
+}
+
+impl Summary {
+    /// Summary that retains samples (exact quantiles available).
+    pub fn new() -> Summary {
+        Summary { keep_samples: true, min: f64::INFINITY, max: f64::NEG_INFINITY, ..Default::default() }
+    }
+
+    /// Memory-light summary (moments only; quantiles unavailable).
+    pub fn moments_only() -> Summary {
+        Summary { keep_samples: false, min: f64::INFINITY, max: f64::NEG_INFINITY, ..Default::default() }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        if self.keep_samples {
+            self.samples.push(x);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Sample (Bessel-corrected) variance.
+    pub fn sample_variance(&self) -> f64 {
+        if self.n < 2 {
+            f64::NAN
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Coefficient of variation σ/μ — the paper's predictability metric.
+    pub fn cov(&self) -> f64 {
+        self.std() / self.mean()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        (self.sample_variance() / self.n as f64).sqrt()
+    }
+
+    /// 95% confidence half-width for the mean (normal approximation).
+    pub fn ci95(&self) -> f64 {
+        1.96 * self.sem()
+    }
+
+    /// Exact quantile (requires retained samples). `q ∈ [0, 1]`.
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        assert!(self.keep_samples, "quantiles need retained samples");
+        assert!((0.0..=1.0).contains(&q));
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((q * (self.samples.len() - 1) as f64).round()) as usize;
+        self.samples[idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.record(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.variance() - 4.0).abs() < 1e-12);
+        assert!((s.std() - 2.0).abs() < 1e-12);
+        assert!((s.cov() - 0.4).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn quantiles() {
+        let mut s = Summary::new();
+        for i in 0..=100 {
+            s.record(i as f64);
+        }
+        assert_eq!(s.quantile(0.0), 0.0);
+        assert_eq!(s.quantile(0.5), 50.0);
+        assert_eq!(s.quantile(1.0), 100.0);
+        assert_eq!(s.quantile(0.95), 95.0);
+    }
+
+    #[test]
+    fn welford_matches_naive_on_random_data() {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(3);
+        let xs: Vec<f64> = (0..10_000).map(|_| rng.uniform() * 100.0).collect();
+        let mut s = Summary::moments_only();
+        for &x in &xs {
+            s.record(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!((s.mean() - mean).abs() < 1e-9);
+        assert!((s.variance() - var).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_summary_is_nan() {
+        let s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.variance().is_nan());
+    }
+
+    #[test]
+    fn ci_shrinks_with_n() {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(4);
+        let mut small = Summary::moments_only();
+        let mut large = Summary::moments_only();
+        for i in 0..10_000 {
+            let x = rng.normal();
+            if i < 100 {
+                small.record(x);
+            }
+            large.record(x);
+        }
+        assert!(large.ci95() < small.ci95());
+    }
+
+    #[test]
+    #[should_panic]
+    fn moments_only_has_no_quantiles() {
+        let mut s = Summary::moments_only();
+        s.record(1.0);
+        s.quantile(0.5);
+    }
+}

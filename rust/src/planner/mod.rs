@@ -1,0 +1,348 @@
+//! The redundancy planner — the paper's actionable output.
+//!
+//! Given a worker budget N and a task service-time model τ (analytic
+//! family or fitted from trace samples), choose the batch count B —
+//! i.e. the operating point on the diversity–parallelism spectrum —
+//! optimizing:
+//!
+//! * [`Objective::MeanCompletion`] — minimize E\[T\] (Theorems 3, 5, 8),
+//! * [`Objective::Predictability`] — minimize CoV\[T\] (Theorems 4, 7, 10),
+//! * [`Objective::Tradeoff`] — a weighted blend (the "system
+//!   administrator's middle point" of §VI-A).
+//!
+//! Plans are produced analytically (closed forms) by default, or by
+//! Monte-Carlo search ([`Planner::plan_simulated`]) for distributions
+//! without closed forms (empirical/bimodal).
+
+use crate::analysis::closed_form;
+use crate::analysis::optimizer::{self, Regime};
+use crate::batching::{operating_points, Policy};
+use crate::dist::{ServiceDist, TailFit};
+use crate::sim::montecarlo::simulate_policy;
+use crate::util::error::Result;
+
+/// Planning objective.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Objective {
+    /// Minimize expected job compute time.
+    MeanCompletion,
+    /// Minimize the coefficient of variation (maximize predictability).
+    Predictability,
+    /// Minimize `w·E[T]/E* + (1−w)·CoV/CoV*` for `w ∈ [0,1]`.
+    Tradeoff(f64),
+}
+
+/// A redundancy plan: the chosen operating point plus predictions.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub workers: usize,
+    pub batches: usize,
+    pub batch_size: usize,
+    pub replication: usize,
+    /// The policy to deploy (always balanced non-overlapping — the
+    /// provably optimal family, Theorems 1–2 and §V).
+    pub policy: Policy,
+    /// Predicted E[T] at the chosen point.
+    pub predicted_mean: f64,
+    /// Predicted CoV[T] at the chosen point.
+    pub predicted_cov: f64,
+    /// Speedup of E[T] vs the no-redundancy baseline (B = N).
+    pub speedup_vs_no_redundancy: f64,
+    /// Regime classification when the family has one.
+    pub regime: Option<Regime>,
+}
+
+/// One row of a spectrum sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepPoint {
+    pub batches: usize,
+    pub mean: f64,
+    pub cov: f64,
+}
+
+/// Redundancy planner for a fixed `(N, τ)`.
+#[derive(Clone, Debug)]
+pub struct Planner {
+    n: usize,
+    tau: ServiceDist,
+}
+
+impl Planner {
+    pub fn new(n: usize, tau: ServiceDist) -> Planner {
+        assert!(n >= 1);
+        Planner { n, tau }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.n
+    }
+
+    pub fn service(&self) -> &ServiceDist {
+        &self.tau
+    }
+
+    /// Analytic plan via the paper's closed forms / optimizers.
+    pub fn plan(&self, objective: Objective) -> Plan {
+        let (b, _) = match objective {
+            Objective::MeanCompletion => optimizer::optimal_b_mean(self.n, &self.tau),
+            Objective::Predictability => optimizer::optimal_b_cov(self.n, &self.tau),
+            Objective::Tradeoff(w) => optimizer::optimal_b_tradeoff(self.n, &self.tau, w),
+        };
+        self.plan_at(b, objective)
+    }
+
+    /// Materialize the plan at a specific operating point B.
+    pub fn plan_at(&self, b: usize, objective: Objective) -> Plan {
+        assert!(self.n % b == 0, "B must divide N");
+        let mean = closed_form::mean_t(self.n, b, &self.tau);
+        let cov = closed_form::cov_t(self.n, b, &self.tau);
+        let baseline = closed_form::mean_t(self.n, self.n, &self.tau);
+        Plan {
+            workers: self.n,
+            batches: b,
+            batch_size: self.n / b,
+            replication: self.n / b,
+            policy: Policy::BalancedNonOverlapping { batches: b },
+            predicted_mean: mean,
+            predicted_cov: cov,
+            speedup_vs_no_redundancy: baseline / mean,
+            regime: self.regime(objective),
+        }
+    }
+
+    /// The theorem-level regime classification for the family, if any.
+    pub fn regime(&self, objective: Objective) -> Option<Regime> {
+        match (&self.tau, objective) {
+            (ServiceDist::Exp { .. }, Objective::MeanCompletion) => {
+                Some(Regime::FullDiversity) // Theorem 3
+            }
+            (ServiceDist::Exp { .. }, Objective::Predictability) => {
+                Some(Regime::FullParallelism) // Theorem 4
+            }
+            (ServiceDist::ShiftedExp { delta, mu }, Objective::MeanCompletion) => {
+                Some(optimizer::sexp_mean_regime(self.n, *delta, *mu)) // Theorem 6
+            }
+            (ServiceDist::ShiftedExp { delta, mu }, Objective::Predictability)
+                if self.n > 4 =>
+            {
+                Some(optimizer::sexp_cov_regime(self.n, *delta, *mu)) // Theorem 7
+            }
+            (ServiceDist::Pareto { alpha, .. }, Objective::MeanCompletion)
+                if *alpha > 1.0 =>
+            {
+                Some(optimizer::pareto_mean_regime(self.n, *alpha)) // Theorem 9
+            }
+            (ServiceDist::Pareto { .. }, Objective::Predictability) => {
+                Some(optimizer::pareto_cov_regime()) // Theorem 10
+            }
+            _ => None,
+        }
+    }
+
+    /// Monte-Carlo plan: exhaustive search over the feasible spectrum by
+    /// simulation — the only option for empirical/bimodal τ.
+    pub fn plan_simulated(
+        &self,
+        objective: Objective,
+        reps: usize,
+        seed: u64,
+    ) -> Result<Plan> {
+        let mut best: Option<(usize, f64, f64, f64)> = None; // (B, score, mean, cov)
+        let sweep = self.sweep_simulated(reps, seed)?;
+        // normalization anchors for the tradeoff objective
+        let min_mean = sweep.iter().map(|p| p.mean).fold(f64::INFINITY, f64::min);
+        let min_cov = sweep.iter().map(|p| p.cov).fold(f64::INFINITY, f64::min);
+        for p in &sweep {
+            let score = match objective {
+                Objective::MeanCompletion => p.mean,
+                Objective::Predictability => p.cov,
+                Objective::Tradeoff(w) => {
+                    w * p.mean / min_mean.max(1e-300) + (1.0 - w) * p.cov / min_cov.max(1e-300)
+                }
+            };
+            if best.map_or(true, |(_, s, _, _)| score < s) {
+                best = Some((p.batches, score, p.mean, p.cov));
+            }
+        }
+        let (b, _, mean, cov) = best.expect("spectrum is never empty");
+        let baseline = sweep.last().expect("non-empty").mean;
+        Ok(Plan {
+            workers: self.n,
+            batches: b,
+            batch_size: self.n / b,
+            replication: self.n / b,
+            policy: Policy::BalancedNonOverlapping { batches: b },
+            predicted_mean: mean,
+            predicted_cov: cov,
+            speedup_vs_no_redundancy: baseline / mean,
+            regime: None,
+        })
+    }
+
+    /// Analytic spectrum sweep: (B, E[T], CoV) at every feasible B.
+    pub fn sweep(&self) -> Vec<SweepPoint> {
+        operating_points(self.n)
+            .into_iter()
+            .map(|op| SweepPoint {
+                batches: op.batches,
+                mean: closed_form::mean_t(self.n, op.batches, &self.tau),
+                cov: closed_form::cov_t(self.n, op.batches, &self.tau),
+            })
+            .collect()
+    }
+
+    /// Simulated spectrum sweep.
+    pub fn sweep_simulated(&self, reps: usize, seed: u64) -> Result<Vec<SweepPoint>> {
+        operating_points(self.n)
+            .into_iter()
+            .map(|op| {
+                let est = simulate_policy(
+                    self.n,
+                    &Policy::BalancedNonOverlapping { batches: op.batches },
+                    &self.tau,
+                    reps,
+                    seed ^ (op.batches as u64).wrapping_mul(0x9E3779B97F4A7C15),
+                )?;
+                Ok(SweepPoint { batches: op.batches, mean: est.mean, cov: est.cov })
+            })
+            .collect()
+    }
+
+    /// Pareto-efficient frontier of (E\[T\], CoV): points not dominated
+    /// in both metrics — the menu a system administrator picks from.
+    pub fn tradeoff_front(&self) -> Vec<SweepPoint> {
+        let sweep = self.sweep();
+        sweep
+            .iter()
+            .filter(|p| {
+                !sweep
+                    .iter()
+                    .any(|q| (q.mean < p.mean && q.cov <= p.cov) || (q.mean <= p.mean && q.cov < p.cov))
+            })
+            .copied()
+            .collect()
+    }
+}
+
+/// Plan directly from observed service-time samples (the §VII flow):
+/// classify the tail, fit the winning family, plan analytically.
+pub fn plan_from_samples(
+    n: usize,
+    samples: &[f64],
+    objective: Objective,
+) -> (Plan, TailFit) {
+    let fit = TailFit::classify(samples);
+    let planner = Planner::new(n, fit.best());
+    (planner.plan(objective), fit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn exp_plans_match_theorems_3_and_4() {
+        let p = Planner::new(100, ServiceDist::exp(1.0));
+        let mean_plan = p.plan(Objective::MeanCompletion);
+        assert_eq!(mean_plan.batches, 1);
+        assert_eq!(mean_plan.regime, Some(Regime::FullDiversity));
+        let cov_plan = p.plan(Objective::Predictability);
+        assert_eq!(cov_plan.batches, 100);
+        assert_eq!(cov_plan.regime, Some(Regime::FullParallelism));
+    }
+
+    #[test]
+    fn plan_fields_consistent() {
+        let p = Planner::new(100, ServiceDist::shifted_exp(0.05, 1.0));
+        let plan = p.plan(Objective::MeanCompletion);
+        assert_eq!(plan.batches * plan.batch_size, 100);
+        assert_eq!(plan.replication, plan.batch_size);
+        assert!(plan.predicted_mean > 0.0);
+        assert!(plan.speedup_vs_no_redundancy > 0.0);
+        match plan.policy {
+            Policy::BalancedNonOverlapping { batches } => assert_eq!(batches, plan.batches),
+            _ => panic!("planner must emit the balanced policy"),
+        }
+    }
+
+    #[test]
+    fn sexp_middle_regime_is_interior() {
+        let p = Planner::new(100, ServiceDist::shifted_exp(0.05, 1.0));
+        let plan = p.plan(Objective::MeanCompletion);
+        assert_eq!(plan.regime, Some(Regime::Middle));
+        assert!(plan.batches > 1 && plan.batches < 100, "B={}", plan.batches);
+    }
+
+    #[test]
+    fn simulated_plan_close_to_analytic() {
+        let p = Planner::new(20, ServiceDist::shifted_exp(0.05, 1.0));
+        let analytic = p.plan(Objective::MeanCompletion);
+        let simulated = p.plan_simulated(Objective::MeanCompletion, 8_000, 11).unwrap();
+        // objective is shallow near the optimum: require the simulated
+        // choice to be within 5% of the analytic optimum's value
+        let sim_val =
+            closed_form::mean_t(20, simulated.batches, &ServiceDist::shifted_exp(0.05, 1.0));
+        assert!(
+            (sim_val - analytic.predicted_mean) / analytic.predicted_mean < 0.05,
+            "sim B={} val {sim_val} vs analytic B={} val {}",
+            simulated.batches,
+            analytic.batches,
+            analytic.predicted_mean
+        );
+    }
+
+    #[test]
+    fn empirical_tau_plans_via_simulation() {
+        // heavy-tail sample → planner should pick an interior/low B
+        let d = ServiceDist::pareto(1.0, 1.5);
+        let mut rng = Pcg64::new(3);
+        let samples: Vec<f64> = (0..20_000).map(|_| d.sample(&mut rng)).collect();
+        let p = Planner::new(20, ServiceDist::empirical(samples));
+        let plan = p.plan_simulated(Objective::MeanCompletion, 4_000, 5).unwrap();
+        assert!(plan.batches < 20, "B={}", plan.batches);
+        assert!(plan.speedup_vs_no_redundancy > 1.0);
+    }
+
+    #[test]
+    fn tradeoff_front_is_pareto_efficient() {
+        let p = Planner::new(100, ServiceDist::shifted_exp(0.05, 1.0));
+        let front = p.tradeoff_front();
+        assert!(!front.is_empty());
+        for a in &front {
+            for b in &front {
+                if a.batches != b.batches {
+                    assert!(
+                        !(b.mean < a.mean && b.cov < a.cov),
+                        "{:?} dominated by {:?}",
+                        a,
+                        b
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_from_samples_classifies_and_plans() {
+        let d = ServiceDist::pareto(1.0, 1.8);
+        let mut rng = Pcg64::new(9);
+        let samples: Vec<f64> = (0..30_000).map(|_| d.sample(&mut rng)).collect();
+        let (plan, fit) = plan_from_samples(100, &samples, Objective::MeanCompletion);
+        assert_eq!(fit.class, crate::dist::TailClass::HeavyTail);
+        // heavy tails benefit from interior redundancy (Theorem 9, α < α*)
+        assert!(plan.batches < 100, "B={}", plan.batches);
+    }
+
+    #[test]
+    fn sweep_covers_spectrum_monotonically_for_exp() {
+        let p = Planner::new(12, ServiceDist::exp(1.0));
+        let sweep = p.sweep();
+        assert_eq!(sweep.len(), 6); // divisors of 12
+        // Theorem 3: mean increasing in B; Theorem 4: CoV decreasing
+        for w in sweep.windows(2) {
+            assert!(w[1].mean > w[0].mean);
+            assert!(w[1].cov < w[0].cov);
+        }
+    }
+}

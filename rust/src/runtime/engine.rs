@@ -1,0 +1,210 @@
+//! The PJRT engine: compile HLO-text artifacts, execute with f32
+//! tensors. `!Send` — lives on the runtime service thread.
+
+use std::collections::HashMap;
+
+use crate::runtime::manifest::Manifest;
+use crate::util::error::{Error, Result};
+
+/// A flat f32 tensor (row-major). `shape = []` means scalar.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Tensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>().max(1));
+        Tensor { data, shape }
+    }
+
+    pub fn scalar(x: f32) -> Tensor {
+        Tensor { data: vec![x], shape: vec![] }
+    }
+
+    pub fn vec(data: Vec<f32>) -> Tensor {
+        let n = data.len();
+        Tensor { data, shape: vec![n] }
+    }
+
+    pub fn matrix(data: Vec<f32>, rows: usize, cols: usize) -> Tensor {
+        debug_assert_eq!(data.len(), rows * cols);
+        Tensor { data, shape: vec![rows, cols] }
+    }
+}
+
+/// One input to a cached execution: either fresh host data (uploaded
+/// every call) or a device-resident buffer cached under a caller-chosen
+/// key (uploaded on first use only). Cached inputs are for *immutable*
+/// data — the coordinator's dataset shards, which never change between
+/// rounds; the caller owns key uniqueness.
+pub enum Arg {
+    Fresh(Tensor),
+    Cached { key: u64, tensor: Tensor },
+}
+
+/// Compiled-executable cache over one PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Device-resident buffers for immutable inputs (see [`Arg::Cached`]).
+    buffers: HashMap<u64, xla::PjRtBuffer>,
+}
+
+impl Engine {
+    /// Create a CPU engine for a manifest. Compilation is lazy per
+    /// entry (first call compiles, later calls hit the cache).
+    pub fn new(manifest: Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "PJRT engine up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Engine { client, manifest, compiled: HashMap::new(), buffers: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Eagerly compile every artifact in the manifest (startup warm-up,
+    /// so the serving hot path never pays compile latency).
+    pub fn warm_up(&mut self) -> Result<()> {
+        let names: Vec<String> =
+            self.manifest.entries.iter().map(|e| e.name.clone()).collect();
+        for name in names {
+            self.ensure_compiled(&name)?;
+        }
+        Ok(())
+    }
+
+    fn ensure_compiled(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(name) {
+            let entry = self.manifest.entry(name)?.clone();
+            let path = self.manifest.hlo_path(&entry);
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            log::debug!("compiled artifact '{name}' from {}", path.display());
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(self.compiled.get(name).expect("just inserted"))
+    }
+
+    /// Execute an entrypoint with plain (fresh) inputs.
+    pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let args: Vec<Arg> = inputs.iter().map(|t| Arg::Fresh(t.clone())).collect();
+        self.execute_args(name, args)
+    }
+
+    /// Execute an entrypoint with a mix of fresh and device-cached
+    /// inputs (§Perf: avoids re-uploading immutable shard data every
+    /// round). Input count/shapes are validated against the manifest;
+    /// outputs come back as flat tensors.
+    pub fn execute_args(&mut self, name: &str, args: Vec<Arg>) -> Result<Vec<Tensor>> {
+        let entry = self.manifest.entry(name)?.clone();
+        if args.len() != entry.arg_shapes.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: expected {} inputs, got {}",
+                entry.arg_shapes.len(),
+                args.len()
+            )));
+        }
+        for (i, (a, want)) in args.iter().zip(&entry.arg_shapes).enumerate() {
+            let t = match a {
+                Arg::Fresh(t) | Arg::Cached { tensor: t, .. } => t,
+            };
+            if &t.shape != want {
+                return Err(Error::Runtime(format!(
+                    "{name}: input {i} has shape {:?}, artifact wants {:?}",
+                    t.shape, want
+                )));
+            }
+        }
+        self.ensure_compiled(name)?; // lazy compile before borrowing buffers
+        // Pass 1: make sure every buffer exists on device. Fresh inputs
+        // are uploaded into `scratch`; cached ones go to (or come from)
+        // the persistent cache.
+        let mut scratch: Vec<(usize, xla::PjRtBuffer)> = Vec::new();
+        for (i, a) in args.iter().enumerate() {
+            match a {
+                Arg::Fresh(t) => {
+                    let dims: Vec<usize> = t.shape.clone();
+                    let buf = self
+                        .client
+                        .buffer_from_host_buffer::<f32>(&t.data, &dims, None)?;
+                    scratch.push((i, buf));
+                }
+                Arg::Cached { key, tensor } => {
+                    if !self.buffers.contains_key(key) {
+                        let dims: Vec<usize> = tensor.shape.clone();
+                        let buf = self
+                            .client
+                            .buffer_from_host_buffer::<f32>(&tensor.data, &dims, None)?;
+                        self.buffers.insert(*key, buf);
+                    }
+                }
+            }
+        }
+        // Pass 2: assemble the argument list by reference.
+        let mut buf_refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        let mut scratch_iter = scratch.iter();
+        for (i, a) in args.iter().enumerate() {
+            match a {
+                Arg::Fresh(_) => {
+                    let (idx, buf) =
+                        scratch_iter.next().expect("scratch entry per fresh arg");
+                    debug_assert_eq!(*idx, i);
+                    buf_refs.push(buf);
+                }
+                Arg::Cached { key, .. } => {
+                    buf_refs.push(self.buffers.get(key).expect("inserted in pass 1"));
+                }
+            }
+        }
+        let exe = self
+            .compiled
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("{name}: not compiled (warm_up?)")))?;
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&buf_refs)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != entry.outputs {
+            return Err(Error::Runtime(format!(
+                "{name}: artifact returned {} outputs, manifest says {}",
+                parts.len(),
+                entry.outputs
+            )));
+        }
+        parts
+            .into_iter()
+            .map(|lit| {
+                let data = lit.to_vec::<f32>()?;
+                let n = data.len();
+                Ok(Tensor { data, shape: vec![n] })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_constructors() {
+        let s = Tensor::scalar(2.5);
+        assert_eq!(s.shape, Vec::<usize>::new());
+        assert_eq!(s.data, vec![2.5]);
+        let v = Tensor::vec(vec![1.0, 2.0]);
+        assert_eq!(v.shape, vec![2]);
+        let m = Tensor::matrix(vec![1.0; 6], 2, 3);
+        assert_eq!(m.shape, vec![2, 3]);
+    }
+
+    // Engine execution itself is covered by rust/tests/integration_runtime.rs
+    // (needs `make artifacts` + the PJRT shared library).
+}

@@ -1,0 +1,140 @@
+//! Typed gradient operations over a [`RuntimeHandle`]: the coordinator's
+//! view of the L2 model.
+
+use crate::runtime::engine::{Arg, Tensor};
+use crate::runtime::service::RuntimeHandle;
+use crate::util::error::{Error, Result};
+
+/// Typed wrappers around the AOT entrypoints for one `(m, d)` shape.
+#[derive(Clone)]
+pub struct GradientOps {
+    handle: RuntimeHandle,
+    /// Shard rows this instance serves.
+    pub m: usize,
+    /// Feature dimension.
+    pub d: usize,
+    /// Unique id namespacing this instance's device-cache keys —
+    /// different `GradientOps` sharing one runtime service must never
+    /// collide on cached shard buffers.
+    instance: u64,
+    grad_loss_entry: String,
+    full_step_entry: String,
+    update_entry: String,
+}
+
+static INSTANCE_COUNTER: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
+impl GradientOps {
+    /// Bind to the artifacts for shard size `m` (must exist in the
+    /// manifest; `aot.py` emits the primary m and m/2).
+    pub fn new(handle: RuntimeHandle, m: usize) -> Result<GradientOps> {
+        let d = handle.manifest().d;
+        let grad_loss_entry = format!("partial_grad_loss_m{m}_d{d}");
+        let full_step_entry = format!("full_step_m{m}_d{d}");
+        let update_entry = format!("sgd_update_d{d}");
+        // fail fast if the artifacts are missing
+        handle.manifest().entry(&grad_loss_entry)?;
+        handle.manifest().entry(&full_step_entry)?;
+        handle.manifest().entry(&update_entry)?;
+        let instance = INSTANCE_COUNTER.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(GradientOps { handle, m, d, instance, grad_loss_entry, full_step_entry, update_entry })
+    }
+
+    /// Per-worker task: mean gradient + mean loss over a shard.
+    /// `x` is row-major `(m, d)`, `y` is `(m,)`.
+    pub fn partial_grad_loss(
+        &self,
+        beta: &[f32],
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<(Vec<f32>, f32)> {
+        self.check_shapes(beta, x, y)?;
+        let out = self.handle.execute(
+            &self.grad_loss_entry,
+            vec![
+                Tensor::vec(beta.to_vec()),
+                Tensor::matrix(x.to_vec(), self.m, self.d),
+                Tensor::vec(y.to_vec()),
+            ],
+        )?;
+        let grad = out[0].data.clone();
+        let loss = out[1].data[0];
+        Ok((grad, loss))
+    }
+
+    /// Like [`Self::partial_grad_loss`] but with the shard's `x`/`y`
+    /// cached device-side under `shard_key` — uploads the (immutable)
+    /// shard once, then only β crosses the host/device boundary each
+    /// round (§Perf). The caller must keep `shard_key` ↔ data stable.
+    pub fn partial_grad_loss_cached(
+        &self,
+        beta: &[f32],
+        shard_key: u64,
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<(Vec<f32>, f32)> {
+        self.check_shapes(beta, x, y)?;
+        // key layout: [instance | shard | x-vs-y] — instances never share
+        // cache entries, and x/y of one shard get adjacent keys
+        let kx = (self.instance << 32) | (shard_key << 1);
+        let ky = kx | 1;
+        let out = self.handle.execute_args(
+            &self.grad_loss_entry,
+            vec![
+                Arg::Fresh(Tensor::vec(beta.to_vec())),
+                Arg::Cached { key: kx, tensor: Tensor::matrix(x.to_vec(), self.m, self.d) },
+                Arg::Cached { key: ky, tensor: Tensor::vec(y.to_vec()) },
+            ],
+        )?;
+        Ok((out[0].data.clone(), out[1].data[0]))
+    }
+
+    /// Master update: `beta - lr * g`.
+    pub fn sgd_update(&self, beta: &[f32], grad: &[f32], lr: f32) -> Result<Vec<f32>> {
+        let out = self.handle.execute(
+            &self.update_entry,
+            vec![
+                Tensor::vec(beta.to_vec()),
+                Tensor::vec(grad.to_vec()),
+                Tensor::scalar(lr),
+            ],
+        )?;
+        Ok(out[0].data.clone())
+    }
+
+    /// Fused single-worker step: `(beta', loss)`.
+    pub fn full_step(
+        &self,
+        beta: &[f32],
+        x: &[f32],
+        y: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        self.check_shapes(beta, x, y)?;
+        let out = self.handle.execute(
+            &self.full_step_entry,
+            vec![
+                Tensor::vec(beta.to_vec()),
+                Tensor::matrix(x.to_vec(), self.m, self.d),
+                Tensor::vec(y.to_vec()),
+                Tensor::scalar(lr),
+            ],
+        )?;
+        Ok((out[0].data.clone(), out[1].data[0]))
+    }
+
+    fn check_shapes(&self, beta: &[f32], x: &[f32], y: &[f32]) -> Result<()> {
+        if beta.len() != self.d || x.len() != self.m * self.d || y.len() != self.m {
+            return Err(Error::Runtime(format!(
+                "shape mismatch: beta {} (want {}), x {} (want {}), y {} (want {})",
+                beta.len(),
+                self.d,
+                x.len(),
+                self.m * self.d,
+                y.len(),
+                self.m
+            )));
+        }
+        Ok(())
+    }
+}

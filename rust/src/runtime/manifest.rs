@@ -1,0 +1,181 @@
+//! AOT artifact manifest (`artifacts/manifest.json`).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{Error, Result};
+use crate::util::json::{parse, Json};
+
+/// One lowered entrypoint.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    /// Input shapes (row-major; empty = scalar).
+    pub arg_shapes: Vec<Vec<usize>>,
+    /// Number of outputs in the result tuple.
+    pub outputs: usize,
+}
+
+impl ArtifactEntry {
+    /// Total element count of argument `i`.
+    pub fn arg_elems(&self, i: usize) -> usize {
+        self.arg_shapes[i].iter().product::<usize>().max(1)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dtype: String,
+    /// Feature dimension the model was lowered with.
+    pub d: usize,
+    /// Primary shard rows.
+    pub m: usize,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::MissingArtifact(format!("{}: {e}", path.display()))
+        })?;
+        Self::from_json_text(&text, dir)
+    }
+
+    /// Parse manifest JSON (exposed for tests).
+    pub fn from_json_text(text: &str, dir: &Path) -> Result<Manifest> {
+        let doc = parse(text)?;
+        let get_usize = |key: &str| -> Result<usize> {
+            doc.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::Parse(format!("manifest missing '{key}'")))
+        };
+        let dtype = doc
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Parse("manifest missing 'dtype'".into()))?
+            .to_string();
+        if dtype != "f32" {
+            return Err(Error::Runtime(format!(
+                "runtime only supports f32 artifacts, manifest says {dtype}"
+            )));
+        }
+        let entries_json = doc
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Parse("manifest missing 'entries'".into()))?;
+        let mut entries = Vec::with_capacity(entries_json.len());
+        for e in entries_json {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Parse("entry missing 'name'".into()))?
+                .to_string();
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Parse("entry missing 'file'".into()))?
+                .to_string();
+            let args = e
+                .get("args")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::Parse("entry missing 'args'".into()))?;
+            let mut arg_shapes = Vec::with_capacity(args.len());
+            for a in args {
+                let shape = a
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| Error::Parse("arg missing 'shape'".into()))?
+                    .iter()
+                    .map(|x| x.as_usize().ok_or_else(|| Error::Parse("bad dim".into())))
+                    .collect::<Result<Vec<usize>>>()?;
+                arg_shapes.push(shape);
+            }
+            let outputs = e
+                .get("outputs")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::Parse("entry missing 'outputs'".into()))?;
+            entries.push(ArtifactEntry { name, file, arg_shapes, outputs });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            dtype,
+            d: get_usize("d")?,
+            m: get_usize("m")?,
+            entries,
+        })
+    }
+
+    /// Find an entry by exact name.
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| Error::MissingArtifact(name.to_string()))
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "dtype": "f32", "d": 8, "m": 32,
+      "entries": [
+        {"name": "partial_grad_m32_d8", "file": "partial_grad_m32_d8.hlo.txt",
+         "args": [{"shape": [8], "dtype": "f32"},
+                  {"shape": [32, 8], "dtype": "f32"},
+                  {"shape": [32], "dtype": "f32"}],
+         "outputs": 1},
+        {"name": "sgd_update_d8", "file": "sgd_update_d8.hlo.txt",
+         "args": [{"shape": [8], "dtype": "f32"},
+                  {"shape": [8], "dtype": "f32"},
+                  {"shape": [], "dtype": "f32"}],
+         "outputs": 1}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json_text(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.d, 8);
+        assert_eq!(m.m, 32);
+        assert_eq!(m.entries.len(), 2);
+        let e = m.entry("partial_grad_m32_d8").unwrap();
+        assert_eq!(e.arg_shapes[1], vec![32, 8]);
+        assert_eq!(e.arg_elems(1), 256);
+        assert_eq!(e.arg_elems(2), 32);
+        let s = m.entry("sgd_update_d8").unwrap();
+        assert_eq!(s.arg_shapes[2], Vec::<usize>::new()); // scalar
+        assert_eq!(s.arg_elems(2), 1);
+        assert!(m.hlo_path(e).ends_with("partial_grad_m32_d8.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_entry_is_clear_error() {
+        let m = Manifest::from_json_text(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let err = m.entry("nope").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn rejects_non_f32() {
+        let bad = SAMPLE.replace("\"f32\", \"d\"", "\"f64\", \"d\"");
+        assert!(Manifest::from_json_text(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::from_json_text("{}", Path::new("/tmp")).is_err());
+        assert!(Manifest::from_json_text("[1,2]", Path::new("/tmp")).is_err());
+    }
+}

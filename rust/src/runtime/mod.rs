@@ -1,0 +1,37 @@
+//! PJRT/XLA runtime: load AOT artifacts and execute them from Rust.
+//!
+//! The Python side (`python/compile/aot.py`) lowers the JAX+Pallas model
+//! ONCE to HLO-text artifacts + `manifest.json`; this module loads them
+//! with `HloModuleProto::from_text_file`, compiles on the PJRT CPU
+//! client, and serves executions to the coordinator's worker threads.
+//!
+//! PJRT wrapper types hold raw pointers (`!Send`), so the engine lives
+//! on a dedicated runtime thread ([`RuntimeService`]); worker threads
+//! talk to it through a cloneable, `Send` [`RuntimeHandle`]. Python
+//! never runs at serve time.
+
+mod engine;
+mod gradient;
+mod manifest;
+mod service;
+
+pub use engine::{Arg, Engine, Tensor};
+pub use gradient::GradientOps;
+pub use manifest::{ArtifactEntry, Manifest};
+pub use service::{RuntimeHandle, RuntimeService};
+
+use std::path::PathBuf;
+
+/// Resolve the artifacts directory: `$REPLICA_ARTIFACTS` or
+/// `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("REPLICA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Are AOT artifacts available? (Used by tests/examples to degrade
+/// gracefully with a clear "run `make artifacts`" message.)
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}

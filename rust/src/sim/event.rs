@@ -1,0 +1,134 @@
+//! A minimal discrete-event engine: a virtual clock plus a time-ordered
+//! event queue. The job simulator and the coordinator's fault-injection
+//! tests drive it.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event scheduled at a virtual time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event<P> {
+    pub time: f64,
+    /// Tie-break sequence number (FIFO among equal times).
+    pub seq: u64,
+    pub payload: P,
+}
+
+impl<P> Eq for Event<P> where P: PartialEq {}
+
+impl<P: PartialEq> Ord for Event<P> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap on (time, seq): BinaryHeap is a max-heap, so reverse.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl<P: PartialEq> PartialOrd for Event<P> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Time-ordered event queue with a virtual clock.
+#[derive(Debug)]
+pub struct EventQueue<P: PartialEq> {
+    heap: BinaryHeap<Event<P>>,
+    now: f64,
+    seq: u64,
+}
+
+impl<P: PartialEq> Default for EventQueue<P> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<P: PartialEq> EventQueue<P> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), now: 0.0, seq: 0 }
+    }
+
+    /// Current virtual time (the time of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `payload` at absolute time `time` (must be ≥ now).
+    pub fn schedule(&mut self, time: f64, payload: P) {
+        debug_assert!(time >= self.now, "cannot schedule in the past");
+        self.heap.push(Event { time, seq: self.seq, payload });
+        self.seq += 1;
+    }
+
+    /// Schedule after a delay relative to now.
+    pub fn schedule_in(&mut self, delay: f64, payload: P) {
+        self.schedule(self.now + delay, payload);
+    }
+
+    /// Pop the earliest event, advancing the clock.
+    pub fn pop(&mut self) -> Option<Event<P>> {
+        let e = self.heap.pop()?;
+        self.now = e.time;
+        Some(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_by_time() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, "c");
+        q.schedule(1.0, "a");
+        q.schedule(2.0, "b");
+        assert_eq!(q.pop().unwrap().payload, "a");
+        assert_eq!(q.now(), 1.0);
+        assert_eq!(q.pop().unwrap().payload, "b");
+        assert_eq!(q.pop().unwrap().payload, "c");
+        assert!(q.pop().is_none());
+        assert_eq!(q.now(), 3.0);
+    }
+
+    #[test]
+    fn fifo_among_ties() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, 1);
+        q.schedule(1.0, 2);
+        q.schedule(1.0, 3);
+        assert_eq!(q.pop().unwrap().payload, 1);
+        assert_eq!(q.pop().unwrap().payload, 2);
+        assert_eq!(q.pop().unwrap().payload, 3);
+    }
+
+    #[test]
+    fn relative_scheduling() {
+        let mut q = EventQueue::new();
+        q.schedule(5.0, "later");
+        q.pop();
+        q.schedule_in(2.0, "relative");
+        let e = q.pop().unwrap();
+        assert_eq!(e.time, 7.0);
+    }
+
+    #[test]
+    fn len_and_empty() {
+        let mut q: EventQueue<u8> = EventQueue::new();
+        assert!(q.is_empty());
+        q.schedule(1.0, 0);
+        assert_eq!(q.len(), 1);
+    }
+}

@@ -1,0 +1,405 @@
+//! Job-level simulator: one job execution = one sampled compute time.
+//!
+//! Semantics (paper §II + §IV generalized to arbitrary overlap):
+//! every worker `w` draws a service time `S_w` for its whole batch
+//! (size-dependent model: `S = |batch| · τ` with per-task i.i.d. τ, or
+//! batch-level i.i.d. draws). A task is *recovered* at the earliest
+//! finish among workers hosting it; the job completes when all tasks
+//! are recovered: `T = max_t min_{w ∋ t} S_w` (eqs. (8)–(9)).
+//!
+//! Failure injection: a failed worker never reports. If failures break
+//! coverage the job is [`JobOutcome::Failed`] — the availability story
+//! of §VI's opening.
+
+use crate::batching::Layout;
+use crate::dist::ServiceDist;
+use crate::sim::event::EventQueue;
+use crate::util::rng::Pcg64;
+
+/// Worker failure model for a single job execution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FailureModel {
+    /// No failures.
+    None,
+    /// Each worker independently fails (never reports) with probability
+    /// `p`.
+    Crash { p: f64 },
+    /// Each worker fails with probability `p` but restarts after a fixed
+    /// `delay`, then serves a fresh service time (delayed-relaunch
+    /// mitigation, \[29\]).
+    CrashRestart { p: f64, delay: f64 },
+}
+
+/// Outcome of one simulated job execution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum JobOutcome {
+    /// Completed at the given virtual time.
+    Done(f64),
+    /// Coverage impossible: some task's every replica failed.
+    Failed,
+}
+
+impl JobOutcome {
+    pub fn time(&self) -> Option<f64> {
+        match self {
+            JobOutcome::Done(t) => Some(*t),
+            JobOutcome::Failed => None,
+        }
+    }
+}
+
+/// How batch service times are drawn.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServiceModel {
+    /// `S_w = |batch| · τ` with one τ per worker (the size-dependent
+    /// model of §VI — the default).
+    SizeDependentPerWorker,
+    /// `S_w` drawn directly from the distribution, ignoring batch size
+    /// (the batch-level i.i.d. model of §IV).
+    PerBatchDirect,
+}
+
+/// Simulator for a fixed layout + service-time model.
+#[derive(Clone, Debug)]
+pub struct JobSimulator {
+    layout: Layout,
+    tau: ServiceDist,
+    model: ServiceModel,
+    failure: FailureModel,
+    /// Perf fast path (EXPERIMENTS.md §Perf): when batches are pairwise
+    /// disjoint and jointly cover the task set, and the batch→worker map
+    /// partitions the workers, `T = max_b min_{w∈b} S_w` — O(N) with no
+    /// allocation, instead of the general O(N · batch_size) per-task
+    /// scan. All non-overlapping policies qualify; overlapping layouts
+    /// fall back to the general path.
+    fast_disjoint: bool,
+}
+
+impl JobSimulator {
+    pub fn new(layout: Layout, tau: ServiceDist) -> JobSimulator {
+        let batch_tasks: usize = layout.batches.iter().map(|b| b.len()).sum();
+        let mapped_workers: usize = layout.batch_workers.iter().map(|w| w.len()).sum();
+        let fast_disjoint =
+            batch_tasks == layout.n_tasks && mapped_workers == layout.n_workers();
+        JobSimulator {
+            layout,
+            tau,
+            model: ServiceModel::SizeDependentPerWorker,
+            failure: FailureModel::None,
+            fast_disjoint,
+        }
+    }
+
+    pub fn with_service_model(mut self, model: ServiceModel) -> Self {
+        self.model = model;
+        self
+    }
+
+    pub fn with_failures(mut self, failure: FailureModel) -> Self {
+        self.failure = failure;
+        self
+    }
+
+    pub fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    /// Draw the service time of one worker.
+    fn draw_service(&self, w: usize, rng: &mut Pcg64) -> f64 {
+        let size = self.layout.worker_tasks[w].len() as f64;
+        match self.model {
+            ServiceModel::SizeDependentPerWorker => size * self.tau.sample(rng),
+            ServiceModel::PerBatchDirect => self.tau.sample(rng),
+        }
+    }
+
+    /// Sample one job execution (fast path, no failures): direct
+    /// computation of `max_t min_{w∋t} S_w`.
+    pub fn sample(&self, rng: &mut Pcg64) -> JobOutcome {
+        match self.failure {
+            FailureModel::None if self.fast_disjoint => {
+                // disjoint batches: T = max over batches of the fastest
+                // replica, no per-task bookkeeping
+                let mut t_job: f64 = 0.0;
+                for (b, workers) in self.layout.batch_workers.iter().enumerate() {
+                    if workers.is_empty() {
+                        return JobOutcome::Failed; // uncovered batch (random assignment)
+                    }
+                    let size = self.layout.batches[b].len() as f64;
+                    let mut min_s = f64::INFINITY;
+                    for _ in 0..workers.len() {
+                        let s = match self.model {
+                            ServiceModel::SizeDependentPerWorker => {
+                                size * self.tau.sample(rng)
+                            }
+                            ServiceModel::PerBatchDirect => self.tau.sample(rng),
+                        };
+                        if s < min_s {
+                            min_s = s;
+                        }
+                    }
+                    if min_s > t_job {
+                        t_job = min_s;
+                    }
+                }
+                JobOutcome::Done(t_job)
+            }
+            FailureModel::None => {
+                let services: Vec<f64> =
+                    (0..self.layout.n_workers()).map(|w| self.draw_service(w, rng)).collect();
+                let mut t_job: f64 = 0.0;
+                let mut earliest = vec![f64::INFINITY; self.layout.n_tasks];
+                for (w, tasks) in self.layout.worker_tasks.iter().enumerate() {
+                    for &t in tasks {
+                        if services[w] < earliest[t] {
+                            earliest[t] = services[w];
+                        }
+                    }
+                }
+                for &e in &earliest {
+                    if e == f64::INFINITY {
+                        return JobOutcome::Failed; // uncovered task
+                    }
+                    t_job = t_job.max(e);
+                }
+                JobOutcome::Done(t_job)
+            }
+            _ => self.sample_with_events(rng),
+        }
+    }
+
+    /// Event-driven execution path (used when failures are modeled):
+    /// workers start at t=0; completion events update task coverage; the
+    /// job finishes when coverage is total.
+    fn sample_with_events(&self, rng: &mut Pcg64) -> JobOutcome {
+        #[derive(PartialEq, Debug, Clone, Copy)]
+        enum Ev {
+            Finish(usize),
+            Restart(usize),
+        }
+        let n_workers = self.layout.n_workers();
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        let mut alive_replicas = vec![0usize; self.layout.n_tasks];
+        for (w, tasks) in self.layout.worker_tasks.iter().enumerate() {
+            let failed = match self.failure {
+                FailureModel::None => false,
+                FailureModel::Crash { p } | FailureModel::CrashRestart { p, .. } => {
+                    rng.uniform() < p
+                }
+            };
+            if failed {
+                match self.failure {
+                    FailureModel::CrashRestart { delay, .. } => {
+                        q.schedule(delay, Ev::Restart(w));
+                    }
+                    _ => continue, // permanently dead; not counted alive
+                }
+            } else {
+                q.schedule(self.draw_service(w, rng), Ev::Finish(w));
+            }
+            for &t in tasks {
+                alive_replicas[t] += 1;
+            }
+        }
+        if alive_replicas.iter().any(|&c| c == 0) {
+            return JobOutcome::Failed;
+        }
+        let mut remaining: usize = self.layout.n_tasks;
+        let mut covered = vec![false; self.layout.n_tasks];
+        let _ = n_workers;
+        while let Some(ev) = q.pop() {
+            match ev.payload {
+                Ev::Finish(w) => {
+                    for &t in &self.layout.worker_tasks[w] {
+                        if !covered[t] {
+                            covered[t] = true;
+                            remaining -= 1;
+                        }
+                    }
+                    if remaining == 0 {
+                        return JobOutcome::Done(ev.time);
+                    }
+                }
+                Ev::Restart(w) => {
+                    let s = self.draw_service(w, rng);
+                    q.schedule_in(s, Ev::Finish(w));
+                }
+            }
+        }
+        JobOutcome::Failed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::closed_form;
+    use crate::batching::Policy;
+    use crate::metrics::Summary;
+
+    fn mc_mean(sim: &JobSimulator, reps: usize, seed: u64) -> (f64, f64, f64) {
+        let mut rng = Pcg64::new(seed);
+        let mut s = Summary::moments_only();
+        let mut fails = 0usize;
+        for _ in 0..reps {
+            match sim.sample(&mut rng) {
+                JobOutcome::Done(t) => s.record(t),
+                JobOutcome::Failed => fails += 1,
+            }
+        }
+        (s.mean(), s.cov(), fails as f64 / reps as f64)
+    }
+
+    #[test]
+    fn matches_exp_closed_form() {
+        // Theorem 3 setting: E[T] = H_B / μ for any B | N
+        let n = 12;
+        let mut rng = Pcg64::new(1);
+        for b in [1usize, 2, 3, 4, 6, 12] {
+            let layout =
+                Policy::BalancedNonOverlapping { batches: b }.layout(n, &mut rng).unwrap();
+            let sim = JobSimulator::new(layout, ServiceDist::exp(1.0));
+            let (mean, _, fr) = mc_mean(&sim, 40_000, 100 + b as u64);
+            let want = closed_form::exp_mean(b, 1.0);
+            assert_eq!(fr, 0.0);
+            assert!(
+                (mean - want).abs() / want < 0.03,
+                "B={b}: sim {mean} vs closed {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_sexp_closed_form() {
+        let n = 20;
+        let (d, mu) = (0.05, 1.0);
+        let mut rng = Pcg64::new(2);
+        for b in [1usize, 2, 4, 5, 10, 20] {
+            let layout =
+                Policy::BalancedNonOverlapping { batches: b }.layout(n, &mut rng).unwrap();
+            let sim = JobSimulator::new(layout, ServiceDist::shifted_exp(d, mu));
+            let (mean, cov, _) = mc_mean(&sim, 40_000, 200 + b as u64);
+            let want = closed_form::sexp_mean(n, b, d, mu);
+            let want_cov = closed_form::sexp_cov(n, b, d, mu);
+            assert!((mean - want).abs() / want < 0.03, "B={b}: {mean} vs {want}");
+            assert!(
+                (cov - want_cov).abs() / want_cov < 0.08,
+                "B={b}: cov {cov} vs {want_cov}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_pareto_closed_form_including_corrected_cov() {
+        let n = 20;
+        let (sigma, alpha) = (1.0, 3.0);
+        let mut rng = Pcg64::new(3);
+        for b in [1usize, 4, 10] {
+            let layout =
+                Policy::BalancedNonOverlapping { batches: b }.layout(n, &mut rng).unwrap();
+            let sim = JobSimulator::new(layout, ServiceDist::pareto(sigma, alpha));
+            let (mean, cov, _) = mc_mean(&sim, 60_000, 300 + b as u64);
+            let want = closed_form::pareto_mean(n, b, sigma, alpha);
+            assert!((mean - want).abs() / want < 0.03, "B={b}: {mean} vs {want}");
+            // the *corrected* CoV formula must match simulation
+            let want_cov = closed_form::pareto_cov(n, b, alpha);
+            assert!(
+                (cov - want_cov).abs() / want_cov < 0.15,
+                "B={b}: cov {cov} vs corrected {want_cov}"
+            );
+        }
+    }
+
+    #[test]
+    fn per_batch_direct_model_first_order_stats() {
+        // §IV model: batch times i.i.d. Exp(μ) regardless of size; with
+        // balanced assignment T_i ~ Exp((N/B)μ) and T = max of B.
+        let n = 12;
+        let b = 3;
+        let mut rng = Pcg64::new(4);
+        let layout = Policy::BalancedNonOverlapping { batches: b }.layout(n, &mut rng).unwrap();
+        let sim = JobSimulator::new(layout, ServiceDist::exp(1.0))
+            .with_service_model(ServiceModel::PerBatchDirect);
+        let (mean, _, _) = mc_mean(&sim, 60_000, 5);
+        // E[max of B Exp(rμ)] = H_B / (rμ), r = N/B = 4
+        let want = closed_form::exp_mean(b, 4.0);
+        assert!((mean - want).abs() / want < 0.03, "{mean} vs {want}");
+    }
+
+    #[test]
+    fn crash_failures_leave_jobs_unfinished_without_redundancy() {
+        // full parallelism + crashes: any crash kills the job
+        let n = 10;
+        let mut rng = Pcg64::new(5);
+        let layout = Policy::BalancedNonOverlapping { batches: n }.layout(n, &mut rng).unwrap();
+        let sim = JobSimulator::new(layout, ServiceDist::exp(1.0))
+            .with_failures(FailureModel::Crash { p: 0.1 });
+        let (_, _, fail_rate) = mc_mean(&sim, 20_000, 6);
+        // Pr{job fails} = 1 − (1−p)^10 ≈ 0.651
+        let want = 1.0 - 0.9f64.powi(10);
+        assert!((fail_rate - want).abs() < 0.02, "{fail_rate} vs {want}");
+    }
+
+    #[test]
+    fn replication_restores_availability() {
+        // B=1 (full diversity): job fails only if ALL workers crash
+        let n = 10;
+        let mut rng = Pcg64::new(7);
+        let layout = Policy::BalancedNonOverlapping { batches: 1 }.layout(n, &mut rng).unwrap();
+        let sim = JobSimulator::new(layout, ServiceDist::exp(1.0))
+            .with_failures(FailureModel::Crash { p: 0.1 });
+        let (_, _, fail_rate) = mc_mean(&sim, 20_000, 8);
+        assert!(fail_rate < 1e-3, "{fail_rate}");
+    }
+
+    #[test]
+    fn crash_restart_always_completes_but_slower() {
+        let n = 8;
+        let mut rng = Pcg64::new(9);
+        let layout = Policy::BalancedNonOverlapping { batches: 8 }.layout(n, &mut rng).unwrap();
+        let clean = JobSimulator::new(layout.clone(), ServiceDist::exp(1.0));
+        let faulty = JobSimulator::new(layout, ServiceDist::exp(1.0))
+            .with_failures(FailureModel::CrashRestart { p: 0.3, delay: 5.0 });
+        let (m_clean, _, fr_clean) = mc_mean(&clean, 20_000, 10);
+        let (m_faulty, _, fr_faulty) = mc_mean(&faulty, 20_000, 11);
+        assert_eq!(fr_clean, 0.0);
+        assert_eq!(fr_faulty, 0.0);
+        assert!(m_faulty > m_clean + 1.0, "{m_faulty} vs {m_clean}");
+    }
+
+    #[test]
+    fn event_path_matches_fast_path_statistically() {
+        // CrashRestart with p=0 must reproduce the no-failure estimate
+        let n = 12;
+        let mut rng = Pcg64::new(12);
+        let layout = Policy::BalancedNonOverlapping { batches: 4 }.layout(n, &mut rng).unwrap();
+        let fast = JobSimulator::new(layout.clone(), ServiceDist::shifted_exp(0.1, 2.0));
+        let slow = JobSimulator::new(layout, ServiceDist::shifted_exp(0.1, 2.0))
+            .with_failures(FailureModel::CrashRestart { p: 0.0, delay: 1.0 });
+        let (m_fast, _, _) = mc_mean(&fast, 30_000, 13);
+        let (m_slow, _, _) = mc_mean(&slow, 30_000, 14);
+        assert!((m_fast - m_slow).abs() / m_fast < 0.03, "{m_fast} vs {m_slow}");
+    }
+
+    #[test]
+    fn random_assignment_fails_on_uncovered_batches() {
+        // With B close to N, random assignment frequently leaves batches
+        // uncovered → Failed outcomes (the Lemma 1 pathology).
+        let n = 20;
+        let b = 10;
+        let mut rng = Pcg64::new(15);
+        let mut fails = 0usize;
+        let trials = 5_000;
+        for _ in 0..trials {
+            let layout =
+                Policy::RandomNonOverlapping { batches: b }.layout(n, &mut rng).unwrap();
+            let sim = JobSimulator::new(layout, ServiceDist::exp(1.0));
+            if matches!(sim.sample(&mut rng), JobOutcome::Failed) {
+                fails += 1;
+            }
+        }
+        let p_fail = fails as f64 / trials as f64;
+        let want = 1.0 - crate::analysis::coverage::coverage_probability(n, b);
+        assert!((p_fail - want).abs() < 0.03, "{p_fail} vs {want}");
+    }
+}

@@ -1,0 +1,23 @@
+//! Discrete-event Monte-Carlo simulation of job compute time.
+//!
+//! Two granularities:
+//!
+//! * [`event`] — a generic discrete-event engine (time-ordered queue)
+//!   used to replay worker lifecycles with failures/restarts.
+//! * [`job`] — the job-level simulator: given a [`Layout`] and a task
+//!   service-time model, sample the job compute time
+//!   `T = max_task min_{worker ∋ task} S_worker` (first-copy-wins per
+//!   batch, all batches required — eqs. (8)–(9) generalized to
+//!   arbitrary overlap), with optional worker failure injection.
+//! * [`montecarlo`] — replication driver producing mean/CoV estimates
+//!   with confidence intervals.
+//!
+//! [`Layout`]: crate::batching::Layout
+
+pub mod event;
+pub mod job;
+pub mod montecarlo;
+
+pub use event::{Event, EventQueue};
+pub use job::{FailureModel, JobOutcome, JobSimulator};
+pub use montecarlo::{simulate_policy, McEstimate};

@@ -1,0 +1,147 @@
+//! Monte-Carlo replication driver.
+
+use crate::batching::Policy;
+use crate::dist::ServiceDist;
+use crate::metrics::Summary;
+use crate::sim::job::{JobOutcome, JobSimulator};
+use crate::util::error::Result;
+use crate::util::rng::Pcg64;
+
+/// Monte-Carlo estimate of job compute-time statistics.
+#[derive(Clone, Debug)]
+pub struct McEstimate {
+    pub replications: usize,
+    pub completed: usize,
+    /// Mean completion time over completed jobs.
+    pub mean: f64,
+    /// 95% CI half-width of the mean.
+    pub ci95: f64,
+    /// Coefficient of variation of completion time.
+    pub cov: f64,
+    /// Fraction of replications where coverage failed.
+    pub failure_rate: f64,
+    /// Percentiles p50/p95/p99 of completion time.
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// Estimate compute-time statistics of a `(policy, τ)` pair on `n`
+/// workers with `reps` independent replications.
+///
+/// Layout-randomizing policies (random assignment) get a fresh layout
+/// per replication; deterministic policies reuse one layout.
+pub fn simulate_policy(
+    n: usize,
+    policy: &Policy,
+    tau: &ServiceDist,
+    reps: usize,
+    seed: u64,
+) -> Result<McEstimate> {
+    let mut rng = Pcg64::new(seed);
+    let mut summary = Summary::new();
+    let mut failed = 0usize;
+
+    let randomized = matches!(policy, Policy::RandomNonOverlapping { .. });
+    let fixed_sim = if randomized {
+        None
+    } else {
+        Some(JobSimulator::new(policy.layout(n, &mut rng)?, tau.clone()))
+    };
+
+    for _ in 0..reps {
+        let outcome = match &fixed_sim {
+            Some(sim) => sim.sample(&mut rng),
+            None => {
+                let layout = policy.layout(n, &mut rng)?;
+                JobSimulator::new(layout, tau.clone()).sample(&mut rng)
+            }
+        };
+        match outcome {
+            JobOutcome::Done(t) => summary.record(t),
+            JobOutcome::Failed => failed += 1,
+        }
+    }
+
+    let completed = reps - failed;
+    Ok(McEstimate {
+        replications: reps,
+        completed,
+        mean: summary.mean(),
+        ci95: summary.ci95(),
+        cov: summary.cov(),
+        failure_rate: failed as f64 / reps as f64,
+        p50: if completed > 0 { summary.quantile(0.50) } else { f64::NAN },
+        p95: if completed > 0 { summary.quantile(0.95) } else { f64::NAN },
+        p99: if completed > 0 { summary.quantile(0.99) } else { f64::NAN },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::closed_form;
+
+    #[test]
+    fn estimate_matches_closed_form_with_ci() {
+        let n = 20;
+        let tau = ServiceDist::shifted_exp(0.05, 1.0);
+        for b in [1usize, 4, 20] {
+            let est = simulate_policy(
+                n,
+                &Policy::BalancedNonOverlapping { batches: b },
+                &tau,
+                30_000,
+                42,
+            )
+            .unwrap();
+            let want = closed_form::sexp_mean(n, b, 0.05, 1.0);
+            assert!(
+                (est.mean - want).abs() < 4.0 * est.ci95.max(1e-3),
+                "B={b}: {} vs {want} (ci {})",
+                est.mean,
+                est.ci95
+            );
+            assert_eq!(est.failure_rate, 0.0);
+            assert!(est.p50 <= est.p95 && est.p95 <= est.p99);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let tau = ServiceDist::exp(1.0);
+        let p = Policy::BalancedNonOverlapping { batches: 2 };
+        let a = simulate_policy(10, &p, &tau, 1000, 7).unwrap();
+        let b = simulate_policy(10, &p, &tau, 1000, 7).unwrap();
+        assert_eq!(a.mean, b.mean);
+        assert_eq!(a.p99, b.p99);
+        let c = simulate_policy(10, &p, &tau, 1000, 8).unwrap();
+        assert_ne!(a.mean, c.mean);
+    }
+
+    #[test]
+    fn random_policy_reports_failures() {
+        let est = simulate_policy(
+            20,
+            &Policy::RandomNonOverlapping { batches: 10 },
+            &ServiceDist::exp(1.0),
+            5_000,
+            1,
+        )
+        .unwrap();
+        assert!(est.failure_rate > 0.3, "rate {}", est.failure_rate);
+        assert!(est.completed > 0);
+    }
+
+    #[test]
+    fn infeasible_policy_is_error() {
+        assert!(simulate_policy(
+            10,
+            &Policy::BalancedNonOverlapping { batches: 3 },
+            &ServiceDist::exp(1.0),
+            10,
+            0,
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,118 @@
+//! Trace analysis: per-job tail classification and CCDF extraction —
+//! the §VII pipeline (Fig. 11 + the inputs to Figs. 12–13).
+
+use crate::dist::{Empirical, ServiceDist, TailClass, TailFit};
+use crate::traces::schema::Trace;
+
+/// Analysis of one job's task service times.
+#[derive(Clone, Debug)]
+pub struct JobAnalysis {
+    pub job_id: u64,
+    pub n_tasks: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub p99: f64,
+    pub fit: TailFit,
+    /// The empirical distribution (for trace-driven simulation).
+    pub empirical: Empirical,
+}
+
+impl JobAnalysis {
+    /// Analyze one job of a trace. Returns None if it has no completed
+    /// tasks.
+    pub fn of(trace: &Trace, job_id: u64) -> Option<JobAnalysis> {
+        let st = trace.service_times(job_id);
+        if st.is_empty() {
+            return None;
+        }
+        let fit = TailFit::classify(&st);
+        let empirical = Empirical::new(st.clone());
+        let mut sorted = st;
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p99 = sorted[((sorted.len() - 1) as f64 * 0.99) as usize];
+        Some(JobAnalysis {
+            job_id,
+            n_tasks: sorted.len(),
+            mean: sorted.iter().sum::<f64>() / sorted.len() as f64,
+            min: sorted[0],
+            p99,
+            fit,
+            empirical,
+        })
+    }
+
+    /// Analyze every job in the trace.
+    pub fn all(trace: &Trace) -> Vec<JobAnalysis> {
+        trace.job_ids().into_iter().filter_map(|j| JobAnalysis::of(trace, j)).collect()
+    }
+
+    pub fn is_heavy_tail(&self) -> bool {
+        self.fit.class == TailClass::HeavyTail
+    }
+
+    /// The service distribution to drive simulations with: the raw
+    /// empirical distribution (bootstrap), exactly like the paper's
+    /// trace experiments.
+    pub fn service_dist(&self) -> ServiceDist {
+        ServiceDist::Empirical(self.empirical.clone())
+    }
+}
+
+/// The Fig. 11 series: `(t, Pr{τ > t})` CCDF points of one job, at the
+/// sample's own order statistics (exact ECDF, no binning).
+pub fn job_ccdf(trace: &Trace, job_id: u64, max_points: usize) -> Vec<(f64, f64)> {
+    let mut st = trace.service_times(job_id);
+    if st.is_empty() {
+        return Vec::new();
+    }
+    st.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = st.len();
+    let stride = (n / max_points.max(1)).max(1);
+    let mut pts = Vec::new();
+    for i in (0..n).step_by(stride) {
+        pts.push((st[i], (n - i) as f64 / n as f64));
+    }
+    pts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traces::generator::GeneratorConfig;
+
+    #[test]
+    fn analysis_covers_all_jobs() {
+        let trace = GeneratorConfig::paper_workload(300, 11).generate();
+        let all = JobAnalysis::all(&trace);
+        assert_eq!(all.len(), 10);
+        let heavy: Vec<u64> =
+            all.iter().filter(|a| a.is_heavy_tail()).map(|a| a.job_id).collect();
+        // jobs 6–10 are heavy by construction (5 is borderline)
+        for j in [6u64, 7, 8, 9, 10] {
+            assert!(heavy.contains(&j), "job {j} should classify heavy: {heavy:?}");
+        }
+        for a in &all {
+            assert_eq!(a.n_tasks, 300);
+            assert!(a.min <= a.mean && a.mean <= a.p99);
+        }
+    }
+
+    #[test]
+    fn ccdf_shape() {
+        let trace = GeneratorConfig::paper_workload(500, 12).generate();
+        let pts = job_ccdf(&trace, 7, 100);
+        assert!(pts.len() <= 101 && pts.len() >= 90);
+        assert!((pts[0].1 - 1.0).abs() < 0.01);
+        for w in pts.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+            assert!(w[1].1 <= w[0].1);
+        }
+    }
+
+    #[test]
+    fn missing_job_is_none() {
+        let trace = GeneratorConfig::paper_workload(10, 13).generate();
+        assert!(JobAnalysis::of(&trace, 999).is_none());
+        assert!(job_ccdf(&trace, 999, 10).is_empty());
+    }
+}

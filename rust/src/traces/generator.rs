@@ -1,0 +1,139 @@
+//! Synthetic Google-cluster-shaped trace generator.
+//!
+//! Reproduces the §VII workload: 10 jobs whose task service times fall
+//! into two families, matching Fig. 11:
+//!
+//! * jobs 1–4 — exponential tail, large shift (the paper reports shift
+//!   ≈ 10 s for jobs 1–3 and ≈ 1000 s for job 4);
+//! * job 5 — borderline (exponential-ish CCDF but optimum at B = 50 in
+//!   Fig. 12, i.e. mild heavy-tail behaviour);
+//! * jobs 6–10 — heavy tail (Pareto α ∈ [1.1, 2.0]).
+
+use crate::dist::ServiceDist;
+use crate::traces::schema::{EventKind, Trace, TraceEvent};
+use crate::util::rng::Pcg64;
+
+/// Specification of one synthetic job.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub job_id: u64,
+    pub tasks: usize,
+    pub service: ServiceDist,
+}
+
+/// Generator configuration.
+#[derive(Clone, Debug)]
+pub struct GeneratorConfig {
+    pub jobs: Vec<JobSpec>,
+    pub seed: u64,
+    /// Mean gap between task schedule times within a job (seconds);
+    /// schedules are jittered so timestamps look trace-like.
+    pub schedule_jitter: f64,
+}
+
+impl GeneratorConfig {
+    /// The paper's §VII workload: 10 jobs / 2 tail families / 100 tasks
+    /// each (divisible by the Fig. 12–13 sweep points).
+    pub fn paper_workload(tasks_per_job: usize, seed: u64) -> GeneratorConfig {
+        let jobs = vec![
+            // exponential tail, shift ~10 s (jobs 1–3)
+            JobSpec { job_id: 1, tasks: tasks_per_job, service: ServiceDist::shifted_exp(10.0, 0.8) },
+            JobSpec { job_id: 2, tasks: tasks_per_job, service: ServiceDist::shifted_exp(12.0, 0.5) },
+            JobSpec { job_id: 3, tasks: tasks_per_job, service: ServiceDist::shifted_exp(9.0, 1.2) },
+            // job 4: shift ~1000 s
+            JobSpec { job_id: 4, tasks: tasks_per_job, service: ServiceDist::shifted_exp(1000.0, 0.05) },
+            // job 5: borderline — modest shift, heavier randomness
+            JobSpec { job_id: 5, tasks: tasks_per_job, service: ServiceDist::pareto(5.0, 2.5) },
+            // jobs 6–10: heavy tail
+            JobSpec { job_id: 6, tasks: tasks_per_job, service: ServiceDist::pareto(8.0, 1.6) },
+            JobSpec { job_id: 7, tasks: tasks_per_job, service: ServiceDist::pareto(20.0, 1.2) },
+            JobSpec { job_id: 8, tasks: tasks_per_job, service: ServiceDist::pareto(10.0, 1.5) },
+            JobSpec { job_id: 9, tasks: tasks_per_job, service: ServiceDist::pareto(6.0, 1.4) },
+            JobSpec { job_id: 10, tasks: tasks_per_job, service: ServiceDist::pareto(15.0, 1.8) },
+        ];
+        GeneratorConfig { jobs, seed, schedule_jitter: 1.0 }
+    }
+
+    /// Generate the trace.
+    pub fn generate(&self) -> Trace {
+        let mut rng = Pcg64::new(self.seed);
+        let mut events = Vec::new();
+        for job in &self.jobs {
+            let mut t_sched = 0.0f64;
+            for task in 0..job.tasks {
+                t_sched += self.schedule_jitter * rng.uniform();
+                let service = job.service.sample(&mut rng);
+                let machine = rng.below(1000) + 1;
+                events.push(TraceEvent {
+                    timestamp_us: (t_sched * 1e6) as u64,
+                    job_id: job.job_id,
+                    task_index: task as u32,
+                    machine_id: machine,
+                    kind: EventKind::Schedule,
+                });
+                events.push(TraceEvent {
+                    timestamp_us: ((t_sched + service) * 1e6) as u64,
+                    job_id: job.job_id,
+                    task_index: task as u32,
+                    machine_id: machine,
+                    kind: EventKind::Finish,
+                });
+            }
+        }
+        events.sort_by_key(|e| e.timestamp_us);
+        Trace { events }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{TailClass, TailFit};
+
+    #[test]
+    fn paper_workload_has_ten_jobs() {
+        let trace = GeneratorConfig::paper_workload(100, 1).generate();
+        assert_eq!(trace.job_ids(), (1..=10).collect::<Vec<u64>>());
+        for j in 1..=10 {
+            assert_eq!(trace.service_times(j).len(), 100, "job {j}");
+        }
+        // 10 jobs × 100 tasks × 2 events
+        assert_eq!(trace.events.len(), 2000);
+    }
+
+    #[test]
+    fn events_are_time_sorted() {
+        let trace = GeneratorConfig::paper_workload(50, 2).generate();
+        assert!(trace.events.windows(2).all(|w| w[0].timestamp_us <= w[1].timestamp_us));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = GeneratorConfig::paper_workload(20, 3).generate();
+        let b = GeneratorConfig::paper_workload(20, 3).generate();
+        assert_eq!(a.service_times(7), b.service_times(7));
+        let c = GeneratorConfig::paper_workload(20, 4).generate();
+        assert_ne!(a.service_times(7), c.service_times(7));
+    }
+
+    #[test]
+    fn tail_families_classify_as_designed() {
+        // larger sample so the classifier has a real tail to look at
+        let trace = GeneratorConfig::paper_workload(3000, 5).generate();
+        for j in [1u64, 2, 3, 4] {
+            let fit = TailFit::classify(&trace.service_times(j));
+            assert_eq!(fit.class, TailClass::ExponentialTail, "job {j}: {fit:?}");
+        }
+        for j in [6u64, 7, 8, 9, 10] {
+            let fit = TailFit::classify(&trace.service_times(j));
+            assert_eq!(fit.class, TailClass::HeavyTail, "job {j}: {fit:?}");
+        }
+    }
+
+    #[test]
+    fn job4_has_kilo_second_shift() {
+        let trace = GeneratorConfig::paper_workload(200, 6).generate();
+        let st = trace.service_times(4);
+        assert!(st.iter().all(|&t| t >= 1000.0));
+    }
+}

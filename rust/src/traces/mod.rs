@@ -1,0 +1,20 @@
+//! Cluster-trace workloads (paper §VII).
+//!
+//! The paper extracts per-task service times (finish − schedule) from
+//! the 2011 Google cluster traces \[91\] and observes two families of
+//! jobs: exponential-tail (jobs 1–4 of Fig. 11) and heavy-tail (jobs
+//! 5–10). That dataset is not available offline, so [`generator`]
+//! synthesizes a trace *in the same schema* with the same two tail
+//! families (documented substitution — DESIGN.md §Substitutions); the
+//! analysis pipeline ([`loader`], [`analyze`]) is identical for real
+//! and synthetic traces.
+
+mod analyze;
+mod generator;
+mod loader;
+mod schema;
+
+pub use analyze::{job_ccdf, JobAnalysis};
+pub use generator::{GeneratorConfig, JobSpec};
+pub use loader::{load_trace, write_trace};
+pub use schema::{Trace, TraceEvent};

@@ -1,0 +1,119 @@
+//! Trace schema, modeled after the Google cluster `task_events` table:
+//! one SCHEDULE and one FINISH event per task, with microsecond
+//! timestamps.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Error, Result};
+
+/// Event types present in the subset of the schema we use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    Schedule,
+    Finish,
+}
+
+impl EventKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EventKind::Schedule => "SCHEDULE",
+            EventKind::Finish => "FINISH",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<EventKind> {
+        match s {
+            "SCHEDULE" => Ok(EventKind::Schedule),
+            "FINISH" => Ok(EventKind::Finish),
+            other => Err(Error::Parse(format!("unknown event kind '{other}'"))),
+        }
+    }
+}
+
+/// One trace event row.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Timestamp in microseconds since trace start.
+    pub timestamp_us: u64,
+    pub job_id: u64,
+    pub task_index: u32,
+    pub machine_id: u64,
+    pub kind: EventKind,
+}
+
+/// A parsed trace: a flat list of events.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// Job ids present, sorted.
+    pub fn job_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.events.iter().map(|e| e.job_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// Per-task service times of one job (seconds), via the paper's
+    /// method: `finish_timestamp − schedule_timestamp` per task index.
+    /// Tasks missing either endpoint are skipped (as in any real trace).
+    pub fn service_times(&self, job_id: u64) -> Vec<f64> {
+        let mut schedule: BTreeMap<u32, u64> = BTreeMap::new();
+        let mut finish: BTreeMap<u32, u64> = BTreeMap::new();
+        for e in self.events.iter().filter(|e| e.job_id == job_id) {
+            match e.kind {
+                EventKind::Schedule => {
+                    schedule.insert(e.task_index, e.timestamp_us);
+                }
+                EventKind::Finish => {
+                    finish.insert(e.task_index, e.timestamp_us);
+                }
+            }
+        }
+        let mut out = Vec::new();
+        for (task, s) in schedule {
+            if let Some(&f) = finish.get(&task) {
+                if f > s {
+                    out.push((f - s) as f64 / 1e6);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: u64, job: u64, task: u32, kind: EventKind) -> TraceEvent {
+        TraceEvent { timestamp_us: t, job_id: job, task_index: task, machine_id: 1, kind }
+    }
+
+    #[test]
+    fn service_time_extraction() {
+        let trace = Trace {
+            events: vec![
+                ev(0, 1, 0, EventKind::Schedule),
+                ev(2_000_000, 1, 0, EventKind::Finish),
+                ev(500_000, 1, 1, EventKind::Schedule),
+                ev(1_500_000, 1, 1, EventKind::Finish),
+                ev(0, 2, 0, EventKind::Schedule), // job 2: never finishes
+            ],
+        };
+        assert_eq!(trace.job_ids(), vec![1, 2]);
+        let st = trace.service_times(1);
+        assert_eq!(st, vec![2.0, 1.0]);
+        assert!(trace.service_times(2).is_empty());
+        assert!(trace.service_times(99).is_empty());
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        assert_eq!(EventKind::parse("SCHEDULE").unwrap(), EventKind::Schedule);
+        assert_eq!(EventKind::parse(EventKind::Finish.as_str()).unwrap(), EventKind::Finish);
+        assert!(EventKind::parse("EVICT").is_err());
+    }
+}

@@ -1,0 +1,180 @@
+//! Tiny CSV reader/writer for trace files and experiment exports.
+//!
+//! Supports quoted fields with embedded commas/newlines (RFC-4180
+//! subset) — enough for Google-cluster-trace-shaped data.
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::util::error::{Error, Result};
+
+/// A parsed CSV table: header row + data rows.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: Vec<&str>) -> Table {
+        Table { header: header.into_iter().map(String::from).collect(), rows: Vec::new() }
+    }
+
+    /// Column index by header name.
+    pub fn col(&self, name: &str) -> Result<usize> {
+        self.header
+            .iter()
+            .position(|h| h == name)
+            .ok_or_else(|| Error::Parse(format!("no column '{name}'")))
+    }
+
+    pub fn push_row(&mut self, row: Vec<String>) {
+        debug_assert_eq!(row.len(), self.header.len());
+        self.rows.push(row);
+    }
+
+    /// Parse a float cell.
+    pub fn f64_at(&self, row: usize, col: usize) -> Result<f64> {
+        self.rows[row][col]
+            .parse::<f64>()
+            .map_err(|e| Error::Parse(format!("bad float at ({row},{col}): {e}")))
+    }
+
+    pub fn write_to(&self, path: &Path) -> Result<()> {
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", encode_row(&self.header))?;
+        for row in &self.rows {
+            writeln!(w, "{}", encode_row(row))?;
+        }
+        Ok(())
+    }
+
+    pub fn read_from(path: &Path) -> Result<Table> {
+        let mut text = String::new();
+        File::open(path)?.read_to_string(&mut text)?;
+        parse(&text)
+    }
+}
+
+fn needs_quoting(field: &str) -> bool {
+    field.contains(',') || field.contains('"') || field.contains('\n')
+}
+
+fn encode_row(fields: &[String]) -> String {
+    fields
+        .iter()
+        .map(|f| {
+            if needs_quoting(f) {
+                format!("\"{}\"", f.replace('"', "\"\""))
+            } else {
+                f.clone()
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Parse CSV text (first row = header).
+pub fn parse(text: &str) -> Result<Table> {
+    let mut records = Vec::new();
+    let mut field = String::new();
+    let mut record = Vec::new();
+    let mut chars = text.chars().peekable();
+    let mut in_quotes = false;
+
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => record.push(std::mem::take(&mut field)),
+                '\r' => {}
+                '\n' => {
+                    record.push(std::mem::take(&mut field));
+                    records.push(std::mem::take(&mut record));
+                }
+                c => field.push(c),
+            }
+        }
+    }
+    if in_quotes {
+        return Err(Error::Parse("unterminated quoted field".into()));
+    }
+    if !field.is_empty() || !record.is_empty() {
+        record.push(field);
+        records.push(record);
+    }
+    if records.is_empty() {
+        return Err(Error::Parse("empty csv".into()));
+    }
+    let header = records.remove(0);
+    let ncols = header.len();
+    for (i, r) in records.iter().enumerate() {
+        if r.len() != ncols {
+            return Err(Error::Parse(format!(
+                "row {} has {} fields, header has {ncols}",
+                i + 1,
+                r.len()
+            )));
+        }
+    }
+    Ok(Table { header, rows: records })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple() {
+        let t = parse("a,b\n1,2\n3,4\n").unwrap();
+        assert_eq!(t.header, vec!["a", "b"]);
+        assert_eq!(t.rows, vec![vec!["1", "2"], vec!["3", "4"]]);
+        assert_eq!(t.col("b").unwrap(), 1);
+        assert!(t.col("z").is_err());
+        assert_eq!(t.f64_at(1, 0).unwrap(), 3.0);
+    }
+
+    #[test]
+    fn quoted_fields() {
+        let t = parse("name,msg\nalice,\"hi, \"\"bob\"\"\nbye\"\n").unwrap();
+        assert_eq!(t.rows[0][1], "hi, \"bob\"\nbye");
+    }
+
+    #[test]
+    fn write_then_read(){
+        let dir = std::env::temp_dir().join("replica_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        let mut t = Table::new(vec!["x", "note"]);
+        t.push_row(vec!["1.5".into(), "plain".into()]);
+        t.push_row(vec!["2".into(), "with, comma".into()]);
+        t.write_to(&path).unwrap();
+        let back = Table::read_from(&path).unwrap();
+        assert_eq!(back.rows, t.rows);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn ragged_rows_rejected() {
+        assert!(parse("a,b\n1\n").is_err());
+    }
+
+    #[test]
+    fn no_trailing_newline_ok() {
+        let t = parse("a\n1").unwrap();
+        assert_eq!(t.rows, vec![vec!["1"]]);
+    }
+}

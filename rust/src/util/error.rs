@@ -1,0 +1,65 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error type for the `replica` crate.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Invalid configuration or argument values.
+    #[error("invalid configuration: {0}")]
+    Config(String),
+
+    /// A batching/assignment policy was asked to do something infeasible
+    /// (e.g. B does not divide N for a balanced assignment).
+    #[error("infeasible policy: {0}")]
+    Policy(String),
+
+    /// Parse errors from the JSON/CSV/config codecs.
+    #[error("parse error: {0}")]
+    Parse(String),
+
+    /// I/O failures (artifact files, trace files, exports).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// PJRT/XLA runtime failures.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// A required AOT artifact is missing from the manifest.
+    #[error("missing artifact: {0} (run `make artifacts`)")]
+    MissingArtifact(String),
+
+    /// Coordinator-level failures (worker panic, channel closed, ...).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = Error::Config("bad N".into());
+        assert_eq!(e.to_string(), "invalid configuration: bad N");
+        let e = Error::MissingArtifact("grad".into());
+        assert!(e.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

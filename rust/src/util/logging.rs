@@ -1,0 +1,55 @@
+//! Minimal `log` facade backend (stderr, level from `REPLICA_LOG`).
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+use once_cell::sync::OnceCell;
+
+struct StderrLogger {
+    level: Level,
+}
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!(
+                "[{:5}] {}: {}",
+                record.level(),
+                record.target(),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceCell<StderrLogger> = OnceCell::new();
+
+/// Install the logger. Level comes from `REPLICA_LOG`
+/// (error/warn/info/debug/trace, default `warn`). Idempotent.
+pub fn init() {
+    let level = match std::env::var("REPLICA_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("info") => Level::Info,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Warn,
+    };
+    let logger = LOGGER.get_or_init(|| StderrLogger { level });
+    // Ignore "already set" errors from repeated init (e.g. tests).
+    let _ = log::set_logger(logger);
+    log::set_max_level(LevelFilter::Trace);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

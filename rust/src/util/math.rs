@@ -1,0 +1,288 @@
+//! Special functions needed by the paper's closed forms.
+//!
+//! `std` has no `lgamma`/`digamma`, so we implement them:
+//! * [`lgamma`] — Lanczos approximation (g = 7, n = 9), |err| < 1e-13
+//!   over the real line (via reflection for x < 0.5).
+//! * [`gamma`] — `exp(lgamma)` with sign tracking for negative x.
+//! * [`digamma`] — asymptotic series with recurrence shift.
+//!
+//! These power eq. (22)/(24) (Pareto order-statistics moments) and the
+//! digamma-based approximations in Corollary 3.
+
+use std::f64::consts::PI;
+
+/// Lanczos coefficients (g = 7, n = 9) — Boost/GSL standard set.
+const LANCZOS_G: f64 = 7.0;
+const LANCZOS: [f64; 9] = [
+    0.99999999999980993,
+    676.5203681218851,
+    -1259.1392167224028,
+    771.32342877765313,
+    -176.61502916214059,
+    12.507343278686905,
+    -0.13857109526572012,
+    9.9843695780195716e-6,
+    1.5056327351493116e-7,
+];
+
+/// Natural log of |Γ(x)|. Returns `f64::INFINITY` at non-positive
+/// integers (poles).
+pub fn lgamma(x: f64) -> f64 {
+    if x < 0.5 {
+        // Reflection: Γ(x)Γ(1-x) = π / sin(πx)
+        let s = (PI * x).sin();
+        if s == 0.0 {
+            return f64::INFINITY; // pole
+        }
+        PI.ln() - s.abs().ln() - lgamma(1.0 - x)
+    } else {
+        let x = x - 1.0;
+        let mut a = LANCZOS[0];
+        let t = x + LANCZOS_G + 0.5;
+        for (i, &c) in LANCZOS.iter().enumerate().skip(1) {
+            a += c / (x + i as f64);
+        }
+        0.5 * (2.0 * PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+    }
+}
+
+/// Sign of Γ(x): +1 for x > 0; alternates between negative-integer poles.
+pub fn gamma_sign(x: f64) -> f64 {
+    if x > 0.0 {
+        1.0
+    } else {
+        // Γ alternates sign on (-1,0), (-2,-1), ...
+        let k = (-x).floor() as i64;
+        if k % 2 == 0 {
+            -1.0
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Γ(x) with sign handling. Overflows to ±inf for large x.
+pub fn gamma(x: f64) -> f64 {
+    gamma_sign(x) * lgamma(x).exp()
+}
+
+/// Digamma ψ(x) via recurrence shift to x ≥ 6 plus the asymptotic series.
+pub fn digamma(mut x: f64) -> f64 {
+    assert!(x > 0.0, "digamma only implemented for x > 0, got {x}");
+    let mut result = 0.0;
+    while x < 12.0 {
+        result -= 1.0 / x;
+        x += 1.0;
+    }
+    let inv = 1.0 / x;
+    let inv2 = inv * inv;
+    // ψ(x) ~ ln x − 1/(2x) − Σ B_{2n} / (2n x^{2n})
+    result + x.ln() - 0.5 * inv
+        - inv2 * (1.0 / 12.0 - inv2 * (1.0 / 120.0 - inv2 * (1.0 / 252.0 - inv2 / 240.0)))
+}
+
+/// Γ(a)/Γ(b) computed in log space — the workhorse of eq. (22)/(24)
+/// where ratios of huge Gamma values must not overflow.
+pub fn gamma_ratio(a: f64, b: f64) -> f64 {
+    gamma_sign(a) * gamma_sign(b) * (lgamma(a) - lgamma(b)).exp()
+}
+
+/// ln(n!) via lgamma.
+pub fn lfactorial(n: u64) -> f64 {
+    lgamma(n as f64 + 1.0)
+}
+
+/// Binomial coefficient C(n, k) as f64 (exact for small n, log-space for
+/// large).
+pub fn binomial(n: u64, k: u64) -> f64 {
+    if k > n {
+        return 0.0;
+    }
+    (lfactorial(n) - lfactorial(k) - lfactorial(n - k)).exp()
+}
+
+/// Euler–Mascheroni constant.
+pub const EULER_GAMMA: f64 = 0.5772156649015329;
+
+/// Regularized lower incomplete gamma `P(a, x) = γ(a,x)/Γ(a)` for
+/// `a > 0, x ≥ 0` — series expansion for `x < a+1`, continued fraction
+/// (modified Lentz) otherwise. Needed for the Gamma service-time CDF
+/// (the paper's open-problem family).
+pub fn gammainc_lower_regularized(a: f64, x: f64) -> f64 {
+    assert!(a > 0.0 && x >= 0.0, "P(a,x) needs a > 0, x ≥ 0");
+    if x == 0.0 {
+        return 0.0;
+    }
+    let lg = lgamma(a);
+    if x < a + 1.0 {
+        // series: γ(a,x) = x^a e^{-x} Σ x^n / (a (a+1) ... (a+n))
+        let mut sum = 1.0 / a;
+        let mut term = sum;
+        let mut ap = a;
+        for _ in 0..500 {
+            ap += 1.0;
+            term *= x / ap;
+            sum += term;
+            if term.abs() < sum.abs() * 1e-16 {
+                break;
+            }
+        }
+        (sum * (a * x.ln() - x - lg).exp()).clamp(0.0, 1.0)
+    } else {
+        // continued fraction for Q(a,x), then P = 1 − Q
+        let tiny = 1e-300;
+        let mut b = x + 1.0 - a;
+        let mut c = 1.0 / tiny;
+        let mut d = 1.0 / b;
+        let mut h = d;
+        for i in 1..500 {
+            let an = -(i as f64) * (i as f64 - a);
+            b += 2.0;
+            d = an * d + b;
+            if d.abs() < tiny {
+                d = tiny;
+            }
+            c = b + an / c;
+            if c.abs() < tiny {
+                c = tiny;
+            }
+            d = 1.0 / d;
+            let delta = d * c;
+            h *= delta;
+            if (delta - 1.0).abs() < 1e-16 {
+                break;
+            }
+        }
+        let q = (a * x.ln() - x - lg).exp() * h;
+        (1.0 - q).clamp(0.0, 1.0)
+    }
+}
+
+/// Simple bisection root finder on a bracketing interval.
+/// Returns the midpoint after converging to `tol` or 200 iterations.
+pub fn bisect<F: Fn(f64) -> f64>(f: F, mut lo: f64, mut hi: f64, tol: f64) -> Option<f64> {
+    let (flo, fhi) = (f(lo), f(hi));
+    if flo == 0.0 {
+        return Some(lo);
+    }
+    if fhi == 0.0 {
+        return Some(hi);
+    }
+    if flo.signum() == fhi.signum() {
+        return None;
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        let fm = f(mid);
+        if fm == 0.0 || (hi - lo) < tol {
+            return Some(mid);
+        }
+        if fm.signum() == flo.signum() {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Some(0.5 * (lo + hi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn gamma_integers_are_factorials() {
+        close(gamma(1.0), 1.0, 1e-12);
+        close(gamma(2.0), 1.0, 1e-12);
+        close(gamma(5.0), 24.0, 1e-9);
+        close(gamma(10.0), 362880.0, 1e-4);
+    }
+
+    #[test]
+    fn gamma_half() {
+        close(gamma(0.5), PI.sqrt(), 1e-12);
+        close(gamma(1.5), 0.5 * PI.sqrt(), 1e-12);
+        close(gamma(-0.5), -2.0 * PI.sqrt(), 1e-10);
+    }
+
+    #[test]
+    fn lgamma_large_no_overflow() {
+        // ln(170!) ≈ 706.57; gamma(171) would overflow f64 if not log-space
+        let l = lgamma(171.0);
+        assert!((l - 706.5731).abs() < 1e-3);
+        assert!(gamma_ratio(171.0, 170.0).is_finite());
+        close(gamma_ratio(171.0, 170.0), 170.0, 1e-6);
+    }
+
+    #[test]
+    fn gamma_reflection_negative() {
+        // Γ(-1.5) = 4√π/3
+        close(gamma(-1.5), 4.0 * PI.sqrt() / 3.0, 1e-10);
+    }
+
+    #[test]
+    fn digamma_known_values() {
+        close(digamma(1.0), -EULER_GAMMA, 1e-10);
+        // ψ(2) = 1 − γ
+        close(digamma(2.0), 1.0 - EULER_GAMMA, 1e-10);
+        // ψ(1/2) = −γ − 2 ln 2
+        close(digamma(0.5), -EULER_GAMMA - 2.0 * 2.0_f64.ln(), 1e-10);
+    }
+
+    #[test]
+    fn digamma_is_derivative_of_lgamma() {
+        for &x in &[0.3, 1.0, 2.5, 7.0, 42.0] {
+            let h = 1e-6;
+            let num = (lgamma(x + h) - lgamma(x - h)) / (2.0 * h);
+            close(digamma(x), num, 1e-5);
+        }
+    }
+
+    #[test]
+    fn binomial_small() {
+        close(binomial(5, 2), 10.0, 1e-9);
+        close(binomial(10, 0), 1.0, 1e-12);
+        close(binomial(10, 10), 1.0, 1e-12);
+        assert_eq!(binomial(3, 5), 0.0);
+    }
+
+    #[test]
+    fn gammainc_known_values() {
+        // P(1, x) = 1 − e^{-x}
+        for x in [0.1, 1.0, 3.0, 10.0] {
+            close(gammainc_lower_regularized(1.0, x), 1.0 - (-x).exp(), 1e-12);
+        }
+        // P(a, 0) = 0; P(a, ∞-ish) = 1
+        assert_eq!(gammainc_lower_regularized(2.5, 0.0), 0.0);
+        close(gammainc_lower_regularized(2.5, 100.0), 1.0, 1e-12);
+        // P(1/2, x) = erf(√x): check a tabulated point, erf(1) ≈ 0.8427007929
+        close(gammainc_lower_regularized(0.5, 1.0), 0.8427007929, 1e-9);
+        // P(3, 3) = 1 − e^{-3}(1 + 3 + 4.5) ≈ 0.5768099189
+        close(gammainc_lower_regularized(3.0, 3.0), 0.5768099189, 1e-9);
+    }
+
+    #[test]
+    fn gammainc_monotone_in_x() {
+        let mut prev = 0.0;
+        for i in 1..200 {
+            let p = gammainc_lower_regularized(4.2, i as f64 * 0.1);
+            assert!(p >= prev);
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn bisect_finds_sqrt2() {
+        let r = bisect(|x| x * x - 2.0, 0.0, 2.0, 1e-12).unwrap();
+        close(r, 2.0_f64.sqrt(), 1e-10);
+    }
+
+    #[test]
+    fn bisect_rejects_non_bracketing() {
+        assert!(bisect(|x| x * x + 1.0, -1.0, 1.0, 1e-9).is_none());
+    }
+}

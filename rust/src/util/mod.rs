@@ -1,0 +1,14 @@
+//! Shared substrates: errors, deterministic RNG, special functions,
+//! JSON/CSV codecs, logging, and a small property-testing driver.
+//!
+//! Everything here is hand-built because the build environment is fully
+//! offline (see DESIGN.md §Substitutions): no `rand`, `serde`, or
+//! `proptest` — only the crates vendored with the `xla` tree.
+
+pub mod csv;
+pub mod error;
+pub mod json;
+pub mod logging;
+pub mod math;
+pub mod proptest;
+pub mod rng;

@@ -1,0 +1,83 @@
+//! A small property-testing driver (no `proptest` crate offline).
+//!
+//! [`forall`] runs a property closure against `cases` independent RNG
+//! streams and reports the failing seed so a case can be replayed
+//! deterministically:
+//!
+//! ```
+//! use replica::util::proptest::forall;
+//! forall("sum is commutative", 64, |rng| {
+//!     let (a, b) = (rng.uniform(), rng.uniform());
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Run `property` against `cases` independent PCG streams derived from a
+/// fixed master seed. Panics (with the case seed) on the first failure.
+pub fn forall<F: FnMut(&mut Pcg64)>(name: &str, cases: u64, mut property: F) {
+    for case in 0..cases {
+        let seed = master_seed(name) ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Pcg64::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng)
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case of a property by seed.
+pub fn replay<F: FnMut(&mut Pcg64)>(seed: u64, mut property: F) {
+    let mut rng = Pcg64::new(seed);
+    property(&mut rng);
+}
+
+fn master_seed(name: &str) -> u64 {
+    // FNV-1a over the property name keeps seeds stable across runs.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("counts", 16, |_rng| count += 1);
+        assert_eq!(count, 16);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            forall("always fails", 4, |_rng| panic!("boom"));
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("seed"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn cases_get_distinct_randomness() {
+        let mut seen = std::collections::HashSet::new();
+        forall("distinct", 32, |rng| {
+            seen.insert(rng.next_u64());
+        });
+        assert_eq!(seen.len(), 32);
+    }
+}

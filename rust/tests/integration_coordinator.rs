@@ -1,0 +1,118 @@
+//! Integration: the live coordinator trains end-to-end, on both
+//! backends, and its latency behaviour matches the paper's analysis.
+
+use std::sync::Arc;
+
+use replica::coordinator::{
+    Coordinator, Dataset, GdConfig, NativeBackend, PjrtBackend,
+};
+use replica::dist::ServiceDist;
+use replica::planner::{Objective, Planner};
+use replica::runtime::{artifacts_available, artifacts_dir, GradientOps, RuntimeService};
+
+fn cfg(workers: usize, batches: usize, rounds: usize, tau: ServiceDist) -> GdConfig {
+    GdConfig {
+        workers,
+        batches,
+        rounds,
+        lr: 0.1,
+        straggler: tau,
+        time_scale: 1e-4,
+        seed: 5,
+    }
+}
+
+#[test]
+fn native_training_converges_on_planned_redundancy() {
+    // Plan redundancy for a heavy-tail straggler model, then train.
+    let tau = ServiceDist::pareto(0.01, 1.5);
+    let n = 8;
+    let plan = Planner::new(n, tau.clone()).plan(Objective::MeanCompletion);
+    let (m, d) = (16, 4);
+    let ds = Dataset::synthetic(n, m, d, 0.0, 9);
+    let mut coord = Coordinator::new(
+        cfg(n, plan.batches, 150, tau),
+        ds,
+        Arc::new(NativeBackend::new(m, d)),
+    )
+    .unwrap();
+    let report = coord.run().unwrap();
+    assert!(report.final_global_loss < 1e-4, "loss {}", report.final_global_loss);
+    // replication means late copies get discarded
+    if plan.batches < n {
+        assert!(report.total_discarded > 0);
+    }
+}
+
+#[test]
+fn pjrt_training_matches_native_training() {
+    if !artifacts_available() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let service = RuntimeService::start(&artifacts_dir()).unwrap();
+    let manifest = service.handle().manifest().clone();
+    let (m, d) = (manifest.m, manifest.d);
+    let n = 4;
+    let rounds = 25;
+    let tau = ServiceDist::shifted_exp(0.001, 100.0);
+
+    let ds = Dataset::synthetic(n, m, d, 0.05, 31);
+    let mut native = Coordinator::new(
+        cfg(n, 2, rounds, tau.clone()),
+        ds.clone(),
+        Arc::new(NativeBackend::new(m, d)),
+    )
+    .unwrap();
+    let native_report = native.run().unwrap();
+
+    let ops = GradientOps::new(service.handle(), m).unwrap();
+    let mut pjrt =
+        Coordinator::new(cfg(n, 2, rounds, tau), ds, Arc::new(PjrtBackend::new(ops)))
+            .unwrap();
+    let pjrt_report = pjrt.run().unwrap();
+
+    // identical seeds → identical replication/straggler draws; gradient
+    // math agrees to f32 tolerance, so the loss curves must match closely
+    for (a, b) in native_report.losses().iter().zip(pjrt_report.losses()) {
+        assert!(
+            (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+            "native {a} vs pjrt {b}"
+        );
+    }
+    assert!(
+        (native_report.final_global_loss - pjrt_report.final_global_loss).abs() < 1e-3
+    );
+}
+
+#[test]
+fn round_latency_scales_with_straggler_delays() {
+    // With deterministic-ish service (huge mu → tiny randomness) the
+    // round latency ≈ batch_size · delta · time_scale.
+    let n = 4;
+    let (m, d) = (8, 3);
+    let delta = 2.0;
+    let tau = ServiceDist::shifted_exp(delta, 1e6);
+    let time_scale = 5e-3;
+    let mut coord = Coordinator::new(
+        GdConfig {
+            workers: n,
+            batches: 2, // batch size 2 → service ≈ 2·delta
+            rounds: 5,
+            lr: 0.1,
+            straggler: tau,
+            time_scale,
+            seed: 3,
+        },
+        Dataset::synthetic(n, m, d, 0.0, 4),
+        Arc::new(NativeBackend::new(m, d)),
+    )
+    .unwrap();
+    let report = coord.run().unwrap();
+    let want = 2.0 * delta * time_scale; // 20 ms
+    let got = report.mean_latency();
+    assert!(
+        (got - want).abs() < 0.6 * want,
+        "latency {got:.4}s vs expected ≈{want:.4}s"
+    );
+}

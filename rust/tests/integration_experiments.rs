@@ -1,0 +1,88 @@
+//! Integration: every paper-figure experiment regenerates with the
+//! paper's qualitative shape (who wins, where the optimum sits).
+
+use replica::experiments::*;
+
+#[test]
+fn fig3_table_and_series() {
+    let t = fig3::table(&fig3::PAPER_NS);
+    assert_eq!(t.n_rows(), 4);
+    let series = fig3::run(&fig3::PAPER_NS);
+    // larger N covers more batches at 99%: the table's reading
+    let covered_99: Vec<usize> = fig3::PAPER_NS
+        .iter()
+        .map(|&n| {
+            (1..=n)
+                .rev()
+                .find(|&b| replica::analysis::coverage::coverage_probability(n, b) >= 0.99)
+                .unwrap_or(0)
+        })
+        .collect();
+    assert!(covered_99.windows(2).all(|w| w[0] <= w[1]), "{covered_99:?}");
+    assert_eq!(series.len(), 4);
+}
+
+#[test]
+fn fig7_8_reproduce_regime_structure() {
+    // minima per μ (Fig. 7): 0.1 → B=1; 15 → B=100
+    let m01 = fig7_8::sweep(100, 0.05, 0.1);
+    let best01 = m01.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap().0;
+    assert_eq!(best01, 1);
+    let m15 = fig7_8::sweep(100, 0.05, 15.0);
+    let best15 = m15.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap().0;
+    assert_eq!(best15, 100);
+}
+
+#[test]
+fn fig9_10_reproduce_regime_structure() {
+    // α = 1.5 interior optimum; α = 7 (> α* ≈ 4.7) full parallelism
+    let s15 = fig9_10::sweep(100, 1.0, 1.5);
+    let b15 = s15.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap().0;
+    assert!(b15 > 1 && b15 < 100, "B*={b15}");
+    let s7 = fig9_10::sweep(100, 1.0, 7.0);
+    let b7 = s7.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap().0;
+    assert_eq!(b7, 100);
+    // Fig. 10: CoV argmin at B=1 for all α > 2
+    let c = fig9_10::sweep(100, 1.0, 3.5);
+    let bc = c.iter().min_by(|a, b| a.2.partial_cmp(&b.2).unwrap()).unwrap().0;
+    assert_eq!(bc, 1);
+}
+
+#[test]
+fn regime_tables_render() {
+    let t = regimes::sexp_mean_table(100, 0.05, &[0.1, 1.0, 15.0]);
+    assert!(t.render().contains("middle"));
+    let t = regimes::pareto_table(100, 1.0, &[1.5, 7.0]);
+    assert!(t.render().contains("full-parallelism"));
+    let t = regimes::tradeoff_table(100);
+    assert!(t.render().contains("YES"));
+}
+
+#[test]
+fn traces_experiment_full_pipeline() {
+    let trace = traces_exp::standard_trace(42);
+    // Fig 11
+    assert_eq!(traces_exp::fig11_series(&trace).len(), 10);
+    // Fig 12/13 tables build and carry a speedup row
+    let t12 = traces_exp::table("fig12", &trace, &traces_exp::EXP_TAIL_JOBS, 2_000, 1).unwrap();
+    let t13 =
+        traces_exp::table("fig13", &trace, &traces_exp::HEAVY_TAIL_JOBS, 2_000, 1).unwrap();
+    assert!(t12.render().contains("speedup"));
+    assert!(t13.render().contains("speedup"));
+    // headline speedup from heavy-tail jobs
+    let s = traces_exp::headline_speedup(&trace, 3_000, 2).unwrap();
+    assert!(s > 3.0, "headline {s}");
+}
+
+#[test]
+fn exported_csvs_parse_back() {
+    use replica::metrics::export_csv;
+    let dir = std::env::temp_dir().join("replica_it_export");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("fig3.csv");
+    export_csv(&p, &fig3::run(&[20, 50])).unwrap();
+    let t = replica::util::csv::Table::read_from(&p).unwrap();
+    assert_eq!(t.header[0], "series");
+    assert!(t.rows.len() >= 70);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,121 @@
+//! Integration: PJRT runtime executes the AOT artifacts and agrees with
+//! the native reference numerics.
+//!
+//! Requires `make artifacts` (each test skips with a message otherwise).
+
+use replica::coordinator::{ComputeBackend, NativeBackend};
+use replica::runtime::{artifacts_available, artifacts_dir, GradientOps, RuntimeService};
+use replica::util::rng::Pcg64;
+
+fn require_artifacts() -> Option<RuntimeService> {
+    if !artifacts_available() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(RuntimeService::start(&artifacts_dir()).expect("runtime service"))
+}
+
+fn random_problem(m: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Pcg64::new(seed);
+    let beta: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    let x: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+    let y: Vec<f32> = (0..m).map(|_| rng.normal() as f32).collect();
+    (beta, x, y)
+}
+
+#[test]
+fn pjrt_gradient_matches_native_backend() {
+    let Some(service) = require_artifacts() else { return };
+    let manifest = service.handle().manifest().clone();
+    let (m, d) = (manifest.m, manifest.d);
+    let ops = GradientOps::new(service.handle(), m).unwrap();
+    let native = NativeBackend::new(m, d);
+
+    for seed in 0..5 {
+        let (beta, x, y) = random_problem(m, d, seed);
+        let (g_pjrt, l_pjrt) = ops.partial_grad_loss(&beta, &x, &y).unwrap();
+        let (g_native, l_native) = native.partial_grad_loss(&beta, &x, &y).unwrap();
+        assert_eq!(g_pjrt.len(), d);
+        for (a, b) in g_pjrt.iter().zip(&g_native) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "seed {seed}: {a} vs {b}");
+        }
+        assert!((l_pjrt - l_native).abs() < 1e-3 * (1.0 + l_native.abs()));
+    }
+}
+
+#[test]
+fn pjrt_sgd_update_and_full_step_consistent() {
+    let Some(service) = require_artifacts() else { return };
+    let manifest = service.handle().manifest().clone();
+    let m = manifest.m;
+    let ops = GradientOps::new(service.handle(), m).unwrap();
+
+    let (beta, x, y) = random_problem(m, manifest.d, 42);
+    let lr = 0.05f32;
+    // full_step == partial_grad_loss + sgd_update
+    let (beta_fused, loss_fused) = ops.full_step(&beta, &x, &y, lr).unwrap();
+    let (g, loss_two) = ops.partial_grad_loss(&beta, &x, &y).unwrap();
+    let beta_two = ops.sgd_update(&beta, &g, lr).unwrap();
+    assert!((loss_fused - loss_two).abs() < 1e-4 * (1.0 + loss_two.abs()));
+    for (a, b) in beta_fused.iter().zip(&beta_two) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn pjrt_half_shard_artifact_works() {
+    let Some(service) = require_artifacts() else { return };
+    let manifest = service.handle().manifest().clone();
+    let m_half = manifest.m / 2;
+    if m_half < 8 {
+        return;
+    }
+    let ops = GradientOps::new(service.handle(), m_half).unwrap();
+    let (beta, x, y) = random_problem(m_half, manifest.d, 7);
+    let (g, loss) = ops.partial_grad_loss(&beta, &x, &y).unwrap();
+    assert_eq!(g.len(), manifest.d);
+    assert!(loss.is_finite() && loss > 0.0);
+}
+
+#[test]
+fn pjrt_rejects_wrong_shapes() {
+    let Some(service) = require_artifacts() else { return };
+    let manifest = service.handle().manifest().clone();
+    let ops = GradientOps::new(service.handle(), manifest.m).unwrap();
+    let bad_beta = vec![0.0f32; manifest.d + 1];
+    let x = vec![0.0f32; manifest.m * manifest.d];
+    let y = vec![0.0f32; manifest.m];
+    assert!(ops.partial_grad_loss(&bad_beta, &x, &y).is_err());
+}
+
+#[test]
+fn pjrt_handles_concurrent_callers() {
+    let Some(service) = require_artifacts() else { return };
+    let manifest = service.handle().manifest().clone();
+    let (m, d) = (manifest.m, manifest.d);
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let ops = GradientOps::new(service.handle(), m).unwrap();
+        joins.push(std::thread::spawn(move || {
+            let (beta, x, y) = random_problem(m, d, 100 + t);
+            for _ in 0..5 {
+                let (g, loss) = ops.partial_grad_loss(&beta, &x, &y).unwrap();
+                assert_eq!(g.len(), d);
+                assert!(loss.is_finite());
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+}
+
+#[test]
+fn gradient_ops_missing_shape_is_clear_error() {
+    let Some(service) = require_artifacts() else { return };
+    let err = match GradientOps::new(service.handle(), 12345) {
+        Ok(_) => panic!("m=12345 should not exist in the manifest"),
+        Err(e) => e,
+    };
+    assert!(err.to_string().contains("make artifacts"), "{err}");
+}

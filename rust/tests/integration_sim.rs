@@ -1,0 +1,160 @@
+//! Integration: analysis ↔ simulation ↔ planner agree end-to-end.
+
+use replica::analysis::closed_form;
+use replica::analysis::optimizer::feasible_b;
+use replica::batching::Policy;
+use replica::dist::ServiceDist;
+use replica::planner::{Objective, Planner};
+use replica::sim::montecarlo::simulate_policy;
+
+/// The three closed-form families: simulation reproduces the analytic
+/// E[T] curve across the whole spectrum within CI.
+#[test]
+fn closed_forms_match_simulation_across_spectrum() {
+    let n = 20;
+    let cases = vec![
+        ServiceDist::exp(1.0),
+        ServiceDist::shifted_exp(0.05, 1.0),
+        ServiceDist::shifted_exp(0.05, 5.0),
+        ServiceDist::pareto(1.0, 3.0),
+    ];
+    for tau in cases {
+        for b in feasible_b(n) {
+            let analytic = closed_form::mean_t(n, b, &tau);
+            let est = simulate_policy(
+                n,
+                &Policy::BalancedNonOverlapping { batches: b },
+                &tau,
+                20_000,
+                9_000 + b as u64,
+            )
+            .unwrap();
+            assert!(
+                (est.mean - analytic).abs() < (4.0 * est.ci95).max(0.03 * analytic),
+                "{} B={b}: sim {} vs analytic {analytic} (ci {})",
+                tau.label(),
+                est.mean,
+                est.ci95
+            );
+        }
+    }
+}
+
+/// The planner's chosen B actually minimizes the simulated mean among
+/// feasible points (within simulation noise).
+#[test]
+fn planner_choice_is_simulation_optimal() {
+    let n = 20;
+    for tau in [ServiceDist::shifted_exp(0.05, 1.0), ServiceDist::pareto(1.0, 2.0)] {
+        let plan = Planner::new(n, tau.clone()).plan(Objective::MeanCompletion);
+        let planned = simulate_policy(
+            n,
+            &Policy::BalancedNonOverlapping { batches: plan.batches },
+            &tau,
+            30_000,
+            1,
+        )
+        .unwrap()
+        .mean;
+        for b in feasible_b(n) {
+            let other = simulate_policy(
+                n,
+                &Policy::BalancedNonOverlapping { batches: b },
+                &tau,
+                30_000,
+                2 + b as u64,
+            )
+            .unwrap()
+            .mean;
+            assert!(
+                planned <= other * 1.05,
+                "{}: planned B={} ({planned}) worse than B={b} ({other})",
+                tau.label(),
+                plan.batches
+            );
+        }
+    }
+}
+
+/// Lemma 2 (majorization) holds under Monte-Carlo, not just numerically:
+/// simulated E[T] respects the majorization partial order.
+#[test]
+fn majorization_order_holds_in_simulation() {
+    use replica::analysis::majorization::{all_assignments, majorizes};
+    let tau = ServiceDist::shifted_exp(0.1, 1.0);
+    let (n, b) = (8usize, 2usize);
+    let mut results = Vec::new();
+    for a in all_assignments(n, b) {
+        let est = simulate_policy(
+            n,
+            &Policy::UnbalancedNonOverlapping { assignment: a.clone() },
+            &tau,
+            40_000,
+            77,
+        )
+        .unwrap();
+        results.push((a, est.mean));
+    }
+    for (a1, m1) in &results {
+        for (a2, m2) in &results {
+            if majorizes(a1, a2) && a1 != a2 {
+                assert!(
+                    *m1 > m2 - 0.03 * m2,
+                    "{a1:?} ⪰ {a2:?} but sim means {m1} < {m2}"
+                );
+            }
+        }
+    }
+}
+
+/// Overlap comparison (§V): simulated eq. (17) ordering at several rates.
+#[test]
+fn overlap_ordering_eq17() {
+    let rows = replica::experiments::fig6::run(&[0.5, 1.0, 3.0], 50_000, 5).unwrap();
+    for r in &rows {
+        assert!(r.nonoverlap < r.hybrid && r.hybrid < r.cyclic, "{r:?}");
+    }
+}
+
+/// Coverage probability: analytic Lemma 1 matches the failure rate the
+/// simulator observes with random assignment.
+#[test]
+fn lemma1_coverage_matches_simulated_failures() {
+    use replica::analysis::coverage::coverage_probability;
+    let (n, b) = (30usize, 10usize);
+    let est = simulate_policy(
+        n,
+        &Policy::RandomNonOverlapping { batches: b },
+        &ServiceDist::exp(1.0),
+        30_000,
+        3,
+    )
+    .unwrap();
+    let want_fail = 1.0 - coverage_probability(n, b);
+    assert!(
+        (est.failure_rate - want_fail).abs() < 0.01,
+        "sim {} vs analytic {want_fail}",
+        est.failure_rate
+    );
+}
+
+/// Trace pipeline end-to-end: generate → save → load → analyze → plan.
+#[test]
+fn trace_pipeline_end_to_end() {
+    use replica::planner::plan_from_samples;
+    use replica::traces::{load_trace, write_trace, GeneratorConfig, JobAnalysis};
+    let dir = std::env::temp_dir().join("replica_it_trace");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t.csv");
+    let trace = GeneratorConfig::paper_workload(100, 3).generate();
+    write_trace(&path, &trace).unwrap();
+    let loaded = load_trace(&path).unwrap();
+    let analyses = JobAnalysis::all(&loaded);
+    assert_eq!(analyses.len(), 10);
+    // heavy-tail job: planner recommends real redundancy
+    let heavy = analyses.iter().find(|a| a.job_id == 7).unwrap();
+    let (plan, _fit) =
+        plan_from_samples(100, heavy.empirical.data(), Objective::MeanCompletion);
+    assert!(plan.batches < 100, "heavy job should get redundancy, got B={}", plan.batches);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,145 @@
+//! Property-based tests over coordinator/batching/analysis invariants
+//! (randomized via the in-house `forall` driver — DESIGN.md
+//! §Substitutions).
+
+use replica::analysis::closed_form;
+use replica::analysis::majorization::{balanced, majorizes};
+use replica::batching::Policy;
+use replica::dist::ServiceDist;
+use replica::sim::{JobOutcome, JobSimulator};
+use replica::util::proptest::forall;
+use replica::util::rng::Pcg64;
+
+fn random_dist(rng: &mut Pcg64) -> ServiceDist {
+    match rng.below(4) {
+        0 => ServiceDist::exp(0.1 + 5.0 * rng.uniform()),
+        1 => ServiceDist::shifted_exp(rng.uniform(), 0.1 + 5.0 * rng.uniform()),
+        2 => ServiceDist::pareto(0.1 + rng.uniform(), 1.1 + 3.0 * rng.uniform()),
+        _ => ServiceDist::weibull(0.4 + rng.uniform(), 0.5 + rng.uniform()),
+    }
+}
+
+fn random_feasible(rng: &mut Pcg64) -> (usize, usize) {
+    let b = *rng.choose(&[1usize, 2, 3, 4, 6]);
+    let n = b * rng.range(1, 5);
+    (n, b)
+}
+
+#[test]
+fn layouts_always_validate_and_cover() {
+    forall("layout validity", 200, |rng| {
+        let (n, b) = random_feasible(rng);
+        let policies = vec![
+            Policy::BalancedNonOverlapping { batches: b },
+            Policy::CyclicOverlapping { batches: b },
+        ];
+        for p in policies {
+            let layout = p.layout(n, rng).unwrap();
+            layout.validate().unwrap();
+            assert!(layout.covers_all_tasks(), "{} N={n} B={b}", p.name());
+            // every worker executes exactly N/B tasks
+            assert!(layout.worker_tasks.iter().all(|t| t.len() == n / b));
+        }
+    });
+}
+
+#[test]
+fn job_time_is_positive_and_bounded_by_slowest_worker() {
+    forall("job time bounds", 150, |rng| {
+        let (n, b) = random_feasible(rng);
+        let tau = random_dist(rng);
+        let layout = Policy::BalancedNonOverlapping { batches: b }.layout(n, rng).unwrap();
+        let sim = JobSimulator::new(layout, tau);
+        match sim.sample(rng) {
+            JobOutcome::Done(t) => assert!(t > 0.0 && t.is_finite()),
+            JobOutcome::Failed => panic!("no-failure sim cannot fail"),
+        }
+    });
+}
+
+#[test]
+fn more_replication_never_hurts_stochastically() {
+    // E[T] under B=1 (max diversity) ≤ E[T] under B=N for Exp service
+    // (Theorem 3), regardless of rate.
+    forall("replication helps exp", 20, |rng| {
+        let mu = 0.2 + 5.0 * rng.uniform();
+        let m1 = closed_form::exp_mean(1, mu);
+        let mn = closed_form::exp_mean(64, mu);
+        assert!(m1 < mn);
+    });
+}
+
+#[test]
+fn balanced_is_majorized_by_random_assignments() {
+    forall("balanced majorized", 200, |rng| {
+        let b = rng.range(2, 5);
+        let r = rng.range(1, 5);
+        let n = b * r;
+        // random composition of n into b positive parts
+        let mut parts = vec![1usize; b];
+        for _ in 0..(n - b) {
+            parts[rng.range(0, b)] += 1;
+        }
+        assert!(majorizes(&parts, &balanced(n, b)), "{parts:?}");
+    });
+}
+
+#[test]
+fn closed_form_mean_is_positive_and_finite_when_it_should_be() {
+    forall("closed forms finite", 200, |rng| {
+        let (n, b) = random_feasible(rng);
+        let tau = random_dist(rng);
+        let m = closed_form::mean_t(n, b, &tau);
+        // Pareto with B/(Nα) ≥ 1 is legitimately infinite; everything
+        // else must be finite and positive.
+        if let ServiceDist::Pareto { alpha, .. } = tau {
+            if (b as f64) / (n as f64 * alpha) >= 1.0 {
+                assert!(m.is_infinite());
+                return;
+            }
+        }
+        assert!(m.is_finite() && m > 0.0, "{} N={n} B={b}: {m}", tau.label());
+    });
+}
+
+#[test]
+fn quantile_cdf_inverse_property() {
+    forall("quantile inverse", 150, |rng| {
+        let tau = random_dist(rng);
+        let p = 0.02 + 0.96 * rng.uniform();
+        let t = tau.quantile(p);
+        let back = tau.cdf(t);
+        assert!((back - p).abs() < 1e-6, "{}: p={p} t={t} back={back}", tau.label());
+    });
+}
+
+#[test]
+fn min_of_closure_agrees_with_ccdf_power() {
+    // S_min(t) = S(t)^k for families closed under minima
+    forall("min closure", 150, |rng| {
+        let tau = random_dist(rng);
+        let k = rng.range(2, 6);
+        if let Some(min_dist) = tau.min_of(k) {
+            let t = tau.quantile(0.3 + 0.5 * rng.uniform());
+            let want = tau.ccdf(t).powi(k as i32);
+            let got = min_dist.ccdf(t);
+            assert!((got - want).abs() < 1e-9, "{} k={k}: {got} vs {want}", tau.label());
+        }
+    });
+}
+
+#[test]
+fn simulator_seed_determinism() {
+    forall("sim determinism", 50, |rng| {
+        let (n, b) = random_feasible(rng);
+        let tau = random_dist(rng);
+        let seed = rng.next_u64();
+        let layout = Policy::BalancedNonOverlapping { batches: b }
+            .layout(n, &mut Pcg64::new(seed))
+            .unwrap();
+        let sim = JobSimulator::new(layout, tau);
+        let a = sim.sample(&mut Pcg64::new(seed)).time();
+        let b2 = sim.sample(&mut Pcg64::new(seed)).time();
+        assert_eq!(a, b2);
+    });
+}
