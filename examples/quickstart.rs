@@ -4,11 +4,10 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use replica::batching::Policy;
 use replica::dist::ServiceDist;
+use replica::eval::{Estimator, MonteCarlo, Scenario};
 use replica::metrics::{fnum, Table};
 use replica::planner::{Objective, Planner};
-use replica::sim::montecarlo::simulate_policy;
 
 fn main() -> replica::Result<()> {
     // A cluster of N = 100 workers whose task service times are
@@ -35,19 +34,16 @@ fn main() -> replica::Result<()> {
         fnum(plan.speedup_vs_no_redundancy)
     );
 
-    // 2. Verify by Monte-Carlo across the whole spectrum.
+    // 2. Verify by Monte-Carlo across the whole spectrum: the estimator
+    //    sweep gives every operating point its own RNG substream and
+    //    fans replications across all cores, bit-stable per seed.
     let mut table = Table::new(
         "diversity–parallelism spectrum (20k replications per point)",
         vec!["B", "replication", "E[T] analytic", "E[T] simulated", "CoV"],
     );
-    for point in planner.sweep() {
-        let est = simulate_policy(
-            n,
-            &Policy::BalancedNonOverlapping { batches: point.batches },
-            &tau,
-            20_000,
-            42,
-        )?;
+    let analytic = planner.sweep();
+    let mc = MonteCarlo::new(20_000, 42);
+    for (point, (_, est)) in analytic.iter().zip(mc.sweep(n, &tau)?) {
         let marker = if point.batches == plan.batches { " <- planned" } else { "" };
         table.row(vec![
             format!("{}{marker}", point.batches),
@@ -58,6 +54,16 @@ fn main() -> replica::Result<()> {
         ]);
     }
     table.print();
+
+    // ... or ask about a single scenario directly:
+    let one = mc.evaluate(&Scenario::balanced(n, plan.batches, tau.clone()))?;
+    println!(
+        "\nplanned point via {}: p50 {} / p95 {} / p99 {}",
+        one.provenance.backend(),
+        fnum(one.p50),
+        fnum(one.p95),
+        fnum(one.p99)
+    );
 
     // 3. The predictability trade-off (Theorems 4/7/10).
     let cov_plan = planner.plan(Objective::Predictability);

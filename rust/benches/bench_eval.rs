@@ -1,0 +1,55 @@
+//! Bench: serial vs multi-threaded Monte-Carlo evaluation throughput
+//! (replications/sec) across cluster sizes, plus the determinism
+//! contract check (bit-identical estimates for any thread fan-out).
+
+use replica::dist::ServiceDist;
+use replica::eval::{Estimator, MonteCarlo, Scenario};
+use replica::metrics::bench;
+
+fn main() {
+    let cores =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("available cores: {cores}\n");
+
+    let tau = ServiceDist::shifted_exp(0.05, 1.0);
+    let reps = 30_000;
+
+    for n in [20usize, 100, 200] {
+        // interior operating point with replication degree 5
+        let b = n / 5;
+        let scenario = Scenario::balanced(n, b, tau.clone());
+
+        let mut serial_per_iter = f64::NAN;
+        for threads in [1usize, 2, 4, 0] {
+            let mc = MonteCarlo { reps, seed: 42, threads };
+            let label = format!(
+                "MonteCarlo N={n} B={b} reps=30k threads={}",
+                if threads == 0 { format!("auto({cores})") } else { threads.to_string() }
+            );
+            let r = bench(&label, 200.0, || {
+                std::hint::black_box(mc.evaluate(&scenario).expect("eval"));
+            });
+            let reps_per_sec = reps as f64 * r.per_second();
+            if threads == 1 {
+                serial_per_iter = r.secs_per_iter;
+                println!("  -> {:.2} M reps/s", 1e-6 * reps_per_sec);
+            } else {
+                println!(
+                    "  -> {:.2} M reps/s ({:.2}x vs serial)",
+                    1e-6 * reps_per_sec,
+                    serial_per_iter / r.secs_per_iter
+                );
+            }
+        }
+
+        // determinism contract: the estimates above must be bit-identical
+        let a = MonteCarlo { reps, seed: 42, threads: 1 }.evaluate(&scenario).unwrap();
+        let b_est = MonteCarlo { reps, seed: 42, threads: 0 }.evaluate(&scenario).unwrap();
+        assert_eq!(
+            a.mean.to_bits(),
+            b_est.mean.to_bits(),
+            "thread fan-out changed the estimate at N={n}"
+        );
+        println!("  determinism: serial and threaded estimates bit-identical\n");
+    }
+}

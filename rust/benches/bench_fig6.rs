@@ -3,9 +3,9 @@
 
 use replica::batching::Policy;
 use replica::dist::ServiceDist;
+use replica::eval::{Estimator, MonteCarlo, Scenario};
 use replica::experiments::fig6;
 use replica::metrics::bench;
-use replica::sim::montecarlo::simulate_policy;
 
 fn main() {
     let mus = [0.25, 0.5, 1.0, 2.0, 4.0];
@@ -14,16 +14,19 @@ fn main() {
     println!();
 
     let tau = ServiceDist::exp(1.0);
+    let mc = MonteCarlo::serial(1_000, 7);
     for policy in [
         Policy::BalancedNonOverlapping { batches: 3 },
         Policy::CyclicOverlapping { batches: 3 },
         Policy::HybridOverlapping { batches: 3 },
     ] {
-        let name = format!("simulate_policy N=6 {} (1k reps)", policy.name());
+        let scenario = Scenario::new(6, policy, tau.clone());
+        let name = format!(
+            "MonteCarlo::evaluate N=6 {} (1k reps)",
+            scenario.policy.name()
+        );
         bench(&name, 40.0, || {
-            std::hint::black_box(
-                simulate_policy(6, &policy, &tau, 1_000, 7).expect("sim"),
-            );
+            std::hint::black_box(mc.evaluate(&scenario).expect("sim"));
         });
     }
 }

@@ -3,16 +3,15 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use crate::batching::Policy;
 use crate::cli::args::Args;
 use crate::config::SystemConfig;
 use crate::coordinator::{Coordinator, Dataset, GdConfig, NativeBackend, PjrtBackend};
 use crate::dist::ServiceDist;
+use crate::eval::{Analytic, Auto, Estimator, MonteCarlo, Scenario};
 use crate::experiments::{self, DEFAULT_REPS};
 use crate::metrics::{export_csv, fnum, Table};
 use crate::planner::{Objective, Planner};
 use crate::runtime::{artifacts_dir, GradientOps, RuntimeService};
-use crate::sim::montecarlo::simulate_policy;
 use crate::traces::{load_trace, write_trace, GeneratorConfig, JobAnalysis};
 use crate::util::error::{Error, Result};
 
@@ -88,23 +87,43 @@ pub fn plan(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve the estimator backend from `--backend mc|analytic|auto`
+/// (plus `--reps/--seed/--threads` for the stochastic ones).
+fn estimator_from(args: &mut Args) -> Result<Box<dyn Estimator>> {
+    let reps = args.get_usize("reps", DEFAULT_REPS)?;
+    let seed = args.get_u64("seed", 0)?;
+    let threads = args.get_usize("threads", 0)?;
+    match args.get("backend").as_deref().unwrap_or("mc") {
+        "mc" | "monte-carlo" => {
+            Ok(Box::new(MonteCarlo { reps, seed, threads }))
+        }
+        "analytic" => Ok(Box::new(Analytic)),
+        "auto" => Ok(Box::new(Auto {
+            fallback: MonteCarlo { reps, seed, threads },
+        })),
+        other => Err(Error::Config(format!(
+            "unknown backend '{other}' (mc | analytic | auto)"
+        ))),
+    }
+}
+
 pub fn simulate(args: &mut Args) -> Result<()> {
     let n = args.get_usize("workers", 100)?;
     let b = args.get_usize("batches", n)?;
-    let reps = args.get_usize("reps", DEFAULT_REPS)?;
-    let seed = args.get_u64("seed", 0)?;
     let tau = service_from(args)?;
-    let est = simulate_policy(
-        n,
-        &Policy::BalancedNonOverlapping { batches: b },
-        &tau,
-        reps,
-        seed,
-    )?;
+    let estimator = estimator_from(args)?;
+    let est = estimator.evaluate(&Scenario::balanced(n, b, tau.clone()))?;
     let mut t = Table::new(
-        &format!("Simulation: N={n}, B={b}, tau ~ {}, {reps} reps", tau.label()),
+        &format!("Evaluation: N={n}, B={b}, tau ~ {}", tau.label()),
         vec!["metric", "value"],
     );
+    t.row(vec!["backend".into(), est.provenance.backend().into()]);
+    if est.replications > 0 {
+        t.row(vec![
+            "replications".into(),
+            format!("{} ({} completed)", est.replications, est.completed),
+        ]);
+    }
     t.row(vec!["mean".into(), format!("{} ± {}", fnum(est.mean), fnum(est.ci95))]);
     t.row(vec!["CoV".into(), fnum(est.cov)]);
     t.row(vec!["p50".into(), fnum(est.p50)]);
@@ -112,6 +131,9 @@ pub fn simulate(args: &mut Args) -> Result<()> {
     t.row(vec!["p99".into(), fnum(est.p99)]);
     t.row(vec!["failure rate".into(), fnum(est.failure_rate)]);
     t.print();
+    if est.all_failed() {
+        println!("warning: every replication failed coverage; statistics are undefined");
+    }
     Ok(())
 }
 
@@ -403,6 +425,32 @@ mod tests {
         sweep(&mut args("sweep --workers 20 --family exp --mu 1")).unwrap();
         simulate(&mut args("simulate --workers 12 --batches 3 --family exp --reps 500"))
             .unwrap();
+    }
+
+    #[test]
+    fn simulate_backend_selection() {
+        simulate(&mut args(
+            "simulate --workers 12 --batches 3 --family exp --backend analytic",
+        ))
+        .unwrap();
+        simulate(&mut args(
+            "simulate --workers 12 --batches 3 --family exp --backend auto --reps 500",
+        ))
+        .unwrap();
+        simulate(&mut args(
+            "simulate --workers 12 --batches 3 --family exp --backend mc --reps 500 \
+             --threads 2",
+        ))
+        .unwrap();
+        // analytic backend has no closed form for weibull
+        assert!(simulate(&mut args(
+            "simulate --workers 12 --batches 3 --family weibull --backend analytic",
+        ))
+        .is_err());
+        assert!(simulate(&mut args(
+            "simulate --workers 12 --batches 3 --family exp --backend nope",
+        ))
+        .is_err());
     }
 
     #[test]

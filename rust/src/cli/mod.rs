@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! replica plan       --workers 100 --family pareto --alpha 1.5 [--objective mean|cov|tradeoff=0.5]
-//! replica simulate   --workers 100 --batches 10 --family sexp --delta 0.05 --mu 1 [--reps 20000]
+//! replica simulate   --workers 100 --batches 10 --family sexp --delta 0.05 --mu 1
+//!                    [--backend mc|analytic|auto] [--reps 20000] [--threads 0]
 //! replica sweep      --workers 100 --family sexp --delta 0.05 --mu 1
 //! replica trace gen      --out trace.csv [--tasks 100] [--seed 42]
 //! replica trace analyze  --trace trace.csv
@@ -45,7 +46,8 @@ USAGE:
 
 COMMANDS:
   plan        choose the optimal redundancy level for a service-time model
-  simulate    Monte-Carlo estimate of job compute time at one operating point
+  simulate    estimate job compute time at one operating point through a
+              pluggable backend (Monte-Carlo, analytic closed forms, or auto)
   sweep       E[T] and CoV across the full diversity-parallelism spectrum
   trace       gen | analyze Google-cluster-shaped traces
   experiment  regenerate a paper figure (fig3, fig6, fig7_8, fig9_10,
@@ -59,7 +61,9 @@ COMMON FLAGS:
   --family F            exp | sexp | pareto | weibull | bimodal
   --mu X --delta X --alpha X --sigma X --shape X --scale X
   --objective O         mean | cov | tradeoff=W
+  --backend B           mc | analytic | auto (simulate; default mc)
   --reps N              Monte-Carlo replications
   --seed N              RNG seed
+  --threads N           Monte-Carlo thread fan-out (0 = all cores)
   --config FILE         load [system]/[service] sections from TOML
 ";

@@ -1,0 +1,153 @@
+//! Closed-form backend: exact answers where the paper derives them.
+
+use crate::analysis::closed_form;
+use crate::batching::Policy;
+use crate::dist::ServiceDist;
+use crate::eval::{Estimate, Estimator, Provenance, Scenario};
+use crate::sim::job::FailureModel;
+use crate::util::error::{Error, Result};
+use crate::util::math::bisect;
+
+/// The analytic estimator: eqs. (18)–(26) for mean and CoV, plus exact
+/// CDF inversion for the percentiles.
+///
+/// Only scenarios the paper has closed forms for are supported —
+/// Exp/SExp/Pareto service times under the balanced non-overlapping
+/// policy with no failure injection. Anything else is a clean
+/// [`Error::Config`]; use [`crate::eval::MonteCarlo`] or
+/// [`crate::eval::Auto`] there instead.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Analytic;
+
+impl Analytic {
+    /// Does a closed form exist for this scenario?
+    pub fn supports(scenario: &Scenario) -> bool {
+        matches!(scenario.policy, Policy::BalancedNonOverlapping { .. })
+            && scenario.failures == FailureModel::None
+            && matches!(
+                scenario.tau,
+                ServiceDist::Exp { .. }
+                    | ServiceDist::ShiftedExp { .. }
+                    | ServiceDist::Pareto { .. }
+            )
+    }
+}
+
+impl Estimator for Analytic {
+    fn evaluate(&self, scenario: &Scenario) -> Result<Estimate> {
+        if !Analytic::supports(scenario) {
+            return Err(Error::Config(format!(
+                "no closed form for scenario [{}] (closed forms cover \
+                 Exp/SExp/Pareto service under the balanced non-overlapping \
+                 policy without failures); use the MonteCarlo or Auto backend",
+                scenario.label()
+            )));
+        }
+        let n = scenario.workers;
+        let b = match scenario.policy {
+            Policy::BalancedNonOverlapping { batches } => batches,
+            _ => unreachable!("supports() checked the policy"),
+        };
+        if b == 0 || b > n || n % b != 0 {
+            return Err(Error::Policy(format!("B={b} must divide N={n} (1 ≤ B ≤ N)")));
+        }
+        Ok(Estimate {
+            mean: closed_form::mean_t(n, b, &scenario.tau),
+            ci95: 0.0,
+            cov: closed_form::cov_t(n, b, &scenario.tau),
+            p50: job_quantile(n, b, &scenario.tau, 0.50),
+            p95: job_quantile(n, b, &scenario.tau, 0.95),
+            p99: job_quantile(n, b, &scenario.tau, 0.99),
+            failure_rate: 0.0,
+            replications: 0,
+            completed: 0,
+            provenance: Provenance::Analytic,
+        })
+    }
+}
+
+/// Quantile of the job compute time `T = max_i min_{j≤N/B} (N/B)·τ_ij`
+/// under the balanced policy, by bisecting the exact CDF
+/// `F(t) = (1 − S_batch(t)^r)^B` with `r = N/B`.
+fn job_quantile(n: usize, b: usize, tau: &ServiceDist, q: f64) -> f64 {
+    let r = n / b;
+    let batch = ServiceDist::scaled(r as f64, tau.clone());
+    let cdf = |t: f64| -> f64 {
+        let s = batch.ccdf(t);
+        (1.0 - s.powi(r as i32)).powi(b as i32)
+    };
+    // Bracket the quantile: start at a high batch-level quantile and
+    // double until the job CDF clears q (heavy tails need room).
+    let mut hi = batch.quantile(0.99).max(1e-9);
+    let mut guard = 0;
+    while cdf(hi) < q && guard < 200 {
+        hi *= 2.0;
+        guard += 1;
+    }
+    bisect(|t| cdf(t) - q, 0.0, hi, 1e-10 * hi.max(1.0)).unwrap_or(f64::NAN)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::harmonic::h1;
+
+    #[test]
+    fn exp_closed_forms_flow_through() {
+        // B=4, Exp(2): E[T] = H_4/2
+        let est = Analytic.evaluate(&Scenario::balanced(20, 4, ServiceDist::exp(2.0))).unwrap();
+        assert!((est.mean - h1(4) / 2.0).abs() < 1e-12);
+        assert_eq!(est.provenance, Provenance::Analytic);
+        assert_eq!(est.failure_rate, 0.0);
+        assert_eq!(est.ci95, 0.0);
+        assert_eq!(est.replications, 0);
+        assert!(!est.all_failed());
+    }
+
+    #[test]
+    fn quantiles_invert_the_job_cdf() {
+        // B=1, r=N: T = min over N workers of N·τ. For Exp(μ) that min is
+        // Exp(Nμ/N·... ) — easier: check round trip through the CDF.
+        let (n, b) = (10usize, 2usize);
+        let tau = ServiceDist::exp(1.0);
+        let est = Analytic.evaluate(&Scenario::balanced(n, b, tau.clone())).unwrap();
+        let r = n / b;
+        let batch = ServiceDist::scaled(r as f64, tau);
+        for (t, q) in [(est.p50, 0.50), (est.p95, 0.95), (est.p99, 0.99)] {
+            let back = (1.0 - batch.ccdf(t).powi(r as i32)).powi(b as i32);
+            assert!((back - q).abs() < 1e-6, "q={q}: t={t} back={back}");
+        }
+        assert!(est.p50 < est.p95 && est.p95 < est.p99);
+    }
+
+    #[test]
+    fn unsupported_scenarios_error_cleanly() {
+        // overlapping policy
+        let s = Scenario::new(
+            6,
+            Policy::CyclicOverlapping { batches: 3 },
+            ServiceDist::exp(1.0),
+        );
+        assert!(Analytic.evaluate(&s).is_err());
+        // no closed form for Weibull
+        let s = Scenario::balanced(6, 3, ServiceDist::weibull(0.7, 1.0));
+        assert!(Analytic.evaluate(&s).is_err());
+        // failure injection
+        let s = Scenario::balanced(6, 3, ServiceDist::exp(1.0))
+            .with_failures(FailureModel::Crash { p: 0.1 });
+        assert!(Analytic.evaluate(&s).is_err());
+        // infeasible B
+        let s = Scenario::balanced(10, 3, ServiceDist::exp(1.0));
+        assert!(Analytic.evaluate(&s).is_err());
+    }
+
+    #[test]
+    fn pareto_infinite_mean_is_reported_as_infinity() {
+        // B/(Nα) ≥ 1 → infinite mean, finite quantiles
+        let est = Analytic
+            .evaluate(&Scenario::balanced(4, 4, ServiceDist::pareto(1.0, 0.9)))
+            .unwrap();
+        assert!(est.mean.is_infinite());
+        assert!(est.p50.is_finite() && est.p50 > 0.0);
+    }
+}

@@ -1,0 +1,123 @@
+//! Auto backend: exact when possible, simulation when not.
+
+use crate::eval::{Analytic, Estimate, Estimator, MonteCarlo, Scenario};
+use crate::util::error::Result;
+
+/// Analytic-first estimator with a transparent Monte-Carlo fallback.
+///
+/// Scenarios with an exact closed form (Exp/SExp/Pareto service,
+/// balanced non-overlapping policy, no failures) are answered by
+/// [`Analytic`]; everything else — empirical or bimodal service times,
+/// overlapping/random policies, failure injection — falls back to the
+/// configured [`MonteCarlo`]. Which path answered is recorded in
+/// [`Estimate::provenance`], so consumers can always tell simulation
+/// noise from exact numbers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Auto {
+    /// The Monte-Carlo estimator used when no closed form exists.
+    pub fallback: MonteCarlo,
+}
+
+impl Auto {
+    /// Auto backend whose fallback runs `reps` replications from `seed`
+    /// on all available cores.
+    pub fn new(reps: usize, seed: u64) -> Auto {
+        Auto { fallback: MonteCarlo::new(reps, seed) }
+    }
+
+    /// Name of the backend that would answer this scenario.
+    pub fn backend_for(scenario: &Scenario) -> &'static str {
+        if Analytic::supports(scenario) {
+            "analytic"
+        } else {
+            "monte-carlo"
+        }
+    }
+}
+
+impl Estimator for Auto {
+    fn evaluate(&self, scenario: &Scenario) -> Result<Estimate> {
+        if Analytic::supports(scenario) {
+            Analytic.evaluate(scenario)
+        } else {
+            self.fallback.evaluate(scenario)
+        }
+    }
+
+    fn evaluate_at(&self, scenario: &Scenario, index: u64) -> Result<Estimate> {
+        if Analytic::supports(scenario) {
+            Analytic.evaluate(scenario)
+        } else {
+            self.fallback.evaluate_at(scenario, index)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::Policy;
+    use crate::dist::ServiceDist;
+    use crate::eval::Provenance;
+    use crate::sim::job::FailureModel;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn closed_form_families_stay_analytic() {
+        let auto = Auto::new(2_000, 5);
+        for tau in [
+            ServiceDist::exp(1.0),
+            ServiceDist::shifted_exp(0.05, 1.0),
+            ServiceDist::pareto(1.0, 3.0),
+        ] {
+            let est = auto.evaluate(&Scenario::balanced(20, 4, tau.clone())).unwrap();
+            assert_eq!(est.provenance, Provenance::Analytic, "{}", tau.label());
+        }
+    }
+
+    #[test]
+    fn empirical_and_bimodal_fall_back_to_monte_carlo() {
+        let auto = Auto::new(2_000, 5);
+        let mut rng = Pcg64::new(1);
+        let d = ServiceDist::exp(1.0);
+        let samples: Vec<f64> = (0..500).map(|_| d.sample(&mut rng)).collect();
+        for tau in [
+            ServiceDist::empirical(samples),
+            ServiceDist::bimodal(0.1, (0.1, 10.0), (5.0, 1.0)),
+        ] {
+            let est = auto.evaluate(&Scenario::balanced(20, 4, tau.clone())).unwrap();
+            assert!(
+                matches!(est.provenance, Provenance::MonteCarlo { .. }),
+                "{}",
+                tau.label()
+            );
+        }
+    }
+
+    #[test]
+    fn overlapping_policies_and_failures_fall_back() {
+        let auto = Auto::new(2_000, 5);
+        let s = Scenario::new(
+            6,
+            Policy::CyclicOverlapping { batches: 3 },
+            ServiceDist::exp(1.0),
+        );
+        assert_eq!(Auto::backend_for(&s), "monte-carlo");
+        let est = auto.evaluate(&s).unwrap();
+        assert!(matches!(est.provenance, Provenance::MonteCarlo { .. }));
+
+        let s = Scenario::balanced(6, 3, ServiceDist::exp(1.0))
+            .with_failures(FailureModel::Crash { p: 0.2 });
+        let est = auto.evaluate(&s).unwrap();
+        assert!(matches!(est.provenance, Provenance::MonteCarlo { .. }));
+    }
+
+    #[test]
+    fn fallback_agrees_with_analytic_on_shared_ground() {
+        // same scenario through both paths: MC should land within CI
+        let scenario = Scenario::balanced(20, 5, ServiceDist::exp(1.0));
+        let exact = Analytic.evaluate(&scenario).unwrap();
+        let mc = Auto::new(30_000, 9).fallback.evaluate(&scenario).unwrap();
+        assert!((exact.mean - mc.mean).abs() < 4.0 * mc.ci95.max(1e-3));
+    }
+}

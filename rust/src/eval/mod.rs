@@ -1,0 +1,266 @@
+//! Unified scenario evaluation — one API over analytic, Monte-Carlo,
+//! and (future) backends.
+//!
+//! The paper's central workflow is: evaluate E\[T\] and CoV\[T\] for a
+//! `(N, policy, τ)` scenario, then optimize over the batch count B.
+//! This module gives that workflow a single pluggable interface:
+//!
+//! * [`Scenario`] — the value being asked about: worker budget,
+//!   replication policy, task service-time model, failure model.
+//! * [`Estimate`] — the rich answer: mean with a 95% CI, CoV,
+//!   p50/p95/p99, failure rate, and a [`Provenance`] recording which
+//!   backend produced it.
+//! * [`Estimator`] — the trait every backend implements, with batched
+//!   entry points ([`Estimator::evaluate_many`], [`Estimator::sweep`])
+//!   that amortize allocation across the operating-point spectrum.
+//!
+//! Three backends ship today:
+//!
+//! * [`Analytic`] — the paper's closed forms (eqs. 18–26). Exact and
+//!   effectively free, but only exists for Exp/SExp/Pareto service
+//!   under the balanced non-overlapping policy with no failures; errors
+//!   cleanly otherwise.
+//! * [`MonteCarlo`] — the replication driver, parallelized across OS
+//!   threads. Per-replication counter-based RNG streams (see
+//!   [`substream`]) make results bit-identical for a fixed seed
+//!   regardless of thread count.
+//! * [`Auto`] — analytic when exact, transparent Monte-Carlo fallback
+//!   for empirical/bimodal service times, overlapping policies, and
+//!   failure injection. The choice is visible in
+//!   [`Estimate::provenance`].
+//!
+//! Consumers (planner, experiments, CLI, benches) write against
+//! [`Estimator`] and never hand-roll seed salting or layout reuse.
+
+mod analytic;
+mod auto;
+mod montecarlo;
+
+pub use analytic::Analytic;
+pub use auto::Auto;
+pub use montecarlo::MonteCarlo;
+
+use crate::batching::{operating_points, OperatingPoint, Policy};
+use crate::dist::ServiceDist;
+use crate::sim::job::FailureModel;
+use crate::util::error::Result;
+
+/// Default replication count for Monte-Carlo backends constructed via
+/// `Default` (re-exported as `experiments::DEFAULT_REPS`).
+pub const DEFAULT_REPS: usize = 20_000;
+
+/// Derive the seed of an independent RNG substream.
+///
+/// This is the one sanctioned way to split a user-facing seed into
+/// per-replication / per-operating-point / per-job streams: a
+/// SplitMix64 finalization of `seed ⊕ index·φ⁻¹` (the same mixer
+/// [`crate::util::rng::Pcg64::new`] seeds through). Distinct indices
+/// give well-separated streams even for adjacent seeds, and the
+/// mapping is pure — callers running in parallel need no shared state.
+pub fn substream(seed: u64, index: u64) -> u64 {
+    let mut z = seed ^ index.wrapping_mul(0x9E3779B97F4A7C15);
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// One evaluation question: "what does job compute time look like for
+/// this cluster?".
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Worker budget N (= task count under the paper's model).
+    pub workers: usize,
+    /// Task replication policy.
+    pub policy: Policy,
+    /// Task service-time distribution τ.
+    pub tau: ServiceDist,
+    /// Worker failure model (only the Monte-Carlo backend can evaluate
+    /// scenarios with failures).
+    pub failures: FailureModel,
+}
+
+impl Scenario {
+    /// Scenario with no failure injection.
+    pub fn new(workers: usize, policy: Policy, tau: ServiceDist) -> Scenario {
+        Scenario { workers, policy, tau, failures: FailureModel::None }
+    }
+
+    /// The common case: balanced non-overlapping batches (the provably
+    /// optimal family, Theorems 1–2).
+    pub fn balanced(workers: usize, batches: usize, tau: ServiceDist) -> Scenario {
+        Scenario::new(workers, Policy::BalancedNonOverlapping { batches }, tau)
+    }
+
+    pub fn with_failures(mut self, failures: FailureModel) -> Scenario {
+        self.failures = failures;
+        self
+    }
+
+    /// Short human-readable description for errors and reports.
+    pub fn label(&self) -> String {
+        format!("N={} {} tau~{}", self.workers, self.policy.name(), self.tau.label())
+    }
+}
+
+/// Which backend produced an [`Estimate`], with enough detail to
+/// reproduce it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Provenance {
+    /// Exact closed forms (eqs. 18–26) + CDF inversion for quantiles.
+    Analytic,
+    /// Monte-Carlo sampling with the recorded parameters (`seed` is the
+    /// resolved per-call stream seed, `threads` the resolved fan-out).
+    MonteCarlo { reps: usize, seed: u64, threads: usize },
+}
+
+impl Provenance {
+    /// Backend name for tables / logs.
+    pub fn backend(&self) -> &'static str {
+        match self {
+            Provenance::Analytic => "analytic",
+            Provenance::MonteCarlo { .. } => "monte-carlo",
+        }
+    }
+}
+
+/// Compute-time statistics for one [`Scenario`].
+///
+/// Degenerate case: when **every** Monte-Carlo replication fails
+/// coverage ([`Estimate::all_failed`] is true), there is no completion
+/// time to summarize — `mean`, `ci95`, `cov` and the percentiles are
+/// all `NaN` by construction and `failure_rate` is exactly 1.0. With a
+/// single completed replication, `ci95` is `NaN` (a CI needs ≥ 2
+/// samples) while `mean` is that sample.
+#[derive(Clone, Debug)]
+pub struct Estimate {
+    /// Mean completion time (over completed replications for MC).
+    pub mean: f64,
+    /// 95% CI half-width of the mean (0 for analytic estimates).
+    pub ci95: f64,
+    /// Coefficient of variation of completion time.
+    pub cov: f64,
+    /// Percentiles of completion time.
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    /// Fraction of replications where coverage failed (always 0 for
+    /// analytic estimates — closed forms assume full coverage).
+    pub failure_rate: f64,
+    /// Monte-Carlo replication count (0 for analytic estimates).
+    pub replications: usize,
+    /// Replications that completed (0 for analytic estimates).
+    pub completed: usize,
+    /// Which backend produced this estimate.
+    pub provenance: Provenance,
+}
+
+impl Estimate {
+    /// True when a Monte-Carlo run had *zero* completed replications
+    /// (every replication failed coverage): all statistics are `NaN`
+    /// and only `failure_rate` (= 1.0) is meaningful.
+    pub fn all_failed(&self) -> bool {
+        self.replications > 0 && self.completed == 0
+    }
+}
+
+/// A scenario-evaluation backend.
+///
+/// Implementations must be deterministic: the same estimator value
+/// applied to the same scenario yields the same estimate, regardless of
+/// thread count or call order.
+pub trait Estimator {
+    /// Evaluate one scenario.
+    fn evaluate(&self, scenario: &Scenario) -> Result<Estimate>;
+
+    /// Evaluate one scenario on an independent substream.
+    ///
+    /// Stochastic backends derive their RNG stream from
+    /// [`substream`]`(seed, index)` so that batch entry points get
+    /// independent randomness per item without hand-rolled seed
+    /// salting. Deterministic backends ignore `index`.
+    fn evaluate_at(&self, scenario: &Scenario, index: u64) -> Result<Estimate> {
+        let _ = index;
+        self.evaluate(scenario)
+    }
+
+    /// Evaluate a batch of scenarios, item `i` on substream `i`.
+    ///
+    /// Backends may override this to amortize allocation across items
+    /// (the Monte-Carlo backend reuses one replication buffer).
+    fn evaluate_many(&self, scenarios: &[Scenario]) -> Result<Vec<Estimate>> {
+        scenarios
+            .iter()
+            .enumerate()
+            .map(|(i, s)| self.evaluate_at(s, i as u64))
+            .collect()
+    }
+
+    /// Evaluate the full diversity–parallelism spectrum: one balanced
+    /// scenario per feasible B (divisors of `workers`, ascending), each
+    /// on its own substream.
+    fn sweep(
+        &self,
+        workers: usize,
+        tau: &ServiceDist,
+    ) -> Result<Vec<(OperatingPoint, Estimate)>> {
+        let points = operating_points(workers);
+        let scenarios: Vec<Scenario> = points
+            .iter()
+            .map(|op| Scenario::balanced(workers, op.batches, tau.clone()))
+            .collect();
+        Ok(points.into_iter().zip(self.evaluate_many(&scenarios)?).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn substream_is_deterministic_and_index_sensitive() {
+        assert_eq!(substream(42, 7), substream(42, 7));
+        let streams: Vec<u64> = (0..64).map(|i| substream(42, i)).collect();
+        for (i, a) in streams.iter().enumerate() {
+            for (j, b) in streams.iter().enumerate() {
+                if i != j {
+                    assert_ne!(a, b, "indices {i} and {j} collide");
+                }
+            }
+        }
+        assert_ne!(substream(1, 0), substream(2, 0));
+    }
+
+    #[test]
+    fn scenario_constructors() {
+        let s = Scenario::balanced(12, 3, ServiceDist::exp(1.0));
+        assert_eq!(s.workers, 12);
+        assert_eq!(s.failures, FailureModel::None);
+        assert!(matches!(s.policy, Policy::BalancedNonOverlapping { batches: 3 }));
+        let s = s.with_failures(FailureModel::Crash { p: 0.1 });
+        assert!(matches!(s.failures, FailureModel::Crash { .. }));
+        assert!(s.label().contains("balanced-nonoverlap"));
+    }
+
+    #[test]
+    fn provenance_backend_names() {
+        assert_eq!(Provenance::Analytic.backend(), "analytic");
+        assert_eq!(
+            Provenance::MonteCarlo { reps: 1, seed: 0, threads: 1 }.backend(),
+            "monte-carlo"
+        );
+    }
+
+    #[test]
+    fn sweep_covers_the_spectrum_in_order() {
+        let est = Analytic;
+        let rows = est.sweep(12, &ServiceDist::exp(1.0)).unwrap();
+        assert_eq!(rows.len(), 6); // divisors of 12
+        assert!(rows[0].0.is_full_diversity());
+        assert!(rows.last().unwrap().0.is_full_parallelism());
+        // Theorem 3: mean increasing in B for Exp service
+        for w in rows.windows(2) {
+            assert!(w[1].1.mean > w[0].1.mean);
+        }
+    }
+}

@@ -1,0 +1,309 @@
+//! Monte-Carlo backend: threaded replication with counter-based RNG
+//! streams.
+
+use crate::batching::Policy;
+use crate::eval::{substream, Estimate, Estimator, Provenance, Scenario};
+use crate::metrics::Summary;
+use crate::sim::job::{JobOutcome, JobSimulator};
+use crate::util::error::{Error, Result};
+use crate::util::rng::Pcg64;
+
+/// Substream index reserved for layout materialization (replication
+/// streams use indices `0..reps`, far below this).
+const LAYOUT_STREAM: u64 = u64::MAX;
+
+/// The Monte-Carlo estimator.
+///
+/// Replications are fanned out across OS threads, but every replication
+/// draws from its own counter-based RNG stream
+/// (`substream(seed, rep)`) and results are reduced serially in
+/// replication order — so for a fixed seed the estimate is
+/// **bit-identical regardless of `threads`**. Layout-randomizing
+/// policies (random assignment) draw a fresh layout per replication
+/// from that same stream; deterministic policies materialize one layout
+/// up front and share it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MonteCarlo {
+    /// Number of independent replications.
+    pub reps: usize,
+    /// Base seed; batch entry points derive per-item streams from it
+    /// via [`substream`].
+    pub seed: u64,
+    /// OS threads to fan replications across; 0 means "all available
+    /// cores".
+    pub threads: usize,
+}
+
+impl MonteCarlo {
+    /// Estimator with the given replication budget, using every
+    /// available core.
+    pub fn new(reps: usize, seed: u64) -> MonteCarlo {
+        MonteCarlo { reps, seed, threads: 0 }
+    }
+
+    /// Restrict (or widen) the thread fan-out. `0` = all cores.
+    pub fn with_threads(mut self, threads: usize) -> MonteCarlo {
+        self.threads = threads;
+        self
+    }
+
+    /// Single-threaded variant (useful for micro-benchmark baselines).
+    pub fn serial(reps: usize, seed: u64) -> MonteCarlo {
+        MonteCarlo { reps, seed, threads: 1 }
+    }
+
+    fn effective_threads(&self) -> usize {
+        let t = if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.threads
+        };
+        t.clamp(1, self.reps.max(1))
+    }
+
+    /// Core driver: evaluate `scenario` with the given stream seed,
+    /// reusing `outcomes` as the replication buffer (batch entry points
+    /// amortize this allocation across calls).
+    fn run(
+        &self,
+        scenario: &Scenario,
+        seed: u64,
+        outcomes: &mut Vec<JobOutcome>,
+    ) -> Result<Estimate> {
+        if self.reps == 0 {
+            return Err(Error::Config("MonteCarlo needs reps >= 1".into()));
+        }
+        let n = scenario.workers;
+        let randomized = matches!(scenario.policy, Policy::RandomNonOverlapping { .. });
+        // Materialize a layout up front: deterministic policies keep it
+        // for every replication; for randomizing policies this is a
+        // feasibility probe so errors surface before threads spawn.
+        let mut layout_rng = Pcg64::new(substream(seed, LAYOUT_STREAM));
+        let probe = scenario.policy.layout(n, &mut layout_rng)?;
+        let fixed_sim = if randomized {
+            None
+        } else {
+            Some(
+                JobSimulator::new(probe, scenario.tau.clone())
+                    .with_failures(scenario.failures),
+            )
+        };
+
+        let threads = self.effective_threads();
+        outcomes.clear();
+        outcomes.resize(self.reps, JobOutcome::Failed);
+
+        let sample_one = |rep: usize| -> JobOutcome {
+            let mut rng = Pcg64::new(substream(seed, rep as u64));
+            match &fixed_sim {
+                Some(sim) => sim.sample(&mut rng),
+                None => {
+                    let layout = scenario
+                        .policy
+                        .layout(n, &mut rng)
+                        .expect("feasibility probed before replication");
+                    JobSimulator::new(layout, scenario.tau.clone())
+                        .with_failures(scenario.failures)
+                        .sample(&mut rng)
+                }
+            }
+        };
+
+        if threads <= 1 {
+            for (rep, slot) in outcomes.iter_mut().enumerate() {
+                *slot = sample_one(rep);
+            }
+        } else {
+            let chunk = self.reps.div_ceil(threads);
+            std::thread::scope(|scope| {
+                for (ci, slice) in outcomes.chunks_mut(chunk).enumerate() {
+                    let sample_one = &sample_one;
+                    scope.spawn(move || {
+                        for (i, slot) in slice.iter_mut().enumerate() {
+                            *slot = sample_one(ci * chunk + i);
+                        }
+                    });
+                }
+            });
+        }
+
+        // Serial reduction in replication order: float accumulation is
+        // independent of the thread partition above.
+        let mut summary = Summary::new();
+        let mut failed = 0usize;
+        for outcome in outcomes.iter() {
+            match outcome {
+                JobOutcome::Done(t) => summary.record(*t),
+                JobOutcome::Failed => failed += 1,
+            }
+        }
+        let completed = self.reps - failed;
+        let provenance = Provenance::MonteCarlo { reps: self.reps, seed, threads };
+        if completed == 0 {
+            // Every replication failed coverage: there is no completion
+            // time to summarize. Report that explicitly instead of
+            // leaking NaNs out of an empty Summary.
+            return Ok(Estimate {
+                mean: f64::NAN,
+                ci95: f64::NAN,
+                cov: f64::NAN,
+                p50: f64::NAN,
+                p95: f64::NAN,
+                p99: f64::NAN,
+                failure_rate: 1.0,
+                replications: self.reps,
+                completed: 0,
+                provenance,
+            });
+        }
+        Ok(Estimate {
+            mean: summary.mean(),
+            ci95: summary.ci95(),
+            cov: summary.cov(),
+            p50: summary.quantile(0.50),
+            p95: summary.quantile(0.95),
+            p99: summary.quantile(0.99),
+            failure_rate: failed as f64 / self.reps as f64,
+            replications: self.reps,
+            completed,
+            provenance,
+        })
+    }
+}
+
+impl Default for MonteCarlo {
+    fn default() -> MonteCarlo {
+        MonteCarlo::new(crate::eval::DEFAULT_REPS, 0xD15EA5E)
+    }
+}
+
+impl Estimator for MonteCarlo {
+    fn evaluate(&self, scenario: &Scenario) -> Result<Estimate> {
+        self.run(scenario, self.seed, &mut Vec::new())
+    }
+
+    fn evaluate_at(&self, scenario: &Scenario, index: u64) -> Result<Estimate> {
+        self.run(scenario, substream(self.seed, index), &mut Vec::new())
+    }
+
+    fn evaluate_many(&self, scenarios: &[Scenario]) -> Result<Vec<Estimate>> {
+        // One replication buffer amortized across the whole batch.
+        let mut outcomes = Vec::with_capacity(self.reps);
+        let mut estimates = Vec::with_capacity(scenarios.len());
+        for (i, scenario) in scenarios.iter().enumerate() {
+            estimates.push(self.run(
+                scenario,
+                substream(self.seed, i as u64),
+                &mut outcomes,
+            )?);
+        }
+        Ok(estimates)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::closed_form;
+    use crate::dist::ServiceDist;
+    use crate::sim::job::FailureModel;
+
+    #[test]
+    fn matches_closed_form_within_ci() {
+        let tau = ServiceDist::shifted_exp(0.05, 1.0);
+        for b in [1usize, 4, 20] {
+            let est = MonteCarlo::new(30_000, 42)
+                .evaluate(&Scenario::balanced(20, b, tau.clone()))
+                .unwrap();
+            let want = closed_form::sexp_mean(20, b, 0.05, 1.0);
+            assert!(
+                (est.mean - want).abs() < 4.0 * est.ci95.max(1e-3),
+                "B={b}: {} vs {want} (ci {})",
+                est.mean,
+                est.ci95
+            );
+            assert_eq!(est.failure_rate, 0.0);
+            assert_eq!(est.completed, 30_000);
+            assert!(est.p50 <= est.p95 && est.p95 <= est.p99);
+        }
+    }
+
+    #[test]
+    fn bit_identical_across_thread_counts() {
+        let tau = ServiceDist::pareto(1.0, 2.5);
+        let scenario = Scenario::balanced(20, 4, tau);
+        let serial = MonteCarlo::serial(5_000, 7).evaluate(&scenario).unwrap();
+        for threads in [2usize, 3, 4, 8] {
+            let par = MonteCarlo { reps: 5_000, seed: 7, threads }
+                .evaluate(&scenario)
+                .unwrap();
+            assert_eq!(serial.mean.to_bits(), par.mean.to_bits(), "{threads} threads");
+            assert_eq!(serial.cov.to_bits(), par.cov.to_bits());
+            assert_eq!(serial.p99.to_bits(), par.p99.to_bits());
+            assert_eq!(serial.failure_rate, par.failure_rate);
+        }
+    }
+
+    #[test]
+    fn randomized_layouts_are_thread_invariant_too() {
+        let scenario = Scenario::new(
+            20,
+            Policy::RandomNonOverlapping { batches: 5 },
+            ServiceDist::exp(1.0),
+        );
+        let a = MonteCarlo::serial(4_000, 3).evaluate(&scenario).unwrap();
+        let b = MonteCarlo { reps: 4_000, seed: 3, threads: 4 }
+            .evaluate(&scenario)
+            .unwrap();
+        assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+        assert_eq!(a.failure_rate, b.failure_rate);
+        assert!(a.failure_rate > 0.0, "random B=5 on N=20 should fail sometimes");
+    }
+
+    #[test]
+    fn distinct_seeds_give_distinct_estimates() {
+        let scenario = Scenario::balanced(10, 2, ServiceDist::exp(1.0));
+        let a = MonteCarlo::new(1_000, 7).evaluate(&scenario).unwrap();
+        let b = MonteCarlo::new(1_000, 7).evaluate(&scenario).unwrap();
+        let c = MonteCarlo::new(1_000, 8).evaluate(&scenario).unwrap();
+        assert_eq!(a.mean, b.mean);
+        assert_ne!(a.mean, c.mean);
+    }
+
+    #[test]
+    fn all_replications_failing_is_explicit() {
+        // every worker crashes: no replication can complete
+        let scenario = Scenario::balanced(8, 2, ServiceDist::exp(1.0))
+            .with_failures(FailureModel::Crash { p: 1.0 });
+        let est = MonteCarlo::new(500, 1).evaluate(&scenario).unwrap();
+        assert!(est.all_failed());
+        assert_eq!(est.completed, 0);
+        assert_eq!(est.failure_rate, 1.0);
+        assert!(est.mean.is_nan() && est.ci95.is_nan() && est.cov.is_nan());
+        assert!(est.p50.is_nan() && est.p99.is_nan());
+    }
+
+    #[test]
+    fn evaluate_many_matches_evaluate_at() {
+        let mc = MonteCarlo::new(2_000, 11);
+        let scenarios: Vec<Scenario> = [1usize, 2, 5]
+            .iter()
+            .map(|&b| Scenario::balanced(10, b, ServiceDist::exp(1.0)))
+            .collect();
+        let batch = mc.evaluate_many(&scenarios).unwrap();
+        for (i, s) in scenarios.iter().enumerate() {
+            let single = mc.evaluate_at(s, i as u64).unwrap();
+            assert_eq!(batch[i].mean.to_bits(), single.mean.to_bits(), "item {i}");
+        }
+        // different items run on different substreams
+        assert_ne!(batch[0].provenance, batch[1].provenance);
+    }
+
+    #[test]
+    fn infeasible_scenario_is_error() {
+        let s = Scenario::balanced(10, 3, ServiceDist::exp(1.0));
+        assert!(MonteCarlo::new(10, 0).evaluate(&s).is_err());
+        let s = Scenario::balanced(10, 2, ServiceDist::exp(1.0));
+        assert!(MonteCarlo::new(0, 0).evaluate(&s).is_err());
+    }
+}

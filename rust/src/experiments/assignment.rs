@@ -5,8 +5,8 @@ use crate::analysis::closed_form::numeric_mean_var_assignment;
 use crate::analysis::majorization::{all_assignments, balanced, majorizes};
 use crate::batching::Policy;
 use crate::dist::ServiceDist;
+use crate::eval::{Estimator, MonteCarlo, Scenario};
 use crate::metrics::{fnum, Table};
-use crate::sim::montecarlo::simulate_policy;
 use crate::util::error::Result;
 
 /// One assignment-comparison row.
@@ -32,23 +32,33 @@ pub fn run(
     assert!(n % b == 0);
     let batch = ServiceDist::scaled((n / b) as f64, tau.clone());
     let bal = balanced(n, b);
-    let mut rows = Vec::new();
-    for a in all_assignments(n, b) {
-        let (mean_numeric, _) = numeric_mean_var_assignment(&a, &batch);
-        let est = simulate_policy(
-            n,
-            &Policy::UnbalancedNonOverlapping { assignment: a.clone() },
-            tau,
-            reps,
-            seed ^ a.iter().fold(0u64, |h, &x| h.wrapping_mul(31).wrapping_add(x as u64)),
-        )?;
-        rows.push(AssignmentRow {
-            majorizes_balanced: majorizes(&a, &bal) && a != bal,
-            assignment: a,
-            mean_numeric,
-            mean_mc: est.mean,
-        });
-    }
+    let assignments = all_assignments(n, b);
+    // batched evaluation: one substream per assignment shape, one
+    // shared replication buffer
+    let scenarios: Vec<Scenario> = assignments
+        .iter()
+        .map(|a| {
+            Scenario::new(
+                n,
+                Policy::UnbalancedNonOverlapping { assignment: a.clone() },
+                tau.clone(),
+            )
+        })
+        .collect();
+    let ests = MonteCarlo::new(reps, seed).evaluate_many(&scenarios)?;
+    let mut rows: Vec<AssignmentRow> = assignments
+        .into_iter()
+        .zip(ests)
+        .map(|(a, est)| {
+            let (mean_numeric, _) = numeric_mean_var_assignment(&a, &batch);
+            AssignmentRow {
+                majorizes_balanced: majorizes(&a, &bal) && a != bal,
+                assignment: a,
+                mean_numeric,
+                mean_mc: est.mean,
+            }
+        })
+        .collect();
     // sort by numeric mean so the table reads best-to-worst
     rows.sort_by(|x, y| x.mean_numeric.partial_cmp(&y.mean_numeric).unwrap());
     Ok(rows)

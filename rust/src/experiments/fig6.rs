@@ -6,8 +6,8 @@
 
 use crate::batching::Policy;
 use crate::dist::ServiceDist;
+use crate::eval::{Estimator, MonteCarlo, Scenario};
 use crate::metrics::{fnum, SeriesExport, Table};
-use crate::sim::montecarlo::simulate_policy;
 use crate::util::error::Result;
 
 /// Mean compute time of the three Fig. 5 schemes at one service rate.
@@ -24,17 +24,23 @@ pub struct SchemeComparison {
 pub fn run(mus: &[f64], reps: usize, seed: u64) -> Result<Vec<SchemeComparison>> {
     let n = 6;
     let b = 3;
+    let mc = MonteCarlo::new(reps, seed);
     mus.iter()
         .map(|&mu| {
             let tau = ServiceDist::exp(mu);
-            let est = |policy: &Policy, salt: u64| -> Result<f64> {
-                Ok(simulate_policy(n, policy, &tau, reps, seed ^ salt)?.mean)
-            };
+            // one batched evaluation per μ: each scheme gets its own
+            // substream, the replication buffer is shared
+            let scenarios = [
+                Scenario::new(n, Policy::CyclicOverlapping { batches: b }, tau.clone()),
+                Scenario::new(n, Policy::HybridOverlapping { batches: b }, tau.clone()),
+                Scenario::new(n, Policy::BalancedNonOverlapping { batches: b }, tau),
+            ];
+            let ests = mc.evaluate_many(&scenarios)?;
             Ok(SchemeComparison {
                 mu,
-                cyclic: est(&Policy::CyclicOverlapping { batches: b }, 1)?,
-                hybrid: est(&Policy::HybridOverlapping { batches: b }, 2)?,
-                nonoverlap: est(&Policy::BalancedNonOverlapping { batches: b }, 3)?,
+                cyclic: ests[0].mean,
+                hybrid: ests[1].mean,
+                nonoverlap: ests[2].mean,
             })
         })
         .collect()

@@ -4,10 +4,9 @@
 
 use crate::analysis::closed_form::{sexp_cov, sexp_mean};
 use crate::analysis::optimizer::feasible_b;
-use crate::batching::Policy;
 use crate::dist::ServiceDist;
+use crate::eval::{Estimator, MonteCarlo};
 use crate::metrics::{fnum, SeriesExport, Table};
-use crate::sim::montecarlo::simulate_policy;
 use crate::util::error::Result;
 
 /// Paper parameters.
@@ -92,19 +91,13 @@ pub fn mc_crosscheck(
     seed: u64,
 ) -> Result<Vec<(usize, f64, f64, f64)>> {
     let tau = ServiceDist::shifted_exp(DELTA, mu);
-    feasible_b(N)
+    let sweep = MonteCarlo::new(reps, seed).sweep(N, &tau)?;
+    Ok(sweep
         .into_iter()
-        .map(|b| {
-            let est = simulate_policy(
-                N,
-                &Policy::BalancedNonOverlapping { batches: b },
-                &tau,
-                reps,
-                seed ^ b as u64,
-            )?;
-            Ok((b, sexp_mean(N, b, DELTA, mu), est.mean, est.ci95))
+        .map(|(op, est)| {
+            (op.batches, sexp_mean(N, op.batches, DELTA, mu), est.mean, est.ci95)
         })
-        .collect()
+        .collect())
 }
 
 #[cfg(test)]

@@ -3,10 +3,9 @@
 
 use crate::analysis::closed_form::{pareto_cov, pareto_mean};
 use crate::analysis::optimizer::{feasible_b, pareto_alpha_star};
-use crate::batching::Policy;
 use crate::dist::ServiceDist;
+use crate::eval::{Estimator, MonteCarlo};
 use crate::metrics::{fnum, SeriesExport, Table};
-use crate::sim::montecarlo::simulate_policy;
 use crate::util::error::Result;
 
 pub const N: usize = 100;
@@ -95,19 +94,13 @@ pub fn mc_crosscheck(
     seed: u64,
 ) -> Result<Vec<(usize, f64, f64, f64)>> {
     let tau = ServiceDist::pareto(SIGMA, alpha);
-    feasible_b(N)
+    let sweep = MonteCarlo::new(reps, seed).sweep(N, &tau)?;
+    Ok(sweep
         .into_iter()
-        .map(|b| {
-            let est = simulate_policy(
-                N,
-                &Policy::BalancedNonOverlapping { batches: b },
-                &tau,
-                reps,
-                seed ^ b as u64,
-            )?;
-            Ok((b, pareto_mean(N, b, SIGMA, alpha), est.mean, est.ci95))
+        .map(|(op, est)| {
+            (op.batches, pareto_mean(N, op.batches, SIGMA, alpha), est.mean, est.ci95)
         })
-        .collect()
+        .collect())
 }
 
 #[cfg(test)]

@@ -18,5 +18,6 @@ pub mod regimes;
 pub mod traces_exp;
 
 /// Standard Monte-Carlo replication count used by the figure
-/// experiments (overridable per call).
-pub const DEFAULT_REPS: usize = 20_000;
+/// experiments (overridable per call) — one source of truth with the
+/// estimator backends' default.
+pub const DEFAULT_REPS: usize = crate::eval::DEFAULT_REPS;

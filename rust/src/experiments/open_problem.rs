@@ -103,18 +103,17 @@ mod tests {
     #[test]
     fn monte_carlo_agrees_with_numeric_for_gamma() {
         use crate::batching::Policy;
-        use crate::sim::montecarlo::simulate_policy;
+        use crate::eval::{Estimator, MonteCarlo, Scenario};
         let tau = ServiceDist::gamma_dist(2.0, 1.0);
         let rows = explore(8, 2, &tau).unwrap();
         for r in rows.iter().take(2) {
-            let est = simulate_policy(
-                8,
-                &Policy::UnbalancedNonOverlapping { assignment: r.assignment.clone() },
-                &tau,
-                30_000,
-                3,
-            )
-            .unwrap();
+            let est = MonteCarlo::new(30_000, 3)
+                .evaluate(&Scenario::new(
+                    8,
+                    Policy::UnbalancedNonOverlapping { assignment: r.assignment.clone() },
+                    tau.clone(),
+                ))
+                .unwrap();
             assert!(
                 (est.mean - r.mean).abs() / r.mean < 0.03,
                 "{:?}: mc {} vs numeric {}",

@@ -9,10 +9,8 @@
 //! the empirical distribution, sweep the redundancy level by
 //! trace-driven simulation — is the paper's.
 
-use crate::analysis::optimizer::feasible_b;
-use crate::batching::Policy;
+use crate::eval::{substream, Estimator, MonteCarlo};
 use crate::metrics::{fnum, SeriesExport, Table};
-use crate::sim::montecarlo::simulate_policy;
 use crate::traces::{job_ccdf, GeneratorConfig, JobAnalysis, Trace};
 use crate::util::error::Result;
 
@@ -54,17 +52,10 @@ pub fn job_sweep(
         .ok_or_else(|| crate::util::error::Error::Config(format!("job {job_id} empty")))?;
     let n = analysis.n_tasks;
     let tau = analysis.service_dist();
-    let mut rows = Vec::new();
-    for b in feasible_b(n) {
-        let est = simulate_policy(
-            n,
-            &Policy::BalancedNonOverlapping { batches: b },
-            &tau,
-            reps,
-            seed ^ (job_id << 32) ^ b as u64,
-        )?;
-        rows.push((b, est.mean));
-    }
+    // per-job stream, per-B substream inside sweep()
+    let mc = MonteCarlo::new(reps, substream(seed, job_id));
+    let rows: Vec<(usize, f64)> =
+        mc.sweep(n, &tau)?.into_iter().map(|(op, est)| (op.batches, est.mean)).collect();
     let baseline = rows.last().expect("non-empty").1; // B = N (no redundancy)
     Ok(rows.into_iter().map(|(b, m)| (b, m / baseline)).collect())
 }

@@ -4,8 +4,20 @@
 //! Straggler Mitigation in Distributed Computing"* (Behrouzi-Far &
 //! Soljanin, 2020).
 //!
-//! The crate implements the paper's full system and every substrate it
-//! depends on:
+//! The crate is organized around one question — *what do job compute
+//! times look like for a `(N, policy, τ)` scenario?* — asked through
+//! one interface:
+//!
+//! * [`eval`] — the unified evaluation API. An [`eval::Scenario`] names
+//!   the question, an [`eval::Estimate`] is the rich answer (mean ± CI,
+//!   CoV, p50/p95/p99, failure rate, provenance), and the
+//!   [`eval::Estimator`] trait abstracts the backend: exact closed
+//!   forms ([`eval::Analytic`]), a thread-parallel seed-stable
+//!   simulator ([`eval::MonteCarlo`]), or analytic-with-MC-fallback
+//!   ([`eval::Auto`]). Everything above — planner, experiments, CLI,
+//!   benches — consumes this trait.
+//!
+//! The substrates underneath:
 //!
 //! * [`dist`] — service-time distributions (Exponential,
 //!   Shifted-Exponential, Pareto, Weibull, Bimodal, Empirical) plus the
@@ -17,12 +29,15 @@
 //! * [`analysis`] — closed forms for E\[T\] and CoV\[T\] (eqs. 18, 19,
 //!   21, 22, 24, 26), Stirling-number coverage probabilities (Lemma 1),
 //!   majorization (Lemmas 2–3), and the discrete optimizers + regime
-//!   classification of Theorems 5–10.
-//! * [`sim`] — a discrete-event Monte-Carlo simulator for job compute
-//!   time under any policy/distribution pair.
+//!   classification of Theorems 5–10. The [`eval::Analytic`] backend is
+//!   the supported way in.
+//! * [`sim`] — the job-level discrete-event simulator that
+//!   [`eval::MonteCarlo`] replicates over (with failure injection).
 //! * [`planner`] — the redundancy planner: given N and a service-time
 //!   model (analytic or fitted from traces), chooses the batch count B
-//!   minimizing mean compute time, CoV, or a weighted trade-off.
+//!   minimizing mean compute time, CoV, or a weighted trade-off. One
+//!   code path ([`planner::Planner::plan_with`]) parameterized by any
+//!   [`eval::Estimator`].
 //! * [`coordinator`] — a live master–worker engine (threads + channels)
 //!   that applies a replication plan to real gradient computations
 //!   executed through [`runtime`] (PJRT/XLA artifacts compiled AOT from
@@ -36,13 +51,32 @@
 //!
 //! ```no_run
 //! use replica::dist::ServiceDist;
-//! use replica::planner::{Planner, Objective};
+//! use replica::eval::{Auto, Estimator, Scenario};
+//! use replica::planner::{Objective, Planner};
 //!
 //! // N = 100 workers, task service times ~ SExp(Δ=0.05, μ=1.0)
 //! let dist = ServiceDist::shifted_exp(0.05, 1.0);
-//! let plan = Planner::new(100, dist).plan(Objective::MeanCompletion);
+//!
+//! // 1. Ask the planner for the optimal number of batches.
+//! let plan = Planner::new(100, dist.clone()).plan(Objective::MeanCompletion);
 //! println!("optimal number of batches B = {}", plan.batches);
+//!
+//! // 2. Evaluate any scenario through the unified estimator API.
+//! //    Auto answers with closed forms when exact and falls back to
+//! //    seed-stable multi-threaded Monte-Carlo otherwise.
+//! let est = Auto::default()
+//!     .evaluate(&Scenario::balanced(100, plan.batches, dist))
+//!     .unwrap();
+//! println!(
+//!     "E[T] = {:.4} (p99 {:.4}, via {})",
+//!     est.mean,
+//!     est.p99,
+//!     est.provenance.backend()
+//! );
 //! ```
+//!
+//! See `examples/estimator_backends.rs` for the three backends compared
+//! side by side on one scenario.
 
 pub mod analysis;
 pub mod batching;
@@ -50,6 +84,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod dist;
+pub mod eval;
 pub mod experiments;
 pub mod metrics;
 pub mod planner;

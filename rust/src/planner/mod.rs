@@ -10,15 +10,16 @@
 //! * [`Objective::Tradeoff`] — a weighted blend (the "system
 //!   administrator's middle point" of §VI-A).
 //!
-//! Plans are produced analytically (closed forms) by default, or by
-//! Monte-Carlo search ([`Planner::plan_simulated`]) for distributions
-//! without closed forms (empirical/bimodal).
+//! All planning flows through one code path, [`Planner::plan_with`],
+//! parameterized by an [`Estimator`] backend: [`Planner::plan`] uses
+//! [`Auto`] (closed forms where exact, Monte-Carlo otherwise), while
+//! [`Planner::plan_simulated`] forces [`MonteCarlo`] — useful when you
+//! want simulation-grade numbers even where closed forms exist.
 
-use crate::analysis::closed_form;
 use crate::analysis::optimizer::{self, Regime};
-use crate::batching::{operating_points, Policy};
+use crate::batching::Policy;
 use crate::dist::{ServiceDist, TailFit};
-use crate::sim::montecarlo::simulate_policy;
+use crate::eval::{Auto, Estimator, MonteCarlo, Scenario};
 use crate::util::error::Result;
 
 /// Planning objective.
@@ -81,31 +82,84 @@ impl Planner {
         &self.tau
     }
 
-    /// Analytic plan via the paper's closed forms / optimizers.
+    /// Default plan: closed forms where the family has them, transparent
+    /// Monte-Carlo (default budget) otherwise.
     pub fn plan(&self, objective: Objective) -> Plan {
-        let (b, _) = match objective {
-            Objective::MeanCompletion => optimizer::optimal_b_mean(self.n, &self.tau),
-            Objective::Predictability => optimizer::optimal_b_cov(self.n, &self.tau),
-            Objective::Tradeoff(w) => optimizer::optimal_b_tradeoff(self.n, &self.tau, w),
-        };
-        self.plan_at(b, objective)
+        self.plan_with(objective, &Auto::default())
+            .expect("Auto evaluation cannot fail on the feasible spectrum")
+    }
+
+    /// Monte-Carlo plan: exhaustive search over the feasible spectrum by
+    /// simulation, with per-point substreams derived from `seed`.
+    pub fn plan_simulated(
+        &self,
+        objective: Objective,
+        reps: usize,
+        seed: u64,
+    ) -> Result<Plan> {
+        self.plan_with(objective, &MonteCarlo::new(reps, seed))
+    }
+
+    /// The one planning code path: sweep the spectrum with `estimator`,
+    /// score every operating point under `objective`, materialize the
+    /// winner.
+    pub fn plan_with<E: Estimator + ?Sized>(
+        &self,
+        objective: Objective,
+        estimator: &E,
+    ) -> Result<Plan> {
+        let sweep = self.sweep_with(estimator)?;
+        // normalization anchors for the tradeoff objective
+        let min_mean = sweep.iter().map(|p| p.mean).fold(f64::INFINITY, f64::min);
+        let min_cov = sweep.iter().map(|p| p.cov).fold(f64::INFINITY, f64::min);
+        let mut best: Option<(SweepPoint, f64)> = None;
+        for p in &sweep {
+            let score = match objective {
+                Objective::MeanCompletion => p.mean,
+                Objective::Predictability => p.cov,
+                Objective::Tradeoff(w) => {
+                    w * p.mean / min_mean.max(1e-300)
+                        + (1.0 - w) * p.cov / min_cov.max(1e-300)
+                }
+            };
+            if best.as_ref().map_or(true, |(_, s)| score < *s) {
+                best = Some((*p, score));
+            }
+        }
+        let (chosen, _) = best.expect("spectrum is never empty");
+        let baseline = sweep.last().expect("non-empty").mean; // B = N
+        Ok(Plan {
+            workers: self.n,
+            batches: chosen.batches,
+            batch_size: self.n / chosen.batches,
+            replication: self.n / chosen.batches,
+            policy: Policy::BalancedNonOverlapping { batches: chosen.batches },
+            predicted_mean: chosen.mean,
+            predicted_cov: chosen.cov,
+            speedup_vs_no_redundancy: baseline / chosen.mean,
+            regime: self.regime(objective),
+        })
     }
 
     /// Materialize the plan at a specific operating point B.
     pub fn plan_at(&self, b: usize, objective: Objective) -> Plan {
         assert!(self.n % b == 0, "B must divide N");
-        let mean = closed_form::mean_t(self.n, b, &self.tau);
-        let cov = closed_form::cov_t(self.n, b, &self.tau);
-        let baseline = closed_form::mean_t(self.n, self.n, &self.tau);
+        let auto = Auto::default();
+        let at = |batches: usize| {
+            auto.evaluate(&Scenario::balanced(self.n, batches, self.tau.clone()))
+                .expect("Auto evaluation cannot fail for feasible B")
+        };
+        let est = at(b);
+        let baseline = at(self.n);
         Plan {
             workers: self.n,
             batches: b,
             batch_size: self.n / b,
             replication: self.n / b,
             policy: Policy::BalancedNonOverlapping { batches: b },
-            predicted_mean: mean,
-            predicted_cov: cov,
-            speedup_vs_no_redundancy: baseline / mean,
+            predicted_mean: est.mean,
+            predicted_cov: est.cov,
+            speedup_vs_no_redundancy: baseline.mean / est.mean,
             regime: self.regime(objective),
         }
     }
@@ -139,73 +193,32 @@ impl Planner {
         }
     }
 
-    /// Monte-Carlo plan: exhaustive search over the feasible spectrum by
-    /// simulation — the only option for empirical/bimodal τ.
-    pub fn plan_simulated(
-        &self,
-        objective: Objective,
-        reps: usize,
-        seed: u64,
-    ) -> Result<Plan> {
-        let mut best: Option<(usize, f64, f64, f64)> = None; // (B, score, mean, cov)
-        let sweep = self.sweep_simulated(reps, seed)?;
-        // normalization anchors for the tradeoff objective
-        let min_mean = sweep.iter().map(|p| p.mean).fold(f64::INFINITY, f64::min);
-        let min_cov = sweep.iter().map(|p| p.cov).fold(f64::INFINITY, f64::min);
-        for p in &sweep {
-            let score = match objective {
-                Objective::MeanCompletion => p.mean,
-                Objective::Predictability => p.cov,
-                Objective::Tradeoff(w) => {
-                    w * p.mean / min_mean.max(1e-300) + (1.0 - w) * p.cov / min_cov.max(1e-300)
-                }
-            };
-            if best.map_or(true, |(_, s, _, _)| score < s) {
-                best = Some((p.batches, score, p.mean, p.cov));
-            }
-        }
-        let (b, _, mean, cov) = best.expect("spectrum is never empty");
-        let baseline = sweep.last().expect("non-empty").mean;
-        Ok(Plan {
-            workers: self.n,
-            batches: b,
-            batch_size: self.n / b,
-            replication: self.n / b,
-            policy: Policy::BalancedNonOverlapping { batches: b },
-            predicted_mean: mean,
-            predicted_cov: cov,
-            speedup_vs_no_redundancy: baseline / mean,
-            regime: None,
-        })
-    }
-
-    /// Analytic spectrum sweep: (B, E[T], CoV) at every feasible B.
+    /// Default spectrum sweep: (B, E[T], CoV) at every feasible B via
+    /// the [`Auto`] backend.
     pub fn sweep(&self) -> Vec<SweepPoint> {
-        operating_points(self.n)
-            .into_iter()
-            .map(|op| SweepPoint {
-                batches: op.batches,
-                mean: closed_form::mean_t(self.n, op.batches, &self.tau),
-                cov: closed_form::cov_t(self.n, op.batches, &self.tau),
-            })
-            .collect()
+        self.sweep_with(&Auto::default())
+            .expect("Auto evaluation cannot fail on the feasible spectrum")
     }
 
-    /// Simulated spectrum sweep.
+    /// Simulated spectrum sweep (forces Monte-Carlo everywhere).
     pub fn sweep_simulated(&self, reps: usize, seed: u64) -> Result<Vec<SweepPoint>> {
-        operating_points(self.n)
+        self.sweep_with(&MonteCarlo::new(reps, seed))
+    }
+
+    /// Spectrum sweep through any estimator backend.
+    pub fn sweep_with<E: Estimator + ?Sized>(
+        &self,
+        estimator: &E,
+    ) -> Result<Vec<SweepPoint>> {
+        Ok(estimator
+            .sweep(self.n, &self.tau)?
             .into_iter()
-            .map(|op| {
-                let est = simulate_policy(
-                    self.n,
-                    &Policy::BalancedNonOverlapping { batches: op.batches },
-                    &self.tau,
-                    reps,
-                    seed ^ (op.batches as u64).wrapping_mul(0x9E3779B97F4A7C15),
-                )?;
-                Ok(SweepPoint { batches: op.batches, mean: est.mean, cov: est.cov })
+            .map(|(op, est)| SweepPoint {
+                batches: op.batches,
+                mean: est.mean,
+                cov: est.cov,
             })
-            .collect()
+            .collect())
     }
 
     /// Pareto-efficient frontier of (E\[T\], CoV): points not dominated
@@ -239,6 +252,8 @@ pub fn plan_from_samples(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::analysis::closed_form;
+    use crate::eval::Analytic;
     use crate::util::rng::Pcg64;
 
     #[test]
@@ -267,6 +282,23 @@ mod tests {
     }
 
     #[test]
+    fn plan_matches_closed_form_optimizer() {
+        // the estimator-driven sweep must agree with the direct argmin
+        // over the closed forms for every family that has them
+        for tau in [
+            ServiceDist::exp(1.0),
+            ServiceDist::shifted_exp(0.05, 1.0),
+            ServiceDist::pareto(1.0, 2.5),
+        ] {
+            let p = Planner::new(100, tau.clone());
+            let plan = p.plan(Objective::MeanCompletion);
+            let (b_star, val) = crate::analysis::optimizer::optimal_b_mean(100, &tau);
+            assert_eq!(plan.batches, b_star, "{}", tau.label());
+            assert!((plan.predicted_mean - val).abs() < 1e-12);
+        }
+    }
+
+    #[test]
     fn sexp_middle_regime_is_interior() {
         let p = Planner::new(100, ServiceDist::shifted_exp(0.05, 1.0));
         let plan = p.plan(Objective::MeanCompletion);
@@ -290,6 +322,15 @@ mod tests {
             analytic.batches,
             analytic.predicted_mean
         );
+    }
+
+    #[test]
+    fn plan_with_takes_any_backend() {
+        let p = Planner::new(20, ServiceDist::exp(1.0));
+        let exact = p.plan_with(Objective::MeanCompletion, &Analytic).unwrap();
+        let auto = p.plan_with(Objective::MeanCompletion, &Auto::default()).unwrap();
+        assert_eq!(exact.batches, auto.batches);
+        assert_eq!(exact.predicted_mean, auto.predicted_mean);
     }
 
     #[test]

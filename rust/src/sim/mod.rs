@@ -9,8 +9,9 @@
 //!   `T = max_task min_{worker ∋ task} S_worker` (first-copy-wins per
 //!   batch, all batches required — eqs. (8)–(9) generalized to
 //!   arbitrary overlap), with optional worker failure injection.
-//! * [`montecarlo`] — replication driver producing mean/CoV estimates
-//!   with confidence intervals.
+//! * [`montecarlo`] — the legacy replication shim; the maintained
+//!   driver is [`crate::eval::MonteCarlo`] behind the
+//!   [`crate::eval::Estimator`] trait.
 //!
 //! [`Layout`]: crate::batching::Layout
 
@@ -20,4 +21,5 @@ pub mod montecarlo;
 
 pub use event::{Event, EventQueue};
 pub use job::{FailureModel, JobOutcome, JobSimulator};
+#[allow(deprecated)]
 pub use montecarlo::{simulate_policy, McEstimate};

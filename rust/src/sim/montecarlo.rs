@@ -1,13 +1,19 @@
-//! Monte-Carlo replication driver.
+//! Monte-Carlo replication driver — legacy entry point.
+//!
+//! The actual driver now lives in [`crate::eval::MonteCarlo`];
+//! [`simulate_policy`] survives as a thin shim for old call sites and
+//! will be removed once nothing links against it.
 
 use crate::batching::Policy;
 use crate::dist::ServiceDist;
-use crate::metrics::Summary;
-use crate::sim::job::{JobOutcome, JobSimulator};
+use crate::eval::{Estimate, Estimator, MonteCarlo, Scenario};
 use crate::util::error::Result;
-use crate::util::rng::Pcg64;
 
 /// Monte-Carlo estimate of job compute-time statistics.
+///
+/// When every replication fails coverage (`completed == 0`), `mean`,
+/// `ci95`, `cov` and the percentiles are all `NaN` and `failure_rate`
+/// is exactly 1.0 — see [`McEstimate::all_failed`].
 #[derive(Clone, Debug)]
 pub struct McEstimate {
     pub replications: usize,
@@ -26,11 +32,35 @@ pub struct McEstimate {
     pub p99: f64,
 }
 
+impl McEstimate {
+    /// True when zero replications completed: all statistics are `NaN`
+    /// and only `failure_rate` is meaningful.
+    pub fn all_failed(&self) -> bool {
+        self.replications > 0 && self.completed == 0
+    }
+}
+
+impl From<Estimate> for McEstimate {
+    fn from(e: Estimate) -> McEstimate {
+        McEstimate {
+            replications: e.replications,
+            completed: e.completed,
+            mean: e.mean,
+            ci95: e.ci95,
+            cov: e.cov,
+            failure_rate: e.failure_rate,
+            p50: e.p50,
+            p95: e.p95,
+            p99: e.p99,
+        }
+    }
+}
+
 /// Estimate compute-time statistics of a `(policy, τ)` pair on `n`
-/// workers with `reps` independent replications.
-///
-/// Layout-randomizing policies (random assignment) get a fresh layout
-/// per replication; deterministic policies reuse one layout.
+/// workers with `reps` independent replications (single-threaded).
+#[deprecated(
+    note = "use eval::MonteCarlo (or eval::Auto) through the eval::Estimator trait"
+)]
 pub fn simulate_policy(
     n: usize,
     policy: &Policy,
@@ -38,52 +68,19 @@ pub fn simulate_policy(
     reps: usize,
     seed: u64,
 ) -> Result<McEstimate> {
-    let mut rng = Pcg64::new(seed);
-    let mut summary = Summary::new();
-    let mut failed = 0usize;
-
-    let randomized = matches!(policy, Policy::RandomNonOverlapping { .. });
-    let fixed_sim = if randomized {
-        None
-    } else {
-        Some(JobSimulator::new(policy.layout(n, &mut rng)?, tau.clone()))
-    };
-
-    for _ in 0..reps {
-        let outcome = match &fixed_sim {
-            Some(sim) => sim.sample(&mut rng),
-            None => {
-                let layout = policy.layout(n, &mut rng)?;
-                JobSimulator::new(layout, tau.clone()).sample(&mut rng)
-            }
-        };
-        match outcome {
-            JobOutcome::Done(t) => summary.record(t),
-            JobOutcome::Failed => failed += 1,
-        }
-    }
-
-    let completed = reps - failed;
-    Ok(McEstimate {
-        replications: reps,
-        completed,
-        mean: summary.mean(),
-        ci95: summary.ci95(),
-        cov: summary.cov(),
-        failure_rate: failed as f64 / reps as f64,
-        p50: if completed > 0 { summary.quantile(0.50) } else { f64::NAN },
-        p95: if completed > 0 { summary.quantile(0.95) } else { f64::NAN },
-        p99: if completed > 0 { summary.quantile(0.99) } else { f64::NAN },
-    })
+    MonteCarlo::serial(reps, seed)
+        .evaluate(&Scenario::new(n, policy.clone(), tau.clone()))
+        .map(McEstimate::from)
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::analysis::closed_form;
 
     #[test]
-    fn estimate_matches_closed_form_with_ci() {
+    fn shim_matches_closed_form_with_ci() {
         let n = 20;
         let tau = ServiceDist::shifted_exp(0.05, 1.0);
         for b in [1usize, 4, 20] {
@@ -120,6 +117,18 @@ mod tests {
     }
 
     #[test]
+    fn shim_agrees_with_eval_backend_exactly() {
+        let tau = ServiceDist::exp(1.0);
+        let p = Policy::BalancedNonOverlapping { batches: 5 };
+        let shim = simulate_policy(10, &p, &tau, 2_000, 3).unwrap();
+        let direct = MonteCarlo::serial(2_000, 3)
+            .evaluate(&Scenario::new(10, p, tau))
+            .unwrap();
+        assert_eq!(shim.mean.to_bits(), direct.mean.to_bits());
+        assert_eq!(shim.p95.to_bits(), direct.p95.to_bits());
+    }
+
+    #[test]
     fn random_policy_reports_failures() {
         let est = simulate_policy(
             20,
@@ -131,6 +140,7 @@ mod tests {
         .unwrap();
         assert!(est.failure_rate > 0.3, "rate {}", est.failure_rate);
         assert!(est.completed > 0);
+        assert!(!est.all_failed());
     }
 
     #[test]

@@ -1,0 +1,188 @@
+//! Integration: the estimator backends agree with each other and keep
+//! their determinism contracts.
+
+use replica::batching::Policy;
+use replica::dist::ServiceDist;
+use replica::eval::{substream, Analytic, Auto, Estimator, MonteCarlo, Provenance, Scenario};
+use replica::sim::FailureModel;
+use replica::util::rng::Pcg64;
+
+/// Every closed-form `ServiceDist` family × every feasible B at N=20:
+/// `Analytic` and `MonteCarlo` agree within 4×CI on the mean, and the
+/// MC CoV lands near the analytic CoV.
+#[test]
+fn analytic_and_monte_carlo_agree_across_families_and_spectrum() {
+    let n = 20;
+    let families = vec![
+        ServiceDist::exp(1.0),
+        ServiceDist::shifted_exp(0.05, 1.0),
+        ServiceDist::pareto(1.0, 3.0),
+    ];
+    for tau in families {
+        let exact = Analytic.sweep(n, &tau).unwrap();
+        let sampled = MonteCarlo::new(20_000, 1234).sweep(n, &tau).unwrap();
+        assert_eq!(exact.len(), sampled.len());
+        for ((op, a), (_, mc)) in exact.iter().zip(&sampled) {
+            assert_eq!(a.provenance, Provenance::Analytic);
+            assert!(
+                (a.mean - mc.mean).abs() < (4.0 * mc.ci95).max(0.03 * a.mean),
+                "{} B={}: analytic {} vs mc {} (ci {})",
+                tau.label(),
+                op.batches,
+                a.mean,
+                mc.mean,
+                mc.ci95
+            );
+            // CoV needs a finite 4th moment for a stable sample-variance
+            // estimator: for Pareto the batch-level tail index is Nα/B,
+            // so only assert where Nα/B > 4.
+            let cov_reliable = match &tau {
+                ServiceDist::Pareto { alpha, .. } => {
+                    (n as f64) * *alpha > 4.0 * op.batches as f64
+                }
+                _ => true,
+            };
+            if cov_reliable {
+                assert!(
+                    (a.cov - mc.cov).abs() < 0.15 * a.cov.max(0.05),
+                    "{} B={}: analytic CoV {} vs mc {}",
+                    tau.label(),
+                    op.batches,
+                    a.cov,
+                    mc.cov
+                );
+            }
+            // analytic percentiles bracket the MC ones within noise
+            assert!(
+                (a.p99 - mc.p99).abs() < 0.25 * a.p99,
+                "{} B={}: analytic p99 {} vs mc {}",
+                tau.label(),
+                op.batches,
+                a.p99,
+                mc.p99
+            );
+        }
+    }
+}
+
+/// `MonteCarlo` with `threads: 1` and `threads: 4` produce bit-identical
+/// estimates for the same seed — on plain, randomized, and failing
+/// scenarios, and through the batched entry points.
+#[test]
+fn thread_count_never_changes_the_estimate() {
+    let scenarios = vec![
+        Scenario::balanced(20, 4, ServiceDist::shifted_exp(0.05, 1.0)),
+        Scenario::new(
+            20,
+            Policy::RandomNonOverlapping { batches: 5 },
+            ServiceDist::exp(1.0),
+        ),
+        Scenario::new(
+            6,
+            Policy::CyclicOverlapping { batches: 3 },
+            ServiceDist::pareto(1.0, 2.5),
+        ),
+        Scenario::balanced(10, 2, ServiceDist::exp(1.0))
+            .with_failures(FailureModel::Crash { p: 0.2 }),
+    ];
+    let one = MonteCarlo { reps: 6_000, seed: 99, threads: 1 };
+    let four = MonteCarlo { reps: 6_000, seed: 99, threads: 4 };
+    let serial = one.evaluate_many(&scenarios).unwrap();
+    let parallel = four.evaluate_many(&scenarios).unwrap();
+    for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+        assert_eq!(a.mean.to_bits(), b.mean.to_bits(), "scenario {i}");
+        assert_eq!(a.cov.to_bits(), b.cov.to_bits(), "scenario {i}");
+        assert_eq!(a.p50.to_bits(), b.p50.to_bits(), "scenario {i}");
+        assert_eq!(a.p95.to_bits(), b.p95.to_bits(), "scenario {i}");
+        assert_eq!(a.p99.to_bits(), b.p99.to_bits(), "scenario {i}");
+        assert_eq!(a.failure_rate, b.failure_rate, "scenario {i}");
+        assert_eq!(a.completed, b.completed, "scenario {i}");
+    }
+}
+
+/// `Auto` routes exactly as documented, with the choice visible in the
+/// provenance.
+#[test]
+fn auto_provenance_records_the_backend_choice() {
+    let auto = Auto::new(2_000, 8);
+    // closed-form ground: Exp/SExp/Pareto, balanced, no failures
+    for tau in [
+        ServiceDist::exp(1.0),
+        ServiceDist::shifted_exp(0.05, 1.0),
+        ServiceDist::pareto(1.0, 3.0),
+    ] {
+        let est = auto.evaluate(&Scenario::balanced(20, 5, tau.clone())).unwrap();
+        assert_eq!(est.provenance, Provenance::Analytic, "{}", tau.label());
+    }
+    // empirical and bimodal service fall back to MC
+    let mut rng = Pcg64::new(4);
+    let base = ServiceDist::exp(1.0);
+    let samples: Vec<f64> = (0..1_000).map(|_| base.sample(&mut rng)).collect();
+    for tau in [
+        ServiceDist::empirical(samples),
+        ServiceDist::bimodal(0.1, (0.1, 10.0), (5.0, 1.0)),
+    ] {
+        let est = auto.evaluate(&Scenario::balanced(20, 5, tau.clone())).unwrap();
+        assert!(
+            matches!(est.provenance, Provenance::MonteCarlo { .. }),
+            "{}",
+            tau.label()
+        );
+    }
+    // overlapping policies fall back to MC even for Exp service
+    for policy in [
+        Policy::CyclicOverlapping { batches: 3 },
+        Policy::HybridOverlapping { batches: 3 },
+        Policy::RandomNonOverlapping { batches: 3 },
+    ] {
+        let est =
+            auto.evaluate(&Scenario::new(6, policy.clone(), ServiceDist::exp(1.0))).unwrap();
+        assert!(
+            matches!(est.provenance, Provenance::MonteCarlo { .. }),
+            "{}",
+            policy.name()
+        );
+    }
+}
+
+/// The zero-completed degenerate case is explicit end-to-end.
+#[test]
+fn all_replications_failing_is_explicit_not_accidental_nan() {
+    let scenario = Scenario::balanced(10, 5, ServiceDist::exp(1.0))
+        .with_failures(FailureModel::Crash { p: 1.0 });
+    let est = MonteCarlo::new(300, 5).evaluate(&scenario).unwrap();
+    assert!(est.all_failed());
+    assert_eq!(est.replications, 300);
+    assert_eq!(est.completed, 0);
+    assert_eq!(est.failure_rate, 1.0);
+    for (name, v) in [
+        ("mean", est.mean),
+        ("ci95", est.ci95),
+        ("cov", est.cov),
+        ("p50", est.p50),
+        ("p95", est.p95),
+        ("p99", est.p99),
+    ] {
+        assert!(v.is_nan(), "{name} should be NaN when nothing completed, got {v}");
+    }
+}
+
+/// `substream` separates batch items: sweeping twice with the same seed
+/// reproduces itself exactly, while different indices differ.
+#[test]
+fn substreams_are_stable_and_distinct() {
+    let tau = ServiceDist::exp(1.0);
+    let mc = MonteCarlo::new(2_000, 31);
+    let a = mc.sweep(12, &tau).unwrap();
+    let b = mc.sweep(12, &tau).unwrap();
+    for ((_, x), (_, y)) in a.iter().zip(&b) {
+        assert_eq!(x.mean.to_bits(), y.mean.to_bits());
+    }
+    // distinct indices → distinct streams (the scenario is identical,
+    // so equal means would indicate stream reuse)
+    let s = Scenario::balanced(12, 2, tau);
+    let x = mc.evaluate_at(&s, 0).unwrap();
+    let y = mc.evaluate_at(&s, 1).unwrap();
+    assert_ne!(x.mean.to_bits(), y.mean.to_bits());
+    assert_ne!(substream(31, 0), substream(31, 1));
+}

@@ -1,11 +1,12 @@
-//! Integration: analysis ↔ simulation ↔ planner agree end-to-end.
+//! Integration: analysis ↔ simulation ↔ planner agree end-to-end,
+//! all through the `eval::Estimator` API.
 
 use replica::analysis::closed_form;
 use replica::analysis::optimizer::feasible_b;
 use replica::batching::Policy;
 use replica::dist::ServiceDist;
+use replica::eval::{Estimator, MonteCarlo, Scenario};
 use replica::planner::{Objective, Planner};
-use replica::sim::montecarlo::simulate_policy;
 
 /// The three closed-form families: simulation reproduces the analytic
 /// E[T] curve across the whole spectrum within CI.
@@ -19,20 +20,13 @@ fn closed_forms_match_simulation_across_spectrum() {
         ServiceDist::pareto(1.0, 3.0),
     ];
     for tau in cases {
-        for b in feasible_b(n) {
-            let analytic = closed_form::mean_t(n, b, &tau);
-            let est = simulate_policy(
-                n,
-                &Policy::BalancedNonOverlapping { batches: b },
-                &tau,
-                20_000,
-                9_000 + b as u64,
-            )
-            .unwrap();
+        for (op, est) in MonteCarlo::new(20_000, 9_000).sweep(n, &tau).unwrap() {
+            let analytic = closed_form::mean_t(n, op.batches, &tau);
             assert!(
                 (est.mean - analytic).abs() < (4.0 * est.ci95).max(0.03 * analytic),
-                "{} B={b}: sim {} vs analytic {analytic} (ci {})",
+                "{} B={}: sim {} vs analytic {analytic} (ci {})",
                 tau.label(),
+                op.batches,
                 est.mean,
                 est.ci95
             );
@@ -47,25 +41,16 @@ fn planner_choice_is_simulation_optimal() {
     let n = 20;
     for tau in [ServiceDist::shifted_exp(0.05, 1.0), ServiceDist::pareto(1.0, 2.0)] {
         let plan = Planner::new(n, tau.clone()).plan(Objective::MeanCompletion);
-        let planned = simulate_policy(
-            n,
-            &Policy::BalancedNonOverlapping { batches: plan.batches },
-            &tau,
-            30_000,
-            1,
-        )
-        .unwrap()
-        .mean;
-        for b in feasible_b(n) {
-            let other = simulate_policy(
-                n,
-                &Policy::BalancedNonOverlapping { batches: b },
-                &tau,
-                30_000,
-                2 + b as u64,
-            )
+        let mc = MonteCarlo::new(30_000, 1);
+        let planned = mc
+            .evaluate(&Scenario::balanced(n, plan.batches, tau.clone()))
             .unwrap()
             .mean;
+        for b in feasible_b(n) {
+            let other = mc
+                .evaluate_at(&Scenario::balanced(n, b, tau.clone()), 2 + b as u64)
+                .unwrap()
+                .mean;
             assert!(
                 planned <= other * 1.05,
                 "{}: planned B={} ({planned}) worse than B={b} ({other})",
@@ -83,16 +68,16 @@ fn majorization_order_holds_in_simulation() {
     use replica::analysis::majorization::{all_assignments, majorizes};
     let tau = ServiceDist::shifted_exp(0.1, 1.0);
     let (n, b) = (8usize, 2usize);
+    let mc = MonteCarlo::new(40_000, 77);
     let mut results = Vec::new();
     for a in all_assignments(n, b) {
-        let est = simulate_policy(
-            n,
-            &Policy::UnbalancedNonOverlapping { assignment: a.clone() },
-            &tau,
-            40_000,
-            77,
-        )
-        .unwrap();
+        let est = mc
+            .evaluate(&Scenario::new(
+                n,
+                Policy::UnbalancedNonOverlapping { assignment: a.clone() },
+                tau.clone(),
+            ))
+            .unwrap();
         results.push((a, est.mean));
     }
     for (a1, m1) in &results {
@@ -122,14 +107,13 @@ fn overlap_ordering_eq17() {
 fn lemma1_coverage_matches_simulated_failures() {
     use replica::analysis::coverage::coverage_probability;
     let (n, b) = (30usize, 10usize);
-    let est = simulate_policy(
-        n,
-        &Policy::RandomNonOverlapping { batches: b },
-        &ServiceDist::exp(1.0),
-        30_000,
-        3,
-    )
-    .unwrap();
+    let est = MonteCarlo::new(30_000, 3)
+        .evaluate(&Scenario::new(
+            n,
+            Policy::RandomNonOverlapping { batches: b },
+            ServiceDist::exp(1.0),
+        ))
+        .unwrap();
     let want_fail = 1.0 - coverage_probability(n, b);
     assert!(
         (est.failure_rate - want_fail).abs() < 0.01,
