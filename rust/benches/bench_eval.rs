@@ -22,10 +22,12 @@ fn main() {
         let mut serial_per_iter = f64::NAN;
         for threads in [1usize, 2, 4, 0] {
             let mc = MonteCarlo { reps, seed: 42, threads };
-            let label = format!(
-                "MonteCarlo N={n} B={b} reps=30k threads={}",
-                if threads == 0 { format!("auto({cores})") } else { threads.to_string() }
-            );
+            let shown = if threads == 0 {
+                format!("auto({cores})")
+            } else {
+                threads.to_string()
+            };
+            let label = format!("MonteCarlo N={n} B={b} reps=30k threads={shown}");
             let r = bench(&label, 200.0, || {
                 std::hint::black_box(mc.evaluate(&scenario).expect("eval"));
             });

@@ -14,7 +14,7 @@ fn main() {
     println!("Fig 11: per-job tail classification");
     for a in JobAnalysis::all(&trace) {
         println!(
-            "  job {:<2} tasks={} mean={:>9}s p99={:>10}s tail={} (excess CoV {:.2}, Hill alpha {:.2})",
+            "  job {:<2} tasks={} mean={:>9}s p99={:>10}s tail={} (cov {:.2}, hill {:.2})",
             a.job_id,
             a.n_tasks,
             fnum(a.mean),

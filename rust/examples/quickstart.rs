@@ -44,7 +44,11 @@ fn main() -> replica::Result<()> {
     let analytic = planner.sweep();
     let mc = MonteCarlo::new(20_000, 42);
     for (point, (_, est)) in analytic.iter().zip(mc.sweep(n, &tau)?) {
-        let marker = if point.batches == plan.batches { " <- planned" } else { "" };
+        let marker = if point.batches == plan.batches {
+            " <- planned"
+        } else {
+            ""
+        };
         table.row(vec![
             format!("{}{marker}", point.batches),
             (n / point.batches).to_string(),

@@ -25,12 +25,13 @@ fn main() -> replica::Result<()> {
         vec!["job", "mean (s)", "min (s)", "p99 (s)", "tail class", "fitted model"],
     );
     for a in JobAnalysis::all(&trace) {
+        let class = if a.is_heavy_tail() { "heavy" } else { "exp" };
         t.row(vec![
             a.job_id.to_string(),
             fnum(a.mean),
             fnum(a.min),
             fnum(a.p99),
-            if a.is_heavy_tail() { "heavy" } else { "exponential" }.to_string(),
+            class.to_string(),
             a.fit.best().label(),
         ]);
     }

@@ -44,7 +44,13 @@ pub fn is_balanced(v: &[usize]) -> bool {
 pub fn all_assignments(n: usize, b: usize) -> Vec<Vec<usize>> {
     let mut out = Vec::new();
     let mut cur = Vec::with_capacity(b);
-    fn rec(remaining: usize, parts: usize, max: usize, cur: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+    fn rec(
+        remaining: usize,
+        parts: usize,
+        max: usize,
+        cur: &mut Vec<usize>,
+        out: &mut Vec<Vec<usize>>,
+    ) {
         if parts == 1 {
             if remaining >= 1 && remaining <= max {
                 cur.push(remaining);

@@ -23,7 +23,7 @@ impl Args {
             if let Some(flag) = tok.strip_prefix("--") {
                 if let Some((k, v)) = flag.split_once('=') {
                     a.flags.insert(k.to_string(), v.to_string());
-                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
                     let v = it.next().unwrap();
                     a.flags.insert(flag.to_string(), v);
                 } else {
@@ -79,7 +79,7 @@ impl Args {
     }
 
     pub fn get_bool(&mut self, key: &str) -> bool {
-        self.get(key).map_or(false, |v| v == "true" || v == "1" || v == "yes")
+        self.get(key).is_some_and(|v| v == "true" || v == "1" || v == "yes")
     }
 }
 

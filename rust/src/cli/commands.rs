@@ -369,10 +369,9 @@ pub fn gd_train(args: &mut Args) -> Result<()> {
     let mut coord = Coordinator::new(cfg, dataset, backend)?;
     let report = coord.run()?;
 
-    let mut t = Table::new(
-        &format!("Distributed GD: N={workers}, B={batches}, {rounds} rounds, backend={backend_kind}"),
-        vec!["round", "loss", "latency_ms"],
-    );
+    let title =
+        format!("Distributed GD: N={workers} B={batches} rounds={rounds} backend={backend_kind}");
+    let mut t = Table::new(&title, vec!["round", "loss", "latency_ms"]);
     let stride = (rounds / 10).max(1);
     for (i, r) in report.rounds.iter().enumerate() {
         if i % stride == 0 || i + 1 == rounds {

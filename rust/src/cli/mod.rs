@@ -34,7 +34,9 @@ pub fn run(argv: Vec<String>) -> Result<()> {
             print!("{}", HELP);
             Ok(())
         }
-        Some(other) => Err(Error::Config(format!("unknown command '{other}' (try `replica help`)"))),
+        Some(other) => {
+            Err(Error::Config(format!("unknown command '{other}' (try `replica help`)")))
+        }
     }
 }
 

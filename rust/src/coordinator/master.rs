@@ -46,8 +46,8 @@ impl GdConfig {
         if self.rounds == 0 {
             return Err(Error::Config("rounds must be >= 1".into()));
         }
-        if !(self.time_scale >= 0.0) {
-            return Err(Error::Config("time_scale must be >= 0".into()));
+        if !self.time_scale.is_finite() || self.time_scale < 0.0 {
+            return Err(Error::Config("time_scale must be finite and >= 0".into()));
         }
         Ok(())
     }

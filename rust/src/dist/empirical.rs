@@ -1,0 +1,169 @@
+//! Exact empirical (ECDF) distribution — the §VII trace bootstrap.
+
+use crate::util::rng::Pcg64;
+
+/// The empirical distribution of a set of observed samples.
+///
+/// Samples are stored sorted; every query is an exact order-statistics
+/// computation (no binning), as `traces::analyze` expects for the
+/// Fig. 11 CCDF series. `sample` draws uniformly with replacement — the
+/// bootstrap the paper's trace-driven sweeps (Figs. 12–13) use.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Empirical {
+    sorted: Vec<f64>,
+}
+
+impl Empirical {
+    /// Build from raw samples. Panics on empty or non-finite input.
+    pub fn new(mut samples: Vec<f64>) -> Empirical {
+        assert!(!samples.is_empty(), "Empirical needs at least one sample");
+        assert!(samples.iter().all(|x| x.is_finite()), "Empirical samples must be finite");
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Empirical { sorted: samples }
+    }
+
+    /// The samples, ascending.
+    pub fn data(&self) -> &[f64] {
+        &self.sorted
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.sorted[0]
+    }
+
+    pub fn max(&self) -> f64 {
+        self.sorted[self.sorted.len() - 1]
+    }
+
+    /// Draw one sample uniformly with replacement (bootstrap).
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        self.sorted[rng.below(self.sorted.len() as u64) as usize]
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.sorted.iter().sum::<f64>() / self.sorted.len() as f64
+    }
+
+    /// Population variance of the sample.
+    pub fn variance(&self) -> f64 {
+        let m = self.mean();
+        let ss: f64 = self.sorted.iter().map(|x| (x - m) * (x - m)).sum();
+        ss / self.sorted.len() as f64
+    }
+
+    /// Exact ECDF: the fraction of samples `≤ t`.
+    pub fn cdf(&self, t: f64) -> f64 {
+        self.sorted.partition_point(|x| *x <= t) as f64 / self.sorted.len() as f64
+    }
+
+    /// Exact empirical survival `Pr{X > t}`.
+    pub fn ccdf(&self, t: f64) -> f64 {
+        1.0 - self.cdf(t)
+    }
+
+    /// Exact order-statistics quantile: the smallest sample `x` with
+    /// `ECDF(x) ≥ q`, so `quantile(i/n)` is the i-th order statistic.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q), "quantile needs q in [0, 1], got {q}");
+        let n = self.sorted.len();
+        let scaled = q * n as f64;
+        // Snap to the nearest integer when within a few ULP: `q = i/n`
+        // step points must land on the i-th order statistic exactly even
+        // though `q * n` can round a hair above `i` (the error grows
+        // with `i`, so the tolerance is relative, not absolute).
+        let nearest = scaled.round();
+        let idx = if (scaled - nearest).abs() <= scaled * 4.0 * f64::EPSILON {
+            nearest as usize
+        } else {
+            scaled.ceil() as usize
+        };
+        self.sorted[idx.saturating_sub(1).min(n - 1)]
+    }
+
+    /// The empirical distribution of `c · X` (see [`super::ServiceDist::scaled`]).
+    pub(crate) fn scaled(&self, c: f64) -> Empirical {
+        Empirical { sorted: self.sorted.iter().map(|x| c * x).collect() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ecdf_1_to_4() -> Empirical {
+        Empirical::new(vec![3.0, 1.0, 4.0, 2.0])
+    }
+
+    #[test]
+    fn sorts_and_exposes_order_statistics() {
+        let e = ecdf_1_to_4();
+        assert_eq!(e.data(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(e.len(), 4);
+        assert!(!e.is_empty());
+        assert_eq!((e.min(), e.max()), (1.0, 4.0));
+        assert_eq!(e.mean(), 2.5);
+        assert_eq!(e.variance(), 1.25);
+    }
+
+    #[test]
+    fn cdf_is_exact_step_function() {
+        let e = ecdf_1_to_4();
+        assert_eq!(e.cdf(0.5), 0.0);
+        assert_eq!(e.cdf(1.0), 0.25);
+        assert_eq!(e.cdf(2.5), 0.5);
+        assert_eq!(e.cdf(4.0), 1.0);
+        assert_eq!(e.ccdf(2.0), 0.5);
+    }
+
+    #[test]
+    fn quantile_hits_order_statistics_exactly() {
+        let e = ecdf_1_to_4();
+        for (i, &x) in e.data().iter().enumerate() {
+            let q = (i + 1) as f64 / 4.0;
+            assert_eq!(e.quantile(q), x, "q={q}");
+        }
+        assert_eq!(e.quantile(0.0), 1.0);
+        assert_eq!(e.quantile(1.0), 4.0);
+        // just past a step: next order statistic
+        assert_eq!(e.quantile(0.26), 2.0);
+    }
+
+    #[test]
+    fn bootstrap_sampling_is_deterministic_and_in_support() {
+        let e = ecdf_1_to_4();
+        let mut a = Pcg64::new(3);
+        let mut b = Pcg64::new(3);
+        for _ in 0..100 {
+            let x = e.sample(&mut a);
+            assert_eq!(x, e.sample(&mut b));
+            assert!(e.data().contains(&x));
+        }
+    }
+
+    #[test]
+    fn scaled_multiplies_samples() {
+        let e = ecdf_1_to_4().scaled(2.0);
+        assert_eq!(e.data(), &[2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(e.mean(), 5.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_rejected() {
+        Empirical::new(Vec::new());
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_finite_rejected() {
+        Empirical::new(vec![1.0, f64::NAN]);
+    }
+}

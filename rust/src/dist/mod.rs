@@ -1,0 +1,35 @@
+//! Service-time distributions τ — the stochastic substrate of the paper.
+//!
+//! Every layer above sits on this module: the closed forms of
+//! [`crate::analysis`] pattern-match the analytic families, the
+//! simulator ([`crate::sim`]) draws from them, the numeric integrator
+//! inverts their CDFs, and the trace pipeline ([`crate::traces`]) fits
+//! them to observed samples.
+//!
+//! * [`ServiceDist`] — the family catalogue: `Exp(μ)` (§IV/§VI, eqs. 18
+//!   and 26), `ShiftedExp(Δ, μ)` (§VI-B, eqs. 19/21, Theorems 5–7),
+//!   `Pareto(σ, α)` (§VI-C, eqs. 22/24, Theorems 8–10), `Weibull` and
+//!   `Gamma` (the §IV closing remark's open problem — stochastically
+//!   concave for shape > 1), `Bimodal` fast/slow stragglers, and
+//!   `Empirical` trace bootstrap (§VII). All families are closed under
+//!   positive scaling ([`ServiceDist::scaled`]), which is what makes the
+//!   size-dependent batch model `T_batch = (N/B)·τ` of §VI representable
+//!   without leaving the enum.
+//! * [`Empirical`] — exact order-statistics ECDF (no binning), the
+//!   distribution `traces::analyze` builds per job for Figs. 11–13.
+//! * [`TailFit`] / [`TailClass`] — the §VII tail classifier: decide
+//!   whether observed service times have an exponential or a heavy
+//!   (power-law) tail and fit the winning family, feeding the planner's
+//!   trace-driven path ([`crate::planner::plan_from_samples`]).
+//!
+//! Sampling is inverse-CDF wherever a closed form exists, so
+//! `sample`/`cdf`/`ccdf`/`quantile` are mutually consistent — the
+//! property [`crate::eval::Analytic`] relies on for exact p50/p95/p99.
+
+mod empirical;
+mod service;
+mod tailfit;
+
+pub use empirical::Empirical;
+pub use service::ServiceDist;
+pub use tailfit::{TailClass, TailFit};

@@ -1,0 +1,617 @@
+//! The service-time family catalogue.
+//!
+//! Paper references (Behrouzi-Far & Soljanin 2020):
+//!
+//! * `Exp(μ)` — §IV/§VI; E\[T\] eq. (26), CoV eq. (18), Theorems 3–4.
+//! * `ShiftedExp(Δ, μ)` — §VI-B; eqs. (19)/(21), Theorems 5–7.
+//! * `Pareto(σ, α)` — §VI-C; eqs. (22)/(24), Theorems 8–10. Survival
+//!   `S(t) = (σ/t)^α` for `t ≥ σ`; the mean is infinite for `α ≤ 1`.
+//! * `Weibull(k, λ)` / `Gamma(k, θ)` — the §IV closing remark's open
+//!   problem (stochastically concave for shape > 1), explored in
+//!   `experiments::open_problem`.
+//! * `Bimodal` — fast/slow mixture of shifted exponentials (two-class
+//!   stragglers, the §VII motivation).
+//! * `Empirical` — trace bootstrap (§VII, Figs. 11–13).
+
+use crate::dist::Empirical;
+use crate::util::math::{
+    bisect, gamma, gammainc_lower_regularized, gammainc_upper_regularized,
+};
+use crate::util::rng::Pcg64;
+
+/// A task service-time distribution τ.
+///
+/// All families are supported on `[0, ∞)`. Sampling is inverse-CDF
+/// wherever a closed form exists, so `sample`, [`ServiceDist::cdf`],
+/// [`ServiceDist::ccdf`] and [`ServiceDist::quantile`] are mutually
+/// consistent — [`crate::eval::Analytic`] inverts the exact CDF for its
+/// p50/p95/p99, and the numeric integrator in
+/// [`crate::analysis::closed_form`] integrates the exact survival.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServiceDist {
+    /// Exponential with rate `mu` (mean `1/μ`).
+    Exp { mu: f64 },
+    /// The paper's SExp(Δ, μ): a deterministic shift `delta` plus an
+    /// `Exp(mu)` tail.
+    ShiftedExp { delta: f64, mu: f64 },
+    /// Pareto with scale `sigma` and tail index `alpha`.
+    Pareto { sigma: f64, alpha: f64 },
+    /// Weibull with shape `shape` and scale `scale`:
+    /// `S(t) = exp(−(t/λ)^k)`.
+    Weibull { shape: f64, scale: f64 },
+    /// Gamma with shape `shape` and scale `scale` (mean `k·θ`).
+    Gamma { shape: f64, scale: f64 },
+    /// Fast/slow straggler mixture: with probability `p_slow` the task
+    /// is drawn from `SExp(slow.0, slow.1)`, otherwise from
+    /// `SExp(fast.0, fast.1)`.
+    Bimodal { p_slow: f64, fast: (f64, f64), slow: (f64, f64) },
+    /// Empirical distribution of observed samples (exact ECDF).
+    Empirical(Empirical),
+}
+
+/// One exponential draw by inversion, `−ln U / μ` with `U ∈ (0, 1]`.
+fn exp_draw(rng: &mut Pcg64, mu: f64) -> f64 {
+    -rng.uniform_pos().ln() / mu
+}
+
+/// Marsaglia–Tsang Gamma(shape, 1) sampler; Boost trick for shape < 1.
+fn gamma_draw(rng: &mut Pcg64, shape: f64) -> f64 {
+    if shape < 1.0 {
+        let x = gamma_draw(rng, shape + 1.0);
+        return x * rng.uniform_pos().powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let z = rng.normal();
+        let v = (1.0 + c * z).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u = rng.uniform_pos();
+        if u.ln() < 0.5 * z * z + d - d * v + d * v.ln() {
+            return d * v;
+        }
+    }
+}
+
+/// CDF of `SExp(delta, mu)` at `t`.
+fn sexp_cdf(delta: f64, mu: f64, t: f64) -> f64 {
+    if t <= delta {
+        0.0
+    } else {
+        1.0 - (-mu * (t - delta)).exp()
+    }
+}
+
+/// Survival of `SExp(delta, mu)` at `t`.
+fn sexp_ccdf(delta: f64, mu: f64, t: f64) -> f64 {
+    if t <= delta {
+        1.0
+    } else {
+        (-mu * (t - delta)).exp()
+    }
+}
+
+impl ServiceDist {
+    // ------------------------------------------------------ constructors
+
+    /// Exponential with rate `mu` (mean `1/μ`).
+    pub fn exp(mu: f64) -> ServiceDist {
+        assert!(mu > 0.0 && mu.is_finite(), "Exp rate must be > 0, got {mu}");
+        ServiceDist::Exp { mu }
+    }
+
+    /// Shifted exponential SExp(Δ, μ) — eq. (19)'s service model.
+    pub fn shifted_exp(delta: f64, mu: f64) -> ServiceDist {
+        assert!(delta >= 0.0 && delta.is_finite(), "SExp shift must be >= 0, got {delta}");
+        assert!(mu > 0.0 && mu.is_finite(), "SExp rate must be > 0, got {mu}");
+        ServiceDist::ShiftedExp { delta, mu }
+    }
+
+    /// Pareto(σ, α) — eq. (22)'s service model.
+    pub fn pareto(sigma: f64, alpha: f64) -> ServiceDist {
+        assert!(sigma > 0.0 && sigma.is_finite(), "Pareto scale must be > 0, got {sigma}");
+        assert!(alpha > 0.0 && alpha.is_finite(), "Pareto index must be > 0, got {alpha}");
+        ServiceDist::Pareto { sigma, alpha }
+    }
+
+    /// Weibull with shape `k` and scale `λ`.
+    pub fn weibull(shape: f64, scale: f64) -> ServiceDist {
+        assert!(shape > 0.0 && shape.is_finite(), "Weibull shape must be > 0, got {shape}");
+        assert!(scale > 0.0 && scale.is_finite(), "Weibull scale must be > 0, got {scale}");
+        ServiceDist::Weibull { shape, scale }
+    }
+
+    /// Gamma with shape `k` and scale `θ` (named `gamma_dist` to avoid
+    /// clashing with the Γ special function).
+    pub fn gamma_dist(shape: f64, scale: f64) -> ServiceDist {
+        assert!(shape > 0.0 && shape.is_finite(), "Gamma shape must be > 0, got {shape}");
+        assert!(scale > 0.0 && scale.is_finite(), "Gamma scale must be > 0, got {scale}");
+        ServiceDist::Gamma { shape, scale }
+    }
+
+    /// Fast/slow mixture of shifted exponentials; each component is a
+    /// `(delta, mu)` pair and `p_slow` is the straggler probability.
+    pub fn bimodal(p_slow: f64, fast: (f64, f64), slow: (f64, f64)) -> ServiceDist {
+        assert!((0.0..=1.0).contains(&p_slow), "p_slow must be in [0, 1], got {p_slow}");
+        for (delta, mu) in [fast, slow] {
+            assert!(delta >= 0.0 && delta.is_finite(), "component shift must be >= 0");
+            assert!(mu > 0.0 && mu.is_finite(), "component rate must be > 0");
+        }
+        ServiceDist::Bimodal { p_slow, fast, slow }
+    }
+
+    /// Empirical distribution of observed samples (§VII bootstrap).
+    pub fn empirical(samples: Vec<f64>) -> ServiceDist {
+        ServiceDist::Empirical(Empirical::new(samples))
+    }
+
+    /// The distribution of `c · τ` — the batch-level service time of the
+    /// size-dependent model `T_batch = (N/B)·τ` (§VI). Every family is
+    /// closed under positive scaling, so the result stays in the enum,
+    /// and a scaled distribution consumes the same RNG stream as its
+    /// base (its draws are exactly `c ×` the base draws).
+    pub fn scaled(c: f64, tau: ServiceDist) -> ServiceDist {
+        assert!(c > 0.0 && c.is_finite(), "scale factor must be > 0, got {c}");
+        match tau {
+            ServiceDist::Exp { mu } => ServiceDist::Exp { mu: mu / c },
+            ServiceDist::ShiftedExp { delta, mu } => {
+                ServiceDist::ShiftedExp { delta: c * delta, mu: mu / c }
+            }
+            ServiceDist::Pareto { sigma, alpha } => {
+                ServiceDist::Pareto { sigma: c * sigma, alpha }
+            }
+            ServiceDist::Weibull { shape, scale } => {
+                ServiceDist::Weibull { shape, scale: c * scale }
+            }
+            ServiceDist::Gamma { shape, scale } => {
+                ServiceDist::Gamma { shape, scale: c * scale }
+            }
+            ServiceDist::Bimodal { p_slow, fast, slow } => ServiceDist::Bimodal {
+                p_slow,
+                fast: (c * fast.0, fast.1 / c),
+                slow: (c * slow.0, slow.1 / c),
+            },
+            ServiceDist::Empirical(e) => ServiceDist::Empirical(e.scaled(c)),
+        }
+    }
+
+    // ----------------------------------------------------------- queries
+
+    /// Draw one service time.
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        match self {
+            ServiceDist::Exp { mu } => exp_draw(rng, *mu),
+            ServiceDist::ShiftedExp { delta, mu } => delta + exp_draw(rng, *mu),
+            ServiceDist::Pareto { sigma, alpha } => {
+                sigma * rng.uniform_pos().powf(-1.0 / alpha)
+            }
+            ServiceDist::Weibull { shape, scale } => {
+                scale * (-rng.uniform_pos().ln()).powf(1.0 / shape)
+            }
+            ServiceDist::Gamma { shape, scale } => scale * gamma_draw(rng, *shape),
+            ServiceDist::Bimodal { p_slow, fast, slow } => {
+                let (delta, mu) = if rng.uniform() < *p_slow {
+                    *slow
+                } else {
+                    *fast
+                };
+                delta + exp_draw(rng, mu)
+            }
+            ServiceDist::Empirical(e) => e.sample(rng),
+        }
+    }
+
+    /// E\[τ\]. Infinite for Pareto with `α ≤ 1`.
+    pub fn mean(&self) -> f64 {
+        match self {
+            ServiceDist::Exp { mu } => 1.0 / mu,
+            ServiceDist::ShiftedExp { delta, mu } => delta + 1.0 / mu,
+            ServiceDist::Pareto { sigma, alpha } => {
+                if *alpha > 1.0 {
+                    alpha * sigma / (alpha - 1.0)
+                } else {
+                    f64::INFINITY
+                }
+            }
+            ServiceDist::Weibull { shape, scale } => scale * gamma(1.0 + 1.0 / shape),
+            ServiceDist::Gamma { shape, scale } => shape * scale,
+            ServiceDist::Bimodal { p_slow, fast, slow } => {
+                let m_fast = fast.0 + 1.0 / fast.1;
+                let m_slow = slow.0 + 1.0 / slow.1;
+                (1.0 - p_slow) * m_fast + p_slow * m_slow
+            }
+            ServiceDist::Empirical(e) => e.mean(),
+        }
+    }
+
+    /// Var\[τ\]. Infinite for Pareto with `α ≤ 2`.
+    pub fn variance(&self) -> f64 {
+        match self {
+            ServiceDist::Exp { mu } | ServiceDist::ShiftedExp { mu, .. } => 1.0 / (mu * mu),
+            ServiceDist::Pareto { sigma, alpha } => {
+                if *alpha > 2.0 {
+                    sigma * sigma * alpha / ((alpha - 1.0) * (alpha - 1.0) * (alpha - 2.0))
+                } else {
+                    f64::INFINITY
+                }
+            }
+            ServiceDist::Weibull { shape, scale } => {
+                let g1 = gamma(1.0 + 1.0 / shape);
+                let g2 = gamma(1.0 + 2.0 / shape);
+                scale * scale * (g2 - g1 * g1)
+            }
+            ServiceDist::Gamma { shape, scale } => shape * scale * scale,
+            ServiceDist::Bimodal { p_slow, fast, slow } => {
+                // mixture: E[X²] = Σ wᵢ (varᵢ + meanᵢ²)
+                let m_fast = fast.0 + 1.0 / fast.1;
+                let m_slow = slow.0 + 1.0 / slow.1;
+                let e2_fast = 1.0 / (fast.1 * fast.1) + m_fast * m_fast;
+                let e2_slow = 1.0 / (slow.1 * slow.1) + m_slow * m_slow;
+                let m = (1.0 - p_slow) * m_fast + p_slow * m_slow;
+                (1.0 - p_slow) * e2_fast + p_slow * e2_slow - m * m
+            }
+            ServiceDist::Empirical(e) => e.variance(),
+        }
+    }
+
+    /// `Pr{τ ≤ t}` (exact closed form except Gamma, which uses the
+    /// regularized incomplete gamma).
+    pub fn cdf(&self, t: f64) -> f64 {
+        match self {
+            ServiceDist::Exp { mu } => sexp_cdf(0.0, *mu, t),
+            ServiceDist::ShiftedExp { delta, mu } => sexp_cdf(*delta, *mu, t),
+            ServiceDist::Pareto { sigma, alpha } => {
+                if t <= *sigma {
+                    0.0
+                } else {
+                    1.0 - (sigma / t).powf(*alpha)
+                }
+            }
+            ServiceDist::Weibull { shape, scale } => {
+                if t <= 0.0 {
+                    0.0
+                } else {
+                    1.0 - (-(t / scale).powf(*shape)).exp()
+                }
+            }
+            ServiceDist::Gamma { shape, scale } => {
+                if t <= 0.0 {
+                    0.0
+                } else {
+                    gammainc_lower_regularized(*shape, t / scale)
+                }
+            }
+            ServiceDist::Bimodal { p_slow, fast, slow } => {
+                (1.0 - p_slow) * sexp_cdf(fast.0, fast.1, t)
+                    + p_slow * sexp_cdf(slow.0, slow.1, t)
+            }
+            ServiceDist::Empirical(e) => e.cdf(t),
+        }
+    }
+
+    /// Survival `Pr{τ > t}`, computed directly (not as `1 − cdf`) so the
+    /// deep tail keeps full relative precision — the order-statistics
+    /// integrator raises this to the replication power `S(t)^r`.
+    pub fn ccdf(&self, t: f64) -> f64 {
+        match self {
+            ServiceDist::Exp { mu } => sexp_ccdf(0.0, *mu, t),
+            ServiceDist::ShiftedExp { delta, mu } => sexp_ccdf(*delta, *mu, t),
+            ServiceDist::Pareto { sigma, alpha } => {
+                if t <= *sigma {
+                    1.0
+                } else {
+                    (sigma / t).powf(*alpha)
+                }
+            }
+            ServiceDist::Weibull { shape, scale } => {
+                if t <= 0.0 {
+                    1.0
+                } else {
+                    (-(t / scale).powf(*shape)).exp()
+                }
+            }
+            ServiceDist::Gamma { shape, scale } => {
+                if t <= 0.0 {
+                    1.0
+                } else {
+                    gammainc_upper_regularized(*shape, t / scale)
+                }
+            }
+            ServiceDist::Bimodal { p_slow, fast, slow } => {
+                (1.0 - p_slow) * sexp_ccdf(fast.0, fast.1, t)
+                    + p_slow * sexp_ccdf(slow.0, slow.1, t)
+            }
+            ServiceDist::Empirical(e) => e.ccdf(t),
+        }
+    }
+
+    /// Quantile function `F⁻¹(q)` — exact inversion where a closed form
+    /// exists (Exp/SExp/Pareto/Weibull), order statistics for Empirical,
+    /// monotone bisection of the CDF for Gamma and Bimodal.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q), "quantile needs q in [0, 1], got {q}");
+        match self {
+            ServiceDist::Exp { mu } => -(1.0 - q).ln() / mu,
+            ServiceDist::ShiftedExp { delta, mu } => delta - (1.0 - q).ln() / mu,
+            ServiceDist::Pareto { sigma, alpha } => sigma * (1.0 - q).powf(-1.0 / alpha),
+            ServiceDist::Weibull { shape, scale } => {
+                scale * (-(1.0 - q).ln()).powf(1.0 / shape)
+            }
+            ServiceDist::Gamma { .. } | ServiceDist::Bimodal { .. } => {
+                self.quantile_by_bisection(q)
+            }
+            ServiceDist::Empirical(e) => e.quantile(q),
+        }
+    }
+
+    /// Numeric quantile for families without a closed-form inverse:
+    /// expand an upper bracket geometrically, then bisect the CDF.
+    fn quantile_by_bisection(&self, q: f64) -> f64 {
+        if q <= 0.0 {
+            return 0.0;
+        }
+        if q >= 1.0 {
+            return f64::INFINITY;
+        }
+        let mut hi = self.mean();
+        if !hi.is_finite() || hi <= 0.0 {
+            hi = 1.0;
+        }
+        let mut guard = 0;
+        while self.cdf(hi) < q && guard < 2_000 {
+            hi *= 2.0;
+            guard += 1;
+        }
+        bisect(|t| self.cdf(t) - q, 0.0, hi, 1e-12 * hi.max(1.0)).unwrap_or(hi)
+    }
+
+    /// The distribution of the minimum of `k` i.i.d. copies, for the
+    /// families closed under minima (`S_min = S^k`): Exp, SExp, Pareto
+    /// and Weibull. `k = 1` is the distribution itself for every family;
+    /// Gamma, Bimodal and Empirical are not closed for `k ≥ 2` — `None`.
+    pub fn min_of(&self, k: usize) -> Option<ServiceDist> {
+        assert!(k >= 1, "min_of needs k >= 1");
+        if k == 1 {
+            return Some(self.clone());
+        }
+        let kf = k as f64;
+        match self {
+            ServiceDist::Exp { mu } => Some(ServiceDist::Exp { mu: kf * mu }),
+            ServiceDist::ShiftedExp { delta, mu } => {
+                Some(ServiceDist::ShiftedExp { delta: *delta, mu: kf * mu })
+            }
+            ServiceDist::Pareto { sigma, alpha } => {
+                Some(ServiceDist::Pareto { sigma: *sigma, alpha: kf * alpha })
+            }
+            ServiceDist::Weibull { shape, scale } => Some(ServiceDist::Weibull {
+                shape: *shape,
+                scale: scale * kf.powf(-1.0 / shape),
+            }),
+            _ => None,
+        }
+    }
+
+    /// Short human-readable description for tables and error messages.
+    pub fn label(&self) -> String {
+        match self {
+            ServiceDist::Exp { mu } => format!("Exp({mu})"),
+            ServiceDist::ShiftedExp { delta, mu } => format!("SExp({delta}, {mu})"),
+            ServiceDist::Pareto { sigma, alpha } => format!("Pareto({sigma}, {alpha})"),
+            ServiceDist::Weibull { shape, scale } => format!("Weibull({shape}, {scale})"),
+            ServiceDist::Gamma { shape, scale } => format!("Gamma({shape}, {scale})"),
+            ServiceDist::Bimodal { p_slow, fast, slow } => {
+                format!("Bimodal(p_slow={p_slow}, fast=SExp{fast:?}, slow=SExp{slow:?})")
+            }
+            ServiceDist::Empirical(e) => format!("Empirical(n={})", e.len()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mc_moments(d: &ServiceDist, n: usize, seed: u64) -> (f64, f64) {
+        let mut rng = Pcg64::new(seed);
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = d.sample(&mut rng);
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        (mean, s2 / n as f64 - mean * mean)
+    }
+
+    fn close_rel(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() / b.abs().max(1e-12) < tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn closed_form_moments_known_values() {
+        close_rel(ServiceDist::exp(2.0).mean(), 0.5, 1e-12);
+        close_rel(ServiceDist::exp(2.0).variance(), 0.25, 1e-12);
+        close_rel(ServiceDist::shifted_exp(0.05, 1.0).mean(), 1.05, 1e-12);
+        close_rel(ServiceDist::pareto(1.0, 3.0).mean(), 1.5, 1e-12);
+        close_rel(ServiceDist::pareto(1.0, 3.0).variance(), 0.75, 1e-12);
+        // Weibull(1, λ) is Exp(1/λ)
+        close_rel(ServiceDist::weibull(1.0, 2.0).mean(), 2.0, 1e-10);
+        close_rel(ServiceDist::weibull(1.0, 2.0).variance(), 4.0, 1e-9);
+        close_rel(ServiceDist::gamma_dist(2.5, 0.8).mean(), 2.0, 1e-12);
+        close_rel(ServiceDist::gamma_dist(2.5, 0.8).variance(), 1.6, 1e-12);
+        // Gamma(1, θ) is Exp(1/θ)
+        close_rel(ServiceDist::gamma_dist(1.0, 0.5).variance(), 0.25, 1e-12);
+    }
+
+    #[test]
+    fn pareto_heavy_tails_report_infinite_moments() {
+        assert!(ServiceDist::pareto(1.0, 0.9).mean().is_infinite());
+        assert!(ServiceDist::pareto(1.0, 1.5).mean().is_finite());
+        assert!(ServiceDist::pareto(1.0, 1.5).variance().is_infinite());
+        assert!(ServiceDist::pareto(1.0, 2.5).variance().is_finite());
+    }
+
+    #[test]
+    fn cdf_ccdf_boundaries_and_complement() {
+        let dists = [
+            ServiceDist::exp(1.0),
+            ServiceDist::shifted_exp(0.5, 2.0),
+            ServiceDist::pareto(1.0, 2.0),
+            ServiceDist::weibull(0.7, 1.0),
+            ServiceDist::gamma_dist(2.0, 1.0),
+            ServiceDist::bimodal(0.1, (0.1, 10.0), (5.0, 1.0)),
+            ServiceDist::empirical(vec![1.0, 2.0, 3.0]),
+        ];
+        for d in &dists {
+            assert_eq!(d.cdf(-1.0), 0.0, "{}", d.label());
+            assert_eq!(d.ccdf(-1.0), 1.0, "{}", d.label());
+            for t in [0.1, 0.5, 1.0, 2.0, 10.0] {
+                let (f, s) = (d.cdf(t), d.ccdf(t));
+                assert!((0.0..=1.0).contains(&f), "{} t={t}", d.label());
+                assert!((f + s - 1.0).abs() < 1e-12, "{} t={t}: {f} + {s}", d.label());
+            }
+        }
+    }
+
+    #[test]
+    fn shift_and_support_lower_bounds() {
+        let sexp = ServiceDist::shifted_exp(0.5, 2.0);
+        assert_eq!(sexp.cdf(0.5), 0.0);
+        assert!(sexp.cdf(0.6) > 0.0);
+        assert_eq!(sexp.quantile(0.0), 0.5);
+        let par = ServiceDist::pareto(2.0, 1.5);
+        assert_eq!(par.cdf(2.0), 0.0);
+        assert_eq!(par.quantile(0.0), 2.0);
+        let mut rng = Pcg64::new(1);
+        for _ in 0..1_000 {
+            assert!(sexp.sample(&mut rng) >= 0.5);
+            assert!(par.sample(&mut rng) >= 2.0);
+        }
+    }
+
+    #[test]
+    fn numeric_quantiles_invert_the_cdf() {
+        let dists = [
+            ServiceDist::gamma_dist(2.0, 1.5),
+            ServiceDist::gamma_dist(0.7, 1.0),
+            ServiceDist::bimodal(0.1, (0.1, 10.0), (5.0, 1.0)),
+        ];
+        for d in &dists {
+            for q in [0.05, 0.25, 0.5, 0.9, 0.99, 0.9999] {
+                let t = d.quantile(q);
+                assert!((d.cdf(t) - q).abs() < 1e-6, "{} q={q} t={t}", d.label());
+            }
+            assert_eq!(d.quantile(0.0), 0.0);
+        }
+    }
+
+    #[test]
+    fn scaled_is_exactly_c_times_the_base_stream() {
+        let c = 3.5;
+        let dists = [
+            ServiceDist::exp(1.3),
+            ServiceDist::shifted_exp(0.5, 2.0),
+            ServiceDist::pareto(1.0, 3.0),
+            ServiceDist::weibull(0.7, 1.0),
+            ServiceDist::gamma_dist(2.0, 1.0),
+            ServiceDist::bimodal(0.3, (0.1, 10.0), (5.0, 1.0)),
+            ServiceDist::empirical(vec![1.0, 2.0, 3.0, 5.0]),
+        ];
+        for d in &dists {
+            let s = ServiceDist::scaled(c, d.clone());
+            close_rel(s.mean(), c * d.mean(), 1e-12);
+            close_rel(s.variance(), c * c * d.variance(), 1e-12);
+            let mut ra = Pcg64::new(9);
+            let mut rb = Pcg64::new(9);
+            for _ in 0..200 {
+                close_rel(s.sample(&mut ra), c * d.sample(&mut rb), 1e-12);
+            }
+            // distribution-level identity: F_s(c·t) = F_d(t)
+            for q in [0.1, 0.5, 0.9] {
+                close_rel(s.quantile(q), c * d.quantile(q), 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn min_of_matches_survival_powers_exactly() {
+        let dists = [
+            ServiceDist::exp(1.3),
+            ServiceDist::shifted_exp(0.5, 2.0),
+            ServiceDist::pareto(1.0, 2.0),
+            ServiceDist::weibull(0.7, 1.0),
+        ];
+        for d in &dists {
+            let m = d.min_of(4).expect("closed under minima");
+            for t in [0.2, 0.7, 1.5, 4.0] {
+                close_rel(m.ccdf(t).max(1e-300), d.ccdf(t).powi(4).max(1e-300), 1e-9);
+            }
+        }
+        assert!(ServiceDist::gamma_dist(2.0, 1.0).min_of(3).is_none());
+        assert!(ServiceDist::bimodal(0.1, (0.1, 10.0), (5.0, 1.0)).min_of(3).is_none());
+        assert!(ServiceDist::empirical(vec![1.0]).min_of(3).is_none());
+        // min of one copy is the distribution itself, for every family
+        let g = ServiceDist::gamma_dist(2.0, 1.0);
+        assert_eq!(g.min_of(1), Some(g.clone()));
+        let e = ServiceDist::exp(1.3);
+        assert_eq!(e.min_of(1), Some(e.clone()));
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let d = ServiceDist::gamma_dist(0.7, 1.0);
+        let a: Vec<f64> = {
+            let mut rng = Pcg64::new(5);
+            (0..50).map(|_| d.sample(&mut rng)).collect()
+        };
+        let b: Vec<f64> = {
+            let mut rng = Pcg64::new(5);
+            (0..50).map(|_| d.sample(&mut rng)).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bimodal_degenerate_weights_collapse_to_components() {
+        let fast = (0.1, 10.0);
+        let slow = (5.0, 1.0);
+        let all_fast = ServiceDist::bimodal(0.0, fast, slow);
+        close_rel(all_fast.mean(), 0.1 + 0.1, 1e-12);
+        let all_slow = ServiceDist::bimodal(1.0, fast, slow);
+        close_rel(all_slow.mean(), 6.0, 1e-12);
+        close_rel(all_slow.variance(), 1.0, 1e-12);
+    }
+
+    #[test]
+    fn gamma_sampler_moments_both_branches() {
+        // shape > 1 (Marsaglia–Tsang) and shape < 1 (Boost boost)
+        for (shape, scale) in [(2.5, 0.8), (0.7, 1.5)] {
+            let d = ServiceDist::gamma_dist(shape, scale);
+            let (m, v) = mc_moments(&d, 200_000, 42);
+            close_rel(m, d.mean(), 0.02);
+            close_rel(v, d.variance(), 0.05);
+        }
+    }
+
+    #[test]
+    fn labels_name_the_family() {
+        assert_eq!(ServiceDist::exp(1.0).label(), "Exp(1)");
+        assert_eq!(ServiceDist::shifted_exp(0.05, 1.0).label(), "SExp(0.05, 1)");
+        assert!(ServiceDist::gamma_dist(2.0, 1.0).label().contains("Gamma"));
+        assert!(ServiceDist::empirical(vec![1.0, 2.0]).label().contains("n=2"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_rate_rejected() {
+        ServiceDist::exp(0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_scale_factor_rejected() {
+        ServiceDist::scaled(0.0, ServiceDist::exp(1.0));
+    }
+}

@@ -1,0 +1,225 @@
+//! Tail classification of observed service times (§VII).
+//!
+//! The paper's trace pipeline (Fig. 11) splits jobs into two families by
+//! the shape of their task service-time tail: exponential
+//! (log-survival linear in `t` — jobs 1–4) and heavy / power-law
+//! (log-survival linear in `ln t` — jobs 6–10). The classifier here
+//! uses two shift- and scale-invariant statistics of that log-survival
+//! slope structure:
+//!
+//! * **excess CoV** — the coefficient of variation of `X − min(X)`.
+//!   For shifted-exponential data the excess is Exp(μ), so the CoV
+//!   concentrates at 1 regardless of Δ and μ; Pareto-tailed data with
+//!   the paper's α ∈ [1.1, 2.5] pushes it well above 1.
+//! * **Hill tail index** — the Hill estimator
+//!   `α̂ = k / Σ ln(x_(n−i) / x_(n−k))` over the top-k order statistics,
+//!   i.e. the inverse slope of the empirical log-survival against
+//!   `ln t`. Power-law tails give small `α̂` (the paper's jobs: ≤ 2);
+//!   exponential tails give large `α̂` (≈ μ · threshold).
+//!
+//! A sample is classified [`TailClass::HeavyTail`] only when **both**
+//! statistics agree, which keeps each family's false-positive modes
+//! (e.g. an unshifted Exp fooling the Hill statistic, or one outlier
+//! inflating the CoV) from flipping the label. The winning family is
+//! fitted by maximum likelihood — `SExp(min, 1/(mean − min))` or
+//! `Pareto(min, n / Σ ln(xᵢ/min))` — and returned by [`TailFit::best`]
+//! for the planner's trace-driven path (§VII, Figs. 12–13).
+
+use crate::dist::ServiceDist;
+
+/// Excess-CoV threshold: exponential-family data concentrates at 1.
+const HEAVY_EXCESS_COV: f64 = 1.35;
+/// Hill-index threshold: the paper's heavy-tail jobs have α ≤ 2.
+const HEAVY_TAIL_ALPHA: f64 = 4.0;
+/// Fraction of the sample the Hill estimator treats as "the tail".
+const HILL_FRACTION: f64 = 0.2;
+
+/// Which tail family a sample belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TailClass {
+    /// Log-survival linear in `t` (exponential-family tail).
+    ExponentialTail,
+    /// Log-survival linear in `ln t` (power-law tail).
+    HeavyTail,
+}
+
+/// The result of classifying one sample of service times.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TailFit {
+    /// The winning tail family.
+    pub class: TailClass,
+    /// CoV of the excess over the sample minimum (≈ 1 for SExp data).
+    pub excess_cov: f64,
+    /// Hill estimator of the tail index on the top order statistics.
+    pub tail_alpha: f64,
+    /// Fitted shifted-exponential candidate `(delta, mu)`.
+    pub sexp: (f64, f64),
+    /// Fitted Pareto candidate `(sigma, alpha)` (full-sample MLE).
+    pub pareto: (f64, f64),
+    /// Number of (finite) samples the fit was computed from.
+    pub n: usize,
+}
+
+impl TailFit {
+    /// Classify a sample of service times and fit both candidate
+    /// families. Degenerate inputs (fewer than 3 finite samples, or all
+    /// samples equal) fall back to an exponential classification.
+    pub fn classify(samples: &[f64]) -> TailFit {
+        let mut xs: Vec<f64> = samples.iter().copied().filter(|x| x.is_finite()).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        if n < 3 {
+            let min = xs.first().copied().unwrap_or(0.0).max(0.0);
+            return TailFit {
+                class: TailClass::ExponentialTail,
+                excess_cov: 0.0,
+                tail_alpha: f64::INFINITY,
+                sexp: (min, 1.0),
+                pareto: (min.max(1e-12), 1.0),
+                n,
+            };
+        }
+
+        let min = xs[0];
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let mean_excess = (mean - min).max(0.0);
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let excess_cov = if mean_excess > 0.0 {
+            var.sqrt() / mean_excess
+        } else {
+            0.0
+        };
+
+        // Hill estimator over the top-k order statistics.
+        let k = ((n as f64 * HILL_FRACTION) as usize).clamp(1, n - 1);
+        let x_k = xs[n - 1 - k].max(1e-300);
+        let hill_sum: f64 = xs[n - k..].iter().map(|x| (x / x_k).ln().max(0.0)).sum();
+        let tail_alpha = if hill_sum > 0.0 {
+            k as f64 / hill_sum
+        } else {
+            f64::INFINITY
+        };
+
+        // Candidate fits (both MLE given their family). The rate clamp
+        // keeps near-constant samples from producing an infinite μ.
+        let mu = if mean_excess > 0.0 {
+            (1.0 / mean_excess).min(1e12)
+        } else {
+            1e9
+        };
+        let sexp = (min.max(0.0), mu);
+        let sigma = min.max(1e-300);
+        let mle_sum: f64 = xs.iter().map(|x| (x / sigma).ln().max(0.0)).sum();
+        let alpha_mle = if mle_sum > 0.0 {
+            n as f64 / mle_sum
+        } else {
+            1e6
+        };
+        let pareto = (sigma, alpha_mle.clamp(0.05, 1e6));
+
+        let class = if excess_cov > HEAVY_EXCESS_COV && tail_alpha < HEAVY_TAIL_ALPHA {
+            TailClass::HeavyTail
+        } else {
+            TailClass::ExponentialTail
+        };
+        TailFit { class, excess_cov, tail_alpha, sexp, pareto, n }
+    }
+
+    /// The fitted distribution of the winning family — what the planner
+    /// optimizes against in the §VII flow.
+    pub fn best(&self) -> ServiceDist {
+        match self.class {
+            TailClass::HeavyTail => ServiceDist::pareto(self.pareto.0, self.pareto.1),
+            TailClass::ExponentialTail => ServiceDist::shifted_exp(self.sexp.0, self.sexp.1),
+        }
+    }
+
+    /// Convenience: is this a heavy (power-law) tail?
+    pub fn is_heavy(&self) -> bool {
+        self.class == TailClass::HeavyTail
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn draw(d: &ServiceDist, n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg64::new(seed);
+        (0..n).map(|_| d.sample(&mut rng)).collect()
+    }
+
+    #[test]
+    fn sexp_samples_classify_exponential_and_refit() {
+        // the paper's jobs 1–4 parameter range, including the
+        // kilo-second shift of job 4
+        for (delta, mu) in [(10.0, 0.8), (12.0, 0.5), (9.0, 1.2), (1000.0, 0.05)] {
+            let fit = TailFit::classify(&draw(&ServiceDist::shifted_exp(delta, mu), 5_000, 7));
+            assert_eq!(fit.class, TailClass::ExponentialTail, "SExp({delta}, {mu}): {fit:?}");
+            assert!(fit.excess_cov < 1.2, "SExp({delta}, {mu}): cov {}", fit.excess_cov);
+            match fit.best() {
+                ServiceDist::ShiftedExp { delta: d, mu: m } => {
+                    assert!((d - delta).abs() / delta < 0.05, "delta {d} vs {delta}");
+                    assert!((m - mu).abs() / mu < 0.10, "mu {m} vs {mu}");
+                }
+                other => panic!("expected SExp fit, got {}", other.label()),
+            }
+        }
+    }
+
+    #[test]
+    fn pareto_samples_classify_heavy_and_refit() {
+        // the paper's jobs 6–10 parameter range
+        for (sigma, alpha) in [(8.0, 1.6), (20.0, 1.2), (10.0, 1.5), (15.0, 1.8)] {
+            let fit = TailFit::classify(&draw(&ServiceDist::pareto(sigma, alpha), 5_000, 11));
+            assert_eq!(fit.class, TailClass::HeavyTail, "Pareto({sigma}, {alpha}): {fit:?}");
+            assert!(fit.is_heavy());
+            assert!(fit.tail_alpha < 4.0, "hill {}", fit.tail_alpha);
+            match fit.best() {
+                ServiceDist::Pareto { sigma: s, alpha: a } => {
+                    assert!((s - sigma).abs() / sigma < 0.02, "sigma {s} vs {sigma}");
+                    assert!((a - alpha).abs() / alpha < 0.15, "alpha {a} vs {alpha}");
+                }
+                other => panic!("expected Pareto fit, got {}", other.label()),
+            }
+        }
+    }
+
+    #[test]
+    fn statistics_are_scale_invariant() {
+        let base = draw(&ServiceDist::pareto(1.0, 1.5), 4_000, 3);
+        let scaled: Vec<f64> = base.iter().map(|x| 50.0 * x).collect();
+        let a = TailFit::classify(&base);
+        let b = TailFit::classify(&scaled);
+        assert_eq!(a.class, b.class);
+        assert!((a.excess_cov - b.excess_cov).abs() < 1e-9);
+        assert!((a.tail_alpha - b.tail_alpha).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_inputs_do_not_panic() {
+        let empty = TailFit::classify(&[]);
+        assert_eq!(empty.class, TailClass::ExponentialTail);
+        assert_eq!(empty.n, 0);
+        let tiny = TailFit::classify(&[1.0, 2.0]);
+        assert_eq!(tiny.class, TailClass::ExponentialTail);
+        let constant = TailFit::classify(&[3.0; 100]);
+        assert_eq!(constant.class, TailClass::ExponentialTail);
+        assert_eq!(constant.excess_cov, 0.0);
+        // best() is still a valid distribution in every case
+        let _ = empty.best();
+        let _ = tiny.best();
+        let _ = constant.best();
+    }
+
+    #[test]
+    fn non_finite_samples_are_ignored() {
+        let mut xs = draw(&ServiceDist::pareto(8.0, 1.6), 3_000, 5);
+        xs.push(f64::NAN);
+        xs.push(f64::INFINITY);
+        let fit = TailFit::classify(&xs);
+        assert_eq!(fit.class, TailClass::HeavyTail);
+        assert_eq!(fit.n, 3_000);
+    }
+}

@@ -71,11 +71,16 @@ pub fn table(n: usize, b: usize, tau: &ServiceDist, rows: &[AssignmentRow]) -> T
         vec!["assignment", "E[T] numeric", "E[T] MC", "majorizes balanced"],
     );
     for r in rows {
+        let mark = if r.majorizes_balanced {
+            "yes"
+        } else {
+            "(balanced)"
+        };
         t.row(vec![
             format!("{:?}", r.assignment),
             fnum(r.mean_numeric),
             fnum(r.mean_mc),
-            if r.majorizes_balanced { "yes" } else { "(balanced)" }.to_string(),
+            mark.to_string(),
         ]);
     }
     t

@@ -63,9 +63,10 @@ pub fn table(n: usize, b: usize) -> Result<Table> {
         let rows = explore(n, b, &tau)?;
         let best = &rows[0];
         let worst = rows.last().unwrap();
+        let optimal = best.assignment == balanced(n, b);
         t.row(vec![
             tau.label(),
-            if best.assignment == balanced(n, b) { "yes" } else { "NO" }.to_string(),
+            if optimal { "yes" } else { "NO" }.to_string(),
             format!("{:?}", best.assignment),
             fnum(worst.mean / best.mean),
         ]);

@@ -66,15 +66,22 @@ pub fn sexp_cov_table(n: usize, delta: f64, mus: &[f64]) -> Table {
 /// Theorem 9 table: Pareto mean-optimal regime across α, with α*.
 pub fn pareto_table(n: usize, sigma: f64, alphas: &[f64]) -> Table {
     let a_star = pareto_alpha_star(n);
+    let title = format!(
+        "Theorem 9: E[T]-optimal regime, tau ~ Pareto({sigma}, alpha), N={n}, alpha*={a_star:.2}"
+    );
     let mut t = Table::new(
-        &format!("Theorem 9: E[T]-optimal regime, tau ~ Pareto({sigma}, alpha), N={n}, alpha*={a_star:.2}"),
+        &title,
         vec!["alpha", "predicted", "B* (search)", "E[T](B*)", "CoV B* (Thm 10)"],
     );
     for &alpha in alphas {
         let tau = ServiceDist::pareto(sigma, alpha);
         let (b_star, val) = optimal_b_mean(n, &tau);
         let (b_cov, _) = optimal_b_cov(n, &tau);
-        let predicted = if alpha >= a_star { "full-parallelism" } else { "middle" };
+        let predicted = if alpha >= a_star {
+            "full-parallelism"
+        } else {
+            "middle"
+        };
         t.row(vec![
             fnum(alpha),
             predicted.to_string(),

@@ -20,8 +20,11 @@
 //! The substrates underneath:
 //!
 //! * [`dist`] — service-time distributions (Exponential,
-//!   Shifted-Exponential, Pareto, Weibull, Bimodal, Empirical) plus the
-//!   size-dependent batch model `T_batch = (N/B)·τ` of Gardner et al.
+//!   Shifted-Exponential, Pareto, Weibull, Gamma, Bimodal, Empirical),
+//!   the [`dist::TailFit`] trace classifier (§VII), and the
+//!   size-dependent batch model `T_batch = (N/B)·τ` of §VI (via
+//!   [`dist::ServiceDist::scaled`] — every family is closed under
+//!   positive scaling).
 //! * [`batching`] — the paper's §III task-replication policies:
 //!   balanced/unbalanced non-overlapping batches, random
 //!   (coupon-collector) assignment, cyclic and hybrid overlapping

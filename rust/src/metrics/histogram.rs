@@ -15,13 +15,29 @@ pub struct Histogram {
 impl Histogram {
     pub fn uniform(lo: f64, hi: f64, bins: usize) -> Histogram {
         assert!(hi > lo && bins > 0);
-        Histogram { lo, hi, log_scale: false, counts: vec![0; bins], underflow: 0, overflow: 0, total: 0 }
+        Histogram {
+            lo,
+            hi,
+            log_scale: false,
+            counts: vec![0; bins],
+            underflow: 0,
+            overflow: 0,
+            total: 0,
+        }
     }
 
     /// Log-spaced bins (lo must be > 0) — right scale for heavy tails.
     pub fn logarithmic(lo: f64, hi: f64, bins: usize) -> Histogram {
         assert!(hi > lo && lo > 0.0 && bins > 0);
-        Histogram { lo, hi, log_scale: true, counts: vec![0; bins], underflow: 0, overflow: 0, total: 0 }
+        Histogram {
+            lo,
+            hi,
+            log_scale: true,
+            counts: vec![0; bins],
+            underflow: 0,
+            overflow: 0,
+            total: 0,
+        }
     }
 
     pub fn record(&mut self, x: f64) {

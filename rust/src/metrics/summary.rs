@@ -17,12 +17,22 @@ pub struct Summary {
 impl Summary {
     /// Summary that retains samples (exact quantiles available).
     pub fn new() -> Summary {
-        Summary { keep_samples: true, min: f64::INFINITY, max: f64::NEG_INFINITY, ..Default::default() }
+        Summary {
+            keep_samples: true,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            ..Default::default()
+        }
     }
 
     /// Memory-light summary (moments only; quantiles unavailable).
     pub fn moments_only() -> Summary {
-        Summary { keep_samples: false, min: f64::INFINITY, max: f64::NEG_INFINITY, ..Default::default() }
+        Summary {
+            keep_samples: false,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            ..Default::default()
+        }
     }
 
     pub fn record(&mut self, x: f64) {

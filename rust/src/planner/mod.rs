@@ -122,7 +122,7 @@ impl Planner {
                         + (1.0 - w) * p.cov / min_cov.max(1e-300)
                 }
             };
-            if best.as_ref().map_or(true, |(_, s)| score < *s) {
+            if best.as_ref().is_none_or(|(_, s)| score < *s) {
                 best = Some((*p, score));
             }
         }
@@ -228,9 +228,9 @@ impl Planner {
         sweep
             .iter()
             .filter(|p| {
-                !sweep
-                    .iter()
-                    .any(|q| (q.mean < p.mean && q.cov <= p.cov) || (q.mean <= p.mean && q.cov < p.cov))
+                !sweep.iter().any(|q| {
+                    (q.mean < p.mean && q.cov <= p.cov) || (q.mean <= p.mean && q.cov < p.cov)
+                })
             })
             .copied()
             .collect()

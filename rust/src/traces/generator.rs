@@ -37,11 +37,27 @@ impl GeneratorConfig {
     pub fn paper_workload(tasks_per_job: usize, seed: u64) -> GeneratorConfig {
         let jobs = vec![
             // exponential tail, shift ~10 s (jobs 1–3)
-            JobSpec { job_id: 1, tasks: tasks_per_job, service: ServiceDist::shifted_exp(10.0, 0.8) },
-            JobSpec { job_id: 2, tasks: tasks_per_job, service: ServiceDist::shifted_exp(12.0, 0.5) },
-            JobSpec { job_id: 3, tasks: tasks_per_job, service: ServiceDist::shifted_exp(9.0, 1.2) },
+            JobSpec {
+                job_id: 1,
+                tasks: tasks_per_job,
+                service: ServiceDist::shifted_exp(10.0, 0.8),
+            },
+            JobSpec {
+                job_id: 2,
+                tasks: tasks_per_job,
+                service: ServiceDist::shifted_exp(12.0, 0.5),
+            },
+            JobSpec {
+                job_id: 3,
+                tasks: tasks_per_job,
+                service: ServiceDist::shifted_exp(9.0, 1.2),
+            },
             // job 4: shift ~1000 s
-            JobSpec { job_id: 4, tasks: tasks_per_job, service: ServiceDist::shifted_exp(1000.0, 0.05) },
+            JobSpec {
+                job_id: 4,
+                tasks: tasks_per_job,
+                service: ServiceDist::shifted_exp(1000.0, 0.05),
+            },
             // job 5: borderline — modest shift, heavier randomness
             JobSpec { job_id: 5, tasks: tasks_per_job, service: ServiceDist::pareto(5.0, 2.5) },
             // jobs 6–10: heavy tail

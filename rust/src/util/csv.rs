@@ -154,7 +154,7 @@ mod tests {
     }
 
     #[test]
-    fn write_then_read(){
+    fn write_then_read() {
         let dir = std::env::temp_dir().join("replica_csv_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("t.csv");

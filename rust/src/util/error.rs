@@ -1,48 +1,77 @@
 //! Crate-wide error type.
+//!
+//! Hand-written `Display`/`Error` impls instead of a `thiserror` derive:
+//! the build environment is fully offline (DESIGN.md §Substitutions) and
+//! proc-macro crates cannot be vendored as shims the way `log` and
+//! `once_cell` are.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error type for the `replica` crate.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Invalid configuration or argument values.
-    #[error("invalid configuration: {0}")]
     Config(String),
 
     /// A batching/assignment policy was asked to do something infeasible
     /// (e.g. B does not divide N for a balanced assignment).
-    #[error("infeasible policy: {0}")]
     Policy(String),
 
     /// Parse errors from the JSON/CSV/config codecs.
-    #[error("parse error: {0}")]
     Parse(String),
 
     /// I/O failures (artifact files, trace files, exports).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// PJRT/XLA runtime failures.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// A required AOT artifact is missing from the manifest.
-    #[error("missing artifact: {0} (run `make artifacts`)")]
     MissingArtifact(String),
 
     /// Coordinator-level failures (worker panic, channel closed, ...).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 }
 
-/// Crate-wide result alias.
-pub type Result<T> = std::result::Result<T, Error>;
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(msg) => write!(f, "invalid configuration: {msg}"),
+            Error::Policy(msg) => write!(f, "infeasible policy: {msg}"),
+            Error::Parse(msg) => write!(f, "parse error: {msg}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::MissingArtifact(msg) => {
+                write!(f, "missing artifact: {msg} (run `make artifacts`)")
+            }
+            Error::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
 
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(e.to_string())
     }
 }
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
 
 #[cfg(test)]
 mod tests {
@@ -61,5 +90,13 @@ mod tests {
         let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
         let e: Error = ioe.into();
         assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn xla_error_converts_to_runtime() {
+        let e: Error = xla::PjRtClient::cpu().err().unwrap().into();
+        assert!(matches!(e, Error::Runtime(_)));
+        assert!(e.to_string().contains("PJRT"));
     }
 }

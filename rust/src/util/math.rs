@@ -113,49 +113,76 @@ pub fn gammainc_lower_regularized(a: f64, x: f64) -> f64 {
     if x == 0.0 {
         return 0.0;
     }
-    let lg = lgamma(a);
     if x < a + 1.0 {
-        // series: γ(a,x) = x^a e^{-x} Σ x^n / (a (a+1) ... (a+n))
-        let mut sum = 1.0 / a;
-        let mut term = sum;
-        let mut ap = a;
-        for _ in 0..500 {
-            ap += 1.0;
-            term *= x / ap;
-            sum += term;
-            if term.abs() < sum.abs() * 1e-16 {
-                break;
-            }
-        }
-        (sum * (a * x.ln() - x - lg).exp()).clamp(0.0, 1.0)
+        lower_p_series(a, x)
     } else {
-        // continued fraction for Q(a,x), then P = 1 − Q
-        let tiny = 1e-300;
-        let mut b = x + 1.0 - a;
-        let mut c = 1.0 / tiny;
-        let mut d = 1.0 / b;
-        let mut h = d;
-        for i in 1..500 {
-            let an = -(i as f64) * (i as f64 - a);
-            b += 2.0;
-            d = an * d + b;
-            if d.abs() < tiny {
-                d = tiny;
-            }
-            c = b + an / c;
-            if c.abs() < tiny {
-                c = tiny;
-            }
-            d = 1.0 / d;
-            let delta = d * c;
-            h *= delta;
-            if (delta - 1.0).abs() < 1e-16 {
-                break;
-            }
-        }
-        let q = (a * x.ln() - x - lg).exp() * h;
-        (1.0 - q).clamp(0.0, 1.0)
+        (1.0 - upper_q_continued_fraction(a, x)).clamp(0.0, 1.0)
     }
+}
+
+/// Regularized upper incomplete gamma `Q(a, x) = 1 − P(a, x)`, computed
+/// directly in the tail (continued fraction for `x ≥ a+1`) so deep-tail
+/// survival keeps full *relative* precision instead of rounding to 0
+/// where `P` saturates at 1 — the Gamma `ServiceDist::ccdf` depends on
+/// this for the order-statistics integrator.
+pub fn gammainc_upper_regularized(a: f64, x: f64) -> f64 {
+    assert!(a > 0.0 && x >= 0.0, "Q(a,x) needs a > 0, x ≥ 0");
+    if x == 0.0 {
+        return 1.0;
+    }
+    if x < a + 1.0 {
+        // P is not close to 1 here, so the complement loses nothing
+        (1.0 - lower_p_series(a, x)).clamp(0.0, 1.0)
+    } else {
+        upper_q_continued_fraction(a, x)
+    }
+}
+
+/// Series `γ(a,x) = x^a e^{-x} Σ x^n / (a (a+1) ... (a+n))`, valid and
+/// fast-converging for `x < a + 1`.
+fn lower_p_series(a: f64, x: f64) -> f64 {
+    let lg = lgamma(a);
+    let mut sum = 1.0 / a;
+    let mut term = sum;
+    let mut ap = a;
+    for _ in 0..500 {
+        ap += 1.0;
+        term *= x / ap;
+        sum += term;
+        if term.abs() < sum.abs() * 1e-16 {
+            break;
+        }
+    }
+    (sum * (a * x.ln() - x - lg).exp()).clamp(0.0, 1.0)
+}
+
+/// Modified-Lentz continued fraction for `Q(a, x)`, valid for `x ≥ a+1`.
+fn upper_q_continued_fraction(a: f64, x: f64) -> f64 {
+    let lg = lgamma(a);
+    let tiny = 1e-300;
+    let mut b = x + 1.0 - a;
+    let mut c = 1.0 / tiny;
+    let mut d = 1.0 / b;
+    let mut h = d;
+    for i in 1..500 {
+        let an = -(i as f64) * (i as f64 - a);
+        b += 2.0;
+        d = an * d + b;
+        if d.abs() < tiny {
+            d = tiny;
+        }
+        c = b + an / c;
+        if c.abs() < tiny {
+            c = tiny;
+        }
+        d = 1.0 / d;
+        let delta = d * c;
+        h *= delta;
+        if (delta - 1.0).abs() < 1e-16 {
+            break;
+        }
+    }
+    ((a * x.ln() - x - lg).exp() * h).clamp(0.0, 1.0)
 }
 
 /// Simple bisection root finder on a bracketing interval.
@@ -263,6 +290,25 @@ mod tests {
         close(gammainc_lower_regularized(0.5, 1.0), 0.8427007929, 1e-9);
         // P(3, 3) = 1 − e^{-3}(1 + 3 + 4.5) ≈ 0.5768099189
         close(gammainc_lower_regularized(3.0, 3.0), 0.5768099189, 1e-9);
+    }
+
+    #[test]
+    fn gammainc_upper_keeps_deep_tail_precision() {
+        // Q(1, x) = e^{-x}: stays a meaningful nonzero value far past the
+        // point where P(1, x) saturates at 1.0
+        for x in [1.0, 10.0, 50.0, 200.0] {
+            let q = gammainc_upper_regularized(1.0, x);
+            let want = (-x).exp();
+            assert!((q - want).abs() < 1e-12 * want.max(1e-300), "x={x}: {q} vs {want}");
+        }
+        assert!(gammainc_upper_regularized(1.0, 50.0) > 0.0);
+        assert_eq!(gammainc_upper_regularized(2.5, 0.0), 1.0);
+        // complement agrees with P where both are well-conditioned
+        for x in [0.5, 2.0, 5.0] {
+            let p = gammainc_lower_regularized(2.5, x);
+            let q = gammainc_upper_regularized(2.5, x);
+            assert!((p + q - 1.0).abs() < 1e-12, "x={x}");
+        }
     }
 
     #[test]

@@ -3,7 +3,8 @@
 //!
 //! Everything here is hand-built because the build environment is fully
 //! offline (see DESIGN.md §Substitutions): no `rand`, `serde`, or
-//! `proptest` — only the crates vendored with the `xla` tree.
+//! `proptest` — only the hermetic shims vendored under `rust/vendor/`
+//! (`log`, `once_cell`, and the `xla` PJRT stub).
 
 pub mod csv;
 pub mod error;

@@ -1,0 +1,153 @@
+//! Property coverage for the `dist` subsystem: analytic moments vs
+//! large-sample Monte-Carlo for every family, quantile/CDF round trips,
+//! exact Empirical order statistics, and tail classification.
+
+use replica::dist::{Empirical, ServiceDist, TailClass, TailFit};
+use replica::util::proptest::forall;
+use replica::util::rng::Pcg64;
+
+fn mc_moments(d: &ServiceDist, n: usize, seed: u64) -> (f64, f64) {
+    let mut rng = Pcg64::new(seed);
+    let (mut s, mut s2) = (0.0, 0.0);
+    for _ in 0..n {
+        let x = d.sample(&mut rng);
+        s += x;
+        s2 += x * x;
+    }
+    let mean = s / n as f64;
+    (mean, s2 / n as f64 - mean * mean)
+}
+
+/// Every family with finite variance: analytic `mean()`/`variance()`
+/// agree with 200k-sample Monte-Carlo estimates within CLT tolerance.
+#[test]
+fn analytic_moments_match_monte_carlo_for_every_family() {
+    let empirical_data: Vec<f64> = {
+        let d = ServiceDist::shifted_exp(1.0, 2.0);
+        let mut rng = Pcg64::new(17);
+        (0..5_000).map(|_| d.sample(&mut rng)).collect()
+    };
+    let families = vec![
+        ServiceDist::exp(1.3),
+        ServiceDist::shifted_exp(0.5, 2.0),
+        // alpha = 6: finite fourth moment, so the sample variance is stable
+        ServiceDist::pareto(1.0, 6.0),
+        ServiceDist::weibull(1.7, 2.0),
+        ServiceDist::weibull(0.7, 1.0),
+        ServiceDist::gamma_dist(2.5, 0.8),
+        ServiceDist::gamma_dist(0.7, 1.5),
+        ServiceDist::bimodal(0.2, (0.1, 10.0), (5.0, 1.0)),
+        ServiceDist::empirical(empirical_data),
+        ServiceDist::scaled(3.0, ServiceDist::shifted_exp(0.5, 2.0)),
+    ];
+    for (i, d) in families.iter().enumerate() {
+        let (m, v) = mc_moments(d, 200_000, 100 + i as u64);
+        let mean = d.mean();
+        let var = d.variance();
+        assert!(mean.is_finite() && var.is_finite(), "{}", d.label());
+        assert!((m - mean).abs() / mean < 0.02, "{}: mc mean {m} vs {mean}", d.label());
+        assert!((v - var).abs() / var < 0.10, "{}: mc var {v} vs {var}", d.label());
+    }
+}
+
+/// `quantile ∘ cdf` is the identity on interior points for every family
+/// (exact closed-form inversion where it exists, bisection otherwise).
+#[test]
+fn quantile_cdf_round_trips_on_interior_points() {
+    let families = vec![
+        ServiceDist::exp(1.3),
+        ServiceDist::shifted_exp(0.5, 2.0),
+        ServiceDist::pareto(1.0, 1.5),
+        ServiceDist::weibull(0.7, 1.0),
+        ServiceDist::gamma_dist(2.0, 1.5),
+        ServiceDist::gamma_dist(0.7, 1.0),
+        ServiceDist::bimodal(0.1, (0.1, 10.0), (5.0, 1.0)),
+    ];
+    for d in &families {
+        for i in 1..40 {
+            let q = i as f64 / 40.0;
+            let t = d.quantile(q);
+            let back = d.cdf(t);
+            assert!((back - q).abs() < 1e-6, "{}: q={q} t={t} back={back}", d.label());
+        }
+        // monotone in q
+        let mut prev = f64::NEG_INFINITY;
+        for i in 1..20 {
+            let t = d.quantile(i as f64 / 20.0);
+            assert!(t >= prev, "{}", d.label());
+            prev = t;
+        }
+    }
+}
+
+/// Empirical quantiles are the sample order statistics, exactly.
+#[test]
+fn empirical_quantiles_are_exact_order_statistics() {
+    let d = ServiceDist::pareto(2.0, 1.4);
+    let mut rng = Pcg64::new(23);
+    let raw: Vec<f64> = (0..997).map(|_| d.sample(&mut rng)).collect();
+    let e = Empirical::new(raw.clone());
+    let n = e.len();
+    let mut sorted = raw;
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for (i, &x) in sorted.iter().enumerate() {
+        let q = (i + 1) as f64 / n as f64;
+        // bit-exact: no interpolation, no binning
+        assert_eq!(e.quantile(q).to_bits(), x.to_bits(), "i={i}");
+    }
+    assert_eq!(e.quantile(0.0).to_bits(), sorted[0].to_bits());
+    assert_eq!(e.quantile(1.0).to_bits(), sorted[n - 1].to_bits());
+    // the ECDF inverts back: quantile(cdf(x)) == x for every sample
+    for &x in sorted.iter() {
+        assert_eq!(e.quantile(e.cdf(x)).to_bits(), x.to_bits());
+    }
+}
+
+/// The §VII classifier separates the paper's two families: SExp samples
+/// label `ExponentialTail`, Pareto samples label `HeavyTail`.
+#[test]
+fn tail_classifier_separates_the_paper_families() {
+    forall("tailfit separates families", 20, |rng| {
+        let n = 2_000 + rng.range(0, 3_000);
+        // exponential family: paper-like shifts (jobs 1-4)
+        let delta = 5.0 + 20.0 * rng.uniform();
+        let mu = 0.2 + 2.0 * rng.uniform();
+        let sexp = ServiceDist::shifted_exp(delta, mu);
+        let xs: Vec<f64> = (0..n).map(|_| sexp.sample(rng)).collect();
+        let fit = TailFit::classify(&xs);
+        assert_eq!(fit.class, TailClass::ExponentialTail, "{}: {fit:?}", sexp.label());
+
+        // heavy family: paper-like tail indices (jobs 6-10)
+        let sigma = 1.0 + 20.0 * rng.uniform();
+        let alpha = 1.1 + 0.7 * rng.uniform();
+        let pareto = ServiceDist::pareto(sigma, alpha);
+        let xs: Vec<f64> = (0..n).map(|_| pareto.sample(rng)).collect();
+        let fit = TailFit::classify(&xs);
+        assert_eq!(fit.class, TailClass::HeavyTail, "{}: {fit:?}", pareto.label());
+        assert!(fit.tail_alpha < 4.0, "{}: hill {}", pareto.label(), fit.tail_alpha);
+    });
+}
+
+/// Sampling, CDF and survival stay mutually consistent: the empirical
+/// CDF of drawn samples tracks the analytic CDF (a one-sided
+/// Kolmogorov-style check at fixed probe points).
+#[test]
+fn sampling_matches_the_analytic_cdf() {
+    let families = vec![
+        ServiceDist::exp(1.0),
+        ServiceDist::pareto(1.0, 1.5),
+        ServiceDist::weibull(0.7, 1.0),
+        ServiceDist::gamma_dist(2.0, 1.0),
+        ServiceDist::bimodal(0.3, (0.1, 10.0), (5.0, 1.0)),
+    ];
+    let n = 100_000;
+    for (i, d) in families.iter().enumerate() {
+        let mut rng = Pcg64::new(500 + i as u64);
+        let xs: Vec<f64> = (0..n).map(|_| d.sample(&mut rng)).collect();
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            let t = d.quantile(q);
+            let emp = xs.iter().filter(|&&x| x <= t).count() as f64 / n as f64;
+            assert!((emp - q).abs() < 0.01, "{}: q={q} empirical {emp}", d.label());
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! Minimal offline stand-in for the `log` facade crate.
+//!
+//! The build environment is fully offline (DESIGN.md §Substitutions), so
+//! the repo vendors the small slice of `log`'s API it actually uses: the
+//! five level macros, the [`Log`] trait, and the global logger /
+//! max-level registry. Semantics match the real facade for that slice:
+//! records are filtered first by the global max level, then by the
+//! installed logger's own [`Log::enabled`].
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Logging verbosity, ordered `Error < Warn < Info < Debug < Trace`.
+#[repr(usize)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl Level {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad(self.as_str())
+    }
+}
+
+/// Global level filter for [`set_max_level`]; `Off` disables everything.
+#[repr(usize)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+/// Metadata about a log record.
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record: metadata plus the formatted message arguments.
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A logging backend.
+pub trait Log: Sync + Send {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+struct NopLogger;
+
+impl Log for NopLogger {
+    fn enabled(&self, _metadata: &Metadata) -> bool {
+        false
+    }
+
+    fn log(&self, _record: &Record) {}
+
+    fn flush(&self) {}
+}
+
+static NOP: NopLogger = NopLogger;
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+
+/// Error returned when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger is already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+/// Install the global logger (the first call wins).
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// The installed logger (a no-op logger until [`set_logger`] succeeds).
+pub fn logger() -> &'static dyn Log {
+    match LOGGER.get() {
+        Some(l) => *l,
+        None => &NOP,
+    }
+}
+
+/// Set the global maximum level; records above it are skipped early.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+/// The current global maximum level, as its raw ordinal (macro support).
+pub fn max_level_raw() -> usize {
+    MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Macro support: dispatch one record to the installed logger.
+pub fn __private_api_log(args: fmt::Arguments, level: Level, target: &str) {
+    let record = Record { metadata: Metadata { level, target }, args };
+    let logger = logger();
+    if logger.enabled(record.metadata()) {
+        logger.log(&record);
+    }
+}
+
+#[macro_export]
+macro_rules! log {
+    (target: $target:expr, $lvl:expr, $($arg:tt)+) => {{
+        let lvl = $lvl;
+        if (lvl as usize) <= $crate::max_level_raw() {
+            $crate::__private_api_log(::core::format_args!($($arg)+), lvl, $target);
+        }
+    }};
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::log!(target: ::core::module_path!(), $lvl, $($arg)+)
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    static HITS: AtomicUsize = AtomicUsize::new(0);
+
+    struct Counter;
+
+    impl Log for Counter {
+        fn enabled(&self, metadata: &Metadata) -> bool {
+            metadata.level() <= Level::Info
+        }
+
+        fn log(&self, record: &Record) {
+            if self.enabled(record.metadata()) {
+                HITS.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+
+        fn flush(&self) {}
+    }
+
+    static COUNTER: Counter = Counter;
+
+    #[test]
+    fn filtering_and_dispatch() {
+        let _ = set_logger(&COUNTER);
+        set_max_level(LevelFilter::Trace);
+        let before = HITS.load(Ordering::Relaxed);
+        info!("count {}", 1);
+        debug!("not counted (logger disabled at Debug)");
+        assert_eq!(HITS.load(Ordering::Relaxed), before + 1);
+        // a second logger install fails but does not panic
+        assert!(set_logger(&COUNTER).is_err());
+    }
+
+    #[test]
+    fn level_ordering_and_display() {
+        assert!(Level::Error < Level::Trace);
+        assert_eq!(Level::Warn.as_str(), "WARN");
+        assert_eq!(format!("{:5}", Level::Info), "INFO ");
+    }
+}

@@ -1,0 +1,49 @@
+//! Minimal offline stand-in for `once_cell` (the `sync::OnceCell` slice
+//! this repo uses), backed by `std::sync::OnceLock`.
+
+pub mod sync {
+    /// A thread-safe cell that can be written to at most once.
+    #[derive(Debug)]
+    pub struct OnceCell<T> {
+        inner: std::sync::OnceLock<T>,
+    }
+
+    impl<T> OnceCell<T> {
+        pub const fn new() -> OnceCell<T> {
+            OnceCell { inner: std::sync::OnceLock::new() }
+        }
+
+        pub fn get(&self) -> Option<&T> {
+            self.inner.get()
+        }
+
+        pub fn set(&self, value: T) -> Result<(), T> {
+            self.inner.set(value)
+        }
+
+        pub fn get_or_init<F: FnOnce() -> T>(&self, f: F) -> &T {
+            self.inner.get_or_init(f)
+        }
+    }
+
+    impl<T> Default for OnceCell<T> {
+        fn default() -> OnceCell<T> {
+            OnceCell::new()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::OnceCell;
+
+    #[test]
+    fn init_once() {
+        static CELL: OnceCell<u32> = OnceCell::new();
+        assert!(CELL.get().is_none());
+        assert_eq!(*CELL.get_or_init(|| 7), 7);
+        assert_eq!(*CELL.get_or_init(|| 9), 7);
+        assert!(CELL.set(11).is_err());
+        assert_eq!(CELL.get(), Some(&7));
+    }
+}
