@@ -1,57 +1,146 @@
-//! Bench: serial vs multi-threaded Monte-Carlo evaluation throughput
-//! (replications/sec) across cluster sizes, plus the determinism
-//! contract check (bit-identical estimates for any thread fan-out).
+//! Bench: Monte-Carlo evaluation throughput, serial vs the persistent
+//! worker pool — single scenarios and a whole-sweep batch — plus the
+//! determinism contract check (bit-identical estimates for any
+//! fan-out).
+//!
+//! Flags (after `--`, e.g. `cargo bench --bench bench_eval -- --smoke`):
+//!
+//! * `--smoke`       short CI run (fewer reps, one timing iteration)
+//! * `--json PATH`   write the batch-sweep throughput snapshot to PATH
+//!                   (the `scripts/bench_snapshot.sh` → `BENCH_eval.json`
+//!                   flow)
+
+use std::time::Instant;
 
 use replica::dist::ServiceDist;
 use replica::eval::{Estimator, MonteCarlo, Scenario};
-use replica::metrics::bench;
+use replica::sim::WorkerPool;
+use replica::util::json::Json;
+
+fn divisors(n: usize) -> Vec<usize> {
+    (1..=n).filter(|b| n % b == 0).collect()
+}
+
+/// The benchmark batch: every operating point of N = 60 and N = 120
+/// (12 + 16 divisors = 28 scenarios ≥ the 20-point floor).
+fn sweep_scenarios() -> Vec<Scenario> {
+    let tau = ServiceDist::shifted_exp(0.05, 1.0);
+    let mut scenarios = Vec::new();
+    for n in [60usize, 120] {
+        for b in divisors(n) {
+            scenarios.push(Scenario::balanced(n, b, tau.clone()));
+        }
+    }
+    scenarios
+}
+
+/// Mean seconds per `evaluate_many` call (one warm-up, then `iters`
+/// timed calls).
+fn time_batch(mc: &MonteCarlo, scenarios: &[Scenario], iters: usize) -> f64 {
+    std::hint::black_box(mc.evaluate_many(scenarios).expect("eval"));
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(mc.evaluate_many(scenarios).expect("eval"));
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
 
 fn main() {
-    let cores =
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    println!("available cores: {cores}\n");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let json_path = argv
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| argv.get(i + 1))
+        .cloned();
 
+    let pool_width = WorkerPool::global().threads();
+    println!("worker pool width: {pool_width}{}\n", if smoke { " (smoke)" } else { "" });
+
+    let reps = if smoke { 3_000 } else { 30_000 };
+    let iters = if smoke { 1 } else { 3 };
+
+    // ---- single scenarios: per-scenario fan-out ---------------------
     let tau = ServiceDist::shifted_exp(0.05, 1.0);
-    let reps = 30_000;
-
     for n in [20usize, 100, 200] {
-        // interior operating point with replication degree 5
-        let b = n / 5;
+        let b = n / 5; // interior operating point, replication degree 5
         let scenario = Scenario::balanced(n, b, tau.clone());
-
-        let mut serial_per_iter = f64::NAN;
+        let mut serial_secs = f64::NAN;
         for threads in [1usize, 2, 4, 0] {
             let mc = MonteCarlo { reps, seed: 42, threads };
+            let secs = time_batch(&mc, std::slice::from_ref(&scenario), iters);
             let shown = if threads == 0 {
-                format!("auto({cores})")
+                format!("pool({pool_width})")
             } else {
                 threads.to_string()
             };
-            let label = format!("MonteCarlo N={n} B={b} reps=30k threads={shown}");
-            let r = bench(&label, 200.0, || {
-                std::hint::black_box(mc.evaluate(&scenario).expect("eval"));
-            });
-            let reps_per_sec = reps as f64 * r.per_second();
             if threads == 1 {
-                serial_per_iter = r.secs_per_iter;
-                println!("  -> {:.2} M reps/s", 1e-6 * reps_per_sec);
+                serial_secs = secs;
+                println!(
+                    "single N={n} B={b} threads={shown}: {:.2} M reps/s",
+                    1e-6 * reps as f64 / secs
+                );
             } else {
                 println!(
-                    "  -> {:.2} M reps/s ({:.2}x vs serial)",
-                    1e-6 * reps_per_sec,
-                    serial_per_iter / r.secs_per_iter
+                    "single N={n} B={b} threads={shown}: {:.2} M reps/s ({:.2}x vs serial)",
+                    1e-6 * reps as f64 / secs,
+                    serial_secs / secs
                 );
             }
         }
+        println!();
+    }
 
-        // determinism contract: the estimates above must be bit-identical
-        let a = MonteCarlo { reps, seed: 42, threads: 1 }.evaluate(&scenario).unwrap();
-        let b_est = MonteCarlo { reps, seed: 42, threads: 0 }.evaluate(&scenario).unwrap();
+    // ---- whole-sweep batch: two-level scenario×chunk parallelism ----
+    let scenarios = sweep_scenarios();
+    let total_reps = (scenarios.len() * reps) as f64;
+    let serial = MonteCarlo::serial(reps, 42);
+    let pooled = MonteCarlo::new(reps, 42);
+    let serial_secs = time_batch(&serial, &scenarios, iters);
+    let pooled_secs = time_batch(&pooled, &scenarios, iters);
+    let serial_rps = total_reps / serial_secs;
+    let pooled_rps = total_reps / pooled_secs;
+    println!(
+        "batch sweep ({} scenarios x {reps} reps): serial {:.2} M reps/s, \
+         pooled {:.2} M reps/s ({:.2}x)",
+        scenarios.len(),
+        1e-6 * serial_rps,
+        1e-6 * pooled_rps,
+        serial_secs / pooled_secs
+    );
+
+    // ---- determinism contract ---------------------------------------
+    let a = serial.evaluate_many(&scenarios).expect("serial eval");
+    let b = pooled.evaluate_many(&scenarios).expect("pooled eval");
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
         assert_eq!(
-            a.mean.to_bits(),
-            b_est.mean.to_bits(),
-            "thread fan-out changed the estimate at N={n}"
+            x.mean.to_bits(),
+            y.mean.to_bits(),
+            "pool execution changed the estimate of batch item {i}"
         );
-        println!("  determinism: serial and threaded estimates bit-identical\n");
+        assert_eq!(x.p99.to_bits(), y.p99.to_bits(), "item {i}");
+    }
+    let spot = pooled.evaluate_at(&scenarios[3], 3).expect("eval_at");
+    assert_eq!(
+        b[3].mean.to_bits(),
+        spot.mean.to_bits(),
+        "evaluate_many item 3 diverged from evaluate_at substream 3"
+    );
+    println!("determinism: serial and pooled estimates bit-identical\n");
+
+    if let Some(path) = json_path {
+        let snapshot = Json::obj(vec![
+            ("bench", Json::Str("bench_eval batch sweep".into())),
+            ("scenarios", Json::Num(scenarios.len() as f64)),
+            ("reps_per_scenario", Json::Num(reps as f64)),
+            ("pool_threads", Json::Num(pool_width as f64)),
+            ("serial_reps_per_sec", Json::Num(serial_rps)),
+            ("pooled_reps_per_sec", Json::Num(pooled_rps)),
+            ("speedup", Json::Num(serial_secs / pooled_secs)),
+            ("smoke", Json::Bool(smoke)),
+            ("measured", Json::Bool(true)),
+        ]);
+        std::fs::write(&path, snapshot.to_string_pretty()).expect("write snapshot");
+        println!("wrote {path}");
     }
 }

@@ -89,6 +89,11 @@ pub fn plan(args: &mut Args) -> Result<()> {
 
 /// Resolve the estimator backend from `--backend mc|analytic|auto`
 /// (plus `--reps/--seed/--threads` for the stochastic ones).
+///
+/// Threading note: `--threads` only caps the per-scenario fan-out of
+/// one evaluation; the OS threads themselves come from the persistent
+/// process-wide pool sized by `--pool-threads` (handled in
+/// [`crate::cli::run`] before dispatch).
 fn estimator_from(args: &mut Args) -> Result<Box<dyn Estimator>> {
     let reps = args.get_usize("reps", DEFAULT_REPS)?;
     let seed = args.get_u64("seed", 0)?;
@@ -450,6 +455,20 @@ mod tests {
             "simulate --workers 12 --batches 3 --family exp --backend nope",
         ))
         .is_err());
+    }
+
+    #[test]
+    fn pool_threads_flag_is_accepted() {
+        // parsed in cli::run before dispatch; best-effort if the global
+        // pool already exists (e.g. another test initialized it)
+        crate::cli::run(
+            "simulate --workers 12 --batches 3 --family exp --reps 500 \
+             --pool-threads 2"
+                .split_whitespace()
+                .map(String::from)
+                .collect(),
+        )
+        .unwrap();
     }
 
     #[test]

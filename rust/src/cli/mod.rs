@@ -3,7 +3,7 @@
 //! ```text
 //! replica plan       --workers 100 --family pareto --alpha 1.5 [--objective mean|cov|tradeoff=0.5]
 //! replica simulate   --workers 100 --batches 10 --family sexp --delta 0.05 --mu 1
-//!                    [--backend mc|analytic|auto] [--reps 20000] [--threads 0]
+//!                    [--backend mc|analytic|auto] [--reps 20000] [--pool-threads 0]
 //! replica sweep      --workers 100 --family sexp --delta 0.05 --mu 1
 //! replica trace gen      --out trace.csv [--tasks 100] [--seed 42]
 //! replica trace analyze  --trace trace.csv
@@ -22,6 +22,14 @@ use crate::util::error::{Error, Result};
 pub fn run(argv: Vec<String>) -> Result<()> {
     crate::util::logging::init();
     let mut args = Args::parse(argv)?;
+    // Size the process-wide simulation pool before any command touches
+    // it (`0`/absent = one worker per core). This replaces per-call
+    // thread spawning: every Monte-Carlo evaluation in the process
+    // shares these workers.
+    let pool_threads = args.get_usize("pool-threads", 0)?;
+    if pool_threads > 0 {
+        crate::sim::pool::WorkerPool::configure_global(pool_threads);
+    }
     let cmd = args.positional(0).map(String::from);
     match cmd.as_deref() {
         Some("plan") => commands::plan(&mut args),
@@ -66,6 +74,9 @@ COMMON FLAGS:
   --backend B           mc | analytic | auto (simulate; default mc)
   --reps N              Monte-Carlo replications
   --seed N              RNG seed
-  --threads N           Monte-Carlo thread fan-out (0 = all cores)
+  --pool-threads N      size of the persistent simulation worker pool,
+                        shared by every evaluation (0 = all cores)
+  --threads N           per-scenario Monte-Carlo fan-out cap
+                        (0 = pool width, 1 = force serial)
   --config FILE         load [system]/[service] sections from TOML
 ";

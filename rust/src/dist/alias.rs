@@ -1,0 +1,204 @@
+//! Walker alias tables: O(1) sampling from finite discrete
+//! distributions.
+//!
+//! Built once (O(n)), sampled forever after with a single uniform draw
+//! and two array reads — no binary search, no rejection loop. This is
+//! the engine behind the batched [`super::Sampler`] for the `Bimodal`
+//! mixture (2 cells) and the `Empirical` bootstrap (n cells), replacing
+//! per-draw branching in the Monte-Carlo hot loop.
+
+use crate::util::rng::Pcg64;
+
+/// A compiled Walker alias table over outcomes `0..n`.
+///
+/// `sample` draws index `i` with probability `w_i / Σ w_j` for the
+/// weights the table was built from. Construction uses the standard
+/// two-worklist (small/large) pairing, which is numerically robust:
+/// leftover cells are clamped to acceptance probability 1, so rounding
+/// error never produces an out-of-range alias.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AliasTable {
+    /// Acceptance probability of each cell (in units of one cell).
+    prob: Vec<f64>,
+    /// Donor outcome used when the cell rejects.
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    /// Build from non-negative weights (not necessarily normalized).
+    ///
+    /// Panics on empty input, non-finite or negative weights, or an
+    /// all-zero weight vector.
+    pub fn new(weights: &[f64]) -> AliasTable {
+        let n = weights.len();
+        assert!(n > 0, "AliasTable needs at least one outcome");
+        assert!(
+            n <= u32::MAX as usize,
+            "AliasTable supports at most u32::MAX outcomes"
+        );
+        assert!(
+            weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+            "AliasTable weights must be finite and non-negative"
+        );
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "AliasTable needs at least one positive weight");
+
+        // Scale so the average cell holds exactly 1.0, then pair each
+        // underfull cell with an overfull donor.
+        let scale = n as f64 / total;
+        let mut prob: Vec<f64> = weights.iter().map(|w| w * scale).collect();
+        let mut alias: Vec<u32> = (0..n as u32).collect();
+        let mut small: Vec<usize> = Vec::with_capacity(n);
+        let mut large: Vec<usize> = Vec::with_capacity(n);
+        for (i, &p) in prob.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        while !small.is_empty() && !large.is_empty() {
+            let s = small.pop().expect("checked non-empty");
+            let l = *large.last().expect("checked non-empty");
+            alias[s] = l as u32;
+            // donate (1 − prob[s]) from cell l to top up cell s; l
+            // stays a donor until it dips below one cell of mass
+            let remaining = prob[l] + prob[s] - 1.0;
+            prob[l] = remaining;
+            if remaining < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // Rounding can strand cells in either list with prob ≈ 1; their
+        // alias is identity or a donor, so clamping to "always accept"
+        // is exact.
+        for i in small.into_iter().chain(large) {
+            prob[i] = 1.0;
+        }
+        AliasTable { prob, alias }
+    }
+
+    /// The uniform distribution over `0..n` (used by the `Empirical`
+    /// bootstrap: every cell accepts, the alias is never consulted).
+    pub fn uniform(n: usize) -> AliasTable {
+        assert!(n > 0 && n <= u32::MAX as usize);
+        AliasTable { prob: vec![1.0; n], alias: (0..n as u32).collect() }
+    }
+
+    /// Number of outcomes.
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Draw one outcome index. Consumes exactly one uniform draw.
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let n = self.prob.len();
+        let x = rng.uniform() * n as f64;
+        // u < 1.0 guarantees x < n mathematically; the clamp guards the
+        // one-ULP rounding case for very large n.
+        let mut i = x as usize;
+        if i >= n {
+            i = n - 1;
+        }
+        let frac = x - i as f64;
+        if frac < self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frequencies(table: &AliasTable, draws: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg64::new(seed);
+        let mut counts = vec![0usize; table.len()];
+        for _ in 0..draws {
+            counts[table.sample(&mut rng)] += 1;
+        }
+        counts.into_iter().map(|c| c as f64 / draws as f64).collect()
+    }
+
+    #[test]
+    fn matches_weights_in_frequency() {
+        let weights = [1.0, 2.0, 3.0, 4.0];
+        let table = AliasTable::new(&weights);
+        let freq = frequencies(&table, 200_000, 7);
+        for (i, &w) in weights.iter().enumerate() {
+            let want = w / 10.0;
+            assert!((freq[i] - want).abs() < 0.01, "cell {i}: {} vs {want}", freq[i]);
+        }
+    }
+
+    #[test]
+    fn uniform_table_is_uniform() {
+        let table = AliasTable::uniform(8);
+        assert_eq!(table.len(), 8);
+        let freq = frequencies(&table, 160_000, 3);
+        for (i, f) in freq.iter().enumerate() {
+            assert!((f - 0.125).abs() < 0.01, "cell {i}: {f}");
+        }
+    }
+
+    #[test]
+    fn zero_weights_are_never_drawn() {
+        let table = AliasTable::new(&[1.0, 0.0, 3.0, 0.0]);
+        let freq = frequencies(&table, 100_000, 11);
+        assert_eq!(freq[1], 0.0);
+        assert_eq!(freq[3], 0.0);
+        assert!((freq[0] - 0.25).abs() < 0.01);
+        assert!((freq[2] - 0.75).abs() < 0.01);
+    }
+
+    #[test]
+    fn degenerate_single_outcome() {
+        let table = AliasTable::new(&[5.0]);
+        let mut rng = Pcg64::new(1);
+        for _ in 0..100 {
+            assert_eq!(table.sample(&mut rng), 0);
+        }
+        // two cells, all mass on one of them
+        let table = AliasTable::new(&[1.0, 0.0]);
+        let mut rng = Pcg64::new(2);
+        for _ in 0..100 {
+            assert_eq!(table.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let table = AliasTable::new(&[0.3, 0.5, 0.2]);
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..200 {
+            assert_eq!(table.sample(&mut a), table.sample(&mut b));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_rejected() {
+        AliasTable::new(&[]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn all_zero_rejected() {
+        AliasTable::new(&[0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_rejected() {
+        AliasTable::new(&[1.0, -0.5]);
+    }
+}

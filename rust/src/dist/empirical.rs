@@ -44,6 +44,11 @@ impl Empirical {
     }
 
     /// Draw one sample uniformly with replacement (bootstrap).
+    ///
+    /// Hot loops should prefer the compiled
+    /// [`crate::dist::Sampler`], which bootstraps through a uniform
+    /// alias table (one uniform per draw, no rejection loop).
+    #[inline]
     pub fn sample(&self, rng: &mut Pcg64) -> f64 {
         self.sorted[rng.below(self.sorted.len() as u64) as usize]
     }

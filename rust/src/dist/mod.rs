@@ -26,10 +26,20 @@
 //! `sample`/`cdf`/`ccdf`/`quantile` are mutually consistent — the
 //! property [`crate::eval::Analytic`] relies on for exact p50/p95/p99.
 
+//!
+//! Hot-path sampling: [`ServiceDist::sample`] is the scalar per-draw
+//! entry point; simulations that draw millions of times compile a
+//! [`Sampler`] once ([`ServiceDist::sampler`]) and batch-fill slices —
+//! see [`sampler`] and [`alias`] for the contract.
+
+pub mod alias;
 mod empirical;
+pub mod sampler;
 mod service;
 mod tailfit;
 
+pub use alias::AliasTable;
 pub use empirical::Empirical;
+pub use sampler::Sampler;
 pub use service::ServiceDist;
 pub use tailfit::{TailClass, TailFit};

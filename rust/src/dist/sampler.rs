@@ -1,0 +1,322 @@
+//! Compiled batch samplers — the Monte-Carlo hot path's draw engine.
+//!
+//! [`crate::dist::ServiceDist::sample`] is the right call for a single
+//! draw, but the simulator draws millions of service times per sweep,
+//! and paying an enum match (plus, for `Bimodal`/`Empirical`, per-draw
+//! branching) on every draw is measurable. A [`Sampler`] is compiled
+//! once per simulation from a [`ServiceDist`] and then:
+//!
+//! * [`Sampler::fill`] fills a caller-owned `&mut [f64]` slice with one
+//!   family-specialized tight loop — the enum dispatch is hoisted out
+//!   of the per-draw path entirely;
+//! * `Bimodal` and `Empirical` draw through Walker
+//!   [`AliasTable`]s (O(1) per draw, one uniform), replacing the
+//!   per-draw mixture branch and the bootstrap index rejection loop.
+//!
+//! The scalar per-draw kernels (`exp_draw`, `gamma_draw`, …) live here
+//! and are shared with `ServiceDist::sample`, which stays as a thin
+//! per-draw wrapper over the same arithmetic — so for the closed-form
+//! families a `Sampler` consumes the RNG stream draw-for-draw exactly
+//! like the scalar path. `Bimodal`/`Empirical` use the alias path
+//! instead, which is identical **in distribution** (property-tested in
+//! `tests/sampler_properties.rs`) but consumes the stream differently.
+
+use crate::dist::alias::AliasTable;
+use crate::dist::ServiceDist;
+use crate::util::rng::Pcg64;
+
+// ------------------------------------------------------ scalar kernels
+
+/// One exponential draw by inversion, `−ln U / μ` with `U ∈ (0, 1]`.
+#[inline]
+pub(crate) fn exp_draw(rng: &mut Pcg64, mu: f64) -> f64 {
+    -rng.uniform_pos().ln() / mu
+}
+
+/// One Pareto(σ, α) draw by inversion.
+#[inline]
+pub(crate) fn pareto_draw(rng: &mut Pcg64, sigma: f64, alpha: f64) -> f64 {
+    sigma * rng.uniform_pos().powf(-1.0 / alpha)
+}
+
+/// One Weibull(k, λ) draw by inversion.
+#[inline]
+pub(crate) fn weibull_draw(rng: &mut Pcg64, shape: f64, scale: f64) -> f64 {
+    scale * (-rng.uniform_pos().ln()).powf(1.0 / shape)
+}
+
+/// Marsaglia–Tsang Gamma(shape, 1) sampler; Boost trick for shape < 1.
+pub(crate) fn gamma_draw(rng: &mut Pcg64, shape: f64) -> f64 {
+    if shape < 1.0 {
+        let x = gamma_draw(rng, shape + 1.0);
+        return x * rng.uniform_pos().powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let z = rng.normal();
+        let v = (1.0 + c * z).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u = rng.uniform_pos();
+        if u.ln() < 0.5 * z * z + d - d * v + d * v.ln() {
+            return d * v;
+        }
+    }
+}
+
+// ---------------------------------------------------- compiled sampler
+
+/// A service-time sampler compiled from one [`ServiceDist`].
+///
+/// Build once per simulation ([`ServiceDist::sampler`]), then call
+/// [`Sampler::fill`] from the replication loop. Compilation is O(1)
+/// except for `Empirical`, which clones the sample vector and builds
+/// its alias table in O(n) — amortized over every replication of the
+/// scenario.
+#[derive(Clone, Debug)]
+pub enum Sampler {
+    Exp {
+        mu: f64,
+    },
+    ShiftedExp {
+        delta: f64,
+        mu: f64,
+    },
+    Pareto {
+        sigma: f64,
+        alpha: f64,
+    },
+    Weibull {
+        shape: f64,
+        scale: f64,
+    },
+    Gamma {
+        shape: f64,
+        scale: f64,
+    },
+    /// Component picked by a 2-cell alias table (0 = fast, 1 = slow),
+    /// then `delta + Exp(mu)`.
+    Bimodal {
+        comps: [(f64, f64); 2],
+        alias: AliasTable,
+    },
+    /// Bootstrap over the sorted sample values via a uniform alias
+    /// table (one uniform per draw; no Lemire rejection loop).
+    Empirical {
+        values: Vec<f64>,
+        alias: AliasTable,
+    },
+}
+
+impl Sampler {
+    /// Compile the batch sampler for a distribution.
+    pub fn compile(dist: &ServiceDist) -> Sampler {
+        match dist {
+            ServiceDist::Exp { mu } => Sampler::Exp { mu: *mu },
+            ServiceDist::ShiftedExp { delta, mu } => {
+                Sampler::ShiftedExp { delta: *delta, mu: *mu }
+            }
+            ServiceDist::Pareto { sigma, alpha } => {
+                Sampler::Pareto { sigma: *sigma, alpha: *alpha }
+            }
+            ServiceDist::Weibull { shape, scale } => {
+                Sampler::Weibull { shape: *shape, scale: *scale }
+            }
+            ServiceDist::Gamma { shape, scale } => {
+                Sampler::Gamma { shape: *shape, scale: *scale }
+            }
+            ServiceDist::Bimodal { p_slow, fast, slow } => Sampler::Bimodal {
+                comps: [*fast, *slow],
+                alias: AliasTable::new(&[1.0 - p_slow, *p_slow]),
+            },
+            ServiceDist::Empirical(e) => Sampler::Empirical {
+                values: e.data().to_vec(),
+                alias: AliasTable::uniform(e.len()),
+            },
+        }
+    }
+
+    /// Draw one service time.
+    #[inline]
+    pub fn sample_one(&self, rng: &mut Pcg64) -> f64 {
+        match self {
+            Sampler::Exp { mu } => exp_draw(rng, *mu),
+            Sampler::ShiftedExp { delta, mu } => delta + exp_draw(rng, *mu),
+            Sampler::Pareto { sigma, alpha } => pareto_draw(rng, *sigma, *alpha),
+            Sampler::Weibull { shape, scale } => weibull_draw(rng, *shape, *scale),
+            Sampler::Gamma { shape, scale } => scale * gamma_draw(rng, *shape),
+            Sampler::Bimodal { comps, alias } => {
+                let (delta, mu) = comps[alias.sample(rng)];
+                delta + exp_draw(rng, mu)
+            }
+            Sampler::Empirical { values, alias } => values[alias.sample(rng)],
+        }
+    }
+
+    /// Fill `out` with independent draws — one tight per-family loop,
+    /// no per-draw dispatch.
+    pub fn fill(&self, rng: &mut Pcg64, out: &mut [f64]) {
+        match self {
+            Sampler::Exp { mu } => {
+                for x in out.iter_mut() {
+                    *x = -rng.uniform_pos().ln() / mu;
+                }
+            }
+            Sampler::ShiftedExp { delta, mu } => {
+                for x in out.iter_mut() {
+                    *x = delta - rng.uniform_pos().ln() / mu;
+                }
+            }
+            Sampler::Pareto { sigma, alpha } => {
+                let exponent = -1.0 / alpha;
+                for x in out.iter_mut() {
+                    *x = sigma * rng.uniform_pos().powf(exponent);
+                }
+            }
+            Sampler::Weibull { shape, scale } => {
+                let exponent = 1.0 / shape;
+                for x in out.iter_mut() {
+                    *x = scale * (-rng.uniform_pos().ln()).powf(exponent);
+                }
+            }
+            Sampler::Gamma { shape, scale } => {
+                for x in out.iter_mut() {
+                    *x = scale * gamma_draw(rng, *shape);
+                }
+            }
+            Sampler::Bimodal { comps, alias } => {
+                for x in out.iter_mut() {
+                    let (delta, mu) = comps[alias.sample(rng)];
+                    *x = delta - rng.uniform_pos().ln() / mu;
+                }
+            }
+            Sampler::Empirical { values, alias } => {
+                for x in out.iter_mut() {
+                    *x = values[alias.sample(rng)];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_families() -> Vec<ServiceDist> {
+        vec![
+            ServiceDist::exp(1.3),
+            ServiceDist::shifted_exp(0.5, 2.0),
+            ServiceDist::pareto(1.0, 3.0),
+            ServiceDist::weibull(0.7, 1.5),
+            ServiceDist::gamma_dist(2.5, 0.8),
+            ServiceDist::bimodal(0.15, (0.1, 10.0), (5.0, 1.0)),
+            ServiceDist::empirical(vec![1.0, 2.0, 3.0, 5.0, 8.0]),
+        ]
+    }
+
+    #[test]
+    fn closed_form_families_match_scalar_path_bitwise() {
+        // Exp/SExp/Pareto/Weibull/Gamma: the compiled sampler and
+        // ServiceDist::sample share the same kernels, so equal seeds
+        // give equal bits draw-for-draw.
+        for dist in [
+            ServiceDist::exp(1.3),
+            ServiceDist::shifted_exp(0.5, 2.0),
+            ServiceDist::pareto(1.0, 3.0),
+            ServiceDist::weibull(0.7, 1.5),
+            ServiceDist::gamma_dist(2.5, 0.8),
+        ] {
+            let sampler = Sampler::compile(&dist);
+            let mut a = Pcg64::new(17);
+            let mut b = Pcg64::new(17);
+            for i in 0..500 {
+                let x = sampler.sample_one(&mut a);
+                let y = dist.sample(&mut b);
+                assert_eq!(x.to_bits(), y.to_bits(), "{} draw {i}", dist.label());
+            }
+        }
+    }
+
+    #[test]
+    fn fill_matches_sample_one_bitwise() {
+        // same seed, same sequence: the batched loop is the scalar loop
+        // with the dispatch hoisted
+        for dist in all_families() {
+            let sampler = Sampler::compile(&dist);
+            let mut a = Pcg64::new(23);
+            let mut b = Pcg64::new(23);
+            let mut buf = vec![0.0; 300];
+            sampler.fill(&mut a, &mut buf);
+            for (i, &x) in buf.iter().enumerate() {
+                let y = sampler.sample_one(&mut b);
+                assert_eq!(x.to_bits(), y.to_bits(), "{} draw {i}", dist.label());
+            }
+        }
+    }
+
+    #[test]
+    fn moments_match_the_distribution() {
+        for dist in all_families() {
+            let sampler = Sampler::compile(&dist);
+            let mut rng = Pcg64::new(41);
+            let mut buf = vec![0.0; 4_000];
+            let (mut s, mut s2) = (0.0, 0.0);
+            let blocks = 50;
+            for _ in 0..blocks {
+                sampler.fill(&mut rng, &mut buf);
+                for &x in &buf {
+                    s += x;
+                    s2 += x * x;
+                }
+            }
+            let n = (blocks * buf.len()) as f64;
+            let mean = s / n;
+            let var = s2 / n - mean * mean;
+            assert!(
+                (mean - dist.mean()).abs() / dist.mean() < 0.02,
+                "{}: mean {mean} vs {}",
+                dist.label(),
+                dist.mean()
+            );
+            assert!(
+                (var - dist.variance()).abs() / dist.variance() < 0.06,
+                "{}: var {var} vs {}",
+                dist.label(),
+                dist.variance()
+            );
+        }
+    }
+
+    #[test]
+    fn samples_stay_in_support() {
+        let dist = ServiceDist::empirical(vec![2.0, 4.0, 6.0]);
+        let sampler = Sampler::compile(&dist);
+        let mut rng = Pcg64::new(5);
+        let mut buf = vec![0.0; 1_000];
+        sampler.fill(&mut rng, &mut buf);
+        for &x in &buf {
+            assert!(x == 2.0 || x == 4.0 || x == 6.0, "{x}");
+        }
+        let dist = ServiceDist::shifted_exp(0.5, 1.0);
+        let sampler = Sampler::compile(&dist);
+        sampler.fill(&mut rng, &mut buf);
+        assert!(buf.iter().all(|&x| x >= 0.5));
+    }
+
+    #[test]
+    fn bimodal_degenerate_weights_collapse() {
+        let fast = (0.1, 10.0);
+        let slow = (5.0, 1.0);
+        let all_fast = Sampler::compile(&ServiceDist::bimodal(0.0, fast, slow));
+        let mut rng = Pcg64::new(9);
+        let mut buf = vec![0.0; 2_000];
+        all_fast.fill(&mut rng, &mut buf);
+        // fast component is SExp(0.1, 10): mean 0.2, support >= 0.1
+        assert!(buf.iter().all(|&x| x >= 0.1));
+        let mean = buf.iter().sum::<f64>() / buf.len() as f64;
+        assert!((mean - 0.2).abs() < 0.02, "{mean}");
+    }
+}

@@ -13,7 +13,8 @@
 //!   stragglers, the §VII motivation).
 //! * `Empirical` — trace bootstrap (§VII, Figs. 11–13).
 
-use crate::dist::Empirical;
+use crate::dist::sampler::{exp_draw, gamma_draw, pareto_draw, weibull_draw};
+use crate::dist::{Empirical, Sampler};
 use crate::util::math::{
     bisect, gamma, gammainc_lower_regularized, gammainc_upper_regularized,
 };
@@ -47,32 +48,6 @@ pub enum ServiceDist {
     Bimodal { p_slow: f64, fast: (f64, f64), slow: (f64, f64) },
     /// Empirical distribution of observed samples (exact ECDF).
     Empirical(Empirical),
-}
-
-/// One exponential draw by inversion, `−ln U / μ` with `U ∈ (0, 1]`.
-fn exp_draw(rng: &mut Pcg64, mu: f64) -> f64 {
-    -rng.uniform_pos().ln() / mu
-}
-
-/// Marsaglia–Tsang Gamma(shape, 1) sampler; Boost trick for shape < 1.
-fn gamma_draw(rng: &mut Pcg64, shape: f64) -> f64 {
-    if shape < 1.0 {
-        let x = gamma_draw(rng, shape + 1.0);
-        return x * rng.uniform_pos().powf(1.0 / shape);
-    }
-    let d = shape - 1.0 / 3.0;
-    let c = 1.0 / (9.0 * d).sqrt();
-    loop {
-        let z = rng.normal();
-        let v = (1.0 + c * z).powi(3);
-        if v <= 0.0 {
-            continue;
-        }
-        let u = rng.uniform_pos();
-        if u.ln() < 0.5 * z * z + d - d * v + d * v.ln() {
-            return d * v;
-        }
-    }
 }
 
 /// CDF of `SExp(delta, mu)` at `t`.
@@ -179,17 +154,16 @@ impl ServiceDist {
 
     // ----------------------------------------------------------- queries
 
-    /// Draw one service time.
+    /// Draw one service time — a thin per-draw wrapper over the scalar
+    /// kernels shared with the batched [`Sampler`]. Hot loops drawing
+    /// many samples should compile a [`ServiceDist::sampler`] once and
+    /// use [`Sampler::fill`] instead.
     pub fn sample(&self, rng: &mut Pcg64) -> f64 {
         match self {
             ServiceDist::Exp { mu } => exp_draw(rng, *mu),
             ServiceDist::ShiftedExp { delta, mu } => delta + exp_draw(rng, *mu),
-            ServiceDist::Pareto { sigma, alpha } => {
-                sigma * rng.uniform_pos().powf(-1.0 / alpha)
-            }
-            ServiceDist::Weibull { shape, scale } => {
-                scale * (-rng.uniform_pos().ln()).powf(1.0 / shape)
-            }
+            ServiceDist::Pareto { sigma, alpha } => pareto_draw(rng, *sigma, *alpha),
+            ServiceDist::Weibull { shape, scale } => weibull_draw(rng, *shape, *scale),
             ServiceDist::Gamma { shape, scale } => scale * gamma_draw(rng, *shape),
             ServiceDist::Bimodal { p_slow, fast, slow } => {
                 let (delta, mu) = if rng.uniform() < *p_slow {
@@ -201,6 +175,14 @@ impl ServiceDist {
             }
             ServiceDist::Empirical(e) => e.sample(rng),
         }
+    }
+
+    /// Compile the batched [`Sampler`] for this distribution (see
+    /// [`crate::dist::sampler`] for the contract: identical bits for
+    /// the closed-form families, identical distribution for
+    /// Bimodal/Empirical).
+    pub fn sampler(&self) -> Sampler {
+        Sampler::compile(self)
     }
 
     /// E\[τ\]. Infinite for Pareto with `α ≤ 1`.

@@ -1,6 +1,6 @@
 //! Auto backend: exact when possible, simulation when not.
 
-use crate::eval::{Analytic, Estimate, Estimator, MonteCarlo, Scenario};
+use crate::eval::{substream, Analytic, Estimate, Estimator, MonteCarlo, Scenario};
 use crate::util::error::Result;
 
 /// Analytic-first estimator with a transparent Monte-Carlo fallback.
@@ -50,6 +50,38 @@ impl Estimator for Auto {
         } else {
             self.fallback.evaluate_at(scenario, index)
         }
+    }
+
+    /// Batched routing: closed-form items are answered inline; every
+    /// Monte-Carlo-bound item is collected into **one** pooled
+    /// `run_batch` call so a mixed sweep still saturates the worker
+    /// pool. Each item keeps its original substream index, so results
+    /// stay bit-identical to calling [`Estimator::evaluate_at`] item
+    /// by item.
+    fn evaluate_many(&self, scenarios: &[Scenario]) -> Result<Vec<Estimate>> {
+        let mut results: Vec<Option<Estimate>> = vec![None; scenarios.len()];
+        let mut mc_indices: Vec<usize> = Vec::new();
+        for (i, scenario) in scenarios.iter().enumerate() {
+            if Analytic::supports(scenario) {
+                results[i] = Some(Analytic.evaluate(scenario)?);
+            } else {
+                mc_indices.push(i);
+            }
+        }
+        if !mc_indices.is_empty() {
+            let items: Vec<(&Scenario, u64)> = mc_indices
+                .iter()
+                .map(|&i| (&scenarios[i], substream(self.fallback.seed, i as u64)))
+                .collect();
+            let estimates = self.fallback.run_batch(&items)?;
+            for (&i, estimate) in mc_indices.iter().zip(estimates) {
+                results[i] = Some(estimate);
+            }
+        }
+        Ok(results
+            .into_iter()
+            .map(|estimate| estimate.expect("every scenario answered"))
+            .collect())
     }
 }
 
@@ -110,6 +142,35 @@ mod tests {
             .with_failures(FailureModel::Crash { p: 0.2 });
         let est = auto.evaluate(&s).unwrap();
         assert!(matches!(est.provenance, Provenance::MonteCarlo { .. }));
+    }
+
+    #[test]
+    fn evaluate_many_routes_per_item_and_matches_evaluate_at() {
+        // mixed batch: analytic, MC (bimodal), analytic, MC (random)
+        let auto = Auto::new(1_500, 13);
+        let scenarios = vec![
+            Scenario::balanced(12, 3, ServiceDist::exp(1.0)),
+            Scenario::balanced(12, 3, ServiceDist::bimodal(0.1, (0.1, 10.0), (5.0, 1.0))),
+            Scenario::balanced(12, 4, ServiceDist::shifted_exp(0.05, 1.0)),
+            Scenario::new(
+                12,
+                Policy::RandomNonOverlapping { batches: 3 },
+                ServiceDist::exp(1.0),
+            ),
+        ];
+        let batch = auto.evaluate_many(&scenarios).unwrap();
+        assert_eq!(batch[0].provenance, Provenance::Analytic);
+        assert!(matches!(batch[1].provenance, Provenance::MonteCarlo { .. }));
+        assert_eq!(batch[2].provenance, Provenance::Analytic);
+        assert!(matches!(batch[3].provenance, Provenance::MonteCarlo { .. }));
+        for (i, scenario) in scenarios.iter().enumerate() {
+            let single = auto.evaluate_at(scenario, i as u64).unwrap();
+            assert_eq!(
+                batch[i].mean.to_bits(),
+                single.mean.to_bits(),
+                "item {i} diverged from its substream"
+            );
+        }
     }
 
     #[test]

@@ -20,10 +20,12 @@
 //!   effectively free, but only exists for Exp/SExp/Pareto service
 //!   under the balanced non-overlapping policy with no failures; errors
 //!   cleanly otherwise.
-//! * [`MonteCarlo`] — the replication driver, parallelized across OS
-//!   threads. Per-replication counter-based RNG streams (see
-//!   [`substream`]) make results bit-identical for a fixed seed
-//!   regardless of thread count.
+//! * [`MonteCarlo`] — the replication driver, executed on the
+//!   persistent [`crate::sim::pool::WorkerPool`] with two-level
+//!   scenario×replication-chunk parallelism (batch entry points run
+//!   whole sweeps concurrently). Per-replication counter-based RNG
+//!   streams (see [`substream`]) make results bit-identical for a
+//!   fixed seed regardless of thread count or pool width.
 //! * [`Auto`] — analytic when exact, transparent Monte-Carlo fallback
 //!   for empirical/bimodal service times, overlapping policies, and
 //!   failure injection. The choice is visible in

@@ -1,27 +1,49 @@
-//! Monte-Carlo backend: threaded replication with counter-based RNG
-//! streams.
+//! Monte-Carlo backend: pooled two-level replication with
+//! counter-based RNG streams.
+//!
+//! Execution shape: every entry point funnels into [`MonteCarlo::run_batch`],
+//! which prepares each scenario once (layout probe, compiled sampler),
+//! carves the whole batch into scenario×replication-chunk units, and
+//! fans those units across the persistent [`WorkerPool`] — so a
+//! 200-point sweep keeps every core busy instead of serializing
+//! scenario-by-scenario with a thread spawn/join per scenario.
 
 use crate::batching::Policy;
+use crate::dist::Sampler;
 use crate::eval::{substream, Estimate, Estimator, Provenance, Scenario};
 use crate::metrics::Summary;
-use crate::sim::job::{JobOutcome, JobSimulator};
+use crate::sim::job::{
+    FailureModel, JobOutcome, JobSimulator, ServiceModel, SimScratch, SimView,
+};
+use crate::sim::pool::WorkerPool;
 use crate::util::error::{Error, Result};
 use crate::util::rng::Pcg64;
+use std::sync::Mutex;
 
 /// Substream index reserved for layout materialization (replication
 /// streams use indices `0..reps`, far below this).
 const LAYOUT_STREAM: u64 = u64::MAX;
 
+/// Don't split a scenario into units smaller than this many
+/// replications — below that, queue traffic beats the parallelism win.
+const MIN_UNIT_REPS: usize = 256;
+
+/// Upper bound on outcome slots held live at once (≈ 64 MiB of
+/// `JobOutcome`): very large batches are processed in waves of this
+/// many slots so memory stays bounded by the wave, not the sweep.
+const MAX_WAVE_SLOTS: usize = 1 << 22;
+
 /// The Monte-Carlo estimator.
 ///
-/// Replications are fanned out across OS threads, but every replication
-/// draws from its own counter-based RNG stream
-/// (`substream(seed, rep)`) and results are reduced serially in
-/// replication order — so for a fixed seed the estimate is
-/// **bit-identical regardless of `threads`**. Layout-randomizing
-/// policies (random assignment) draw a fresh layout per replication
-/// from that same stream; deterministic policies materialize one layout
-/// up front and share it.
+/// Every replication draws from its own counter-based RNG stream
+/// (`substream(seed, rep)`) into its own output slot, and results are
+/// reduced serially in replication order — so for a fixed seed the
+/// estimate is **bit-identical regardless of `threads`**, and
+/// [`Estimator::evaluate_many`] item `i` is bit-identical to
+/// [`Estimator::evaluate_at`] with index `i`. Layout-randomizing
+/// policies (random assignment) re-draw their assignment per
+/// replication from that same stream; deterministic policies
+/// materialize one layout up front and share it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct MonteCarlo {
     /// Number of independent replications.
@@ -29,19 +51,22 @@ pub struct MonteCarlo {
     /// Base seed; batch entry points derive per-item streams from it
     /// via [`substream`].
     pub seed: u64,
-    /// OS threads to fan replications across; 0 means "all available
-    /// cores".
+    /// Per-scenario fan-out cap: a scenario's replications are split
+    /// into at most this many concurrent units. `0` defers entirely to
+    /// the [`WorkerPool::global`] width; `1` forces fully inline serial
+    /// execution (no pool). Batch entry points additionally run
+    /// scenarios in parallel across the pool regardless of this cap.
     pub threads: usize,
 }
 
 impl MonteCarlo {
-    /// Estimator with the given replication budget, using every
-    /// available core.
+    /// Estimator with the given replication budget, using the full
+    /// worker pool.
     pub fn new(reps: usize, seed: u64) -> MonteCarlo {
         MonteCarlo { reps, seed, threads: 0 }
     }
 
-    /// Restrict (or widen) the thread fan-out. `0` = all cores.
+    /// Restrict (or widen) the per-scenario fan-out. `0` = pool width.
     pub fn with_threads(mut self, threads: usize) -> MonteCarlo {
         self.threads = threads;
         self
@@ -52,86 +77,101 @@ impl MonteCarlo {
         MonteCarlo { reps, seed, threads: 1 }
     }
 
-    fn effective_threads(&self) -> usize {
-        let t = if self.threads == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            self.threads
-        };
-        t.clamp(1, self.reps.max(1))
-    }
-
-    /// Core driver: evaluate `scenario` with the given stream seed,
-    /// reusing `outcomes` as the replication buffer (batch entry points
-    /// amortize this allocation across calls).
-    fn run(
-        &self,
-        scenario: &Scenario,
-        seed: u64,
-        outcomes: &mut Vec<JobOutcome>,
-    ) -> Result<Estimate> {
+    /// Core driver: evaluate each `(scenario, stream seed)` item with
+    /// `reps` replications, sharing one outcome buffer and one pool
+    /// scope per wave. Item order is the reduction order; results are
+    /// bit-identical for any thread count, pool width, or wave split
+    /// (each item's replications depend only on its own stream seed).
+    pub(crate) fn run_batch(&self, items: &[(&Scenario, u64)]) -> Result<Vec<Estimate>> {
         if self.reps == 0 {
             return Err(Error::Config("MonteCarlo needs reps >= 1".into()));
         }
-        let n = scenario.workers;
-        let randomized = matches!(scenario.policy, Policy::RandomNonOverlapping { .. });
-        // Materialize a layout up front: deterministic policies keep it
-        // for every replication; for randomizing policies this is a
-        // feasibility probe so errors surface before threads spawn.
-        let mut layout_rng = Pcg64::new(substream(seed, LAYOUT_STREAM));
-        let probe = scenario.policy.layout(n, &mut layout_rng)?;
-        let fixed_sim = if randomized {
-            None
+        if items.is_empty() {
+            return Ok(Vec::new());
+        }
+        let window = (MAX_WAVE_SLOTS / self.reps).max(1);
+        if items.len() <= window {
+            return self.run_wave(items);
+        }
+        let mut estimates = Vec::with_capacity(items.len());
+        for wave in items.chunks(window) {
+            estimates.extend(self.run_wave(wave)?);
+        }
+        Ok(estimates)
+    }
+
+    /// One wave of `run_batch`: prepare, fan out, reduce.
+    fn run_wave(&self, items: &[(&Scenario, u64)]) -> Result<Vec<Estimate>> {
+        // Prepare serially: feasibility problems surface here, lowest
+        // item first, before any unit is queued.
+        let preps = items
+            .iter()
+            .map(|(scenario, seed)| prepare(scenario, *seed))
+            .collect::<Result<Vec<_>>>()?;
+        let n_scen = preps.len();
+
+        // One exact-size outcome buffer for the whole batch; scenario i
+        // owns slots [i·reps, (i+1)·reps).
+        let mut outcomes: Vec<JobOutcome> = Vec::with_capacity(n_scen * self.reps);
+        outcomes.resize(n_scen * self.reps, JobOutcome::Failed);
+
+        // A randomized per-replication draw can fail even though the
+        // up-front probe succeeded; keep the first error in
+        // (scenario, replication) order so the reported error does not
+        // depend on scheduling.
+        let first_error: Mutex<Option<(usize, usize, Error)>> = Mutex::new(None);
+
+        let threads = if self.threads == 0 {
+            WorkerPool::global().threads()
         } else {
-            Some(
-                JobSimulator::new(probe, scenario.tau.clone())
-                    .with_failures(scenario.failures),
-            )
+            self.threads
         };
-
-        let threads = self.effective_threads();
-        outcomes.clear();
-        outcomes.resize(self.reps, JobOutcome::Failed);
-
-        let sample_one = |rep: usize| -> JobOutcome {
-            let mut rng = Pcg64::new(substream(seed, rep as u64));
-            match &fixed_sim {
-                Some(sim) => sim.sample(&mut rng),
-                None => {
-                    let layout = scenario
-                        .policy
-                        .layout(n, &mut rng)
-                        .expect("feasibility probed before replication");
-                    JobSimulator::new(layout, scenario.tau.clone())
-                        .with_failures(scenario.failures)
-                        .sample(&mut rng)
-                }
-            }
-        };
-
         if threads <= 1 {
-            for (rep, slot) in outcomes.iter_mut().enumerate() {
-                *slot = sample_one(rep);
+            let mut scratch = RepScratch::default();
+            for (i, prep) in preps.iter().enumerate() {
+                let slots = &mut outcomes[i * self.reps..(i + 1) * self.reps];
+                run_unit(prep, slots, i, 0, &mut scratch, &first_error);
             }
         } else {
-            let chunk = self.reps.div_ceil(threads);
-            std::thread::scope(|scope| {
-                for (ci, slice) in outcomes.chunks_mut(chunk).enumerate() {
-                    let sample_one = &sample_one;
-                    scope.spawn(move || {
-                        for (i, slot) in slice.iter_mut().enumerate() {
-                            *slot = sample_one(ci * chunk + i);
-                        }
-                    });
+            let chunk_len = self.reps.div_ceil(chunks_per_scenario(
+                threads, n_scen, self.reps,
+            ));
+            let errors = &first_error;
+            WorkerPool::global().scope(|scope| {
+                for (i, (prep, slice)) in
+                    preps.iter().zip(outcomes.chunks_mut(self.reps)).enumerate()
+                {
+                    let mut lo = 0usize;
+                    for slots in slice.chunks_mut(chunk_len) {
+                        let len = slots.len();
+                        scope.submit(move || {
+                            let mut scratch = RepScratch::default();
+                            run_unit(prep, slots, i, lo, &mut scratch, errors);
+                        });
+                        lo += len;
+                    }
                 }
             });
         }
 
-        // Serial reduction in replication order: float accumulation is
-        // independent of the thread partition above.
+        if let Some((_, _, error)) = first_error.into_inner().unwrap() {
+            return Err(error);
+        }
+
+        let mut estimates = Vec::with_capacity(n_scen);
+        for (i, (_, seed)) in items.iter().enumerate() {
+            let slots = &outcomes[i * self.reps..(i + 1) * self.reps];
+            estimates.push(self.reduce(slots, *seed, threads));
+        }
+        Ok(estimates)
+    }
+
+    /// Serial reduction in replication order: float accumulation is
+    /// independent of how units were scheduled above.
+    fn reduce(&self, outcomes: &[JobOutcome], seed: u64, threads: usize) -> Estimate {
         let mut summary = Summary::new();
         let mut failed = 0usize;
-        for outcome in outcomes.iter() {
+        for outcome in outcomes {
             match outcome {
                 JobOutcome::Done(t) => summary.record(*t),
                 JobOutcome::Failed => failed += 1,
@@ -143,7 +183,7 @@ impl MonteCarlo {
             // Every replication failed coverage: there is no completion
             // time to summarize. Report that explicitly instead of
             // leaking NaNs out of an empty Summary.
-            return Ok(Estimate {
+            return Estimate {
                 mean: f64::NAN,
                 ci95: f64::NAN,
                 cov: f64::NAN,
@@ -154,9 +194,9 @@ impl MonteCarlo {
                 replications: self.reps,
                 completed: 0,
                 provenance,
-            });
+            };
         }
-        Ok(Estimate {
+        Estimate {
             mean: summary.mean(),
             ci95: summary.ci95(),
             cov: summary.cov(),
@@ -167,8 +207,195 @@ impl MonteCarlo {
             replications: self.reps,
             completed,
             provenance,
-        })
+        }
     }
+}
+
+/// Two-level unit shaping: enough chunks per scenario to saturate
+/// `threads` workers when the batch is small, dropping to one chunk per
+/// scenario once the batch itself provides the parallelism.
+fn chunks_per_scenario(threads: usize, scenarios: usize, reps: usize) -> usize {
+    let want = (threads * 2).div_ceil(scenarios).max(1);
+    let max_by_reps = reps.div_ceil(MIN_UNIT_REPS).max(1);
+    want.min(threads).min(max_by_reps).max(1)
+}
+
+/// One unit of pool work: run replications `lo..lo + slots.len()` of a
+/// prepared scenario into their output slots, reusing one scratch
+/// arena. On a replication error the unit stops early (the batch is
+/// aborted by the caller) after recording the error.
+fn run_unit(
+    prep: &Prepared<'_>,
+    slots: &mut [JobOutcome],
+    scen: usize,
+    lo: usize,
+    scratch: &mut RepScratch,
+    first_error: &Mutex<Option<(usize, usize, Error)>>,
+) {
+    // An error anywhere aborts the whole batch, so skip units that
+    // cannot record a lower-ordered error than the one already seen —
+    // every error this unit could find has key >= (scen, lo), so the
+    // final minimum (and thus the reported error) is unchanged and
+    // stays independent of scheduling. One lock per unit, amortized
+    // over >= MIN_UNIT_REPS replications.
+    if let Some((s, r, _)) = first_error.lock().unwrap().as_ref() {
+        if (*s, *r) < (scen, lo) {
+            return;
+        }
+    }
+    for (k, slot) in slots.iter_mut().enumerate() {
+        match prep.sample_rep(lo + k, scratch) {
+            Ok(outcome) => *slot = outcome,
+            Err(error) => {
+                record_error(first_error, scen, lo + k, error);
+                return;
+            }
+        }
+    }
+}
+
+/// Keep the error of the lowest `(scenario, replication)` pair so the
+/// reported failure is deterministic under any scheduling.
+fn record_error(
+    slot: &Mutex<Option<(usize, usize, Error)>>,
+    scen: usize,
+    rep: usize,
+    error: Error,
+) {
+    let mut guard = slot.lock().unwrap();
+    let replace = match guard.as_ref() {
+        None => true,
+        Some((s, r, _)) => (scen, rep) < (*s, *r),
+    };
+    if replace {
+        *guard = Some((scen, rep, error));
+    }
+}
+
+/// Replication strategy compiled once per scenario.
+enum RepPath {
+    /// Deterministic policy: one materialized layout + simulator shared
+    /// by every replication.
+    Fixed(JobSimulator),
+    /// Randomizing policy without failures: re-draw each worker's batch
+    /// pick per replication and fold per-batch minima directly — no
+    /// layout materialization, no `tau` clone, nothing allocated past
+    /// the per-unit scratch.
+    RandomPicks { batches: usize, batch_size: usize, sampler: Sampler },
+    /// Randomizing policy with failure injection: materialize a fresh
+    /// layout per replication (allocates, but failure paths are not the
+    /// throughput-critical ones) and simulate it by borrow — still no
+    /// `tau` clone.
+    RandomMaterialize { sampler: Sampler },
+}
+
+struct Prepared<'s> {
+    scenario: &'s Scenario,
+    seed: u64,
+    path: RepPath,
+}
+
+/// Compile one scenario: probe the layout (errors surface before any
+/// unit is queued) and pick the replication path.
+fn prepare<'s>(scenario: &'s Scenario, seed: u64) -> Result<Prepared<'s>> {
+    let n = scenario.workers;
+    let randomized = matches!(scenario.policy, Policy::RandomNonOverlapping { .. });
+    let mut layout_rng = Pcg64::new(substream(seed, LAYOUT_STREAM));
+    let probe = scenario.policy.layout(n, &mut layout_rng)?;
+    let path = if !randomized {
+        RepPath::Fixed(
+            JobSimulator::new(probe, scenario.tau.clone())
+                .with_failures(scenario.failures),
+        )
+    } else if scenario.failures == FailureModel::None {
+        RepPath::RandomPicks {
+            batches: probe.batches.len(),
+            batch_size: probe.batch_size(),
+            sampler: scenario.tau.sampler(),
+        }
+    } else {
+        RepPath::RandomMaterialize { sampler: scenario.tau.sampler() }
+    };
+    Ok(Prepared { scenario, seed, path })
+}
+
+/// Per-unit scratch: simulator buffers plus the per-batch minima used
+/// by the pick path. Allocated once per unit and reused across its
+/// replications.
+#[derive(Default)]
+struct RepScratch {
+    sim: SimScratch,
+    batch_min: Vec<f64>,
+}
+
+impl Prepared<'_> {
+    fn sample_rep(&self, rep: usize, scratch: &mut RepScratch) -> Result<JobOutcome> {
+        let mut rng = Pcg64::new(substream(self.seed, rep as u64));
+        match &self.path {
+            RepPath::Fixed(sim) => Ok(sim.sample_into(&mut rng, &mut scratch.sim)),
+            RepPath::RandomPicks { batches, batch_size, sampler } => {
+                Ok(sample_random_picks(
+                    self.scenario.workers,
+                    *batches,
+                    *batch_size,
+                    sampler,
+                    &mut rng,
+                    &mut scratch.batch_min,
+                ))
+            }
+            RepPath::RandomMaterialize { sampler } => {
+                let layout =
+                    self.scenario.policy.layout(self.scenario.workers, &mut rng)?;
+                let view = SimView {
+                    layout: &layout,
+                    sampler,
+                    model: ServiceModel::SizeDependentPerWorker,
+                    failure: self.scenario.failures,
+                    // this path only runs with failure injection, which
+                    // always takes the event-driven route — the fast
+                    // flag would be dead, so skip the O(N) verification
+                    fast_disjoint: false,
+                };
+                Ok(view.sample_into(&mut rng, &mut scratch.sim))
+            }
+        }
+    }
+}
+
+/// One replication of the random-assignment policy without
+/// materializing a layout: every worker picks a batch uniformly (the
+/// same `below(B)` draw the layout builder makes) and its size-scaled
+/// service time folds into that batch's minimum in a single pass. The
+/// job fails iff some batch attracted no worker (Lemma 1 coverage),
+/// otherwise `T = max_b min_{w∈b} S_w`.
+fn sample_random_picks(
+    workers: usize,
+    batches: usize,
+    batch_size: usize,
+    sampler: &Sampler,
+    rng: &mut Pcg64,
+    batch_min: &mut Vec<f64>,
+) -> JobOutcome {
+    batch_min.clear();
+    batch_min.resize(batches, f64::INFINITY);
+    let size = batch_size as f64;
+    for _ in 0..workers {
+        let pick = rng.below(batches as u64) as usize;
+        let s = size * sampler.sample_one(rng);
+        if s < batch_min[pick] {
+            batch_min[pick] = s;
+        }
+    }
+    let mut t_job: f64 = 0.0;
+    for &m in batch_min.iter() {
+        if m == f64::INFINITY {
+            return JobOutcome::Failed; // uncovered batch
+        }
+        if m > t_job {
+            t_job = m;
+        }
+    }
+    JobOutcome::Done(t_job)
 }
 
 impl Default for MonteCarlo {
@@ -179,25 +406,22 @@ impl Default for MonteCarlo {
 
 impl Estimator for MonteCarlo {
     fn evaluate(&self, scenario: &Scenario) -> Result<Estimate> {
-        self.run(scenario, self.seed, &mut Vec::new())
+        let mut batch = self.run_batch(&[(scenario, self.seed)])?;
+        Ok(batch.pop().expect("one item in, one estimate out"))
     }
 
     fn evaluate_at(&self, scenario: &Scenario, index: u64) -> Result<Estimate> {
-        self.run(scenario, substream(self.seed, index), &mut Vec::new())
+        let mut batch = self.run_batch(&[(scenario, substream(self.seed, index))])?;
+        Ok(batch.pop().expect("one item in, one estimate out"))
     }
 
     fn evaluate_many(&self, scenarios: &[Scenario]) -> Result<Vec<Estimate>> {
-        // One replication buffer amortized across the whole batch.
-        let mut outcomes = Vec::with_capacity(self.reps);
-        let mut estimates = Vec::with_capacity(scenarios.len());
-        for (i, scenario) in scenarios.iter().enumerate() {
-            estimates.push(self.run(
-                scenario,
-                substream(self.seed, i as u64),
-                &mut outcomes,
-            )?);
-        }
-        Ok(estimates)
+        let items: Vec<(&Scenario, u64)> = scenarios
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s, substream(self.seed, i as u64)))
+            .collect();
+        self.run_batch(&items)
     }
 }
 
@@ -261,6 +485,41 @@ mod tests {
     }
 
     #[test]
+    fn randomized_coverage_matches_lemma_1() {
+        // the pick path must reproduce the exact coverage probability
+        let (n, b) = (20usize, 10usize);
+        let scenario = Scenario::new(
+            n,
+            Policy::RandomNonOverlapping { batches: b },
+            ServiceDist::exp(1.0),
+        );
+        let est = MonteCarlo::new(40_000, 9).evaluate(&scenario).unwrap();
+        let want = 1.0 - crate::analysis::coverage::coverage_probability(n, b);
+        assert!(
+            (est.failure_rate - want).abs() < 0.01,
+            "{} vs {want}",
+            est.failure_rate
+        );
+    }
+
+    #[test]
+    fn randomized_with_failures_still_thread_invariant() {
+        // exercises the per-replication layout materialization path
+        let scenario = Scenario::new(
+            12,
+            Policy::RandomNonOverlapping { batches: 3 },
+            ServiceDist::exp(1.0),
+        )
+        .with_failures(FailureModel::Crash { p: 0.2 });
+        let a = MonteCarlo::serial(2_000, 5).evaluate(&scenario).unwrap();
+        let b = MonteCarlo { reps: 2_000, seed: 5, threads: 4 }
+            .evaluate(&scenario)
+            .unwrap();
+        assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+        assert_eq!(a.failure_rate, b.failure_rate);
+    }
+
+    #[test]
     fn distinct_seeds_give_distinct_estimates() {
         let scenario = Scenario::balanced(10, 2, ServiceDist::exp(1.0));
         let a = MonteCarlo::new(1_000, 7).evaluate(&scenario).unwrap();
@@ -305,5 +564,30 @@ mod tests {
         assert!(MonteCarlo::new(10, 0).evaluate(&s).is_err());
         let s = Scenario::balanced(10, 2, ServiceDist::exp(1.0));
         assert!(MonteCarlo::new(0, 0).evaluate(&s).is_err());
+    }
+
+    #[test]
+    fn infeasible_item_fails_the_whole_batch_deterministically() {
+        let scenarios = vec![
+            Scenario::balanced(10, 2, ServiceDist::exp(1.0)),
+            Scenario::balanced(10, 3, ServiceDist::exp(1.0)), // infeasible
+            Scenario::balanced(10, 7, ServiceDist::exp(1.0)), // infeasible
+        ];
+        let err = MonteCarlo::new(100, 0).evaluate_many(&scenarios).unwrap_err();
+        // the first infeasible item (B=3) is the one reported
+        assert!(format!("{err}").contains("B=3"), "{err}");
+    }
+
+    #[test]
+    fn unit_shaping_is_sane() {
+        // single scenario: fan out across threads
+        assert_eq!(chunks_per_scenario(8, 1, 30_000), 8);
+        // large batch: one unit per scenario
+        assert_eq!(chunks_per_scenario(8, 200, 30_000), 1);
+        // tiny rep budgets never split below the unit floor
+        assert_eq!(chunks_per_scenario(8, 1, 100), 1);
+        assert_eq!(chunks_per_scenario(8, 1, 600), 3);
+        // never zero
+        assert_eq!(chunks_per_scenario(1, 1, 1), 1);
     }
 }

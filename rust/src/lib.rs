@@ -80,6 +80,38 @@
 //!
 //! See `examples/estimator_backends.rs` for the three backends compared
 //! side by side on one scenario.
+//!
+//! ## Performance
+//!
+//! The Monte-Carlo hot path is built around three mechanisms (see
+//! `README.md` under `rust/` for the full notes and bench
+//! instructions):
+//!
+//! * **Persistent worker pool** ([`sim::pool::WorkerPool`]) — one set
+//!   of OS threads for the process, shared by every evaluation.
+//!   [`eval::MonteCarlo`] carves batches into scenario×replication-chunk
+//!   units, so `evaluate_many`/`sweep` keep all cores busy across the
+//!   whole batch instead of spawn/joining per scenario. Size it with
+//!   `--pool-threads`, `REPLICA_POOL_THREADS`, or
+//!   [`sim::pool::WorkerPool::configure_global`].
+//! * **Batched sampling** ([`dist::Sampler`], [`dist::AliasTable`]) —
+//!   a per-family sampler compiled once per scenario fills slices of
+//!   draws with the enum dispatch hoisted out of the loop;
+//!   Bimodal/Empirical draw through Walker alias tables in O(1).
+//! * **Allocation-free replication loops** — [`sim::SimScratch`]
+//!   buffers are reused across a unit's replications
+//!   ([`sim::JobSimulator::sample_into`]), disjoint layouts take an
+//!   exact-verified `max–min` fast path, and the randomized-assignment
+//!   policy simulates straight from batch picks without materializing
+//!   layouts.
+//!
+//! **Determinism contract:** every replication draws from its own
+//! counter-based stream ([`eval::substream`]) into its own output
+//! slot, and reduction is serial in replication order — estimates are
+//! bit-identical for a fixed seed across any thread count, pool width,
+//! and between `evaluate_many` item `i` and `evaluate_at(·, i)`.
+//! Benches: `cargo bench --bench bench_eval` (add `-- --smoke` for the
+//! CI short run; `scripts/bench_snapshot.sh` writes `BENCH_eval.json`).
 
 pub mod analysis;
 pub mod batching;

@@ -15,6 +15,11 @@
 //! [`Auto`] (closed forms where exact, Monte-Carlo otherwise), while
 //! [`Planner::plan_simulated`] forces [`MonteCarlo`] — useful when you
 //! want simulation-grade numbers even where closed forms exist.
+//!
+//! Sweeps go through the batched [`Estimator::evaluate_many`] entry
+//! point, so a simulated spectrum runs all operating points in
+//! parallel on the persistent worker pool
+//! ([`crate::sim::pool::WorkerPool`]) instead of point-by-point.
 
 use crate::analysis::optimizer::{self, Regime};
 use crate::batching::Policy;
@@ -144,13 +149,17 @@ impl Planner {
     /// Materialize the plan at a specific operating point B.
     pub fn plan_at(&self, b: usize, objective: Objective) -> Plan {
         assert!(self.n % b == 0, "B must divide N");
-        let auto = Auto::default();
-        let at = |batches: usize| {
-            auto.evaluate(&Scenario::balanced(self.n, batches, self.tau.clone()))
-                .expect("Auto evaluation cannot fail for feasible B")
-        };
-        let est = at(b);
-        let baseline = at(self.n);
+        // one batched call: the chosen point and the B = N baseline run
+        // on independent substreams and share the worker pool
+        let scenarios = [
+            Scenario::balanced(self.n, b, self.tau.clone()),
+            Scenario::balanced(self.n, self.n, self.tau.clone()),
+        ];
+        let mut estimates = Auto::default()
+            .evaluate_many(&scenarios)
+            .expect("Auto evaluation cannot fail for feasible B");
+        let baseline = estimates.pop().expect("two estimates");
+        let est = estimates.pop().expect("two estimates");
         Plan {
             workers: self.n,
             batches: b,

@@ -10,9 +10,16 @@
 //! Failure injection: a failed worker never reports. If failures break
 //! coverage the job is [`JobOutcome::Failed`] — the availability story
 //! of §VI's opening.
+//!
+//! Hot-path shape: service times are drawn through a compiled
+//! [`Sampler`] (built once in [`JobSimulator::new`]) into caller-owned
+//! [`SimScratch`] buffers via [`JobSimulator::sample_into`], so the
+//! replication loop does no per-draw enum dispatch and no per-sample
+//! allocation. [`JobSimulator::sample`] stays as the allocating
+//! convenience wrapper.
 
 use crate::batching::Layout;
-use crate::dist::ServiceDist;
+use crate::dist::{Sampler, ServiceDist};
 use crate::sim::event::EventQueue;
 use crate::util::rng::Pcg64;
 
@@ -59,113 +66,164 @@ pub enum ServiceModel {
     PerBatchDirect,
 }
 
-/// Simulator for a fixed layout + service-time model.
-#[derive(Clone, Debug)]
-pub struct JobSimulator {
-    layout: Layout,
-    tau: ServiceDist,
-    model: ServiceModel,
-    failure: FailureModel,
-    /// Perf fast path (EXPERIMENTS.md §Perf): when batches are pairwise
-    /// disjoint and jointly cover the task set, and the batch→worker map
-    /// partitions the workers, `T = max_b min_{w∈b} S_w` — O(N) with no
-    /// allocation, instead of the general O(N · batch_size) per-task
-    /// scan. All non-overlapping policies qualify; overlapping layouts
-    /// fall back to the general path.
-    fast_disjoint: bool,
+/// Reusable per-thread scratch buffers for the replication loop.
+///
+/// One `SimScratch` per worker thread (or replication chunk) keeps the
+/// no-failure sampling paths allocation-free: buffers grow to the
+/// largest scenario seen and are then reused verbatim.
+#[derive(Clone, Debug, Default)]
+pub struct SimScratch {
+    /// One service time per worker (batch-filled by the [`Sampler`]).
+    services: Vec<f64>,
+    /// Earliest recovery time per task (general path only).
+    earliest: Vec<f64>,
 }
 
-impl JobSimulator {
-    pub fn new(layout: Layout, tau: ServiceDist) -> JobSimulator {
-        let batch_tasks: usize = layout.batches.iter().map(|b| b.len()).sum();
-        let mapped_workers: usize = layout.batch_workers.iter().map(|w| w.len()).sum();
-        let fast_disjoint =
-            batch_tasks == layout.n_tasks && mapped_workers == layout.n_workers();
-        JobSimulator {
-            layout,
-            tau,
-            model: ServiceModel::SizeDependentPerWorker,
-            failure: FailureModel::None,
-            fast_disjoint,
+impl SimScratch {
+    pub fn new() -> SimScratch {
+        SimScratch::default()
+    }
+}
+
+/// Verify the disjoint-layout fast-path preconditions exactly:
+///
+/// 1. batches are pairwise disjoint and jointly cover every task, and
+/// 2. `batch_workers` partitions the workers, each listed worker
+///    executing exactly its batch.
+///
+/// Checked with bitsets, not size sums — a layout with one duplicated
+/// and one missing task keeps the sums equal while violating coverage,
+/// which the sum-based detection this replaces silently accepted
+/// (reporting completion for jobs whose missing task makes them
+/// unfinishable).
+pub(crate) fn fast_disjoint_layout(layout: &Layout) -> bool {
+    let mut task_seen = vec![false; layout.n_tasks];
+    for tasks in &layout.batches {
+        for &t in tasks {
+            if t >= layout.n_tasks || task_seen[t] {
+                return false;
+            }
+            task_seen[t] = true;
         }
     }
-
-    pub fn with_service_model(mut self, model: ServiceModel) -> Self {
-        self.model = model;
-        self
+    if !task_seen.iter().all(|&seen| seen) {
+        return false;
     }
-
-    pub fn with_failures(mut self, failure: FailureModel) -> Self {
-        self.failure = failure;
-        self
+    let n_workers = layout.n_workers();
+    let mut worker_seen = vec![false; n_workers];
+    for (b, workers) in layout.batch_workers.iter().enumerate() {
+        for &w in workers {
+            if w >= n_workers || worker_seen[w] {
+                return false;
+            }
+            worker_seen[w] = true;
+            if layout.worker_tasks[w] != layout.batches[b] {
+                return false;
+            }
+        }
     }
+    worker_seen.iter().all(|&seen| seen)
+}
 
-    pub fn layout(&self) -> &Layout {
-        &self.layout
-    }
+/// Borrowed view of everything one replication needs — the actual
+/// sampling engine. [`JobSimulator`] wraps it over owned data; the
+/// Monte-Carlo randomized-layout path builds one per freshly drawn
+/// layout without cloning the service distribution.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct SimView<'a> {
+    pub(crate) layout: &'a Layout,
+    pub(crate) sampler: &'a Sampler,
+    pub(crate) model: ServiceModel,
+    pub(crate) failure: FailureModel,
+    pub(crate) fast_disjoint: bool,
+}
 
+impl SimView<'_> {
     /// Draw the service time of one worker.
     fn draw_service(&self, w: usize, rng: &mut Pcg64) -> f64 {
-        let size = self.layout.worker_tasks[w].len() as f64;
         match self.model {
-            ServiceModel::SizeDependentPerWorker => size * self.tau.sample(rng),
-            ServiceModel::PerBatchDirect => self.tau.sample(rng),
+            ServiceModel::SizeDependentPerWorker => {
+                self.layout.worker_tasks[w].len() as f64 * self.sampler.sample_one(rng)
+            }
+            ServiceModel::PerBatchDirect => self.sampler.sample_one(rng),
         }
     }
 
-    /// Sample one job execution (fast path, no failures): direct
-    /// computation of `max_t min_{w∋t} S_w`.
-    pub fn sample(&self, rng: &mut Pcg64) -> JobOutcome {
+    /// Sample one job execution into caller-owned scratch.
+    pub(crate) fn sample_into(
+        &self,
+        rng: &mut Pcg64,
+        scratch: &mut SimScratch,
+    ) -> JobOutcome {
         match self.failure {
-            FailureModel::None if self.fast_disjoint => {
-                // disjoint batches: T = max over batches of the fastest
-                // replica, no per-task bookkeeping
-                let mut t_job: f64 = 0.0;
-                for (b, workers) in self.layout.batch_workers.iter().enumerate() {
-                    if workers.is_empty() {
-                        return JobOutcome::Failed; // uncovered batch (random assignment)
-                    }
-                    let size = self.layout.batches[b].len() as f64;
-                    let mut min_s = f64::INFINITY;
-                    for _ in 0..workers.len() {
-                        let s = match self.model {
-                            ServiceModel::SizeDependentPerWorker => {
-                                size * self.tau.sample(rng)
-                            }
-                            ServiceModel::PerBatchDirect => self.tau.sample(rng),
-                        };
-                        if s < min_s {
-                            min_s = s;
-                        }
-                    }
-                    if min_s > t_job {
-                        t_job = min_s;
-                    }
-                }
-                JobOutcome::Done(t_job)
-            }
-            FailureModel::None => {
-                let services: Vec<f64> =
-                    (0..self.layout.n_workers()).map(|w| self.draw_service(w, rng)).collect();
-                let mut t_job: f64 = 0.0;
-                let mut earliest = vec![f64::INFINITY; self.layout.n_tasks];
-                for (w, tasks) in self.layout.worker_tasks.iter().enumerate() {
-                    for &t in tasks {
-                        if services[w] < earliest[t] {
-                            earliest[t] = services[w];
-                        }
-                    }
-                }
-                for &e in &earliest {
-                    if e == f64::INFINITY {
-                        return JobOutcome::Failed; // uncovered task
-                    }
-                    t_job = t_job.max(e);
-                }
-                JobOutcome::Done(t_job)
-            }
+            FailureModel::None if self.fast_disjoint => self.sample_fast(rng, scratch),
+            FailureModel::None => self.sample_general(rng, scratch),
             _ => self.sample_with_events(rng),
         }
+    }
+
+    /// Disjoint-batch fast path: `T = max_b min_{w∈b} S_w`, one batched
+    /// fill, no per-task bookkeeping.
+    fn sample_fast(&self, rng: &mut Pcg64, scratch: &mut SimScratch) -> JobOutcome {
+        let n_draws = self.layout.n_workers();
+        scratch.services.resize(n_draws, 0.0);
+        self.sampler.fill(rng, &mut scratch.services);
+        let mut next = 0usize;
+        let mut t_job: f64 = 0.0;
+        for (b, workers) in self.layout.batch_workers.iter().enumerate() {
+            if workers.is_empty() {
+                return JobOutcome::Failed; // uncovered batch (random assignment)
+            }
+            let size = self.layout.batches[b].len() as f64;
+            let mut min_s = f64::INFINITY;
+            for _ in 0..workers.len() {
+                let tau = scratch.services[next];
+                next += 1;
+                let s = match self.model {
+                    ServiceModel::SizeDependentPerWorker => size * tau,
+                    ServiceModel::PerBatchDirect => tau,
+                };
+                if s < min_s {
+                    min_s = s;
+                }
+            }
+            if min_s > t_job {
+                t_job = min_s;
+            }
+        }
+        JobOutcome::Done(t_job)
+    }
+
+    /// General overlap path: per-task earliest-recovery scan.
+    fn sample_general(&self, rng: &mut Pcg64, scratch: &mut SimScratch) -> JobOutcome {
+        let n_workers = self.layout.n_workers();
+        scratch.services.resize(n_workers, 0.0);
+        self.sampler.fill(rng, &mut scratch.services);
+        if self.model == ServiceModel::SizeDependentPerWorker {
+            for (w, s) in scratch.services.iter_mut().enumerate() {
+                *s *= self.layout.worker_tasks[w].len() as f64;
+            }
+        }
+        scratch.earliest.clear();
+        scratch.earliest.resize(self.layout.n_tasks, f64::INFINITY);
+        for (w, tasks) in self.layout.worker_tasks.iter().enumerate() {
+            let s = scratch.services[w];
+            for &t in tasks {
+                if s < scratch.earliest[t] {
+                    scratch.earliest[t] = s;
+                }
+            }
+        }
+        let mut t_job: f64 = 0.0;
+        for &e in &scratch.earliest {
+            if e == f64::INFINITY {
+                return JobOutcome::Failed; // uncovered task
+            }
+            if e > t_job {
+                t_job = e;
+            }
+        }
+        JobOutcome::Done(t_job)
     }
 
     /// Event-driven execution path (used when failures are modeled):
@@ -177,7 +235,6 @@ impl JobSimulator {
             Finish(usize),
             Restart(usize),
         }
-        let n_workers = self.layout.n_workers();
         let mut q: EventQueue<Ev> = EventQueue::new();
         let mut alive_replicas = vec![0usize; self.layout.n_tasks];
         for (w, tasks) in self.layout.worker_tasks.iter().enumerate() {
@@ -206,7 +263,6 @@ impl JobSimulator {
         }
         let mut remaining: usize = self.layout.n_tasks;
         let mut covered = vec![false; self.layout.n_tasks];
-        let _ = n_workers;
         while let Some(ev) = q.pop() {
             match ev.payload {
                 Ev::Finish(w) => {
@@ -230,6 +286,76 @@ impl JobSimulator {
     }
 }
 
+/// Simulator for a fixed layout + service-time model.
+#[derive(Clone, Debug)]
+pub struct JobSimulator {
+    layout: Layout,
+    /// Compiled once from the service distribution; every replication
+    /// draws through it.
+    sampler: Sampler,
+    model: ServiceModel,
+    failure: FailureModel,
+    /// Perf fast path (EXPERIMENTS.md §Perf): when batches are pairwise
+    /// disjoint and jointly cover the task set, and the batch→worker map
+    /// partitions the workers, `T = max_b min_{w∈b} S_w` — O(N) with no
+    /// allocation, instead of the general O(N · batch_size) per-task
+    /// scan. All non-overlapping policies qualify; overlapping layouts
+    /// fall back to the general path. Verified exactly (bitsets), not
+    /// by size sums — see [`fast_disjoint_layout`].
+    fast_disjoint: bool,
+}
+
+impl JobSimulator {
+    pub fn new(layout: Layout, tau: ServiceDist) -> JobSimulator {
+        let fast_disjoint = fast_disjoint_layout(&layout);
+        JobSimulator {
+            layout,
+            sampler: tau.sampler(),
+            model: ServiceModel::SizeDependentPerWorker,
+            failure: FailureModel::None,
+            fast_disjoint,
+        }
+    }
+
+    pub fn with_service_model(mut self, model: ServiceModel) -> Self {
+        self.model = model;
+        self
+    }
+
+    pub fn with_failures(mut self, failure: FailureModel) -> Self {
+        self.failure = failure;
+        self
+    }
+
+    pub fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    /// The borrowed replication view over this simulator's data.
+    pub(crate) fn view(&self) -> SimView<'_> {
+        SimView {
+            layout: &self.layout,
+            sampler: &self.sampler,
+            model: self.model,
+            failure: self.failure,
+            fast_disjoint: self.fast_disjoint,
+        }
+    }
+
+    /// Sample one job execution (allocating convenience wrapper around
+    /// [`JobSimulator::sample_into`]).
+    pub fn sample(&self, rng: &mut Pcg64) -> JobOutcome {
+        let mut scratch = SimScratch::new();
+        self.sample_into(rng, &mut scratch)
+    }
+
+    /// Sample one job execution into caller-owned scratch buffers —
+    /// the allocation-free entry point replication loops should use.
+    pub fn sample_into(&self, rng: &mut Pcg64, scratch: &mut SimScratch) -> JobOutcome {
+        self.view().sample_into(rng, scratch)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -239,10 +365,11 @@ mod tests {
 
     fn mc_mean(sim: &JobSimulator, reps: usize, seed: u64) -> (f64, f64, f64) {
         let mut rng = Pcg64::new(seed);
+        let mut scratch = SimScratch::new();
         let mut s = Summary::moments_only();
         let mut fails = 0usize;
         for _ in 0..reps {
-            match sim.sample(&mut rng) {
+            match sim.sample_into(&mut rng, &mut scratch) {
                 JobOutcome::Done(t) => s.record(t),
                 JobOutcome::Failed => fails += 1,
             }
@@ -401,5 +528,66 @@ mod tests {
         let p_fail = fails as f64 / trials as f64;
         let want = 1.0 - crate::analysis::coverage::coverage_probability(n, b);
         assert!((p_fail - want).abs() < 0.03, "{p_fail} vs {want}");
+    }
+
+    #[test]
+    fn duplicated_plus_missing_task_defeats_sum_based_detection() {
+        // Regression: batch sizes sum to n_tasks (task 1 duplicated,
+        // task 3 missing) and the workers partition cleanly, so the old
+        // sum-based fast_disjoint detection took the fast path and
+        // reported a completion time for a job that can never finish.
+        let layout = Layout {
+            n_tasks: 4,
+            worker_tasks: vec![vec![0, 1], vec![0, 1], vec![1, 2], vec![1, 2]],
+            batches: vec![vec![0, 1], vec![1, 2]],
+            batch_workers: vec![vec![0, 1], vec![2, 3]],
+        };
+        assert!(!fast_disjoint_layout(&layout));
+        let sim = JobSimulator::new(layout, ServiceDist::exp(1.0));
+        let mut rng = Pcg64::new(77);
+        for _ in 0..50 {
+            assert_eq!(sim.sample(&mut rng), JobOutcome::Failed);
+        }
+    }
+
+    #[test]
+    fn fast_disjoint_detection_accepts_and_rejects_correctly() {
+        let mut rng = Pcg64::new(21);
+        // all non-overlapping policies qualify
+        for policy in [
+            Policy::BalancedNonOverlapping { batches: 4 },
+            Policy::UnbalancedNonOverlapping { assignment: vec![5, 1, 1, 1] },
+            Policy::RandomNonOverlapping { batches: 4 },
+        ] {
+            let layout = policy.layout(8, &mut rng).unwrap();
+            assert!(fast_disjoint_layout(&layout), "{}", policy.name());
+        }
+        // overlapping layouts do not
+        let layout = Policy::CyclicOverlapping { batches: 4 }.layout(8, &mut rng).unwrap();
+        assert!(!fast_disjoint_layout(&layout));
+        // a worker listed under two batches is rejected even when sums
+        // look consistent
+        let layout = Layout {
+            n_tasks: 2,
+            worker_tasks: vec![vec![0], vec![1]],
+            batches: vec![vec![0], vec![1]],
+            batch_workers: vec![vec![0], vec![0]],
+        };
+        assert!(!fast_disjoint_layout(&layout));
+    }
+
+    #[test]
+    fn sample_into_matches_sample_bitwise() {
+        let mut rng = Pcg64::new(31);
+        let layout = Policy::CyclicOverlapping { batches: 4 }.layout(12, &mut rng).unwrap();
+        let sim = JobSimulator::new(layout, ServiceDist::pareto(1.0, 2.5));
+        let mut a = Pcg64::new(8);
+        let mut b = Pcg64::new(8);
+        let mut scratch = SimScratch::new();
+        for _ in 0..200 {
+            let x = sim.sample(&mut a);
+            let y = sim.sample_into(&mut b, &mut scratch);
+            assert_eq!(x, y);
+        }
     }
 }

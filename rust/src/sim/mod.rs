@@ -12,14 +12,19 @@
 //! * [`montecarlo`] — the legacy replication shim; the maintained
 //!   driver is [`crate::eval::MonteCarlo`] behind the
 //!   [`crate::eval::Estimator`] trait.
+//! * [`pool`] — the persistent scoped worker pool the maintained
+//!   driver fans scenario×replication-chunk units across (no per-call
+//!   thread spawn/join).
 //!
 //! [`Layout`]: crate::batching::Layout
 
 pub mod event;
 pub mod job;
 pub mod montecarlo;
+pub mod pool;
 
 pub use event::{Event, EventQueue};
-pub use job::{FailureModel, JobOutcome, JobSimulator};
+pub use job::{FailureModel, JobOutcome, JobSimulator, SimScratch};
 #[allow(deprecated)]
 pub use montecarlo::{simulate_policy, McEstimate};
+pub use pool::WorkerPool;

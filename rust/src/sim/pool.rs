@@ -1,0 +1,408 @@
+//! Persistent scoped worker pool — the execution substrate of the
+//! Monte-Carlo hot path.
+//!
+//! [`crate::eval::MonteCarlo`] used to spawn and join a fresh
+//! `thread::scope` per scenario, so a 200-point planner sweep paid 200
+//! spawn/join rounds and serialized scenario-by-scenario. A
+//! [`WorkerPool`] is created once (usually [`WorkerPool::global`]),
+//! keeps its OS threads parked on a condvar between calls, and executes
+//! borrowed closures through [`WorkerPool::scope`] — the same
+//! structured-concurrency shape as [`std::thread::scope`], but without
+//! the per-call thread churn, and shared by every scenario of a batch
+//! so scenario×replication-chunk units from the whole sweep interleave
+//! across all cores.
+//!
+//! Determinism is unaffected by the pool: callers partition work into
+//! units that write disjoint, index-addressed output slots and derive
+//! per-unit RNG streams from [`crate::eval::substream`]; which pool
+//! thread runs a unit (or whether the caller thread runs it while
+//! waiting) cannot change any result bit.
+//!
+//! The caller thread is not idle during [`WorkerPool::scope`]: while
+//! waiting for its tasks it pops and runs queued tasks itself
+//! ("help-first" join), which both uses the extra core and makes nested
+//! scopes deadlock-free — a worker blocked in an inner scope drains the
+//! queue instead of sleeping.
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+
+/// Type-erased unit of work. Tasks are erased to `'static` when queued;
+/// the [`WorkerPool::scope`] join discipline is what makes that sound
+/// (see the `SAFETY` comment in [`PoolScope::submit`]).
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// State shared between the pool handle and its worker threads.
+struct Shared {
+    queue: Mutex<VecDeque<Task>>,
+    /// Signaled when a task is pushed (workers wait here while idle).
+    ready: Condvar,
+    /// Set by `Drop`: workers exit once the queue is drained.
+    shutdown: AtomicBool,
+}
+
+/// Bookkeeping for one [`WorkerPool::scope`] call.
+struct ScopeState {
+    /// Tasks submitted but not yet finished.
+    pending: Mutex<usize>,
+    /// Signaled when `pending` reaches zero.
+    done: Condvar,
+    /// First panic payload from any task, re-raised at scope exit.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+}
+
+impl ScopeState {
+    fn new() -> ScopeState {
+        ScopeState {
+            pending: Mutex::new(0),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let task = {
+            let mut queue = shared.queue.lock().unwrap();
+            loop {
+                if let Some(task) = queue.pop_front() {
+                    break task;
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                queue = shared.ready.wait(queue).unwrap();
+            }
+        };
+        // The task wrapper (built in `submit`) catches panics itself,
+        // so a failing unit never takes a worker thread down.
+        task();
+    }
+}
+
+/// A pool of persistent OS worker threads executing scoped tasks.
+///
+/// Cheap to share (`&WorkerPool`); idle workers cost nothing but
+/// parked threads. Dropping a pool shuts its workers down after the
+/// queue drains; the [`WorkerPool::global`] instance lives for the
+/// process.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    threads: usize,
+}
+
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+static GLOBAL_CONFIG: Mutex<Option<usize>> = Mutex::new(None);
+
+impl WorkerPool {
+    /// Spawn a pool with `threads` workers; `0` means one per
+    /// available core.
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = if threads == 0 {
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        for i in 0..threads {
+            let shared = Arc::clone(&shared);
+            thread::Builder::new()
+                .name(format!("replica-pool-{i}"))
+                .spawn(move || worker_loop(shared))
+                .expect("failed to spawn worker-pool thread");
+        }
+        WorkerPool { shared, threads }
+    }
+
+    /// The process-wide pool. Created lazily on first use, sized by (in
+    /// precedence order) [`WorkerPool::configure_global`], the
+    /// `REPLICA_POOL_THREADS` environment variable, or the number of
+    /// available cores.
+    pub fn global() -> &'static WorkerPool {
+        GLOBAL.get_or_init(|| {
+            let configured = GLOBAL_CONFIG.lock().unwrap().take();
+            let threads = configured
+                .or_else(|| {
+                    std::env::var("REPLICA_POOL_THREADS")
+                        .ok()
+                        .and_then(|v| v.parse().ok())
+                })
+                .unwrap_or(0);
+            WorkerPool::new(threads)
+        })
+    }
+
+    /// Set the size of the global pool before its first use (the CLI's
+    /// `--pool-threads` knob; `0` = one per core). Returns `false` —
+    /// and changes nothing — if the global pool already exists.
+    pub fn configure_global(threads: usize) -> bool {
+        let mut config = GLOBAL_CONFIG.lock().unwrap();
+        if GLOBAL.get().is_some() {
+            return false;
+        }
+        *config = Some(threads);
+        true
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f`, letting it [`PoolScope::submit`] borrowed closures to
+    /// the pool. Returns only after every submitted task has finished
+    /// — also on panic (the first task panic, or a panic in `f`
+    /// itself, is re-raised after the join). This join-before-return
+    /// discipline is what lets tasks borrow from the caller's stack,
+    /// exactly like [`std::thread::scope`].
+    pub fn scope<'env, F, R>(&self, f: F) -> R
+    where
+        F: for<'scope> FnOnce(&'scope PoolScope<'scope, 'env>) -> R,
+    {
+        let scope = PoolScope {
+            pool: self,
+            state: Arc::new(ScopeState::new()),
+            _env: PhantomData,
+        };
+        let result = catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        // Join unconditionally — the `'env` erasure in `submit` is
+        // sound only because no path returns before pending == 0.
+        self.wait_all(&scope.state);
+        match result {
+            Err(payload) => resume_unwind(payload),
+            Ok(value) => {
+                if let Some(payload) = scope.state.panic.lock().unwrap().take() {
+                    resume_unwind(payload);
+                }
+                value
+            }
+        }
+    }
+
+    /// Help-first join: run queued tasks on this thread until the
+    /// scope's pending count drains, sleeping only when the queue is
+    /// momentarily empty.
+    fn wait_all(&self, state: &ScopeState) {
+        loop {
+            if *state.pending.lock().unwrap() == 0 {
+                return;
+            }
+            let task = self.shared.queue.lock().unwrap().pop_front();
+            if let Some(task) = task {
+                // May belong to a different concurrent scope — that
+                // scope's own join still waits for it, so running it
+                // here is always safe and never wasted.
+                task();
+                continue;
+            }
+            // Queue momentarily empty: our remaining tasks are running
+            // on other threads; sleep until the last one notifies.
+            let mut pending = state.pending.lock().unwrap();
+            while *pending > 0 {
+                pending = state.done.wait(pending).unwrap();
+            }
+            return;
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Hold the queue mutex while raising the flag: a worker is then
+        // either before its lock (sees the flag on its check) or already
+        // in `wait` (receives the notify). Without the lock, a worker
+        // between its shutdown check and the wait would miss the
+        // notification and park forever.
+        let _queue = self.shared.queue.lock().unwrap();
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.ready.notify_all();
+    }
+}
+
+/// Handle for submitting tasks inside one [`WorkerPool::scope`] call.
+pub struct PoolScope<'scope, 'env> {
+    pool: &'scope WorkerPool,
+    state: Arc<ScopeState>,
+    /// Invariant over `'env`, like [`std::thread::scope`], so borrows
+    /// smuggled into tasks cannot be shortened.
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'scope, 'env> PoolScope<'scope, 'env> {
+    /// Queue `f` for execution on the pool. The closure may borrow
+    /// anything that outlives the enclosing [`WorkerPool::scope`] call;
+    /// it runs exactly once, on whichever thread (worker or waiting
+    /// caller) pops it first.
+    pub fn submit<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        *self.state.pending.lock().unwrap() += 1;
+        let state = Arc::clone(&self.state);
+        let wrapper: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(f)) {
+                let mut slot = state.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            // Decrement strictly after the panic (if any) is recorded,
+            // so the joining scope observes it.
+            let mut pending = state.pending.lock().unwrap();
+            *pending -= 1;
+            if *pending == 0 {
+                state.done.notify_all();
+            }
+        });
+        // SAFETY: the queue stores `'static` tasks, but `wrapper` only
+        // borrows data alive for `'env`. `WorkerPool::scope` cannot
+        // return (normally or by unwind) until this task has run to
+        // completion — `wait_all` blocks on the pending counter this
+        // wrapper decrements as its final action — so every `'env`
+        // borrow strictly outlives the task. This is the same lifetime
+        // argument `std::thread::scope` makes for its spawned threads.
+        let task: Task = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Task>(wrapper)
+        };
+        self.pool.shared.queue.lock().unwrap().push_back(task);
+        self.pool.shared.ready.notify_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_every_submitted_task() {
+        let pool = WorkerPool::new(4);
+        let counter = AtomicUsize::new(0);
+        pool.scope(|scope| {
+            for _ in 0..100 {
+                scope.submit(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn tasks_can_mutate_disjoint_borrowed_slices() {
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0u64; 1000];
+        pool.scope(|scope| {
+            for (i, chunk) in data.chunks_mut(100).enumerate() {
+                scope.submit(move || {
+                    for (j, slot) in chunk.iter_mut().enumerate() {
+                        *slot = (i * 100 + j) as u64;
+                    }
+                });
+            }
+        });
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, i as u64);
+        }
+    }
+
+    #[test]
+    fn scope_returns_the_closure_value() {
+        let pool = WorkerPool::new(2);
+        let sum = pool.scope(|scope| {
+            let partials = Arc::new(Mutex::new(0u64));
+            for k in 0..10u64 {
+                let partials = Arc::clone(&partials);
+                scope.submit(move || {
+                    *partials.lock().unwrap() += k;
+                });
+            }
+            partials
+        });
+        // scope() has joined: all adds are visible
+        assert_eq!(*sum.lock().unwrap(), 45);
+    }
+
+    #[test]
+    fn task_panic_propagates_after_join() {
+        let pool = WorkerPool::new(2);
+        let finished = Arc::new(AtomicUsize::new(0));
+        let fin = Arc::clone(&finished);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|scope| {
+                for i in 0..8 {
+                    let fin = Arc::clone(&fin);
+                    scope.submit(move || {
+                        if i == 3 {
+                            panic!("unit failure");
+                        }
+                        fin.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must cross the scope boundary");
+        // the join still completed the other 7 tasks
+        assert_eq!(finished.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn sequential_scopes_reuse_the_same_pool() {
+        let pool = WorkerPool::new(2);
+        for round in 0..20 {
+            let counter = AtomicUsize::new(0);
+            pool.scope(|scope| {
+                for _ in 0..10 {
+                    scope.submit(|| {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+            assert_eq!(counter.load(Ordering::Relaxed), 10, "round {round}");
+        }
+    }
+
+    #[test]
+    fn nested_scopes_do_not_deadlock() {
+        // single worker + caller: the inner scope's join must help
+        // drain the queue instead of sleeping
+        let pool = WorkerPool::new(1);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let outer = Arc::clone(&counter);
+        pool.scope(|scope| {
+            let inner_pool = &pool;
+            let outer = Arc::clone(&outer);
+            scope.submit(move || {
+                inner_pool.scope(|inner| {
+                    for _ in 0..5 {
+                        let c = Arc::clone(&outer);
+                        inner.submit(move || {
+                            c.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+                outer.fetch_add(100, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 105);
+    }
+
+    #[test]
+    fn global_pool_is_a_singleton() {
+        let a = WorkerPool::global() as *const WorkerPool;
+        let b = WorkerPool::global() as *const WorkerPool;
+        assert_eq!(a, b);
+        assert!(WorkerPool::global().threads() >= 1);
+        // once the global pool exists, reconfiguration is refused
+        assert!(!WorkerPool::configure_global(2));
+    }
+}

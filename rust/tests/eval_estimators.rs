@@ -65,9 +65,10 @@ fn analytic_and_monte_carlo_agree_across_families_and_spectrum() {
     }
 }
 
-/// `MonteCarlo` with `threads: 1` and `threads: 4` produce bit-identical
-/// estimates for the same seed — on plain, randomized, and failing
-/// scenarios, and through the batched entry points.
+/// Any `threads` fan-out produces bit-identical estimates for the same
+/// seed — on plain, randomized, and failing scenarios, and through the
+/// batched entry points (which now run scenario×chunk units on the
+/// persistent worker pool).
 #[test]
 fn thread_count_never_changes_the_estimate() {
     let scenarios = vec![
@@ -86,17 +87,29 @@ fn thread_count_never_changes_the_estimate() {
             .with_failures(FailureModel::Crash { p: 0.2 }),
     ];
     let one = MonteCarlo { reps: 6_000, seed: 99, threads: 1 };
-    let four = MonteCarlo { reps: 6_000, seed: 99, threads: 4 };
     let serial = one.evaluate_many(&scenarios).unwrap();
-    let parallel = four.evaluate_many(&scenarios).unwrap();
-    for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
-        assert_eq!(a.mean.to_bits(), b.mean.to_bits(), "scenario {i}");
-        assert_eq!(a.cov.to_bits(), b.cov.to_bits(), "scenario {i}");
-        assert_eq!(a.p50.to_bits(), b.p50.to_bits(), "scenario {i}");
-        assert_eq!(a.p95.to_bits(), b.p95.to_bits(), "scenario {i}");
-        assert_eq!(a.p99.to_bits(), b.p99.to_bits(), "scenario {i}");
-        assert_eq!(a.failure_rate, b.failure_rate, "scenario {i}");
-        assert_eq!(a.completed, b.completed, "scenario {i}");
+    for threads in [2usize, 4, 8] {
+        let mc = MonteCarlo { reps: 6_000, seed: 99, threads };
+        let parallel = mc.evaluate_many(&scenarios).unwrap();
+        for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+            let tag = format!("threads={threads} scenario {i}");
+            assert_eq!(a.mean.to_bits(), b.mean.to_bits(), "{tag}");
+            assert_eq!(a.cov.to_bits(), b.cov.to_bits(), "{tag}");
+            assert_eq!(a.p50.to_bits(), b.p50.to_bits(), "{tag}");
+            assert_eq!(a.p95.to_bits(), b.p95.to_bits(), "{tag}");
+            assert_eq!(a.p99.to_bits(), b.p99.to_bits(), "{tag}");
+            assert_eq!(a.failure_rate, b.failure_rate, "{tag}");
+            assert_eq!(a.completed, b.completed, "{tag}");
+        }
+        // batch item i must equal the evaluate_at(·, i) substream
+        for (i, scenario) in scenarios.iter().enumerate() {
+            let single = mc.evaluate_at(scenario, i as u64).unwrap();
+            assert_eq!(
+                parallel[i].mean.to_bits(),
+                single.mean.to_bits(),
+                "threads={threads} item {i} ordering"
+            );
+        }
     }
 }
 

@@ -1,0 +1,213 @@
+//! Property tests for the batched sampling layer and the pooled
+//! Monte-Carlo execution:
+//!
+//! * the alias-table-backed samplers (Bimodal, Empirical) match
+//!   inverse-CDF / order-statistics sampling **in distribution**
+//!   (moments + a KS-style quantile-grid check);
+//! * pooled two-level execution is bit-identical to
+//!   `MonteCarlo::serial` for fixed seeds across thread counts
+//!   {1, 2, 4, 8}, including `evaluate_many` item ordering.
+
+use replica::batching::Policy;
+use replica::dist::{Sampler, ServiceDist};
+use replica::eval::{Estimator, MonteCarlo, Scenario};
+use replica::sim::FailureModel;
+use replica::util::rng::Pcg64;
+
+/// Draw `n` samples through the compiled (alias-table) sampler and
+/// return them sorted.
+fn batch_sorted(dist: &ServiceDist, n: usize, seed: u64) -> Vec<f64> {
+    let sampler = Sampler::compile(dist);
+    let mut rng = Pcg64::new(seed);
+    let mut samples = vec![0.0; n];
+    sampler.fill(&mut rng, &mut samples);
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples
+}
+
+/// Empirical CDF of a sorted sample at `t`.
+fn ecdf(sorted: &[f64], t: f64) -> f64 {
+    sorted.partition_point(|x| *x <= t) as f64 / sorted.len() as f64
+}
+
+/// KS-style check: at every point of a quantile grid of the target
+/// distribution, the sampler's empirical CDF must agree with the exact
+/// CDF within `tol` (≈ 3/√n sampling noise).
+fn assert_cdf_matches(dist: &ServiceDist, n: usize, seed: u64, tol: f64) {
+    let sorted = batch_sorted(dist, n, seed);
+    for i in 1..100 {
+        let q = i as f64 / 100.0;
+        let t = dist.quantile(q);
+        let have = ecdf(&sorted, t);
+        let want = dist.cdf(t);
+        assert!(
+            (have - want).abs() < tol,
+            "{} at q={q} (t={t}): ecdf {have} vs cdf {want}",
+            dist.label()
+        );
+    }
+}
+
+fn assert_moments_match(dist: &ServiceDist, n: usize, seed: u64) {
+    let samples = batch_sorted(dist, n, seed);
+    let nf = n as f64;
+    let mean = samples.iter().sum::<f64>() / nf;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / nf;
+    assert!(
+        (mean - dist.mean()).abs() / dist.mean() < 0.02,
+        "{}: mean {mean} vs {}",
+        dist.label(),
+        dist.mean()
+    );
+    assert!(
+        (var - dist.variance()).abs() / dist.variance() < 0.06,
+        "{}: var {var} vs {}",
+        dist.label(),
+        dist.variance()
+    );
+}
+
+#[test]
+fn bimodal_alias_sampler_matches_inverse_cdf_in_distribution() {
+    for (p_slow, fast, slow) in [
+        (0.1, (0.1, 10.0), (5.0, 1.0)),
+        (0.5, (0.0, 2.0), (1.0, 0.5)),
+        (0.95, (0.1, 10.0), (5.0, 1.0)),
+    ] {
+        let dist = ServiceDist::bimodal(p_slow, fast, slow);
+        assert_moments_match(&dist, 200_000, 11);
+        assert_cdf_matches(&dist, 200_000, 12, 0.01);
+    }
+}
+
+#[test]
+fn empirical_alias_sampler_matches_order_statistics_in_distribution() {
+    // bootstrap over 500 distinct observed values
+    let base = ServiceDist::pareto(1.0, 2.5);
+    let mut rng = Pcg64::new(3);
+    let observed: Vec<f64> = (0..500).map(|_| base.sample(&mut rng)).collect();
+    let dist = ServiceDist::empirical(observed.clone());
+    assert_moments_match(&dist, 200_000, 21);
+
+    // exact step-function check: at every observed value the bootstrap
+    // ECDF must reproduce the exact order-statistics CDF
+    let sorted_samples = batch_sorted(&dist, 200_000, 22);
+    let mut support = observed;
+    support.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for (i, &v) in support.iter().enumerate() {
+        let have = ecdf(&sorted_samples, v);
+        let want = dist.cdf(v);
+        assert!(
+            (have - want).abs() < 0.01,
+            "support point {i} (v={v}): ecdf {have} vs exact {want}"
+        );
+    }
+    // and every drawn value is an observed value
+    assert!(sorted_samples.iter().all(|x| support.contains(x)));
+}
+
+#[test]
+fn degenerate_bimodal_weights_match_their_component() {
+    // p_slow = 0 and 1 must collapse exactly to one SExp component
+    for (p_slow, delta, mu) in [(0.0, 0.1, 10.0), (1.0, 5.0, 1.0)] {
+        let dist = ServiceDist::bimodal(p_slow, (0.1, 10.0), (5.0, 1.0));
+        let component = ServiceDist::shifted_exp(delta, mu);
+        let sorted = batch_sorted(&dist, 100_000, 31);
+        for i in 1..50 {
+            let q = i as f64 / 50.0;
+            let t = component.quantile(q);
+            let have = ecdf(&sorted, t);
+            assert!(
+                (have - q).abs() < 0.012,
+                "p_slow={p_slow} q={q}: ecdf {have}"
+            );
+        }
+    }
+}
+
+/// The scenario mix exercises every replication path: fixed layouts
+/// (closed-form and alias-sampled service), the pick-based randomized
+/// path, the per-replication materialization path (random + failures),
+/// and the event-driven failure path.
+fn determinism_scenarios() -> Vec<Scenario> {
+    let mut rng = Pcg64::new(8);
+    let base = ServiceDist::exp(1.0);
+    let observed: Vec<f64> = (0..300).map(|_| base.sample(&mut rng)).collect();
+    vec![
+        Scenario::balanced(20, 4, ServiceDist::shifted_exp(0.05, 1.0)),
+        Scenario::balanced(20, 5, ServiceDist::bimodal(0.1, (0.1, 10.0), (5.0, 1.0))),
+        Scenario::balanced(12, 3, ServiceDist::empirical(observed)),
+        Scenario::new(
+            20,
+            Policy::RandomNonOverlapping { batches: 5 },
+            ServiceDist::exp(1.0),
+        ),
+        Scenario::new(
+            12,
+            Policy::RandomNonOverlapping { batches: 3 },
+            ServiceDist::exp(1.0),
+        )
+        .with_failures(FailureModel::Crash { p: 0.2 }),
+        Scenario::new(
+            6,
+            Policy::CyclicOverlapping { batches: 3 },
+            ServiceDist::pareto(1.0, 2.5),
+        ),
+        Scenario::balanced(10, 2, ServiceDist::exp(1.0))
+            .with_failures(FailureModel::CrashRestart { p: 0.3, delay: 2.0 }),
+    ]
+}
+
+#[test]
+fn pooled_two_level_execution_is_bit_identical_to_serial() {
+    let scenarios = determinism_scenarios();
+    let golden = MonteCarlo::serial(3_000, 99).evaluate_many(&scenarios).unwrap();
+    for threads in [1usize, 2, 4, 8] {
+        let mc = MonteCarlo { reps: 3_000, seed: 99, threads };
+        let batch = mc.evaluate_many(&scenarios).unwrap();
+        for (i, (a, b)) in golden.iter().zip(&batch).enumerate() {
+            let tag = format!("threads={threads} scenario {i}");
+            assert_eq!(a.mean.to_bits(), b.mean.to_bits(), "{tag} mean");
+            assert_eq!(a.ci95.to_bits(), b.ci95.to_bits(), "{tag} ci95");
+            assert_eq!(a.cov.to_bits(), b.cov.to_bits(), "{tag} cov");
+            assert_eq!(a.p50.to_bits(), b.p50.to_bits(), "{tag} p50");
+            assert_eq!(a.p95.to_bits(), b.p95.to_bits(), "{tag} p95");
+            assert_eq!(a.p99.to_bits(), b.p99.to_bits(), "{tag} p99");
+            assert_eq!(a.failure_rate, b.failure_rate, "{tag} failure_rate");
+            assert_eq!(a.completed, b.completed, "{tag} completed");
+        }
+    }
+}
+
+#[test]
+fn evaluate_many_ordering_matches_evaluate_at_for_every_fanout() {
+    let scenarios = determinism_scenarios();
+    for threads in [1usize, 2, 4, 8] {
+        let mc = MonteCarlo { reps: 1_500, seed: 7, threads };
+        let batch = mc.evaluate_many(&scenarios).unwrap();
+        for (i, scenario) in scenarios.iter().enumerate() {
+            let single = mc.evaluate_at(scenario, i as u64).unwrap();
+            assert_eq!(
+                batch[i].mean.to_bits(),
+                single.mean.to_bits(),
+                "threads={threads} item {i}: batch diverged from substream"
+            );
+            assert_eq!(batch[i].completed, single.completed);
+        }
+    }
+}
+
+#[test]
+fn pool_width_does_not_leak_into_results() {
+    // same scenario, same seed, widely different rep budgets per unit:
+    // chunking must never change which substream a replication uses
+    let scenario = Scenario::balanced(20, 4, ServiceDist::pareto(1.0, 2.5));
+    let reference = MonteCarlo::serial(2_048, 5).evaluate(&scenario).unwrap();
+    for threads in [2usize, 3, 5, 8, 16] {
+        let est = MonteCarlo { reps: 2_048, seed: 5, threads }
+            .evaluate(&scenario)
+            .unwrap();
+        assert_eq!(reference.mean.to_bits(), est.mean.to_bits(), "threads={threads}");
+        assert_eq!(reference.p99.to_bits(), est.p99.to_bits(), "threads={threads}");
+    }
+}

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Snapshot Monte-Carlo eval throughput (serial vs pooled reps/sec over
+# the ≥20-scenario benchmark batch) into BENCH_eval.json at the repo
+# root, seeding the perf trajectory across PRs.
+#
+# Usage: scripts/bench_snapshot.sh [OUTPUT_JSON] [--smoke]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+OUT="${1:-BENCH_eval.json}"
+shift || true
+
+case "$OUT" in
+/*) JSON_ARG="$OUT" ;;
+*) JSON_ARG="../$OUT" ;;
+esac
+
+(cd rust && cargo bench --bench bench_eval -- --json "$JSON_ARG" "$@")
+echo "wrote $OUT"
