@@ -1,6 +1,6 @@
 //! CLI subcommand implementations.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use crate::cli::args::Args;
@@ -143,6 +143,9 @@ pub fn simulate(args: &mut Args) -> Result<()> {
 }
 
 pub fn sweep(args: &mut Args) -> Result<()> {
+    if let Some(spec_path) = args.get("spec") {
+        return sweep_from_spec(args, &spec_path);
+    }
     let n = args.get_usize("workers", 100)?;
     let tau = service_from(args)?;
     let planner = Planner::new(n, tau.clone());
@@ -162,6 +165,55 @@ pub fn sweep(args: &mut Args) -> Result<()> {
         ]);
     }
     t.print();
+    Ok(())
+}
+
+/// `replica sweep --spec FILE`: the sharded, resumable trace-sweep
+/// engine. Results stream to a JSONL store (`--out`, default
+/// `sweep_results.jsonl`) with an on-disk estimate cache (`--cache`,
+/// default `<out>.cache.jsonl`); re-running the same command resumes a
+/// killed run exactly where it stopped and prints the §VII
+/// replication-gain report at the end.
+fn sweep_from_spec(args: &mut Args, spec_path: &str) -> Result<()> {
+    let mut spec = crate::sweep::SweepSpec::from_file(Path::new(spec_path))?;
+    // flags override the spec's estimator budget, not its grid; the
+    // override must honor the same validation as the spec parser
+    spec.reps = args.get_usize("reps", spec.reps)?;
+    if spec.reps == 0 {
+        return Err(Error::Config("--reps must be >= 1".into()));
+    }
+    spec.seed = args.get_u64("seed", spec.seed)?;
+    let out = PathBuf::from(args.get("out").unwrap_or_else(|| "sweep_results.jsonl".into()));
+    let limit = args.get_usize("limit-shards", 0)?;
+    let mut cfg = crate::sweep::RunConfig::persisted(out.clone());
+    if let Some(cache) = args.get("cache") {
+        cfg.cache = Some(PathBuf::from(cache));
+    }
+    cfg.shard_size = spec.shard_size;
+    cfg.limit_shards = if limit == 0 { None } else { Some(limit) };
+    cfg.threads = args.get_usize("threads", 0)?;
+    let objective = objective_from(args)?;
+    let trace = spec.load_trace()?;
+    let set = crate::sweep::ScenarioSet::from_trace(&trace, &spec)?;
+    let results = crate::sweep::run(&set, &cfg)?;
+    let rows = crate::sweep::gain_report(&results, Some(&trace), objective);
+    crate::sweep::gain_table(
+        &format!("Replication gains — {spec_path} ({} scenarios)", results.len()),
+        &rows,
+    )
+    .print();
+    let headline = crate::sweep::headline_speedup(&rows);
+    if headline.is_finite() {
+        println!("headline speedup (best job): {}x", fnum(headline));
+    }
+    println!("results: {}", out.display());
+    if results.len() < set.len() {
+        println!(
+            "partial run ({} of {} scenarios evaluated); rerun to resume",
+            results.len(),
+            set.len()
+        );
+    }
     Ok(())
 }
 
@@ -483,6 +535,47 @@ mod tests {
         .unwrap();
         trace(&mut args(&format!("trace analyze --trace {}", path.display()))).unwrap();
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_spec_runs_and_resumes() {
+        let dir = std::env::temp_dir().join("replica_cli_sweep_spec");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = dir.join("spec.json");
+        std::fs::write(
+            &spec,
+            r#"{"workload": {"generate": {"jobs": 2, "tasks_per_job": 12, "seed": 3}},
+                "reps": 100, "seed": 1, "shard_size": 4}"#,
+        )
+        .unwrap();
+        let out = dir.join("results.jsonl");
+        // budgeted partial run: one shard of 4 scenarios
+        sweep(&mut args(&format!(
+            "sweep --spec {} --out {} --limit-shards 1",
+            spec.display(),
+            out.display()
+        )))
+        .unwrap();
+        let partial = std::fs::read_to_string(&out).unwrap();
+        assert_eq!(partial.lines().count(), 4);
+        // rerun without the budget: resumes and completes 2 jobs x 6 B
+        sweep(&mut args(&format!(
+            "sweep --spec {} --out {}",
+            spec.display(),
+            out.display()
+        )))
+        .unwrap();
+        let full = std::fs::read_to_string(&out).unwrap();
+        assert_eq!(full.lines().count(), 12);
+        assert!(full.starts_with(&partial), "resume must extend the partial prefix");
+        assert!(std::fs::metadata(dir.join("results.jsonl.cache.jsonl")).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_spec_missing_file_is_error() {
+        assert!(sweep(&mut args("sweep --spec /nonexistent/spec.json")).is_err());
     }
 
     #[test]

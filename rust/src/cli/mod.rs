@@ -5,6 +5,8 @@
 //! replica simulate   --workers 100 --batches 10 --family sexp --delta 0.05 --mu 1
 //!                    [--backend mc|analytic|auto] [--reps 20000] [--pool-threads 0]
 //! replica sweep      --workers 100 --family sexp --delta 0.05 --mu 1
+//! replica sweep      --spec sweep.json [--out results.jsonl] [--cache cache.jsonl]
+//!                    [--limit-shards K] [--objective mean|cov|tradeoff=0.5]
 //! replica trace gen      --out trace.csv [--tasks 100] [--seed 42]
 //! replica trace analyze  --trace trace.csv
 //! replica experiment <fig3|fig6|fig7_8|fig9_10|regimes|assignment|traces|all> [--reps N] [--out dir]
@@ -58,7 +60,10 @@ COMMANDS:
   plan        choose the optimal redundancy level for a service-time model
   simulate    estimate job compute time at one operating point through a
               pluggable backend (Monte-Carlo, analytic closed forms, or auto)
-  sweep       E[T] and CoV across the full diversity-parallelism spectrum
+  sweep       E[T] and CoV across the full diversity-parallelism spectrum;
+              with --spec FILE: the sharded, resumable trace-sweep engine
+              (scenario grid -> JSONL store + estimate cache + gain report;
+              rerunning the same command resumes a killed run)
   trace       gen | analyze Google-cluster-shaped traces
   experiment  regenerate a paper figure (fig3, fig6, fig7_8, fig9_10,
               regimes, assignment, traces, all)
@@ -79,4 +84,11 @@ COMMON FLAGS:
   --threads N           per-scenario Monte-Carlo fan-out cap
                         (0 = pool width, 1 = force serial)
   --config FILE         load [system]/[service] sections from TOML
+
+SWEEP-ENGINE FLAGS (sweep --spec FILE):
+  --spec FILE           JSON sweep spec (workload + grid axes; see
+                        rust/README.md for the format)
+  --out FILE            JSONL result store (default sweep_results.jsonl)
+  --cache FILE          estimate cache (default <out>.cache.jsonl)
+  --limit-shards K      stop after K shards (resume later by rerunning)
 ";

@@ -7,12 +7,15 @@
 //! The jobs come from a Google-trace-shaped synthetic workload (see
 //! `traces::generator`); the pipeline — extract service times, build
 //! the empirical distribution, sweep the redundancy level by
-//! trace-driven simulation — is the paper's.
+//! trace-driven simulation — is the paper's, executed on the
+//! [`crate::sweep`] engine (in-memory: figure reproduction needs no
+//! store), so the figures and the cluster-scale `replica sweep` command
+//! share one grid-expansion and evaluation path.
 
-use crate::eval::{substream, Estimator, MonteCarlo};
 use crate::metrics::{fnum, SeriesExport, Table};
-use crate::traces::{job_ccdf, GeneratorConfig, JobAnalysis, Trace};
-use crate::util::error::Result;
+use crate::sweep::{self, CaseOutcome, RunConfig, ScenarioSet, SweepSpec};
+use crate::traces::{job_ccdf, GeneratorConfig, Trace};
+use crate::util::error::{Error, Result};
 
 /// Jobs shown in Fig. 12 (exponential tail + the borderline job 5).
 pub const EXP_TAIL_JOBS: [u64; 5] = [1, 2, 3, 4, 5];
@@ -48,14 +51,21 @@ pub fn job_sweep(
     reps: usize,
     seed: u64,
 ) -> Result<Vec<(usize, f64)>> {
-    let analysis = JobAnalysis::of(trace, job_id)
-        .ok_or_else(|| crate::util::error::Error::Config(format!("job {job_id} empty")))?;
-    let n = analysis.n_tasks;
-    let tau = analysis.service_dist();
-    // per-job stream, per-B substream inside sweep()
-    let mc = MonteCarlo::new(reps, substream(seed, job_id));
-    let rows: Vec<(usize, f64)> =
-        mc.sweep(n, &tau)?.into_iter().map(|(op, est)| (op.batches, est.mean)).collect();
+    let mut spec = SweepSpec::for_trace();
+    spec.jobs = Some(vec![job_id]);
+    spec.reps = reps;
+    spec.seed = seed;
+    let set = ScenarioSet::from_trace(trace, &spec)?;
+    let results = sweep::run(&set, &RunConfig::default())?;
+    let rows: Vec<(usize, f64)> = results
+        .iter()
+        .map(|r| match &r.outcome {
+            CaseOutcome::Ok(e) => Ok((r.case.batches(), e.mean)),
+            CaseOutcome::Error(msg) => {
+                Err(Error::Config(format!("job {job_id} B={}: {msg}", r.case.batches())))
+            }
+        })
+        .collect::<Result<_>>()?;
     let baseline = rows.last().expect("non-empty").1; // B = N (no redundancy)
     Ok(rows.into_iter().map(|(b, m)| (b, m / baseline)).collect())
 }

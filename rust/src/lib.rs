@@ -47,6 +47,12 @@
 //!   JAX+Pallas; Python never runs at serve time).
 //! * [`traces`] — a Google-cluster-trace-shaped workload generator,
 //!   loader, and tail analyzer (§VII).
+//! * [`sweep`] — the sharded, resumable trace-sweep engine: a JSON
+//!   spec expands into a content-addressed scenario grid, shards fan
+//!   out over the worker pool, results stream to a JSONL store with an
+//!   on-disk estimate cache (kill-and-resume is byte-identical,
+//!   re-runs are incremental), and a replication-gain report
+//!   summarizes per-job optima (`replica sweep --spec`).
 //! * [`experiments`] — one module per paper figure/table; the bench
 //!   harness and CLI call into these.
 //!
@@ -125,6 +131,7 @@ pub mod metrics;
 pub mod planner;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod traces;
 pub mod util;
 

@@ -25,7 +25,7 @@ use crate::analysis::optimizer::{self, Regime};
 use crate::batching::Policy;
 use crate::dist::{ServiceDist, TailFit};
 use crate::eval::{Auto, Estimator, MonteCarlo, Scenario};
-use crate::util::error::Result;
+use crate::util::error::{Error, Result};
 
 /// Planning objective.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -64,6 +64,43 @@ pub struct SweepPoint {
     pub batches: usize,
     pub mean: f64,
     pub cov: f64,
+}
+
+/// Score one operating point under `objective`, given the sweep-wide
+/// normalization anchors (the minimum mean and CoV over the spectrum —
+/// only the tradeoff objective uses them). Lower is better; NaN points
+/// (e.g. all-failed Monte-Carlo estimates) score +∞ so they can never
+/// win.
+pub fn score_point(p: &SweepPoint, objective: Objective, min_mean: f64, min_cov: f64) -> f64 {
+    let score = match objective {
+        Objective::MeanCompletion => p.mean,
+        Objective::Predictability => p.cov,
+        Objective::Tradeoff(w) => {
+            w * p.mean / min_mean.max(1e-300) + (1.0 - w) * p.cov / min_cov.max(1e-300)
+        }
+    };
+    if score.is_nan() {
+        f64::INFINITY
+    } else {
+        score
+    }
+}
+
+/// Pick the best operating point of a sweep under `objective` — the one
+/// selection rule shared by [`Planner::plan_with`] and the trace-sweep
+/// replication-gain report ([`crate::sweep::report`]). Returns `None`
+/// for an empty sweep or one with no finite point.
+pub fn choose(sweep: &[SweepPoint], objective: Objective) -> Option<SweepPoint> {
+    let min_mean = sweep.iter().map(|p| p.mean).fold(f64::INFINITY, f64::min);
+    let min_cov = sweep.iter().map(|p| p.cov).fold(f64::INFINITY, f64::min);
+    let mut best: Option<(SweepPoint, f64)> = None;
+    for p in sweep {
+        let score = score_point(p, objective, min_mean, min_cov);
+        if score.is_finite() && best.as_ref().is_none_or(|(_, s)| score < *s) {
+            best = Some((*p, score));
+        }
+    }
+    best.map(|(p, _)| p)
 }
 
 /// Redundancy planner for a fixed `(N, τ)`.
@@ -114,24 +151,9 @@ impl Planner {
         estimator: &E,
     ) -> Result<Plan> {
         let sweep = self.sweep_with(estimator)?;
-        // normalization anchors for the tradeoff objective
-        let min_mean = sweep.iter().map(|p| p.mean).fold(f64::INFINITY, f64::min);
-        let min_cov = sweep.iter().map(|p| p.cov).fold(f64::INFINITY, f64::min);
-        let mut best: Option<(SweepPoint, f64)> = None;
-        for p in &sweep {
-            let score = match objective {
-                Objective::MeanCompletion => p.mean,
-                Objective::Predictability => p.cov,
-                Objective::Tradeoff(w) => {
-                    w * p.mean / min_mean.max(1e-300)
-                        + (1.0 - w) * p.cov / min_cov.max(1e-300)
-                }
-            };
-            if best.as_ref().is_none_or(|(_, s)| score < *s) {
-                best = Some((*p, score));
-            }
-        }
-        let (chosen, _) = best.expect("spectrum is never empty");
+        let chosen = choose(&sweep, objective).ok_or_else(|| {
+            Error::Config("no operating point produced a finite estimate".into())
+        })?;
         let baseline = sweep.last().expect("non-empty").mean; // B = N
         Ok(Plan {
             workers: self.n,
@@ -382,6 +404,27 @@ mod tests {
         assert_eq!(fit.class, crate::dist::TailClass::HeavyTail);
         // heavy tails benefit from interior redundancy (Theorem 9, α < α*)
         assert!(plan.batches < 100, "B={}", plan.batches);
+    }
+
+    #[test]
+    fn choose_skips_nan_points_and_matches_plan() {
+        let pts = vec![
+            SweepPoint { batches: 1, mean: f64::NAN, cov: f64::NAN },
+            SweepPoint { batches: 2, mean: 3.0, cov: 0.5 },
+            SweepPoint { batches: 4, mean: 2.0, cov: 0.9 },
+        ];
+        let best = choose(&pts, Objective::MeanCompletion).unwrap();
+        assert_eq!(best.batches, 4);
+        let best = choose(&pts, Objective::Predictability).unwrap();
+        assert_eq!(best.batches, 2);
+        assert!(choose(&[], Objective::MeanCompletion).is_none());
+        let all_nan = vec![SweepPoint { batches: 1, mean: f64::NAN, cov: f64::NAN }];
+        assert!(choose(&all_nan, Objective::MeanCompletion).is_none());
+        // the extracted scorer drives plan_with: same winner either way
+        let p = Planner::new(100, ServiceDist::shifted_exp(0.05, 1.0));
+        let plan = p.plan(Objective::MeanCompletion);
+        let direct = choose(&p.sweep(), Objective::MeanCompletion).unwrap();
+        assert_eq!(plan.batches, direct.batches);
     }
 
     #[test]

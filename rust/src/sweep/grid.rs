@@ -1,0 +1,380 @@
+//! Grid expansion and content addressing.
+//!
+//! A [`ScenarioSet`] is the deterministic expansion of a [`SweepSpec`]
+//! over a trace: `jobs × batch counts × crash levels × backends`, in
+//! that nesting order. Each case carries a **content key** — a stable
+//! 64-bit hash of everything that determines its estimate (scenario,
+//! estimator configuration, spec seed) — which is simultaneously:
+//!
+//! * the cache address (same key ⇒ same estimate, by the determinism
+//!   contract of [`crate::eval::MonteCarlo`]),
+//! * the resume checkpoint identity (the result store validates its
+//!   prefix against the expected key sequence),
+//! * the RNG stream selector (`stream_seed = substream(spec.seed, key)`),
+//!   so an estimate depends only on *what* is asked, never on where the
+//!   case sits in the grid or how the grid is sharded.
+
+use crate::batching::{operating_points, Policy};
+use crate::dist::ServiceDist;
+use crate::eval::{substream, Scenario};
+use crate::sim::job::FailureModel;
+use crate::sweep::spec::{Backend, SweepSpec};
+use crate::traces::{JobAnalysis, Trace};
+use crate::util::error::{Error, Result};
+
+/// One point of the sweep grid.
+#[derive(Clone, Debug)]
+pub struct SweepCase {
+    /// Position in the grid (also the result-store record index).
+    pub index: usize,
+    /// Trace job this scenario models.
+    pub job_id: u64,
+    /// The evaluation question (workers = the job's task count, batch
+    /// count from the spec axis, τ = the job's empirical bootstrap).
+    pub scenario: Scenario,
+    /// Requested estimator backend.
+    pub backend: Backend,
+    /// Monte-Carlo replication budget (0 for the analytic backend).
+    pub reps: usize,
+    /// Content address of `(scenario, estimator config, spec seed)`.
+    pub key: u64,
+    /// RNG stream seed derived from the content key.
+    pub stream_seed: u64,
+}
+
+impl SweepCase {
+    /// Batch count of this case's (always balanced) scenario.
+    pub fn batches(&self) -> usize {
+        match self.scenario.policy {
+            Policy::BalancedNonOverlapping { batches } => batches,
+            _ => self.scenario.policy.batch_count(self.scenario.workers),
+        }
+    }
+
+    /// Crash probability of the failure axis (0 = none).
+    pub fn crash(&self) -> f64 {
+        match self.scenario.failures {
+            FailureModel::None => 0.0,
+            FailureModel::Crash { p } => p,
+            FailureModel::CrashRestart { p, .. } => p,
+        }
+    }
+
+    /// The content key as the fixed-width hex string used in store
+    /// records (u64 does not survive a JSON `Num` round trip intact).
+    pub fn key_hex(&self) -> String {
+        format!("{:016x}", self.key)
+    }
+}
+
+/// The expanded, content-addressed scenario grid.
+#[derive(Clone, Debug)]
+pub struct ScenarioSet {
+    pub cases: Vec<SweepCase>,
+}
+
+impl ScenarioSet {
+    /// Expand `spec` over `trace`. Deterministic: same spec + same
+    /// trace ⇒ the same cases with the same keys in the same order.
+    pub fn from_trace(trace: &Trace, spec: &SweepSpec) -> Result<ScenarioSet> {
+        let job_ids = match &spec.jobs {
+            Some(ids) => ids.clone(),
+            None => trace.job_ids(),
+        };
+        if job_ids.is_empty() {
+            return Err(Error::Config("sweep grid has no jobs".into()));
+        }
+        let mut cases = Vec::new();
+        for &job_id in &job_ids {
+            let analysis = JobAnalysis::of(trace, job_id).ok_or_else(|| {
+                Error::Config(format!("job {job_id} has no completed tasks in the trace"))
+            })?;
+            let n = analysis.n_tasks;
+            let tau = analysis.service_dist();
+            let batches: Vec<usize> = match &spec.batches {
+                Some(bs) => {
+                    for &b in bs {
+                        if n % b != 0 {
+                            return Err(Error::Config(format!(
+                                "batch count {b} does not divide job {job_id}'s N={n}"
+                            )));
+                        }
+                    }
+                    bs.clone()
+                }
+                None => operating_points(n).into_iter().map(|op| op.batches).collect(),
+            };
+            for &b in &batches {
+                for &p in &spec.crash {
+                    let failures = if p == 0.0 {
+                        FailureModel::None
+                    } else {
+                        FailureModel::Crash { p }
+                    };
+                    for &backend in &spec.backends {
+                        let scenario =
+                            Scenario::balanced(n, b, tau.clone()).with_failures(failures);
+                        let reps =
+                            if backend == Backend::Analytic { 0 } else { spec.reps };
+                        let key = case_key(&scenario, backend, reps, spec.seed);
+                        cases.push(SweepCase {
+                            index: cases.len(),
+                            job_id,
+                            scenario,
+                            backend,
+                            reps,
+                            key,
+                            stream_seed: substream(spec.seed, key),
+                        });
+                    }
+                }
+            }
+        }
+        Ok(ScenarioSet { cases })
+    }
+
+    pub fn len(&self) -> usize {
+        self.cases.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cases.is_empty()
+    }
+
+    /// The expected record-key sequence of a complete run.
+    pub fn expected_keys(&self) -> Vec<u64> {
+        self.cases.iter().map(|c| c.key).collect()
+    }
+}
+
+/// Content-address one case: a stable FNV-1a hash over a canonical
+/// encoding of the scenario (workers, policy, τ including every
+/// empirical sample bit, failure model), the estimator configuration
+/// (backend, replication budget), and the spec seed. Not a
+/// cryptographic hash — it only needs to separate the cases of
+/// overlapping sweep specs.
+pub fn case_key(scenario: &Scenario, backend: Backend, reps: usize, seed: u64) -> u64 {
+    let mut h = Fnv::new();
+    h.write(b"replica-sweep-v1");
+    h.write_u64(scenario.workers as u64);
+    hash_policy(&mut h, &scenario.policy);
+    hash_dist(&mut h, &scenario.tau);
+    hash_failures(&mut h, scenario.failures);
+    h.write(backend.name().as_bytes());
+    h.write_u64(reps as u64);
+    h.write_u64(seed);
+    h.finish()
+}
+
+/// FNV-1a, 64-bit: tiny, dependency-free, and stable across platforms
+/// and releases (unlike `DefaultHasher`, whose algorithm is unspecified).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xCBF2_9CE4_8422_2325)
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+
+    fn write_u64(&mut self, x: u64) {
+        self.write(&x.to_le_bytes());
+    }
+
+    fn write_f64(&mut self, x: f64) {
+        self.write_u64(x.to_bits());
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+fn hash_policy(h: &mut Fnv, policy: &Policy) {
+    h.write(policy.name().as_bytes());
+    match policy {
+        Policy::BalancedNonOverlapping { batches }
+        | Policy::RandomNonOverlapping { batches }
+        | Policy::CyclicOverlapping { batches }
+        | Policy::HybridOverlapping { batches } => h.write_u64(*batches as u64),
+        Policy::UnbalancedNonOverlapping { assignment } => {
+            h.write_u64(assignment.len() as u64);
+            for &a in assignment {
+                h.write_u64(a as u64);
+            }
+        }
+    }
+}
+
+fn hash_dist(h: &mut Fnv, tau: &ServiceDist) {
+    match tau {
+        ServiceDist::Exp { mu } => {
+            h.write(b"exp");
+            h.write_f64(*mu);
+        }
+        ServiceDist::ShiftedExp { delta, mu } => {
+            h.write(b"sexp");
+            h.write_f64(*delta);
+            h.write_f64(*mu);
+        }
+        ServiceDist::Pareto { sigma, alpha } => {
+            h.write(b"pareto");
+            h.write_f64(*sigma);
+            h.write_f64(*alpha);
+        }
+        ServiceDist::Weibull { shape, scale } => {
+            h.write(b"weibull");
+            h.write_f64(*shape);
+            h.write_f64(*scale);
+        }
+        ServiceDist::Gamma { shape, scale } => {
+            h.write(b"gamma");
+            h.write_f64(*shape);
+            h.write_f64(*scale);
+        }
+        ServiceDist::Bimodal { p_slow, fast, slow } => {
+            h.write(b"bimodal");
+            h.write_f64(*p_slow);
+            for (d, m) in [fast, slow] {
+                h.write_f64(*d);
+                h.write_f64(*m);
+            }
+        }
+        ServiceDist::Empirical(e) => {
+            h.write(b"empirical");
+            h.write_u64(e.len() as u64);
+            for &x in e.data() {
+                h.write_f64(x);
+            }
+        }
+    }
+}
+
+fn hash_failures(h: &mut Fnv, failures: FailureModel) {
+    match failures {
+        FailureModel::None => h.write(b"none"),
+        FailureModel::Crash { p } => {
+            h.write(b"crash");
+            h.write_f64(p);
+        }
+        FailureModel::CrashRestart { p, delay } => {
+            h.write(b"crash-restart");
+            h.write_f64(p);
+            h.write_f64(delay);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traces::GeneratorConfig;
+
+    fn small_trace() -> Trace {
+        GeneratorConfig::paper_workload(12, 3).generate()
+    }
+
+    fn spec() -> SweepSpec {
+        let mut s = SweepSpec::for_trace();
+        s.reps = 200;
+        s.seed = 5;
+        s
+    }
+
+    #[test]
+    fn grid_expansion_is_deterministic_and_ordered() {
+        let trace = small_trace();
+        let a = ScenarioSet::from_trace(&trace, &spec()).unwrap();
+        let b = ScenarioSet::from_trace(&trace, &spec()).unwrap();
+        // 10 jobs x 6 divisors of 12 x 1 crash x 1 backend
+        assert_eq!(a.len(), 60);
+        assert_eq!(a.expected_keys(), b.expected_keys());
+        for (i, c) in a.cases.iter().enumerate() {
+            assert_eq!(c.index, i);
+            assert_eq!(c.scenario.workers, 12);
+        }
+        // nesting order: job-major, then batches ascending
+        assert_eq!(a.cases[0].job_id, 1);
+        assert_eq!(a.cases[0].batches(), 1);
+        assert_eq!(a.cases[5].batches(), 12);
+        assert_eq!(a.cases[6].job_id, 2);
+    }
+
+    #[test]
+    fn keys_are_content_addresses() {
+        let trace = small_trace();
+        let set = ScenarioSet::from_trace(&trace, &spec()).unwrap();
+        // all distinct within a run
+        let mut keys = set.expected_keys();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), set.len());
+        // changing the estimator config changes every key
+        let mut spec2 = spec();
+        spec2.reps = 400;
+        let set2 = ScenarioSet::from_trace(&trace, &spec2).unwrap();
+        for (a, b) in set.cases.iter().zip(&set2.cases) {
+            assert_ne!(a.key, b.key);
+        }
+        // changing the seed changes keys and streams
+        let mut spec3 = spec();
+        spec3.seed = 6;
+        let set3 = ScenarioSet::from_trace(&trace, &spec3).unwrap();
+        for (a, b) in set.cases.iter().zip(&set3.cases) {
+            assert_ne!(a.key, b.key);
+            assert_ne!(a.stream_seed, b.stream_seed);
+        }
+        // same spec ⇒ keys independent of grid position (subset sweep)
+        let mut narrowed = spec();
+        narrowed.jobs = Some(vec![7]);
+        let sub = ScenarioSet::from_trace(&trace, &narrowed).unwrap();
+        let full_job7: Vec<&SweepCase> =
+            set.cases.iter().filter(|c| c.job_id == 7).collect();
+        assert_eq!(sub.len(), full_job7.len());
+        for (a, b) in sub.cases.iter().zip(full_job7) {
+            assert_eq!(a.key, b.key, "keys must not depend on grid position");
+        }
+    }
+
+    #[test]
+    fn axes_multiply() {
+        let trace = small_trace();
+        let mut s = spec();
+        s.jobs = Some(vec![1, 6]);
+        s.batches = Some(vec![1, 4]);
+        s.crash = vec![0.0, 0.3];
+        s.backends = vec![Backend::MonteCarlo, Backend::Auto];
+        let set = ScenarioSet::from_trace(&trace, &s).unwrap();
+        assert_eq!(set.len(), 2 * 2 * 2 * 2);
+        let c = &set.cases[3];
+        assert_eq!((c.job_id, c.batches()), (1, 1));
+        assert_eq!(c.crash(), 0.3);
+        assert_eq!(c.backend, Backend::Auto);
+        assert_eq!(c.key_hex().len(), 16);
+    }
+
+    #[test]
+    fn bad_grids_error() {
+        let trace = small_trace();
+        let mut s = spec();
+        s.jobs = Some(vec![99]);
+        assert!(ScenarioSet::from_trace(&trace, &s).is_err());
+        let mut s = spec();
+        s.batches = Some(vec![5]); // does not divide 12
+        assert!(ScenarioSet::from_trace(&trace, &s).is_err());
+    }
+
+    #[test]
+    fn analytic_backend_zeroes_reps() {
+        let trace = small_trace();
+        let mut s = spec();
+        s.backends = vec![Backend::Analytic];
+        let set = ScenarioSet::from_trace(&trace, &s).unwrap();
+        assert!(set.cases.iter().all(|c| c.reps == 0));
+    }
+}

@@ -1,0 +1,46 @@
+//! Sharded, resumable trace-sweep engine — the §VII experiment as a
+//! batch system.
+//!
+//! The paper's empirical pipeline (extract per-job service times from a
+//! cluster trace, bootstrap an empirical τ, sweep the redundancy level,
+//! read off the optimum) is a *workload*, not a figure: planner
+//! searches, regression gates, and cluster-scale what-if studies all
+//! ask the same grid of questions. This module turns that grid into an
+//! engine:
+//!
+//! * [`SweepSpec`] ([`spec`]) — a JSON spec naming the workload (trace
+//!   file or generator parameters) and the axes: jobs × batch counts ×
+//!   crash levels × backends.
+//! * [`ScenarioSet`] ([`grid`]) — the deterministic expansion of a spec
+//!   into content-addressed cases: each case's key is a stable hash of
+//!   scenario + estimator config + seed, and doubles as its cache
+//!   address and RNG stream selector, so **an estimate depends only on
+//!   what is asked, never on grid position or sharding**.
+//! * [`run`] / [`run_spec`] ([`runner`]) — shard the grid into bounded
+//!   units, fan each shard's Monte-Carlo cases across the persistent
+//!   [`crate::sim::pool::WorkerPool`] in one batched call, stream
+//!   records to a JSONL [`store`] and an on-disk estimate cache.
+//!   A killed run resumes exactly where it stopped (the store validates
+//!   its prefix and truncates at most one partial line) and re-runs are
+//!   incremental (cache hits are never re-evaluated); resumed output is
+//!   **byte-identical** to an uninterrupted run.
+//! * [`report`] — the replication-gain report: per-job optimal
+//!   redundancy, speedup over the B = N baseline, and the
+//!   E\[T\]-vs-predictability trade-off, with tail classes from
+//!   [`crate::dist::TailFit`].
+//!
+//! `experiments::traces_exp` (Figs. 11–13), the `replica sweep --spec`
+//! CLI command, and CI's regression artifacts are all thin layers over
+//! this one engine.
+
+pub mod grid;
+pub mod report;
+pub mod runner;
+pub mod spec;
+pub mod store;
+
+pub use grid::{case_key, ScenarioSet, SweepCase};
+pub use report::{gain_report, gain_table, headline_speedup, GainRow};
+pub use runner::{run, run_spec, CaseResult, RunConfig};
+pub use spec::{Backend, SweepSpec, Workload, DEFAULT_SHARD_SIZE, DEFAULT_SWEEP_REPS};
+pub use store::{CaseOutcome, StoredEstimate};

@@ -1,0 +1,228 @@
+//! The §VII replication-gain report.
+//!
+//! Condenses sweep results into the paper's headline question: per
+//! job, which redundancy level minimizes the objective, how much does
+//! it buy over the no-redundancy baseline (B = N), and what does it
+//! cost in predictability? Tail classes come from the same
+//! [`TailFit`] classifier the trace pipeline uses, so the report reads
+//! like Fig. 12/13 plus the abstract's order-of-magnitude claim.
+
+use std::collections::BTreeMap;
+
+use crate::dist::{TailClass, TailFit};
+use crate::metrics::{fnum, Table};
+use crate::planner::{choose, Objective, SweepPoint};
+use crate::sweep::runner::CaseResult;
+use crate::sweep::store::CaseOutcome;
+use crate::traces::Trace;
+
+/// One job's replication gain at one (backend, crash) axis point.
+#[derive(Clone, Debug)]
+pub struct GainRow {
+    pub job_id: u64,
+    /// Worker budget (= the job's task count).
+    pub n: usize,
+    /// Requested backend name.
+    pub backend: &'static str,
+    /// Crash probability of the failure axis (0 = none).
+    pub crash: f64,
+    /// Tail class of the job's service times (when a trace was given).
+    pub tail: Option<TailClass>,
+    /// Optimal batch count under the objective (`None` when every
+    /// point was all-failed or errored).
+    pub optimum: Option<SweepPoint>,
+    /// The no-redundancy baseline: the largest B in the grid (= N when
+    /// the grid covers the full spectrum). `None` when that exact
+    /// point was all-failed or errored — a smaller B must not stand in
+    /// for it, or the speedup column would stop measuring
+    /// speedup-over-no-redundancy.
+    pub baseline: Option<SweepPoint>,
+    /// Points whose every Monte-Carlo replication failed coverage.
+    pub all_failed_points: usize,
+    /// Points that produced per-case errors.
+    pub error_points: usize,
+}
+
+impl GainRow {
+    /// E\[T\](baseline) / E\[T\](B*) — the paper's speedup metric.
+    pub fn speedup(&self) -> f64 {
+        match (&self.baseline, &self.optimum) {
+            (Some(base), Some(opt)) => base.mean / opt.mean,
+            _ => f64::NAN,
+        }
+    }
+}
+
+/// Build the per-job gain rows from sweep results, scoring operating
+/// points with the planner's objective rule. Rows come out sorted by
+/// (job, backend, crash).
+pub fn gain_report(
+    results: &[CaseResult],
+    trace: Option<&Trace>,
+    objective: Objective,
+) -> Vec<GainRow> {
+    // group by (job, backend, crash-bits); BTreeMap for stable order
+    let mut groups: BTreeMap<(u64, &'static str, u64), Vec<&CaseResult>> = BTreeMap::new();
+    for r in results {
+        groups
+            .entry((r.case.job_id, r.case.backend.name(), r.case.crash().to_bits()))
+            .or_default()
+            .push(r);
+    }
+    let mut tails: BTreeMap<u64, TailClass> = BTreeMap::new();
+    let mut rows = Vec::with_capacity(groups.len());
+    for ((job_id, backend, crash_bits), group) in groups {
+        let mut points = Vec::new();
+        let mut all_failed_points = 0usize;
+        let mut error_points = 0usize;
+        for r in &group {
+            match &r.outcome {
+                CaseOutcome::Error(_) => error_points += 1,
+                CaseOutcome::Ok(e) if e.all_failed() => all_failed_points += 1,
+                CaseOutcome::Ok(e) => points.push(SweepPoint {
+                    batches: r.case.batches(),
+                    mean: e.mean,
+                    cov: e.cov,
+                }),
+            }
+        }
+        let optimum = choose(&points, objective);
+        // the baseline is the group's largest-B point itself, not the
+        // largest B that happened to survive
+        let max_b = group.iter().map(|r| r.case.batches()).max().unwrap_or(0);
+        let baseline =
+            points.iter().find(|p| p.batches == max_b && p.mean.is_finite()).copied();
+        let tail = trace.map(|t| {
+            *tails
+                .entry(job_id)
+                .or_insert_with(|| TailFit::classify(&t.service_times(job_id)).class)
+        });
+        rows.push(GainRow {
+            job_id,
+            n: group[0].case.scenario.workers,
+            backend,
+            crash: f64::from_bits(crash_bits),
+            tail,
+            optimum,
+            baseline,
+            all_failed_points,
+            error_points,
+        });
+    }
+    rows
+}
+
+/// The headline number: the best speedup across all rows (the
+/// abstract's "order of magnitude" claim comes from the heavy-tail
+/// jobs' rows).
+pub fn headline_speedup(rows: &[GainRow]) -> f64 {
+    rows.iter().map(GainRow::speedup).filter(|s| s.is_finite()).fold(f64::NAN, f64::max)
+}
+
+/// Printable report table.
+pub fn gain_table(title: &str, rows: &[GainRow]) -> Table {
+    let mut t = Table::new(
+        title,
+        vec![
+            "job", "N", "backend", "crash", "tail", "B*", "E[T]*", "CoV*", "E[T] B=N",
+            "CoV B=N", "speedup", "degraded",
+        ],
+    );
+    for row in rows {
+        let tail = match row.tail {
+            Some(TailClass::HeavyTail) => "heavy",
+            Some(TailClass::ExponentialTail) => "exp",
+            None => "-",
+        };
+        let (b_star, mean_star, cov_star) = match &row.optimum {
+            Some(p) => (p.batches.to_string(), fnum(p.mean), fnum(p.cov)),
+            None => ("-".into(), "-".into(), "-".into()),
+        };
+        let (mean_base, cov_base) = match &row.baseline {
+            Some(p) => (fnum(p.mean), fnum(p.cov)),
+            None => ("-".into(), "-".into()),
+        };
+        let speedup = row.speedup();
+        let speedup_cell = if speedup.is_finite() {
+            format!("{}x", fnum(speedup))
+        } else {
+            "-".into()
+        };
+        let degraded = if row.all_failed_points + row.error_points > 0 {
+            format!("{} failed / {} error", row.all_failed_points, row.error_points)
+        } else {
+            String::new()
+        };
+        t.row(vec![
+            row.job_id.to_string(),
+            row.n.to_string(),
+            row.backend.to_string(),
+            fnum(row.crash),
+            tail.to_string(),
+            b_star,
+            mean_star,
+            cov_star,
+            mean_base,
+            cov_base,
+            speedup_cell,
+            degraded,
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::runner::{run, RunConfig};
+    use crate::sweep::spec::SweepSpec;
+    use crate::sweep::ScenarioSet;
+    use crate::traces::GeneratorConfig;
+
+    #[test]
+    fn report_finds_interior_optimum_for_heavy_tail() {
+        let trace = GeneratorConfig::paper_workload(100, 7).generate();
+        let mut spec = SweepSpec::for_trace();
+        spec.reps = 2_000;
+        spec.seed = 9;
+        spec.jobs = Some(vec![4, 7]); // job 4: big shift; job 7: heavy
+        let set = ScenarioSet::from_trace(&trace, &spec).unwrap();
+        let results = run(&set, &RunConfig::default()).unwrap();
+        let rows = gain_report(&results, Some(&trace), Objective::MeanCompletion);
+        assert_eq!(rows.len(), 2);
+        let job4 = &rows[0];
+        let job7 = &rows[1];
+        assert_eq!((job4.job_id, job7.job_id), (4, 7));
+        assert_eq!(job4.tail, Some(TailClass::ExponentialTail));
+        assert_eq!(job7.tail, Some(TailClass::HeavyTail));
+        // baseline is B = N
+        assert_eq!(job7.baseline.unwrap().batches, 100);
+        // heavy tail: redundancy helps a lot
+        assert!(job7.optimum.unwrap().batches < 100);
+        assert!(job7.speedup() > 1.5, "speedup {}", job7.speedup());
+        let headline = headline_speedup(&rows);
+        assert!(headline >= job7.speedup());
+        let table = gain_table("gains", &rows);
+        assert!(table.render().contains("heavy"));
+    }
+
+    #[test]
+    fn degraded_points_are_counted_not_fatal() {
+        let trace = GeneratorConfig::paper_workload(12, 3).generate();
+        let mut spec = SweepSpec::for_trace();
+        spec.reps = 50;
+        spec.jobs = Some(vec![1]);
+        spec.crash = vec![1.0]; // every worker crashes: all points all-failed
+        let set = ScenarioSet::from_trace(&trace, &spec).unwrap();
+        let results = run(&set, &RunConfig::default()).unwrap();
+        let rows = gain_report(&results, Some(&trace), Objective::MeanCompletion);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].all_failed_points, 6); // all 6 divisors of 12
+        assert!(rows[0].optimum.is_none());
+        assert!(rows[0].baseline.is_none(), "a failed B=N point must not be substituted");
+        assert!(rows[0].speedup().is_nan());
+        assert!(headline_speedup(&rows).is_nan());
+        let rendered = gain_table("gains", &rows).render();
+        assert!(rendered.contains("6 failed"));
+    }
+}

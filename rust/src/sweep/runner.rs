@@ -1,0 +1,349 @@
+//! The sharded, resumable sweep engine.
+//!
+//! Execution shape: the grid is processed in shards of
+//! [`SweepSpec::shard_size`](crate::sweep::SweepSpec) cases. Each
+//! shard's uncached Monte-Carlo-bound cases go through **one** pooled
+//! `MonteCarlo::run_batch` call (the same two-level
+//! scenario×replication-chunk fan-out every batch entry point uses), so
+//! the persistent worker pool stays saturated across the whole shard;
+//! closed-form cases are answered inline. Finished outcomes are
+//! appended to the estimate cache, then the shard's records are
+//! appended to the result store in grid order and both files are
+//! flushed — the durability checkpoint a kill can interrupt by at most
+//! one partial line.
+//!
+//! Because every case's estimate depends only on its content key (its
+//! RNG stream is `substream(spec.seed, key)`), shard boundaries,
+//! resume points, pool width, and cache hits can change *when* a value
+//! is computed but never *what* it is — so an interrupted-and-resumed
+//! run writes byte-identical output to an uninterrupted one.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::eval::{Analytic, Estimator, MonteCarlo, Scenario};
+use crate::sweep::grid::{ScenarioSet, SweepCase};
+use crate::sweep::spec::{Backend, SweepSpec, DEFAULT_SHARD_SIZE};
+use crate::sweep::store::{render_record, CaseOutcome, EstimateCache, ResultStore, StoredEstimate};
+use crate::traces::Trace;
+use crate::util::error::Result;
+
+/// Engine configuration (everything that is *not* part of a case's
+/// content: where to persist, how to shard, how wide to fan out).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Result store path (`None` = in-memory run, nothing persisted).
+    pub out: Option<PathBuf>,
+    /// Estimate-cache path (`None` = in-memory cache).
+    pub cache: Option<PathBuf>,
+    /// Cases per shard (one pooled batch + one store flush each).
+    pub shard_size: usize,
+    /// Stop after this many shards (budgeted/partial runs; resume picks
+    /// up where the run stopped).
+    pub limit_shards: Option<usize>,
+    /// Per-scenario Monte-Carlo fan-out cap (0 = pool width).
+    pub threads: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> RunConfig {
+        RunConfig {
+            out: None,
+            cache: None,
+            shard_size: DEFAULT_SHARD_SIZE,
+            limit_shards: None,
+            threads: 0,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Persisted run: results to `out`, cache derived as
+    /// `<out>.cache.jsonl` unless set explicitly.
+    pub fn persisted(out: PathBuf) -> RunConfig {
+        let cache = PathBuf::from(format!("{}.cache.jsonl", out.display()));
+        RunConfig { out: Some(out), cache: Some(cache), ..RunConfig::default() }
+    }
+}
+
+/// One evaluated grid point.
+#[derive(Clone, Debug)]
+pub struct CaseResult {
+    pub case: SweepCase,
+    pub outcome: CaseOutcome,
+}
+
+/// Run (or resume) a sweep. Returns the results of every case
+/// evaluated so far in grid order — the full grid unless
+/// `limit_shards` stopped the run early.
+pub fn run(set: &ScenarioSet, cfg: &RunConfig) -> Result<Vec<CaseResult>> {
+    let expected = set.expected_keys();
+    let (mut store, prefix) = match &cfg.out {
+        Some(path) => {
+            let (store, prefix) = ResultStore::open(path, &expected)?;
+            (Some(store), prefix)
+        }
+        None => (None, Vec::new()),
+    };
+    let mut cache = match &cfg.cache {
+        Some(path) => EstimateCache::open(path)?,
+        None => EstimateCache::in_memory(),
+    };
+    let mut results: Vec<CaseResult> = set
+        .cases
+        .iter()
+        .zip(prefix)
+        .map(|(case, outcome)| CaseResult { case: case.clone(), outcome })
+        .collect();
+
+    let mut shards_done = 0usize;
+    while results.len() < set.cases.len() {
+        if cfg.limit_shards.is_some_and(|limit| shards_done >= limit) {
+            break;
+        }
+        let lo = results.len();
+        let hi = (lo + cfg.shard_size.max(1)).min(set.cases.len());
+        let shard = &set.cases[lo..hi];
+        let outcomes = evaluate_shard(shard, &mut cache, cfg.threads)?;
+        for (case, outcome) in shard.iter().zip(&outcomes) {
+            if let Some(store) = &mut store {
+                store.append(&render_record(case, outcome))?;
+            }
+        }
+        cache.flush()?;
+        if let Some(store) = &mut store {
+            store.flush()?;
+        }
+        results.extend(
+            shard
+                .iter()
+                .zip(outcomes)
+                .map(|(case, outcome)| CaseResult { case: case.clone(), outcome }),
+        );
+        shards_done += 1;
+    }
+    Ok(results)
+}
+
+/// Convenience: materialize the spec's workload, expand the grid, run.
+/// Returns the trace alongside the results so reports can classify
+/// tails without re-deriving it.
+pub fn run_spec(spec: &SweepSpec, cfg: &RunConfig) -> Result<(Trace, Vec<CaseResult>)> {
+    let trace = spec.load_trace()?;
+    let set = ScenarioSet::from_trace(&trace, spec)?;
+    let results = run(&set, cfg)?;
+    Ok((trace, results))
+}
+
+/// Evaluate one shard: cache hits are reused, closed-form cases are
+/// answered inline, and every Monte-Carlo-bound case goes through one
+/// pooled batch. Per-case problems (no closed form, an infeasible
+/// hand-built scenario) become [`CaseOutcome::Error`] records instead
+/// of poisoning the shard; all-failed estimates likewise surface per
+/// scenario via their `all_failed` flag.
+fn evaluate_shard(
+    shard: &[SweepCase],
+    cache: &mut EstimateCache,
+    threads: usize,
+) -> Result<Vec<CaseOutcome>> {
+    let mut outcomes: Vec<Option<CaseOutcome>> = vec![None; shard.len()];
+    let mut fresh: Vec<usize> = Vec::new();
+    // mc-bound case indices, grouped by replication budget (a single
+    // spec yields one group; hand-built sets may mix)
+    let mut mc_groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (i, case) in shard.iter().enumerate() {
+        if let Some(hit) = cache.get(case.key) {
+            outcomes[i] = Some(hit.clone());
+            continue;
+        }
+        fresh.push(i);
+        let analytic = case.backend == Backend::Analytic
+            || (case.backend == Backend::Auto && Analytic::supports(&case.scenario));
+        if analytic {
+            outcomes[i] = Some(analytic_outcome(&case.scenario));
+        } else {
+            mc_groups.entry(case.reps.max(1)).or_default().push(i);
+        }
+    }
+    for (reps, idxs) in mc_groups {
+        let mc = MonteCarlo { reps, seed: 0, threads };
+        let items: Vec<(&Scenario, u64)> =
+            idxs.iter().map(|&i| (&shard[i].scenario, shard[i].stream_seed)).collect();
+        match mc.run_batch(&items) {
+            Ok(estimates) => {
+                for (&i, est) in idxs.iter().zip(&estimates) {
+                    outcomes[i] = Some(CaseOutcome::Ok(StoredEstimate::of(est)));
+                }
+            }
+            Err(_) => {
+                // One bad case (e.g. an infeasible hand-built scenario)
+                // aborted the batch. Isolate each case so the error
+                // lands on the scenario that owns it — every item's
+                // stream depends only on its own key, so the healthy
+                // cases' estimates are unchanged by the re-run.
+                for &i in &idxs {
+                    let item = [(&shard[i].scenario, shard[i].stream_seed)];
+                    outcomes[i] = Some(match mc.run_batch(&item) {
+                        Ok(mut v) => {
+                            CaseOutcome::Ok(StoredEstimate::of(&v.pop().expect("one estimate")))
+                        }
+                        Err(e) => CaseOutcome::Error(e.to_string()),
+                    });
+                }
+            }
+        }
+    }
+    for &i in &fresh {
+        let outcome = outcomes[i].clone().expect("every fresh case evaluated");
+        cache.insert(shard[i].key, outcome)?;
+    }
+    Ok(outcomes.into_iter().map(|o| o.expect("every case answered")).collect())
+}
+
+fn analytic_outcome(scenario: &Scenario) -> CaseOutcome {
+    match Analytic.evaluate(scenario) {
+        Ok(est) => CaseOutcome::Ok(StoredEstimate::of(&est)),
+        Err(e) => CaseOutcome::Error(e.to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::grid::ScenarioSet;
+    use crate::traces::GeneratorConfig;
+
+    fn small_set(reps: usize) -> (Trace, ScenarioSet) {
+        let trace = GeneratorConfig::paper_workload(12, 3).generate();
+        let mut spec = SweepSpec::for_trace();
+        spec.reps = reps;
+        spec.seed = 5;
+        spec.jobs = Some(vec![1, 6]);
+        let set = ScenarioSet::from_trace(&trace, &spec).unwrap();
+        (trace, set)
+    }
+
+    #[test]
+    fn in_memory_run_covers_the_grid() {
+        let (_, set) = small_set(300);
+        let results = run(&set, &RunConfig::default()).unwrap();
+        assert_eq!(results.len(), set.len());
+        for r in &results {
+            match &r.outcome {
+                CaseOutcome::Ok(e) => {
+                    assert_eq!(e.via, "monte-carlo");
+                    assert_eq!(e.replications, 300);
+                    assert!(e.mean.is_finite());
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn results_are_independent_of_shard_size() {
+        let (_, set) = small_set(200);
+        let a = run(&set, &RunConfig { shard_size: 1, ..RunConfig::default() }).unwrap();
+        let b = run(&set, &RunConfig { shard_size: 7, ..RunConfig::default() }).unwrap();
+        let c = run(&set, &RunConfig { shard_size: 1000, ..RunConfig::default() }).unwrap();
+        for ((x, y), z) in a.iter().zip(&b).zip(&c) {
+            let (CaseOutcome::Ok(x), CaseOutcome::Ok(y), CaseOutcome::Ok(z)) =
+                (&x.outcome, &y.outcome, &z.outcome)
+            else {
+                panic!("unexpected error outcome");
+            };
+            assert_eq!(x.mean.to_bits(), y.mean.to_bits());
+            assert_eq!(y.mean.to_bits(), z.mean.to_bits());
+            assert_eq!(x.p99.to_bits(), z.p99.to_bits());
+        }
+    }
+
+    #[test]
+    fn limit_shards_stops_early() {
+        let (_, set) = small_set(100);
+        let cfg = RunConfig { shard_size: 5, limit_shards: Some(1), ..RunConfig::default() };
+        let partial = run(&set, &cfg).unwrap();
+        assert_eq!(partial.len(), 5);
+    }
+
+    #[test]
+    fn analytic_error_does_not_poison_the_shard() {
+        // empirical τ has no closed form: the analytic backend yields
+        // per-case Error records while mc cases in the same shard
+        // succeed
+        let trace = GeneratorConfig::paper_workload(12, 3).generate();
+        let mut spec = SweepSpec::for_trace();
+        spec.reps = 100;
+        spec.jobs = Some(vec![1]);
+        spec.backends = vec![Backend::Analytic, Backend::MonteCarlo];
+        let set = ScenarioSet::from_trace(&trace, &spec).unwrap();
+        let results = run(&set, &RunConfig::default()).unwrap();
+        assert_eq!(results.len(), 12);
+        for r in &results {
+            match (r.case.backend, &r.outcome) {
+                (Backend::Analytic, CaseOutcome::Error(msg)) => {
+                    assert!(msg.contains("no closed form"), "{msg}");
+                }
+                (Backend::MonteCarlo, CaseOutcome::Ok(e)) => {
+                    assert!(e.mean.is_finite());
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn auto_routes_like_the_auto_estimator() {
+        // closed-form τ: auto answers analytically (replications = 0)
+        let trace = GeneratorConfig::paper_workload(12, 3).generate();
+        let mut spec = SweepSpec::for_trace();
+        spec.reps = 100;
+        spec.jobs = Some(vec![2]);
+        spec.backends = vec![Backend::Auto];
+        let mut set = ScenarioSet::from_trace(&trace, &spec).unwrap();
+        // swap the empirical τ for a closed-form family, keeping keys
+        // consistent is irrelevant here (in-memory, no cache reuse)
+        for case in &mut set.cases {
+            case.scenario.tau = crate::dist::ServiceDist::exp(1.0);
+        }
+        let results = run(&set, &RunConfig::default()).unwrap();
+        for r in &results {
+            match &r.outcome {
+                CaseOutcome::Ok(e) => {
+                    assert_eq!(e.via, "analytic");
+                    assert_eq!(e.replications, 0);
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn cache_hits_skip_reevaluation() {
+        let (_, set) = small_set(150);
+        let dir = std::env::temp_dir().join("replica_sweep_runner_cache");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cache_path = dir.join("cache.jsonl");
+        std::fs::remove_file(&cache_path).ok();
+        let cfg = RunConfig {
+            cache: Some(cache_path.clone()),
+            shard_size: 4,
+            ..RunConfig::default()
+        };
+        let a = run(&set, &cfg).unwrap();
+        let lines_after_first = std::fs::read_to_string(&cache_path).unwrap();
+        let b = run(&set, &cfg).unwrap();
+        let lines_after_second = std::fs::read_to_string(&cache_path).unwrap();
+        assert_eq!(
+            lines_after_first, lines_after_second,
+            "second run must be served entirely from cache"
+        );
+        for (x, y) in a.iter().zip(&b) {
+            let (CaseOutcome::Ok(x), CaseOutcome::Ok(y)) = (&x.outcome, &y.outcome) else {
+                panic!("unexpected error outcome");
+            };
+            assert_eq!(x.mean.to_bits(), y.mean.to_bits());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,405 @@
+//! Sweep specification: the declarative input of the sweep engine.
+//!
+//! A spec names a workload (a trace file or generator parameters), the
+//! grid axes (jobs × batch counts × failure levels × backends), and the
+//! estimator budget. Specs are plain JSON so they can be committed,
+//! diffed, and fed to `replica sweep --spec` from CI:
+//!
+//! ```json
+//! {
+//!   "workload": {"generate": {"jobs": 100, "tasks_per_job": 1000, "seed": 7}},
+//!   "jobs": [1, 2, 3],
+//!   "batches": [1, 10, 100],
+//!   "backends": ["mc"],
+//!   "reps": 2000,
+//!   "seed": 42,
+//!   "crash": [0, 0.05],
+//!   "shard_size": 64
+//! }
+//! ```
+//!
+//! Every field except `workload` is optional: `jobs` defaults to every
+//! job in the trace, `batches` to the full divisor spectrum of each
+//! job's task count, `backends` to `["mc"]`, `crash` to `[0]` (no
+//! failure injection), `reps` to [`DEFAULT_SWEEP_REPS`], `seed` to 0,
+//! and `shard_size` to [`DEFAULT_SHARD_SIZE`].
+
+use std::path::{Path, PathBuf};
+
+use crate::traces::{load_trace, GeneratorConfig, Trace};
+use crate::util::error::{Error, Result};
+use crate::util::json::{parse, Json};
+
+/// Default Monte-Carlo replications per scenario. Cluster-scale sweeps
+/// evaluate thousands of scenarios, so the default budget is leaner
+/// than the single-scenario [`crate::eval::DEFAULT_REPS`].
+pub const DEFAULT_SWEEP_REPS: usize = 2_000;
+
+/// Default scenarios per shard (one shard = one pooled
+/// `evaluate_many`-style batch and one store flush).
+pub const DEFAULT_SHARD_SIZE: usize = 64;
+
+/// Which estimator backend a grid axis point asks for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    MonteCarlo,
+    Analytic,
+    Auto,
+}
+
+impl Backend {
+    /// Spec-file spelling (also the `backend` field of result records).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::MonteCarlo => "mc",
+            Backend::Analytic => "analytic",
+            Backend::Auto => "auto",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "mc" | "monte-carlo" => Ok(Backend::MonteCarlo),
+            "analytic" => Ok(Backend::Analytic),
+            "auto" => Ok(Backend::Auto),
+            other => {
+                Err(Error::Config(format!("unknown backend '{other}' (mc | analytic | auto)")))
+            }
+        }
+    }
+}
+
+/// Where the trace comes from.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Workload {
+    /// Synthesize a cluster-scale trace via
+    /// [`GeneratorConfig::scaled_workload`].
+    Generate { jobs: usize, tasks_per_job: usize, seed: u64 },
+    /// Load a trace CSV (real or previously generated).
+    TraceFile(PathBuf),
+}
+
+/// A parsed sweep specification.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepSpec {
+    /// Trace source. `None` means the caller supplies the [`Trace`]
+    /// directly (the in-memory path used by `experiments::traces_exp`).
+    pub workload: Option<Workload>,
+    /// Job-id filter; `None` = every job present in the trace.
+    pub jobs: Option<Vec<u64>>,
+    /// Batch counts to evaluate; `None` = all divisors of each job's
+    /// task count (the full diversity–parallelism spectrum).
+    pub batches: Option<Vec<usize>>,
+    /// Estimator backends (one grid axis).
+    pub backends: Vec<Backend>,
+    /// Monte-Carlo replications per scenario.
+    pub reps: usize,
+    /// Base seed; every scenario derives its own stream from it and its
+    /// content key.
+    pub seed: u64,
+    /// Worker crash probabilities (one grid axis); `0` = no failures.
+    pub crash: Vec<f64>,
+    /// Scenarios per shard.
+    pub shard_size: usize,
+}
+
+impl SweepSpec {
+    /// Spec with default axes for a caller-supplied trace.
+    pub fn for_trace() -> SweepSpec {
+        SweepSpec {
+            workload: None,
+            jobs: None,
+            batches: None,
+            backends: vec![Backend::MonteCarlo],
+            reps: DEFAULT_SWEEP_REPS,
+            seed: 0,
+            crash: vec![0.0],
+            shard_size: DEFAULT_SHARD_SIZE,
+        }
+    }
+
+    /// Parse a JSON spec document. Strict about keys: a misspelled
+    /// field would otherwise silently fall back to its default (and
+    /// re-key every scenario), so unknown keys are hard errors.
+    pub fn from_json(text: &str) -> Result<SweepSpec> {
+        let doc = parse(text)?;
+        const KNOWN: [&str; 8] =
+            ["workload", "jobs", "batches", "backends", "reps", "seed", "crash", "shard_size"];
+        if let Json::Obj(map) = &doc {
+            for key in map.keys() {
+                if !KNOWN.contains(&key.as_str()) {
+                    return Err(Error::Config(format!(
+                        "unknown spec field '{key}' (known: {})",
+                        KNOWN.join(", ")
+                    )));
+                }
+            }
+        } else {
+            return Err(Error::Config("sweep spec must be a JSON object".into()));
+        }
+        let workload = match doc.get("workload") {
+            None => return Err(Error::Config("sweep spec needs a 'workload' field".into())),
+            Some(w) => Some(parse_workload(w)?),
+        };
+        let jobs = match doc.get("jobs") {
+            None => None,
+            Some(v) => Some(
+                expect_arr(v, "jobs")?
+                    .iter()
+                    .map(|x| expect_index(x, "jobs entry"))
+                    .collect::<Result<Vec<u64>>>()?,
+            ),
+        };
+        let batches = match doc.get("batches") {
+            None => None,
+            Some(Json::Str(s)) if s == "divisors" => None,
+            Some(v) => {
+                let bs = expect_arr(v, "batches")?
+                    .iter()
+                    .map(|x| expect_index(x, "batches entry").map(|n| n as usize))
+                    .collect::<Result<Vec<usize>>>()?;
+                if bs.is_empty() || bs.iter().any(|&b| b == 0) {
+                    return Err(Error::Config("'batches' must be non-empty and positive".into()));
+                }
+                Some(bs)
+            }
+        };
+        let backends = match doc.get("backends") {
+            None => vec![Backend::MonteCarlo],
+            Some(v) => {
+                let names = expect_arr(v, "backends")?;
+                if names.is_empty() {
+                    return Err(Error::Config("'backends' must be non-empty".into()));
+                }
+                names
+                    .iter()
+                    .map(|x| {
+                        Backend::parse(
+                            x.as_str().ok_or_else(|| {
+                                Error::Config("'backends' entries must be strings".into())
+                            })?,
+                        )
+                    })
+                    .collect::<Result<Vec<Backend>>>()?
+            }
+        };
+        let reps = get_usize(&doc, "reps", DEFAULT_SWEEP_REPS)?;
+        if reps == 0 {
+            return Err(Error::Config("'reps' must be >= 1".into()));
+        }
+        let seed = get_usize(&doc, "seed", 0)? as u64;
+        let crash = match doc.get("crash") {
+            None => vec![0.0],
+            Some(v) => {
+                let ps = expect_arr(v, "crash")?
+                    .iter()
+                    .map(|x| expect_num(x, "crash entry"))
+                    .collect::<Result<Vec<f64>>>()?;
+                if ps.is_empty() || ps.iter().any(|p| !(0.0..=1.0).contains(p)) {
+                    return Err(Error::Config(
+                        "'crash' must be non-empty probabilities in [0, 1]".into(),
+                    ));
+                }
+                ps
+            }
+        };
+        let shard_size = get_usize(&doc, "shard_size", DEFAULT_SHARD_SIZE)?;
+        if shard_size == 0 {
+            return Err(Error::Config("'shard_size' must be >= 1".into()));
+        }
+        Ok(SweepSpec { workload, jobs, batches, backends, reps, seed, crash, shard_size })
+    }
+
+    /// Parse a spec file.
+    pub fn from_file(path: &Path) -> Result<SweepSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read spec {}: {e}", path.display())))?;
+        SweepSpec::from_json(&text)
+    }
+
+    /// Materialize the workload's trace (generate or load).
+    pub fn load_trace(&self) -> Result<Trace> {
+        match &self.workload {
+            None => Err(Error::Config(
+                "spec has no workload; pass the trace directly (ScenarioSet::from_trace)".into(),
+            )),
+            Some(Workload::Generate { jobs, tasks_per_job, seed }) => {
+                Ok(GeneratorConfig::scaled_workload(*jobs, *tasks_per_job, *seed).generate())
+            }
+            Some(Workload::TraceFile(path)) => load_trace(path),
+        }
+    }
+}
+
+fn parse_workload(w: &Json) -> Result<Workload> {
+    let Json::Obj(top) = w else {
+        return Err(Error::Config(
+            "'workload' must be {\"trace\": PATH} or {\"generate\": {...}}".into(),
+        ));
+    };
+    for key in top.keys() {
+        if !["trace", "generate"].contains(&key.as_str()) {
+            return Err(Error::Config(format!(
+                "unknown 'workload' field '{key}' (known: trace, generate)"
+            )));
+        }
+    }
+    match (top.get("trace"), top.get("generate")) {
+        (Some(_), Some(_)) => Err(Error::Config(
+            "'workload' cannot name both 'trace' and 'generate'".into(),
+        )),
+        (Some(t), None) => {
+            let path = t.as_str().ok_or_else(|| {
+                Error::Config("'workload.trace' must be a path string".into())
+            })?;
+            Ok(Workload::TraceFile(PathBuf::from(path)))
+        }
+        (None, Some(g)) => {
+            let Json::Obj(map) = g else {
+                return Err(Error::Config("'generate' must be an object".into()));
+            };
+            for key in map.keys() {
+                if !["jobs", "tasks_per_job", "seed"].contains(&key.as_str()) {
+                    return Err(Error::Config(format!(
+                        "unknown 'generate' field '{key}' (known: jobs, tasks_per_job, seed)"
+                    )));
+                }
+            }
+            let jobs = get_usize(g, "jobs", 10)?;
+            let tasks = get_usize(g, "tasks_per_job", 100)?;
+            if jobs == 0 || tasks == 0 {
+                return Err(Error::Config(
+                    "'generate' needs jobs >= 1 and tasks_per_job >= 1".into(),
+                ));
+            }
+            let seed = get_usize(g, "seed", 42)? as u64;
+            Ok(Workload::Generate { jobs, tasks_per_job: tasks, seed })
+        }
+        (None, None) => Err(Error::Config(
+            "'workload' must be {\"trace\": PATH} or {\"generate\": {...}}".into(),
+        )),
+    }
+}
+
+fn expect_arr<'j>(v: &'j Json, what: &str) -> Result<&'j [Json]> {
+    v.as_arr().ok_or_else(|| Error::Config(format!("'{what}' must be an array")))
+}
+
+fn expect_num(v: &Json, what: &str) -> Result<f64> {
+    v.as_f64().ok_or_else(|| Error::Config(format!("'{what}' must be a number")))
+}
+
+/// A non-negative integer array entry; fractional or negative values
+/// would otherwise truncate silently and re-key scenarios.
+fn expect_index(v: &Json, what: &str) -> Result<u64> {
+    let x = expect_num(v, what)?;
+    if x < 0.0 || x.fract() != 0.0 {
+        return Err(Error::Config(format!("'{what}' must be a non-negative integer, got {x}")));
+    }
+    Ok(x as u64)
+}
+
+fn get_usize(doc: &Json, key: &str, default: usize) -> Result<usize> {
+    match doc.get(key) {
+        None => Ok(default),
+        Some(v) => {
+            let x = expect_num(v, key)?;
+            if x < 0.0 || x.fract() != 0.0 {
+                return Err(Error::Config(format!("'{key}' must be a non-negative integer")));
+            }
+            Ok(x as usize)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_spec_defaults() {
+        let spec = SweepSpec::from_json(
+            r#"{"workload": {"generate": {"jobs": 3, "tasks_per_job": 12, "seed": 1}}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            spec.workload,
+            Some(Workload::Generate { jobs: 3, tasks_per_job: 12, seed: 1 })
+        );
+        assert_eq!(spec.jobs, None);
+        assert_eq!(spec.batches, None);
+        assert_eq!(spec.backends, vec![Backend::MonteCarlo]);
+        assert_eq!(spec.reps, DEFAULT_SWEEP_REPS);
+        assert_eq!(spec.crash, vec![0.0]);
+        assert_eq!(spec.shard_size, DEFAULT_SHARD_SIZE);
+    }
+
+    #[test]
+    fn full_spec_round() {
+        let spec = SweepSpec::from_json(
+            r#"{
+              "workload": {"trace": "t.csv"},
+              "jobs": [2, 4],
+              "batches": [1, 2, 6],
+              "backends": ["mc", "auto", "analytic"],
+              "reps": 500,
+              "seed": 9,
+              "crash": [0, 0.5],
+              "shard_size": 8
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(spec.workload, Some(Workload::TraceFile(PathBuf::from("t.csv"))));
+        assert_eq!(spec.jobs, Some(vec![2, 4]));
+        assert_eq!(spec.batches, Some(vec![1, 2, 6]));
+        assert_eq!(
+            spec.backends,
+            vec![Backend::MonteCarlo, Backend::Auto, Backend::Analytic]
+        );
+        assert_eq!((spec.reps, spec.seed, spec.shard_size), (500, 9, 8));
+        assert_eq!(spec.crash, vec![0.0, 0.5]);
+    }
+
+    #[test]
+    fn invalid_specs_are_rejected() {
+        for bad in [
+            r#"{}"#,
+            r#"{"workload": {"nope": 1}}"#,
+            r#"{"workload": {"trace": "t"}, "reps": 0}"#,
+            r#"{"workload": {"trace": "t"}, "batches": []}"#,
+            r#"{"workload": {"trace": "t"}, "batches": [0]}"#,
+            r#"{"workload": {"trace": "t"}, "backends": []}"#,
+            r#"{"workload": {"trace": "t"}, "backends": ["gpu"]}"#,
+            r#"{"workload": {"trace": "t"}, "crash": [1.5]}"#,
+            r#"{"workload": {"trace": "t"}, "shard_size": 0}"#,
+            r#"{"workload": {"generate": {"jobs": 0}}}"#,
+            r#"{"workload": {"trace": "t"}, "reps": 1.5}"#,
+            r#"{"workload": {"trace": "t"}, "rep": 500}"#,
+            r#"{"workload": {"generate": {"job": 5}}}"#,
+            r#"{"workload": {"generate": "100x1000"}}"#,
+            r#"{"workload": {"trace": "t", "generate": {"jobs": 2}}}"#,
+            r#"{"workload": {"trace": "t", "tasks_per_job": 10}}"#,
+            r#"{"workload": {"trace": 123}}"#,
+            r#"{"workload": {"trace": "t"}, "jobs": [1.9]}"#,
+            r#"{"workload": {"trace": "t"}, "jobs": [-1]}"#,
+            r#"{"workload": {"trace": "t"}, "batches": [2.5]}"#,
+            r#"[1, 2]"#,
+        ] {
+            assert!(SweepSpec::from_json(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn batches_divisors_keyword() {
+        let spec = SweepSpec::from_json(
+            r#"{"workload": {"trace": "t"}, "batches": "divisors"}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.batches, None);
+    }
+
+    #[test]
+    fn missing_workload_trace_load_errors() {
+        assert!(SweepSpec::for_trace().load_trace().is_err());
+    }
+}

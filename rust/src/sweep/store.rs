@@ -1,0 +1,510 @@
+//! JSONL persistence: the result store and the estimate cache.
+//!
+//! Both files hold one compact JSON object per line. Keys inside a
+//! record are emitted in sorted order (the codec's `Obj` is a
+//! `BTreeMap`) and floats render shortest-roundtrip, so **rendering is
+//! a pure function of the record's content** — the property the
+//! resume-equals-rerun byte-identity guarantee rests on.
+//!
+//! * The **result store** (`results.jsonl`) is written strictly in grid
+//!   order. On open it validates the existing file against the expected
+//!   key sequence, truncates everything from the first invalid or
+//!   out-of-order line (a kill can leave at most one partial line), and
+//!   resumes after the surviving prefix.
+//! * The **estimate cache** keys finished estimates by content address,
+//!   so a re-run — same spec, a widened spec, or a run whose result
+//!   file was lost — never re-evaluates a scenario it has already paid
+//!   for. Lines are unordered; corrupt tails are truncated on load.
+//!
+//! Undefined statistics (an all-failed Monte-Carlo estimate is all-NaN
+//! by construction) are stored as JSON `null` and flagged
+//! `"all_failed": true`, keeping the line parseable instead of
+//! poisoning the file with bare `NaN` tokens.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::eval::Estimate;
+use crate::sweep::grid::SweepCase;
+use crate::util::error::{Error, Result};
+use crate::util::json::{parse, Json};
+
+/// The persisted slice of an [`Estimate`].
+#[derive(Clone, Debug)]
+pub struct StoredEstimate {
+    /// Backend that actually answered (`analytic` | `monte-carlo`) —
+    /// distinct from the requested backend when `auto` routes.
+    pub via: String,
+    pub mean: f64,
+    pub ci95: f64,
+    pub cov: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub failure_rate: f64,
+    pub replications: usize,
+    pub completed: usize,
+}
+
+impl StoredEstimate {
+    pub fn of(est: &Estimate) -> StoredEstimate {
+        StoredEstimate {
+            via: est.provenance.backend().to_string(),
+            mean: est.mean,
+            ci95: est.ci95,
+            cov: est.cov,
+            p50: est.p50,
+            p95: est.p95,
+            p99: est.p99,
+            failure_rate: est.failure_rate,
+            replications: est.replications,
+            completed: est.completed,
+        }
+    }
+
+    /// Mirrors [`Estimate::all_failed`].
+    pub fn all_failed(&self) -> bool {
+        self.replications > 0 && self.completed == 0
+    }
+}
+
+/// What the engine has to say about one case: an estimate, or a
+/// deterministic per-case error (e.g. "no closed form") that must not
+/// take the rest of its shard down with it.
+#[derive(Clone, Debug)]
+pub enum CaseOutcome {
+    Ok(StoredEstimate),
+    Error(String),
+}
+
+/// Render one result-store line (no trailing newline) for `case`.
+/// Pure: fresh estimates and cache-reconstituted ones render
+/// byte-identically.
+pub fn render_record(case: &SweepCase, outcome: &CaseOutcome) -> String {
+    let mut pairs = vec![
+        ("b", Json::Num(case.batches() as f64)),
+        ("backend", Json::Str(case.backend.name().to_string())),
+        ("crash", Json::Num(case.crash())),
+        ("job", Json::Num(case.job_id as f64)),
+        ("key", Json::Str(case.key_hex())),
+        ("n", Json::Num(case.scenario.workers as f64)),
+    ];
+    pairs.extend(outcome_fields(outcome));
+    Json::obj(pairs).to_string_compact()
+}
+
+/// Render one cache line (no trailing newline): the outcome keyed by
+/// content address only.
+fn render_cache_line(key: u64, outcome: &CaseOutcome) -> String {
+    let mut pairs = vec![("key", Json::Str(format!("{key:016x}")))];
+    pairs.extend(outcome_fields(outcome));
+    Json::obj(pairs).to_string_compact()
+}
+
+fn outcome_fields(outcome: &CaseOutcome) -> Vec<(&'static str, Json)> {
+    match outcome {
+        CaseOutcome::Error(msg) => vec![("error", Json::Str(msg.clone()))],
+        CaseOutcome::Ok(e) => vec![
+            ("all_failed", Json::Bool(e.all_failed())),
+            ("ci95", Json::num_or_null(e.ci95)),
+            ("completed", Json::Num(e.completed as f64)),
+            ("cov", Json::num_or_null(e.cov)),
+            ("failure_rate", Json::num_or_null(e.failure_rate)),
+            ("mean", Json::num_or_null(e.mean)),
+            ("p50", Json::num_or_null(e.p50)),
+            ("p95", Json::num_or_null(e.p95)),
+            ("p99", Json::num_or_null(e.p99)),
+            ("replications", Json::Num(e.replications as f64)),
+            ("via", Json::Str(e.via.clone())),
+        ],
+    }
+}
+
+/// Parse any store/cache line back into `(key, outcome)`.
+pub fn parse_record(line: &str) -> Result<(u64, CaseOutcome)> {
+    let doc = parse(line)?;
+    let key_hex = doc
+        .get("key")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Parse("record has no 'key'".into()))?;
+    let key = u64::from_str_radix(key_hex, 16)
+        .map_err(|e| Error::Parse(format!("bad record key '{key_hex}': {e}")))?;
+    if let Some(msg) = doc.get("error").and_then(Json::as_str) {
+        return Ok((key, CaseOutcome::Error(msg.to_string())));
+    }
+    let field = |name: &str| doc.get(name).map_or(f64::NAN, Json::as_f64_or_nan);
+    let count = |name: &str| -> Result<usize> {
+        doc.get(name)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| Error::Parse(format!("record missing count '{name}'")))
+    };
+    let via = doc
+        .get("via")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Parse("record has no 'via'".into()))?
+        .to_string();
+    Ok((
+        key,
+        CaseOutcome::Ok(StoredEstimate {
+            via,
+            mean: field("mean"),
+            ci95: field("ci95"),
+            cov: field("cov"),
+            p50: field("p50"),
+            p95: field("p95"),
+            p99: field("p99"),
+            failure_rate: field("failure_rate"),
+            replications: count("replications")?,
+            completed: count("completed")?,
+        }),
+    ))
+}
+
+/// Split `text` into complete (newline-terminated) lines, reporting the
+/// byte length of the surviving prefix as lines are accepted.
+fn complete_lines(text: &str) -> impl Iterator<Item = &str> {
+    // `split_inclusive` keeps the terminator, so a trailing partial
+    // line (no '\n') is naturally excluded by the filter.
+    text.split_inclusive('\n')
+        .filter(|l| l.ends_with('\n'))
+        .map(|l| &l[..l.len() - 1])
+}
+
+/// Read the file's longest valid-UTF-8 prefix. A kill can tear a write
+/// mid multi-byte character; `read_to_string` would hard-error on that
+/// forever, whereas the torn bytes are exactly the corrupt tail the
+/// truncate-and-resume logic is meant to discard. Byte offsets into
+/// the returned string equal file offsets (no lossy replacement).
+fn read_valid_prefix(file: &mut File) -> Result<String> {
+    let mut bytes = Vec::new();
+    file.read_to_end(&mut bytes)?;
+    let valid = match std::str::from_utf8(&bytes) {
+        Ok(_) => bytes.len(),
+        Err(e) => e.valid_up_to(),
+    };
+    bytes.truncate(valid);
+    Ok(String::from_utf8(bytes).expect("prefix validated"))
+}
+
+/// The grid-ordered JSONL result store.
+pub struct ResultStore {
+    file: File,
+}
+
+impl ResultStore {
+    /// Open (or create) the store and validate it against the expected
+    /// key sequence. Returns the store, positioned to append, plus the
+    /// outcomes of the valid resume prefix (record `i` matched
+    /// `expected[i]`). Everything after the first invalid, partial, or
+    /// out-of-order line is truncated — but a file whose *first*
+    /// complete record already mismatches is a different sweep's
+    /// output (a kill can only tear the last line), and truncating it
+    /// would destroy healthy data; that is an error instead.
+    pub fn open(path: &Path, expected: &[u64]) -> Result<(ResultStore, Vec<CaseOutcome>)> {
+        let mut file =
+            OpenOptions::new().read(true).write(true).create(true).truncate(false).open(path)?;
+        let text = read_valid_prefix(&mut file)?;
+        let mut outcomes = Vec::new();
+        let mut good_bytes = 0u64;
+        let mut complete = 0usize;
+        for line in complete_lines(&text) {
+            complete += 1;
+            if outcomes.len() >= expected.len() {
+                break; // spec shrank: drop surplus records
+            }
+            match parse_record(line) {
+                Ok((key, outcome)) if key == expected[outcomes.len()] => {
+                    outcomes.push(outcome);
+                    good_bytes += line.len() as u64 + 1;
+                }
+                _ => break,
+            }
+        }
+        if outcomes.is_empty() && complete > 0 {
+            return Err(Error::Config(format!(
+                "existing results file {} does not match this sweep's scenario grid \
+                 (different spec, seed, or reps?); refusing to overwrite it — delete \
+                 the file or pass a different output path",
+                path.display()
+            )));
+        }
+        file.set_len(good_bytes)?;
+        file.seek(SeekFrom::End(0))?;
+        Ok((ResultStore { file }, outcomes))
+    }
+
+    /// Append one record line (newline added here).
+    pub fn append(&mut self, line: &str) -> Result<()> {
+        self.file.write_all(line.as_bytes())?;
+        self.file.write_all(b"\n")?;
+        Ok(())
+    }
+
+    /// Flush buffered records to disk (called once per shard).
+    pub fn flush(&mut self) -> Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// The content-addressed estimate cache.
+pub struct EstimateCache {
+    file: Option<File>,
+    map: BTreeMap<u64, CaseOutcome>,
+}
+
+impl EstimateCache {
+    /// A cache with no backing file (the in-memory engine path).
+    pub fn in_memory() -> EstimateCache {
+        EstimateCache { file: None, map: BTreeMap::new() }
+    }
+
+    /// Open (or create) a cache file, loading every valid line. The
+    /// file is truncated at the first corrupt line (at most the last
+    /// one after a kill).
+    pub fn open(path: &Path) -> Result<EstimateCache> {
+        let mut file =
+            OpenOptions::new().read(true).write(true).create(true).truncate(false).open(path)?;
+        let text = read_valid_prefix(&mut file)?;
+        let mut map = BTreeMap::new();
+        let mut good_bytes = 0u64;
+        for line in complete_lines(&text) {
+            match parse_record(line) {
+                Ok((key, outcome)) => {
+                    map.insert(key, outcome);
+                    good_bytes += line.len() as u64 + 1;
+                }
+                Err(_) => break,
+            }
+        }
+        file.set_len(good_bytes)?;
+        file.seek(SeekFrom::End(0))?;
+        Ok(EstimateCache { file: Some(file), map })
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn get(&self, key: u64) -> Option<&CaseOutcome> {
+        self.map.get(&key)
+    }
+
+    /// Record one outcome (appended to the backing file if any).
+    pub fn insert(&mut self, key: u64, outcome: CaseOutcome) -> Result<()> {
+        if let Some(file) = &mut self.file {
+            file.write_all(render_cache_line(key, &outcome).as_bytes())?;
+            file.write_all(b"\n")?;
+        }
+        self.map.insert(key, outcome);
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        if let Some(file) = &mut self.file {
+            file.flush()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::Provenance;
+
+    fn est(mean: f64, completed: usize) -> StoredEstimate {
+        StoredEstimate {
+            via: "monte-carlo".into(),
+            mean,
+            ci95: 0.1,
+            cov: 0.5,
+            p50: mean,
+            p95: mean * 2.0,
+            p99: mean * 3.0,
+            failure_rate: 0.0,
+            replications: 100,
+            completed,
+        }
+    }
+
+    #[test]
+    fn record_roundtrip_is_exact() {
+        let line = render_cache_line(0xDEAD_BEEF_0000_0001, &CaseOutcome::Ok(est(1.2345, 100)));
+        let (key, outcome) = parse_record(&line).unwrap();
+        assert_eq!(key, 0xDEAD_BEEF_0000_0001);
+        // re-rendering the parsed outcome reproduces the exact bytes
+        assert_eq!(render_cache_line(key, &outcome), line);
+    }
+
+    #[test]
+    fn all_failed_record_stays_parseable() {
+        let mut e = est(f64::NAN, 0);
+        e.ci95 = f64::NAN;
+        e.cov = f64::NAN;
+        e.p50 = f64::NAN;
+        e.p95 = f64::NAN;
+        e.p99 = f64::NAN;
+        e.failure_rate = 1.0;
+        let line = render_cache_line(7, &CaseOutcome::Ok(e));
+        assert!(line.contains("\"all_failed\":true"));
+        assert!(line.contains("\"mean\":null"));
+        assert!(!line.contains("NaN"));
+        let (_, back) = parse_record(&line).unwrap();
+        match back {
+            CaseOutcome::Ok(e) => {
+                assert!(e.all_failed());
+                assert!(e.mean.is_nan());
+                assert_eq!(e.failure_rate, 1.0);
+            }
+            other => panic!("{other:?}"),
+        }
+        // and the exact-bytes property holds through the null round trip
+        let (key, outcome) = parse_record(&line).unwrap();
+        assert_eq!(render_cache_line(key, &outcome), line);
+    }
+
+    #[test]
+    fn error_outcome_roundtrip() {
+        let line = render_cache_line(3, &CaseOutcome::Error("no closed form".into()));
+        let (key, outcome) = parse_record(&line).unwrap();
+        assert_eq!(key, 3);
+        assert!(matches!(outcome, CaseOutcome::Error(ref m) if m == "no closed form"));
+        assert_eq!(render_cache_line(key, &outcome), line);
+    }
+
+    #[test]
+    fn stored_estimate_mirrors_estimate() {
+        let e = Estimate {
+            mean: 2.0,
+            ci95: 0.1,
+            cov: 0.4,
+            p50: 1.9,
+            p95: 3.0,
+            p99: 3.5,
+            failure_rate: 0.25,
+            replications: 400,
+            completed: 300,
+            provenance: Provenance::MonteCarlo { reps: 400, seed: 1, threads: 2 },
+        };
+        let s = StoredEstimate::of(&e);
+        assert_eq!(s.via, "monte-carlo");
+        assert_eq!(s.completed, 300);
+        assert!(!s.all_failed());
+    }
+
+    #[test]
+    fn cache_survives_corrupt_tail() {
+        let dir = std::env::temp_dir().join("replica_sweep_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.jsonl");
+        {
+            let mut cache = EstimateCache::open(&path).unwrap();
+            cache.insert(1, CaseOutcome::Ok(est(1.0, 100))).unwrap();
+            cache.insert(2, CaseOutcome::Ok(est(2.0, 100))).unwrap();
+            cache.flush().unwrap();
+        }
+        // simulate a kill mid-write: append half a line
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"key\":\"zz-partial");
+        std::fs::write(&path, &text).unwrap();
+        let cache = EstimateCache::open(&path).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(1).is_some() && cache.get(2).is_some());
+        // the corrupt tail was truncated away
+        let clean = std::fs::read_to_string(&path).unwrap();
+        assert!(clean.ends_with('\n') && !clean.contains("zz-partial"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_utf8_tail_is_truncated_not_fatal() {
+        let dir = std::env::temp_dir().join("replica_sweep_torn_utf8");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.jsonl");
+        {
+            let mut cache = EstimateCache::open(&path).unwrap();
+            cache.insert(1, CaseOutcome::Error("policy needs B \u{2264} N".into())).unwrap();
+            cache.flush().unwrap();
+        }
+        // tear the next record mid multi-byte character (first byte of
+        // a 3-byte UTF-8 sequence)
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"{\"key\":\"02\",\"error\":\"B \xE2");
+        std::fs::write(&path, &bytes).unwrap();
+        let cache = EstimateCache::open(&path).unwrap();
+        assert_eq!(cache.len(), 1);
+        assert!(matches!(cache.get(1), Some(CaseOutcome::Error(m)) if m.contains('\u{2264}')));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn result_store_validates_prefix() {
+        let dir = std::env::temp_dir().join("replica_sweep_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("results.jsonl");
+        let expected = [10u64, 11, 12];
+        // write records 10, 11, then an out-of-order 99
+        {
+            let (mut store, prefix) = ResultStore::open(&path, &expected).unwrap();
+            assert!(prefix.is_empty());
+            for key in [10u64, 11, 99] {
+                store.append(&render_cache_line(key, &CaseOutcome::Ok(est(1.0, 10)))).unwrap();
+            }
+            store.flush().unwrap();
+        }
+        let (_, prefix) = ResultStore::open(&path, &expected).unwrap();
+        assert_eq!(prefix.len(), 2, "key 99 must not validate against expected 12");
+        // reopening after truncation keeps only the valid prefix bytes
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn result_store_refuses_to_wipe_a_foreign_file() {
+        let dir = std::env::temp_dir().join("replica_sweep_store_foreign");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("results.jsonl");
+        {
+            let (mut store, _) = ResultStore::open(&path, &[10]).unwrap();
+            store.append(&render_cache_line(10, &CaseOutcome::Ok(est(1.0, 10)))).unwrap();
+            store.flush().unwrap();
+        }
+        // same path, different grid: the healthy file must survive
+        let err = ResultStore::open(&path, &[20]).unwrap_err();
+        assert!(err.to_string().contains("refusing to overwrite"), "{err}");
+        assert_eq!(std::fs::read_to_string(&path).unwrap().lines().count(), 1);
+        // a file holding only a torn partial line is fair game
+        std::fs::write(&path, "{\"key\":\"tor").unwrap();
+        let (_, prefix) = ResultStore::open(&path, &[20]).unwrap();
+        assert!(prefix.is_empty());
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn result_store_drops_surplus_records() {
+        let dir = std::env::temp_dir().join("replica_sweep_store_surplus");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("results.jsonl");
+        {
+            let (mut store, _) = ResultStore::open(&path, &[5, 6]).unwrap();
+            for key in [5u64, 6] {
+                store.append(&render_cache_line(key, &CaseOutcome::Ok(est(1.0, 10)))).unwrap();
+            }
+            store.flush().unwrap();
+        }
+        // the spec shrank to one case: the second record is dropped
+        let (_, prefix) = ResultStore::open(&path, &[5]).unwrap();
+        assert_eq!(prefix.len(), 1);
+        assert_eq!(std::fs::read_to_string(&path).unwrap().lines().count(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -70,6 +70,34 @@ impl GeneratorConfig {
         GeneratorConfig { jobs, seed, schedule_jitter: 1.0 }
     }
 
+    /// A cluster-scale workload in the same two §VII tail families:
+    /// `jobs` jobs of `tasks_per_job` tasks each, cycling
+    /// exponential-tail (shifted-exponential, 2 of every 5 jobs) and
+    /// heavy-tail (Pareto, α ∈ \[1.1, 2.0\]) specs with per-job
+    /// parameters drawn deterministically from `seed`. This is the
+    /// workload behind the sweep engine's `generate` spec — ≥ 100 jobs
+    /// × 1000 tasks is the intended scale, while `paper_workload`
+    /// stays the exact 10-job Fig. 11 reproduction.
+    pub fn scaled_workload(jobs: usize, tasks_per_job: usize, seed: u64) -> GeneratorConfig {
+        let mut rng = Pcg64::new(seed ^ 0x5CA1_AB1E);
+        let specs = (0..jobs)
+            .map(|j| {
+                let service = if j % 5 < 2 {
+                    // exponential tail: shift 5–20 s, rate 0.3–1.5
+                    ServiceDist::shifted_exp(
+                        5.0 + 15.0 * rng.uniform(),
+                        0.3 + 1.2 * rng.uniform(),
+                    )
+                } else {
+                    // heavy tail: scale 5–20 s, index 1.1–2.0
+                    ServiceDist::pareto(5.0 + 15.0 * rng.uniform(), 1.1 + 0.9 * rng.uniform())
+                };
+                JobSpec { job_id: (j + 1) as u64, tasks: tasks_per_job, service }
+            })
+            .collect();
+        GeneratorConfig { jobs: specs, seed, schedule_jitter: 1.0 }
+    }
+
     /// Generate the trace.
     pub fn generate(&self) -> Trace {
         let mut rng = Pcg64::new(self.seed);
@@ -144,6 +172,35 @@ mod tests {
             let fit = TailFit::classify(&trace.service_times(j));
             assert_eq!(fit.class, TailClass::HeavyTail, "job {j}: {fit:?}");
         }
+    }
+
+    #[test]
+    fn scaled_workload_covers_both_families_at_scale() {
+        let cfg = GeneratorConfig::scaled_workload(100, 40, 11);
+        assert_eq!(cfg.jobs.len(), 100);
+        let exp = cfg
+            .jobs
+            .iter()
+            .filter(|j| matches!(j.service, ServiceDist::ShiftedExp { .. }))
+            .count();
+        let heavy = cfg
+            .jobs
+            .iter()
+            .filter(|j| matches!(j.service, ServiceDist::Pareto { .. }))
+            .count();
+        assert_eq!(exp, 40);
+        assert_eq!(heavy, 60);
+        let trace = cfg.generate();
+        assert_eq!(trace.job_ids().len(), 100);
+        assert_eq!(trace.events.len(), 100 * 40 * 2);
+        for j in [1u64, 50, 100] {
+            assert_eq!(trace.service_times(j).len(), 40, "job {j}");
+        }
+        // deterministic in the seed, distinct across seeds
+        let a = GeneratorConfig::scaled_workload(100, 40, 11).generate();
+        assert_eq!(a.service_times(33), trace.service_times(33));
+        let b = GeneratorConfig::scaled_workload(100, 40, 12).generate();
+        assert_ne!(b.service_times(33), trace.service_times(33));
     }
 
     #[test]

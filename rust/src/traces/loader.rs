@@ -1,6 +1,13 @@
 //! Trace CSV persistence (same column layout for synthetic and real
 //! traces): `timestamp_us,job_id,task_index,machine_id,event`.
+//!
+//! Loading is strict: malformed cells, unknown event kinds, ragged
+//! rows (rejected by the CSV layer), and duplicate `(job, task, kind)`
+//! events are all hard errors naming the offending row — a duplicate
+//! FINISH would otherwise silently overwrite a service time and skew
+//! every downstream tail fit.
 
+use std::collections::BTreeSet;
 use std::path::Path;
 
 use crate::traces::schema::{EventKind, Trace, TraceEvent};
@@ -31,18 +38,28 @@ pub fn load_trace(path: &Path) -> Result<Trace> {
     let c_machine = t.col("machine_id")?;
     let c_event = t.col("event")?;
     let mut events = Vec::with_capacity(t.rows.len());
+    let mut seen: BTreeSet<(u64, u32, bool)> = BTreeSet::new();
     for (i, row) in t.rows.iter().enumerate() {
         let parse_u64 = |s: &str, what: &str| -> Result<u64> {
             s.parse::<u64>()
                 .map_err(|e| Error::Parse(format!("row {i}: bad {what} '{s}': {e}")))
         };
-        events.push(TraceEvent {
+        let event = TraceEvent {
             timestamp_us: parse_u64(&row[c_ts], "timestamp")?,
             job_id: parse_u64(&row[c_job], "job id")?,
             task_index: parse_u64(&row[c_task], "task index")? as u32,
             machine_id: parse_u64(&row[c_machine], "machine id")?,
             kind: EventKind::parse(&row[c_event])?,
-        });
+        };
+        if !seen.insert((event.job_id, event.task_index, event.kind == EventKind::Finish)) {
+            return Err(Error::Parse(format!(
+                "row {i}: duplicate {} event for job {} task {}",
+                event.kind.as_str(),
+                event.job_id,
+                event.task_index
+            )));
+        }
+        events.push(event);
     }
     Ok(Trace { events })
 }
@@ -83,6 +100,62 @@ mod tests {
             "timestamp_us,job_id,task_index,machine_id,event\n1,1,0,1,EVICT\n",
         )
         .unwrap();
+        assert!(load_trace(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn duplicate_events_are_rejected_with_row_context() {
+        let dir = std::env::temp_dir().join("replica_trace_dup");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("dup.csv");
+        // duplicate FINISH for job 1 task 0 (a schedule+finish pair for
+        // the same task is fine; the same kind twice is not)
+        std::fs::write(
+            &path,
+            "timestamp_us,job_id,task_index,machine_id,event\n\
+             0,1,0,1,SCHEDULE\n\
+             5,1,0,1,FINISH\n\
+             9,1,0,2,FINISH\n",
+        )
+        .unwrap();
+        let err = load_trace(&path).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("row 2") && msg.contains("duplicate FINISH"), "{msg}");
+        assert!(msg.contains("job 1") && msg.contains("task 0"), "{msg}");
+        // same task on a different job is not a duplicate
+        std::fs::write(
+            &path,
+            "timestamp_us,job_id,task_index,machine_id,event\n\
+             0,1,0,1,SCHEDULE\n\
+             0,2,0,1,SCHEDULE\n\
+             5,1,0,1,FINISH\n\
+             6,2,0,1,FINISH\n",
+        )
+        .unwrap();
+        let trace = load_trace(&path).unwrap();
+        assert_eq!(trace.job_ids(), vec![1, 2]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn structurally_malformed_traces_are_rejected() {
+        let dir = std::env::temp_dir().join("replica_trace_malformed");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        // ragged row (field count mismatch)
+        std::fs::write(
+            &path,
+            "timestamp_us,job_id,task_index,machine_id,event\n1,1,0\n",
+        )
+        .unwrap();
+        assert!(load_trace(&path).is_err());
+        // missing required column
+        std::fs::write(&path, "timestamp_us,job_id,task_index,machine_id\n1,1,0,1\n")
+            .unwrap();
+        assert!(load_trace(&path).is_err());
+        // empty file
+        std::fs::write(&path, "").unwrap();
         assert!(load_trace(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }

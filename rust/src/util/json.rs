@@ -24,9 +24,37 @@ impl Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// `Num` for finite values, `Null` otherwise. JSON has no NaN/∞
+    /// literal, so this is the sanctioned way to emit statistics that
+    /// may be undefined (e.g. an all-failed Monte-Carlo estimate) —
+    /// read it back with [`Json::as_f64_or_nan`].
+    pub fn num_or_null(x: f64) -> Json {
+        if x.is_finite() {
+            Json::Num(x)
+        } else {
+            Json::Null
+        }
+    }
+
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Inverse of [`Json::num_or_null`]: `Null` (or a missing field
+    /// mapped through `unwrap_or(&Json::Null)`) reads back as NaN.
+    pub fn as_f64_or_nan(&self) -> f64 {
+        match self {
+            Json::Num(x) => *x,
+            _ => f64::NAN,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
@@ -74,6 +102,13 @@ impl Json {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) if !x.is_finite() => {
+                // JSON has no NaN/Infinity literal; a bare `NaN` token
+                // would poison every consumer of the document. Callers
+                // that care route through `num_or_null`; this is the
+                // backstop for ones that don't.
+                out.push_str("null");
+            }
             Json::Num(x) => {
                 if x.fract() == 0.0 && x.abs() < 1e15 {
                     let _ = write!(out, "{}", *x as i64);
@@ -428,5 +463,25 @@ mod tests {
     fn integers_render_without_decimal() {
         assert_eq!(Json::Num(42.0).to_string_compact(), "42");
         assert_eq!(Json::Num(1.5).to_string_compact(), "1.5");
+    }
+
+    #[test]
+    fn non_finite_renders_as_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string_compact(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string_compact(), "null");
+        assert_eq!(Json::num_or_null(f64::NAN), Json::Null);
+        assert_eq!(Json::num_or_null(2.5), Json::Num(2.5));
+        // the document stays parseable end to end
+        let doc = Json::obj(vec![("mean", Json::num_or_null(f64::NAN))]);
+        let back = parse(&doc.to_string_compact()).unwrap();
+        assert!(back.get("mean").unwrap().as_f64_or_nan().is_nan());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        assert_eq!(parse("true").unwrap().as_bool(), Some(true));
+        assert_eq!(parse("1").unwrap().as_bool(), None);
+        assert_eq!(Json::Num(3.0).as_f64_or_nan(), 3.0);
+        assert!(Json::Null.as_f64_or_nan().is_nan());
     }
 }

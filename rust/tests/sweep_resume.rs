@@ -1,0 +1,220 @@
+//! Integration tests for the sweep engine's resumability contract:
+//! killing a run at *any* byte (simulated by truncating the JSONL
+//! store mid-line) and resuming must produce output byte-identical to
+//! an uninterrupted run, with cache hits never re-evaluated and
+//! degraded scenarios (all replications failed) surfaced per record.
+
+use std::path::{Path, PathBuf};
+
+use replica::sweep::{
+    gain_report, run, CaseOutcome, RunConfig, ScenarioSet, SweepSpec, Workload,
+};
+use replica::traces::{GeneratorConfig, Trace};
+use replica::util::json;
+
+fn test_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("replica_sweep_resume_{name}"));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn spec(seed: u64) -> SweepSpec {
+    let mut spec = SweepSpec::for_trace();
+    spec.workload = Some(Workload::Generate { jobs: 3, tasks_per_job: 12, seed: 7 });
+    spec.reps = 200;
+    spec.seed = seed;
+    spec.shard_size = 4;
+    spec
+}
+
+fn trace_for(spec: &SweepSpec) -> Trace {
+    spec.load_trace().unwrap()
+}
+
+fn cfg(dir: &Path) -> RunConfig {
+    RunConfig {
+        out: Some(dir.join("results.jsonl")),
+        cache: Some(dir.join("cache.jsonl")),
+        shard_size: 4,
+        limit_shards: None,
+        threads: 0,
+    }
+}
+
+fn run_to_completion(set: &ScenarioSet, dir: &Path) -> String {
+    let results = run(set, &cfg(dir)).unwrap();
+    assert_eq!(results.len(), set.len());
+    std::fs::read_to_string(dir.join("results.jsonl")).unwrap()
+}
+
+#[test]
+fn truncate_anywhere_then_resume_is_byte_identical() {
+    let spec = spec(5);
+    let trace = trace_for(&spec);
+    let set = ScenarioSet::from_trace(&trace, &spec).unwrap();
+    assert_eq!(set.len(), 18); // 3 jobs x 6 divisors of 12
+
+    let ref_dir = test_dir("reference");
+    let reference = run_to_completion(&set, &ref_dir);
+    assert_eq!(reference.lines().count(), 18);
+
+    let dir = test_dir("truncate");
+    let results_path = dir.join("results.jsonl");
+    let full = run_to_completion(&set, &dir);
+    assert_eq!(full, reference, "two fresh runs must already agree");
+
+    // "kill" the run at arbitrary byte offsets — line boundaries,
+    // mid-line, byte zero, one byte short of complete — then resume
+    let bytes = reference.as_bytes();
+    let first_newline = reference.find('\n').unwrap() + 1;
+    let offsets = [
+        0usize,
+        1,
+        first_newline,
+        bytes.len() / 3,
+        bytes.len() / 2,
+        bytes.len() - 1,
+    ];
+    for (round, &cut) in offsets.iter().enumerate() {
+        std::fs::write(&results_path, &bytes[..cut]).unwrap();
+        if round % 2 == 1 {
+            // every other round, corrupt the cache tail too: resume
+            // must recompute what the cache lost and still match
+            let cache_path = dir.join("cache.jsonl");
+            let cache = std::fs::read(&cache_path).unwrap();
+            std::fs::write(&cache_path, &cache[..cache.len() * 2 / 3]).unwrap();
+        }
+        let resumed = run_to_completion(&set, &dir);
+        assert_eq!(
+            resumed, reference,
+            "resume after truncation at byte {cut} diverged from the uninterrupted run"
+        );
+    }
+
+    // nuking the cache entirely forces full recomputation — output is
+    // still byte-identical because estimates depend only on content
+    std::fs::write(&results_path, &bytes[..bytes.len() / 4]).unwrap();
+    std::fs::remove_file(dir.join("cache.jsonl")).unwrap();
+    let resumed = run_to_completion(&set, &dir);
+    assert_eq!(resumed, reference);
+
+    std::fs::remove_dir_all(&ref_dir).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn shard_budgeted_kill_then_resume_is_byte_identical() {
+    let spec = spec(9);
+    let trace = trace_for(&spec);
+    let set = ScenarioSet::from_trace(&trace, &spec).unwrap();
+
+    let ref_dir = test_dir("budget_reference");
+    let reference = run_to_completion(&set, &ref_dir);
+
+    // stop after one shard (a clean mid-run exit rather than a kill)
+    let dir = test_dir("budget");
+    let mut budgeted = cfg(&dir);
+    budgeted.limit_shards = Some(1);
+    let partial = run(&set, &budgeted).unwrap();
+    assert_eq!(partial.len(), 4);
+    let partial_text = std::fs::read_to_string(dir.join("results.jsonl")).unwrap();
+    assert_eq!(partial_text.lines().count(), 4);
+    assert!(reference.starts_with(&partial_text), "partial output must be a prefix");
+
+    // second invocation resumes the remaining shards
+    let resumed = run_to_completion(&set, &dir);
+    assert_eq!(resumed, reference);
+
+    std::fs::remove_dir_all(&ref_dir).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn widened_spec_reuses_the_cache_incrementally() {
+    let trace = GeneratorConfig::paper_workload(12, 3).generate();
+    let dir = test_dir("widen");
+
+    let mut narrow = spec(5);
+    narrow.workload = None;
+    narrow.jobs = Some(vec![1]);
+    let narrow_set = ScenarioSet::from_trace(&trace, &narrow).unwrap();
+    let mut narrow_cfg = cfg(&dir);
+    narrow_cfg.out = Some(dir.join("narrow.jsonl"));
+    let narrow_results = run(&narrow_set, &narrow_cfg).unwrap();
+    let cache_lines = std::fs::read_to_string(dir.join("cache.jsonl")).unwrap();
+    assert_eq!(cache_lines.lines().count(), 6);
+
+    // widen to two jobs, same cache: job 1's scenarios are cache hits
+    let mut wide = narrow.clone();
+    wide.jobs = Some(vec![1, 2]);
+    let wide_set = ScenarioSet::from_trace(&trace, &wide).unwrap();
+    let mut wide_cfg = cfg(&dir);
+    wide_cfg.out = Some(dir.join("wide.jsonl"));
+    let wide_results = run(&wide_set, &wide_cfg).unwrap();
+    let cache_lines = std::fs::read_to_string(dir.join("cache.jsonl")).unwrap();
+    assert_eq!(cache_lines.lines().count(), 12, "only job 2's 6 scenarios were fresh");
+
+    // the shared scenarios' estimates are bitwise equal across runs
+    for (a, b) in narrow_results.iter().zip(&wide_results) {
+        assert_eq!(a.case.key, b.case.key);
+        let (CaseOutcome::Ok(a), CaseOutcome::Ok(b)) = (&a.outcome, &b.outcome) else {
+            panic!("unexpected error outcome");
+        };
+        assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+        assert_eq!(a.p99.to_bits(), b.p99.to_bits());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn all_failed_scenarios_surface_per_record_not_per_shard() {
+    // crash axis {0, 1}: the p=1 scenarios have zero completed
+    // replications; they must land in the store as parseable records
+    // flagged all_failed while their shard-mates stay healthy
+    let mut spec = spec(11);
+    spec.jobs = Some(vec![1]);
+    spec.crash = vec![0.0, 1.0];
+    let trace = trace_for(&spec);
+    let set = ScenarioSet::from_trace(&trace, &spec).unwrap();
+    assert_eq!(set.len(), 12); // 6 divisors x 2 crash levels
+
+    let dir = test_dir("all_failed");
+    let reference = run_to_completion(&set, &dir);
+
+    let mut healthy = 0;
+    let mut failed = 0;
+    for line in reference.lines() {
+        let doc = json::parse(line).expect("every record line must stay parseable JSON");
+        let crash = doc.get("crash").unwrap().as_f64().unwrap();
+        let all_failed = doc.get("all_failed").unwrap().as_bool().unwrap();
+        if crash == 1.0 {
+            assert!(all_failed, "{line}");
+            assert_eq!(doc.get("mean").unwrap(), &json::Json::Null, "{line}");
+            assert_eq!(doc.get("failure_rate").unwrap().as_f64(), Some(1.0));
+            assert_eq!(doc.get("completed").unwrap().as_usize(), Some(0));
+            failed += 1;
+        } else {
+            assert!(!all_failed, "{line}");
+            assert!(doc.get("mean").unwrap().as_f64().unwrap().is_finite());
+            healthy += 1;
+        }
+    }
+    assert_eq!((healthy, failed), (6, 6));
+
+    // the degenerate records don't break resume byte-identity either
+    let bytes = reference.as_bytes();
+    std::fs::write(dir.join("results.jsonl"), &bytes[..bytes.len() * 2 / 5]).unwrap();
+    let resumed = run_to_completion(&set, &dir);
+    assert_eq!(resumed, reference);
+
+    // and the gain report skips them instead of crashing
+    let results = run(&set, &cfg(&dir)).unwrap();
+    let rows = gain_report(&results, Some(&trace), replica::planner::Objective::MeanCompletion);
+    assert_eq!(rows.len(), 2);
+    let failed_row = rows.iter().find(|r| r.crash == 1.0).unwrap();
+    assert_eq!(failed_row.all_failed_points, 6);
+    assert!(failed_row.optimum.is_none());
+
+    std::fs::remove_dir_all(&dir).ok();
+}

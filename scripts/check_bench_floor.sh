@@ -1,0 +1,36 @@
+#!/usr/bin/env bash
+# Gate a BENCH_eval.json snapshot: it must be a real measurement
+# (measured == true, i.e. not the committed placeholder) and its
+# pooled/serial speedup must clear the floor.
+#
+# Usage: scripts/check_bench_floor.sh [BENCH_eval.json] [FLOOR]
+# The floor defaults to $BENCH_SPEEDUP_FLOOR, then 2.0 — the CI gate on
+# ~4-vCPU hosted runners; the 8-physical-core aspiration recorded in
+# the snapshot's "target" field is >= 3x.
+set -euo pipefail
+FILE="${1:-BENCH_eval.json}"
+FLOOR="${2:-${BENCH_SPEEDUP_FLOOR:-2.0}}"
+
+python3 - "$FILE" "$FLOOR" <<'EOF'
+import json
+import sys
+
+path, floor = sys.argv[1], float(sys.argv[2])
+with open(path) as f:
+    snap = json.load(f)
+if not snap.get("measured"):
+    sys.exit(f"{path}: not a measured snapshot (measured != true); "
+             "run scripts/bench_snapshot.sh first")
+speedup = snap.get("speedup")
+serial = snap.get("serial_reps_per_sec")
+pooled = snap.get("pooled_reps_per_sec")
+if not isinstance(speedup, (int, float)):
+    sys.exit(f"{path}: missing/invalid 'speedup' field: {speedup!r}")
+print(f"serial {serial:.0f} reps/s, pooled {pooled:.0f} reps/s, "
+      f"speedup {speedup:.2f}x (floor {floor:.2f}x, "
+      f"pool_threads={snap.get('pool_threads')})")
+if speedup < floor:
+    sys.exit(f"FAIL: pooled speedup {speedup:.2f}x is below the "
+             f"{floor:.2f}x floor")
+print("OK: pooled-speedup floor holds")
+EOF
