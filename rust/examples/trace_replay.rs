@@ -60,7 +60,7 @@ fn main() -> replica::Result<()> {
     // ---- planner vs sweep: does the analytic plan match? ----
     println!();
     let mut p = Table::new(
-        "planner recommendation per job (fit family, then optimize)",
+        "planner recommendation per job (record-driven sweep plan)",
         vec!["job", "fitted", "planned B*", "sweep B*"],
     );
     for a in JobAnalysis::all(&trace) {

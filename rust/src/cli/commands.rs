@@ -168,13 +168,26 @@ pub fn sweep(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
-/// `replica sweep --spec FILE`: the sharded, resumable trace-sweep
-/// engine. Results stream to a JSONL store (`--out`, default
-/// `sweep_results.jsonl`) with an on-disk estimate cache (`--cache`,
-/// default `<out>.cache.jsonl`); re-running the same command resumes a
-/// killed run exactly where it stopped and prints the §VII
-/// replication-gain report at the end.
-fn sweep_from_spec(args: &mut Args, spec_path: &str) -> Result<()> {
+/// Parse `--shard K/M` (0-based K, M >= 1, K < M).
+fn parse_shard(s: &str) -> Result<(usize, usize)> {
+    let bad =
+        || Error::Config(format!("--shard {s}: expected K/M with 0 <= K < M (e.g. 0/4)"));
+    let Some((k, m)) = s.split_once('/') else {
+        return Err(bad());
+    };
+    let k = k.trim().parse::<usize>().map_err(|_| bad())?;
+    let m = m.trim().parse::<usize>().map_err(|_| bad())?;
+    if m == 0 || k >= m {
+        return Err(bad());
+    }
+    Ok((k, m))
+}
+
+/// Parse the spec named by a `sweep`/`sweep-merge` invocation and apply
+/// the estimator-budget flag overrides (`--reps`, `--seed`) that re-key
+/// the grid — both commands must resolve the same keys or a merge
+/// would refuse its own shards.
+fn spec_with_overrides(args: &mut Args, spec_path: &str) -> Result<crate::sweep::SweepSpec> {
     let mut spec = crate::sweep::SweepSpec::from_file(Path::new(spec_path))?;
     // flags override the spec's estimator budget, not its grid; the
     // override must honor the same validation as the spec parser
@@ -183,22 +196,170 @@ fn sweep_from_spec(args: &mut Args, spec_path: &str) -> Result<()> {
         return Err(Error::Config("--reps must be >= 1".into()));
     }
     spec.seed = args.get_u64("seed", spec.seed)?;
+    Ok(spec)
+}
+
+/// After a sweep, optionally compact the estimate cache against the
+/// current grid (`--cache-gc`): keys no earlier spec revision asks
+/// about anymore are dropped and the reclaimed space reported.
+fn maybe_cache_gc(
+    cache_gc: bool,
+    cache: Option<&Path>,
+    set: &crate::sweep::ScenarioSet,
+) -> Result<()> {
+    if !cache_gc {
+        return Ok(());
+    }
+    let Some(cache) = cache else {
+        return Ok(());
+    };
+    let live: std::collections::BTreeSet<u64> = set.expected_keys().into_iter().collect();
+    let mut store = crate::sweep::EstimateCache::open(cache)?;
+    let stats = store.gc(&live)?;
+    println!(
+        "cache gc {}: {} live kept, {} dead dropped, {} bytes reclaimed",
+        cache.display(),
+        stats.live,
+        stats.dead,
+        stats.reclaimed_bytes
+    );
+    Ok(())
+}
+
+/// `replica sweep --spec FILE`: the sharded, resumable trace-sweep
+/// engine. Results stream to a JSONL store (`--out`, default
+/// `sweep_results.jsonl`) with an on-disk estimate cache (`--cache`,
+/// default `<out>.cache.jsonl`); re-running the same command resumes a
+/// killed run exactly where it stopped and prints the §VII
+/// replication-gain report at the end. With `--shard K/M` the process
+/// evaluates only its slice of the grid into a per-shard store (see
+/// `replica sweep-merge`); with `--cache-gc` the estimate cache is
+/// compacted against the current grid after the run.
+fn sweep_from_spec(args: &mut Args, spec_path: &str) -> Result<()> {
+    let spec = spec_with_overrides(args, spec_path)?;
     let out = PathBuf::from(args.get("out").unwrap_or_else(|| "sweep_results.jsonl".into()));
+    let shard = match args.get("shard") {
+        None => None,
+        Some(s) => Some(parse_shard(&s)?),
+    };
     let limit = args.get_usize("limit-shards", 0)?;
-    let mut cfg = crate::sweep::RunConfig::persisted(out.clone());
+    let mut cfg = match shard {
+        Some((k, m)) => crate::sweep::RunConfig::sharded(out.clone(), k, m),
+        None => crate::sweep::RunConfig::persisted(out.clone()),
+    };
     if let Some(cache) = args.get("cache") {
+        if shard.is_some() {
+            // the cache format is single-writer (truncate-on-open +
+            // positioned writes); M concurrent shard processes sharing
+            // one override path would corrupt it
+            return Err(Error::Config(
+                "--cache cannot be combined with --shard: each shard process keeps \
+                 a private cache next to its shard store (<store>.cache.jsonl)"
+                    .into(),
+            ));
+        }
         cfg.cache = Some(PathBuf::from(cache));
     }
     cfg.shard_size = spec.shard_size;
     cfg.limit_shards = if limit == 0 { None } else { Some(limit) };
     cfg.threads = args.get_usize("threads", 0)?;
+    let cache_gc = args.get_bool("cache-gc");
     let objective = objective_from(args)?;
     let trace = spec.load_trace()?;
     let set = crate::sweep::ScenarioSet::from_trace(&trace, &spec)?;
     let results = crate::sweep::run(&set, &cfg)?;
+    let total = match shard {
+        Some((k, m)) => set.shard(k, m)?.len(),
+        None => set.len(),
+    };
+    if let Some((k, m)) = shard {
+        // a shard sees only its slice: the gain report would be
+        // misleading, so point at the merge step instead
+        println!(
+            "shard {k}/{m}: {} of {total} cases -> {}",
+            results.len(),
+            crate::sweep::shard_path(&out, k, m).display()
+        );
+        // repeat the resolved estimator budget in the hint: the merge
+        // re-expands the grid, and a different reps/seed would re-key
+        // every case and make it refuse this run's own shards
+        println!(
+            "when all shards finish: replica sweep-merge --spec {spec_path} --out {} \
+             --shards {m} --reps {} --seed {}",
+            out.display(),
+            spec.reps,
+            spec.seed
+        );
+    } else {
+        let rows = crate::sweep::gain_report(&results, Some(&trace), objective);
+        crate::sweep::gain_table(
+            &format!("Replication gains — {spec_path} ({} scenarios)", results.len()),
+            &rows,
+        )
+        .print();
+        let headline = crate::sweep::headline_speedup(&rows);
+        if headline.is_finite() {
+            println!("headline speedup (best job): {}x", fnum(headline));
+        }
+        println!("results: {}", out.display());
+    }
+    if results.len() < total {
+        println!(
+            "partial run ({} of {total} scenarios evaluated); rerun to resume",
+            results.len()
+        );
+    }
+    maybe_cache_gc(cache_gc, cfg.cache.as_deref(), &set)?;
+    Ok(())
+}
+
+/// `replica sweep-merge --spec FILE --out OUT --shards M`: merge the
+/// per-shard stores of a multi-process sweep into the canonical
+/// grid-ordered store, byte-identical to a single-process run. Shard
+/// files are located by the `--shard K/M` naming convention; explicit
+/// shard-file paths may be passed as positionals instead (they may
+/// overlap, e.g. shards from different shardings of the same sweep).
+pub fn sweep_merge(args: &mut Args) -> Result<()> {
+    let spec_path = args
+        .get("spec")
+        .ok_or_else(|| Error::Config("sweep-merge needs --spec FILE".into()))?;
+    let spec = spec_with_overrides(args, &spec_path)?;
+    let out = PathBuf::from(args.get("out").unwrap_or_else(|| "sweep_results.jsonl".into()));
+    let shards = args.get_usize("shards", 0)?;
+    let files: Vec<PathBuf> = (1..)
+        .map_while(|i| args.positional(i).map(PathBuf::from))
+        .collect();
+    let trace = spec.load_trace()?;
+    let set = crate::sweep::ScenarioSet::from_trace(&trace, &spec)?;
+    let shard_files: Vec<PathBuf> = if !files.is_empty() {
+        files
+    } else if shards > 0 {
+        (0..shards).map(|k| crate::sweep::shard_path(&out, k, shards)).collect()
+    } else {
+        return Err(Error::Config(
+            "sweep-merge needs --shards M or explicit shard-file positionals".into(),
+        ));
+    };
+    let (report, outcomes) = crate::sweep::merge(&set, &shard_files, &out)?;
+    println!(
+        "merged {} shard files -> {} ({} cases, {} overlapping records verified)",
+        report.shards,
+        out.display(),
+        report.cases,
+        report.duplicates
+    );
+    // the merged store is a complete run: print the gain report from
+    // the outcomes the merge already holds
+    let objective = objective_from(args)?;
+    let results: Vec<crate::sweep::CaseResult> = set
+        .cases
+        .iter()
+        .zip(outcomes)
+        .map(|(case, outcome)| crate::sweep::CaseResult { case: case.clone(), outcome })
+        .collect();
     let rows = crate::sweep::gain_report(&results, Some(&trace), objective);
     crate::sweep::gain_table(
-        &format!("Replication gains — {spec_path} ({} scenarios)", results.len()),
+        &format!("Replication gains — {spec_path} ({} scenarios, merged)", results.len()),
         &rows,
     )
     .print();
@@ -206,13 +367,14 @@ fn sweep_from_spec(args: &mut Args, spec_path: &str) -> Result<()> {
     if headline.is_finite() {
         println!("headline speedup (best job): {}x", fnum(headline));
     }
-    println!("results: {}", out.display());
-    if results.len() < set.len() {
-        println!(
-            "partial run ({} of {} scenarios evaluated); rerun to resume",
-            results.len(),
-            set.len()
-        );
+    if args.get_bool("cache-gc") {
+        // every shard store keeps its cache next to it; GC each in place
+        for file in &shard_files {
+            let cache = PathBuf::from(format!("{}.cache.jsonl", file.display()));
+            if cache.exists() {
+                maybe_cache_gc(true, Some(cache.as_path()), &set)?;
+            }
+        }
     }
     Ok(())
 }
@@ -576,6 +738,139 @@ mod tests {
     #[test]
     fn sweep_spec_missing_file_is_error() {
         assert!(sweep(&mut args("sweep --spec /nonexistent/spec.json")).is_err());
+    }
+
+    #[test]
+    fn shard_flag_parsing() {
+        assert_eq!(parse_shard("0/4").unwrap(), (0, 4));
+        assert_eq!(parse_shard("3/4").unwrap(), (3, 4));
+        assert_eq!(parse_shard("0/1").unwrap(), (0, 1));
+        for bad in ["4/4", "5/4", "0/0", "a/4", "0/b", "04", "-1/4", "1/4/2"] {
+            assert!(parse_shard(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn sharded_sweep_plus_merge_matches_single_process() {
+        let dir = std::env::temp_dir().join("replica_cli_sweep_shard");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = dir.join("spec.json");
+        std::fs::write(
+            &spec,
+            r#"{"workload": {"generate": {"jobs": 2, "tasks_per_job": 12, "seed": 3}},
+                "reps": 100, "seed": 1, "shard_size": 4}"#,
+        )
+        .unwrap();
+        // single-process reference
+        let single = dir.join("single.jsonl");
+        sweep(&mut args(&format!(
+            "sweep --spec {} --out {}",
+            spec.display(),
+            single.display()
+        )))
+        .unwrap();
+        // two shard processes (run sequentially here; the engine makes
+        // no distinction) + merge
+        let merged = dir.join("merged.jsonl");
+        for k in 0..2 {
+            sweep(&mut args(&format!(
+                "sweep --spec {} --out {} --shard {k}/2",
+                spec.display(),
+                merged.display()
+            )))
+            .unwrap();
+        }
+        // an explicit --cache would be shared by concurrent shard
+        // processes (single-writer format): refused up front
+        assert!(sweep(&mut args(&format!(
+            "sweep --spec {} --out {} --shard 0/2 --cache {}",
+            spec.display(),
+            merged.display(),
+            dir.join("shared_cache.jsonl").display()
+        )))
+        .is_err());
+        // merge must refuse while using the wrong shard count
+        assert!(sweep_merge(&mut args(&format!(
+            "sweep-merge --spec {} --out {} --shards 3",
+            spec.display(),
+            merged.display()
+        )))
+        .is_err());
+        sweep_merge(&mut args(&format!(
+            "sweep-merge --spec {} --out {} --shards 2",
+            spec.display(),
+            merged.display()
+        )))
+        .unwrap();
+        let a = std::fs::read_to_string(&single).unwrap();
+        let b = std::fs::read_to_string(&merged).unwrap();
+        assert_eq!(a, b, "merged distributed run must be byte-identical");
+        // per-shard stores and caches exist under the naming convention
+        assert!(dir.join("merged.shard-0-of-2.jsonl").exists());
+        assert!(dir.join("merged.shard-1-of-2.jsonl.cache.jsonl").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_cache_gc_flag_reports_and_compacts() {
+        let dir = std::env::temp_dir().join("replica_cli_cache_gc");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let wide = dir.join("wide.json");
+        std::fs::write(
+            &wide,
+            r#"{"workload": {"generate": {"jobs": 2, "tasks_per_job": 12, "seed": 3}},
+                "reps": 80, "seed": 1}"#,
+        )
+        .unwrap();
+        let narrow = dir.join("narrow.json");
+        std::fs::write(
+            &narrow,
+            r#"{"workload": {"generate": {"jobs": 2, "tasks_per_job": 12, "seed": 3}},
+                "jobs": [1], "reps": 80, "seed": 1}"#,
+        )
+        .unwrap();
+        let cache = dir.join("cache.jsonl");
+        // wide run fills the cache with both jobs
+        sweep(&mut args(&format!(
+            "sweep --spec {} --out {} --cache {}",
+            wide.display(),
+            dir.join("wide.jsonl").display(),
+            cache.display()
+        )))
+        .unwrap();
+        let full = std::fs::read_to_string(&cache).unwrap().lines().count();
+        assert_eq!(full, 12);
+        // narrow run with --cache-gc drops job 2's now-dead keys
+        sweep(&mut args(&format!(
+            "sweep --spec {} --out {} --cache {} --cache-gc",
+            narrow.display(),
+            dir.join("narrow.jsonl").display(),
+            cache.display()
+        )))
+        .unwrap();
+        let compacted = std::fs::read_to_string(&cache).unwrap().lines().count();
+        assert_eq!(compacted, 6, "job 2's dead keys must be gone");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_merge_without_inputs_is_error() {
+        let dir = std::env::temp_dir().join("replica_cli_merge_noinput");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = dir.join("spec.json");
+        std::fs::write(
+            &spec,
+            r#"{"workload": {"generate": {"jobs": 1, "tasks_per_job": 12, "seed": 3}},
+                "reps": 50}"#,
+        )
+        .unwrap();
+        assert!(sweep_merge(&mut args("sweep-merge")).is_err(), "--spec is required");
+        assert!(sweep_merge(&mut args(&format!("sweep-merge --spec {}", spec.display())))
+            .is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -6,7 +6,9 @@
 //!                    [--backend mc|analytic|auto] [--reps 20000] [--pool-threads 0]
 //! replica sweep      --workers 100 --family sexp --delta 0.05 --mu 1
 //! replica sweep      --spec sweep.json [--out results.jsonl] [--cache cache.jsonl]
-//!                    [--limit-shards K] [--objective mean|cov|tradeoff=0.5]
+//!                    [--limit-shards K] [--shard K/M] [--cache-gc]
+//!                    [--objective mean|cov|tradeoff=0.5]
+//! replica sweep-merge --spec sweep.json --out results.jsonl --shards M
 //! replica trace gen      --out trace.csv [--tasks 100] [--seed 42]
 //! replica trace analyze  --trace trace.csv
 //! replica experiment <fig3|fig6|fig7_8|fig9_10|regimes|assignment|traces|all> [--reps N] [--out dir]
@@ -23,6 +25,15 @@ use crate::util::error::{Error, Result};
 /// Entry point used by `main.rs`. Returns the process exit code.
 pub fn run(argv: Vec<String>) -> Result<()> {
     crate::util::logging::init();
+    // The parser treats `--flag word` as a flag with a value, so a bare
+    // boolean flag written before a positional (e.g. `sweep-merge
+    // --cache-gc a.shard-0-of-2.jsonl ...`) would swallow the
+    // positional as its value. Normalize known boolean flags to their
+    // explicit `=true` spelling before parsing.
+    let argv: Vec<String> = argv
+        .into_iter()
+        .map(|tok| if tok == "--cache-gc" { "--cache-gc=true".to_string() } else { tok })
+        .collect();
     let mut args = Args::parse(argv)?;
     // Size the process-wide simulation pool before any command touches
     // it (`0`/absent = one worker per core). This replaces per-call
@@ -37,6 +48,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         Some("plan") => commands::plan(&mut args),
         Some("simulate") => commands::simulate(&mut args),
         Some("sweep") => commands::sweep(&mut args),
+        Some("sweep-merge") => commands::sweep_merge(&mut args),
         Some("trace") => commands::trace(&mut args),
         Some("experiment") => commands::experiment(&mut args),
         Some("gd-train") => commands::gd_train(&mut args),
@@ -63,7 +75,10 @@ COMMANDS:
   sweep       E[T] and CoV across the full diversity-parallelism spectrum;
               with --spec FILE: the sharded, resumable trace-sweep engine
               (scenario grid -> JSONL store + estimate cache + gain report;
-              rerunning the same command resumes a killed run)
+              rerunning the same command resumes a killed run); with
+              --shard K/M: one process of an M-way distributed sweep
+  sweep-merge merge the per-shard stores of a --shard K/M sweep into the
+              canonical store (byte-identical to a single-process run)
   trace       gen | analyze Google-cluster-shaped traces
   experiment  regenerate a paper figure (fig3, fig6, fig7_8, fig9_10,
               regimes, assignment, traces, all)
@@ -85,10 +100,18 @@ COMMON FLAGS:
                         (0 = pool width, 1 = force serial)
   --config FILE         load [system]/[service] sections from TOML
 
-SWEEP-ENGINE FLAGS (sweep --spec FILE):
+SWEEP-ENGINE FLAGS (sweep --spec FILE / sweep-merge):
   --spec FILE           JSON sweep spec (workload + grid axes; see
                         rust/README.md for the format)
   --out FILE            JSONL result store (default sweep_results.jsonl)
-  --cache FILE          estimate cache (default <out>.cache.jsonl)
+  --cache FILE          estimate cache (default <out>.cache.jsonl; not
+                        valid with --shard, whose processes each keep a
+                        private <shard store>.cache.jsonl)
   --limit-shards K      stop after K shards (resume later by rerunning)
+  --shard K/M           evaluate only the K-th of M contiguous grid
+                        slices into <out>.shard-K-of-M.jsonl (0-based;
+                        run all M, then sweep-merge; rerun = resume)
+  --shards M            (sweep-merge) how many shard files to merge
+  --cache-gc            after the run, drop cache keys the current grid
+                        no longer asks about and report space reclaimed
 ";

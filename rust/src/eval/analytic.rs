@@ -25,7 +25,7 @@ impl Analytic {
         matches!(scenario.policy, Policy::BalancedNonOverlapping { .. })
             && scenario.failures == FailureModel::None
             && matches!(
-                scenario.tau,
+                *scenario.tau,
                 ServiceDist::Exp { .. }
                     | ServiceDist::ShiftedExp { .. }
                     | ServiceDist::Pareto { .. }

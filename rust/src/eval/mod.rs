@@ -42,6 +42,8 @@ pub use analytic::Analytic;
 pub use auto::Auto;
 pub use montecarlo::MonteCarlo;
 
+use std::sync::Arc;
+
 use crate::batching::{operating_points, OperatingPoint, Policy};
 use crate::dist::ServiceDist;
 use crate::sim::job::FailureModel;
@@ -75,22 +77,37 @@ pub struct Scenario {
     pub workers: usize,
     /// Task replication policy.
     pub policy: Policy,
-    /// Task service-time distribution τ.
-    pub tau: ServiceDist,
+    /// Task service-time distribution τ, shared by reference: cloning a
+    /// `Scenario` (or expanding one job into a whole sweep grid) bumps
+    /// a refcount instead of copying the distribution — an empirical τ
+    /// carries every trace sample (~8 KB at cluster scale), and sweep
+    /// grids hold thousands of cases per job.
+    pub tau: Arc<ServiceDist>,
     /// Worker failure model (only the Monte-Carlo backend can evaluate
     /// scenarios with failures).
     pub failures: FailureModel,
 }
 
 impl Scenario {
-    /// Scenario with no failure injection.
-    pub fn new(workers: usize, policy: Policy, tau: ServiceDist) -> Scenario {
-        Scenario { workers, policy, tau, failures: FailureModel::None }
+    /// Scenario with no failure injection. Accepts an owned
+    /// [`ServiceDist`] or an already-shared `Arc<ServiceDist>`; callers
+    /// building many scenarios over one τ should pass `Arc` clones so
+    /// the distribution is allocated once.
+    pub fn new(
+        workers: usize,
+        policy: Policy,
+        tau: impl Into<Arc<ServiceDist>>,
+    ) -> Scenario {
+        Scenario { workers, policy, tau: tau.into(), failures: FailureModel::None }
     }
 
     /// The common case: balanced non-overlapping batches (the provably
     /// optimal family, Theorems 1–2).
-    pub fn balanced(workers: usize, batches: usize, tau: ServiceDist) -> Scenario {
+    pub fn balanced(
+        workers: usize,
+        batches: usize,
+        tau: impl Into<Arc<ServiceDist>>,
+    ) -> Scenario {
         Scenario::new(workers, Policy::BalancedNonOverlapping { batches }, tau)
     }
 
@@ -200,16 +217,17 @@ pub trait Estimator {
 
     /// Evaluate the full diversity–parallelism spectrum: one balanced
     /// scenario per feasible B (divisors of `workers`, ascending), each
-    /// on its own substream.
+    /// on its own substream. The whole spectrum shares one τ allocation.
     fn sweep(
         &self,
         workers: usize,
         tau: &ServiceDist,
     ) -> Result<Vec<(OperatingPoint, Estimate)>> {
         let points = operating_points(workers);
+        let shared: Arc<ServiceDist> = Arc::new(tau.clone());
         let scenarios: Vec<Scenario> = points
             .iter()
-            .map(|op| Scenario::balanced(workers, op.batches, tau.clone()))
+            .map(|op| Scenario::balanced(workers, op.batches, Arc::clone(&shared)))
             .collect();
         Ok(points.into_iter().zip(self.evaluate_many(&scenarios)?).collect())
     }

@@ -304,7 +304,7 @@ fn prepare<'s>(scenario: &'s Scenario, seed: u64) -> Result<Prepared<'s>> {
     let probe = scenario.policy.layout(n, &mut layout_rng)?;
     let path = if !randomized {
         RepPath::Fixed(
-            JobSimulator::new(probe, scenario.tau.clone())
+            JobSimulator::new(probe, scenario.tau.as_ref())
                 .with_failures(scenario.failures),
         )
     } else if scenario.failures == FailureModel::None {

@@ -51,8 +51,12 @@
 //!   spec expands into a content-addressed scenario grid, shards fan
 //!   out over the worker pool, results stream to a JSONL store with an
 //!   on-disk estimate cache (kill-and-resume is byte-identical,
-//!   re-runs are incremental), and a replication-gain report
-//!   summarizes per-job optima (`replica sweep --spec`).
+//!   re-runs are incremental, `--cache-gc` compacts stale keys), and a
+//!   replication-gain report summarizes per-job optima
+//!   (`replica sweep --spec`). Multi-process runs split the grid with
+//!   `--shard K/M` into per-shard stores that
+//!   `replica sweep-merge` reassembles byte-identically to a
+//!   single-process run.
 //! * [`experiments`] — one module per paper figure/table; the bench
 //!   harness and CLI call into these.
 //!

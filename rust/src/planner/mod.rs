@@ -20,11 +20,21 @@
 //! point, so a simulated spectrum runs all operating points in
 //! parallel on the persistent worker pool
 //! ([`crate::sim::pool::WorkerPool`]) instead of point-by-point.
+//!
+//! Trace-driven planning consumes the sweep engine directly:
+//! [`plan_from_samples`] evaluates the empirical τ across the spectrum
+//! through [`crate::sweep`] and picks B from the result records via
+//! [`plan_from_records`] — no analytic refit in the decision loop
+//! (the old refit-and-plan path survives as
+//! [`plan_from_samples_refit`]).
+
+use std::sync::Arc;
 
 use crate::analysis::optimizer::{self, Regime};
 use crate::batching::Policy;
 use crate::dist::{ServiceDist, TailFit};
 use crate::eval::{Auto, Estimator, MonteCarlo, Scenario};
+use crate::sweep::{self, CaseOutcome, CaseResult, ScenarioSet};
 use crate::util::error::{Error, Result};
 
 /// Planning objective.
@@ -107,13 +117,16 @@ pub fn choose(sweep: &[SweepPoint], objective: Objective) -> Option<SweepPoint> 
 #[derive(Clone, Debug)]
 pub struct Planner {
     n: usize,
-    tau: ServiceDist,
+    tau: Arc<ServiceDist>,
 }
 
 impl Planner {
-    pub fn new(n: usize, tau: ServiceDist) -> Planner {
+    /// Accepts an owned [`ServiceDist`] or a shared `Arc<ServiceDist>`
+    /// (cloning a planner, or the scenarios it builds, then shares one
+    /// τ allocation).
+    pub fn new(n: usize, tau: impl Into<Arc<ServiceDist>>) -> Planner {
         assert!(n >= 1);
-        Planner { n, tau }
+        Planner { n, tau: tau.into() }
     }
 
     pub fn workers(&self) -> usize {
@@ -197,7 +210,7 @@ impl Planner {
 
     /// The theorem-level regime classification for the family, if any.
     pub fn regime(&self, objective: Objective) -> Option<Regime> {
-        match (&self.tau, objective) {
+        match (self.tau.as_ref(), objective) {
             (ServiceDist::Exp { .. }, Objective::MeanCompletion) => {
                 Some(Regime::FullDiversity) // Theorem 3
             }
@@ -268,9 +281,50 @@ impl Planner {
     }
 }
 
+/// Monte-Carlo budget of [`plan_from_samples`]'s spectrum sweep. Leaner
+/// than [`crate::eval::DEFAULT_REPS`]: the objective is shallow near B*
+/// and the sweep evaluates every feasible operating point.
+pub const SAMPLE_PLAN_REPS: usize = 4_000;
+
+/// Fixed seed of [`plan_from_samples`]'s spectrum sweep, so the
+/// sample-driven plan is a deterministic function of `(n, samples,
+/// objective)`.
+pub const SAMPLE_PLAN_SEED: u64 = 0x5A3D_F00D;
+
 /// Plan directly from observed service-time samples (the §VII flow):
-/// classify the tail, fit the winning family, plan analytically.
+/// classify the tail for reporting, evaluate the **empirical** τ itself
+/// across the divisor spectrum on the sweep engine, and choose B from
+/// those result records.
+///
+/// This consumes the engine's records instead of refitting an analytic
+/// family and planning on the fit (the old behavior, kept as
+/// [`plan_from_samples_refit`]): the fitted family is a two-parameter
+/// summary, and on real traces its closed-form optimum can drift from
+/// the optimum of the data itself. The returned plan's `regime` is
+/// still classified via the fitted family (the empirical distribution
+/// has no theorem-level regime).
 pub fn plan_from_samples(
+    n: usize,
+    samples: &[f64],
+    objective: Objective,
+) -> (Plan, TailFit) {
+    let fit = TailFit::classify(samples);
+    let tau = Arc::new(ServiceDist::empirical(samples.to_vec()));
+    let set = ScenarioSet::spectrum(0, n, tau, SAMPLE_PLAN_REPS, SAMPLE_PLAN_SEED)
+        .expect("divisor spectrum of n >= 1 is non-empty");
+    let results = sweep::run(&set, &sweep::RunConfig::default())
+        .expect("balanced Monte-Carlo spectrum evaluation cannot fail");
+    let mut plan = plan_from_records(&results, objective)
+        .expect("a failure-free spectrum sweep always has a finite baseline");
+    plan.regime = Planner::new(n, fit.best()).regime(objective);
+    (plan, fit)
+}
+
+/// The pre-engine path: fit the classified family to the samples and
+/// plan analytically on the fit. Kept for comparison against
+/// [`plan_from_samples`] (see the agreement test) and for callers that
+/// want a closed-form plan with no simulation budget.
+pub fn plan_from_samples_refit(
     n: usize,
     samples: &[f64],
     objective: Objective,
@@ -278,6 +332,62 @@ pub fn plan_from_samples(
     let fit = TailFit::classify(samples);
     let planner = Planner::new(n, fit.best());
     (planner.plan(objective), fit)
+}
+
+/// Build a plan for one job directly from sweep-engine result records
+/// — no refit, no re-evaluation: the records *are* the sweep. Expects
+/// one job's grid (every record the same N); error/all-failed records
+/// are skipped the same way [`crate::sweep::gain_report`] skips them.
+/// The baseline is the largest B present in the records (= N when the
+/// grid covers the full spectrum); a missing or degenerate baseline is
+/// an error rather than a silently-substituted smaller B.
+pub fn plan_from_records(results: &[CaseResult], objective: Objective) -> Result<Plan> {
+    let first = results
+        .first()
+        .ok_or_else(|| Error::Config("plan_from_records needs a non-empty sweep".into()))?;
+    let n = first.case.scenario.workers;
+    if results.iter().any(|r| r.case.scenario.workers != n) {
+        return Err(Error::Config(
+            "plan_from_records needs a single job's grid (records mix worker budgets)"
+                .into(),
+        ));
+    }
+    let points: Vec<SweepPoint> = results
+        .iter()
+        .filter_map(|r| match &r.outcome {
+            CaseOutcome::Ok(e) => Some(SweepPoint {
+                batches: r.case.batches(),
+                mean: e.mean,
+                cov: e.cov,
+            }),
+            CaseOutcome::Error(_) => None,
+        })
+        .collect();
+    let chosen = choose(&points, objective).ok_or_else(|| {
+        Error::Config("no record in the sweep produced a finite estimate".into())
+    })?;
+    let max_b = results.iter().map(|r| r.case.batches()).max().unwrap_or(0);
+    let baseline = points
+        .iter()
+        .find(|p| p.batches == max_b && p.mean.is_finite())
+        .ok_or_else(|| {
+            Error::Config(format!(
+                "sweep records lack a finite B={max_b} baseline point"
+            ))
+        })?;
+    let regime =
+        Planner::new(n, Arc::clone(&first.case.scenario.tau)).regime(objective);
+    Ok(Plan {
+        workers: n,
+        batches: chosen.batches,
+        batch_size: n / chosen.batches,
+        replication: n / chosen.batches,
+        policy: Policy::BalancedNonOverlapping { batches: chosen.batches },
+        predicted_mean: chosen.mean,
+        predicted_cov: chosen.cov,
+        speedup_vs_no_redundancy: baseline.mean / chosen.mean,
+        regime,
+    })
 }
 
 #[cfg(test)]
@@ -404,6 +514,52 @@ mod tests {
         assert_eq!(fit.class, crate::dist::TailClass::HeavyTail);
         // heavy tails benefit from interior redundancy (Theorem 9, α < α*)
         assert!(plan.batches < 100, "B={}", plan.batches);
+        assert!(plan.speedup_vs_no_redundancy > 1.0);
+        // deterministic: the record-driven path has a fixed seed
+        let (again, _) = plan_from_samples(100, &samples, Objective::MeanCompletion);
+        assert_eq!(plan.batches, again.batches);
+        assert_eq!(plan.predicted_mean.to_bits(), again.predicted_mean.to_bits());
+    }
+
+    #[test]
+    fn record_driven_plan_agrees_with_the_refit_path() {
+        // tame tail: both paths must pick operating points of nearly
+        // equal value under the fitted family's closed form (the
+        // objective is shallow near B*, so the chosen B itself may
+        // differ by a step)
+        let d = ServiceDist::shifted_exp(0.05, 1.0);
+        let mut rng = Pcg64::new(17);
+        let samples: Vec<f64> = (0..30_000).map(|_| d.sample(&mut rng)).collect();
+        let (direct, fit) = plan_from_samples(20, &samples, Objective::MeanCompletion);
+        let (refit, fit2) =
+            plan_from_samples_refit(20, &samples, Objective::MeanCompletion);
+        assert_eq!(fit.class, fit2.class);
+        let family = fit.best();
+        let v_direct = closed_form::mean_t(20, direct.batches, &family);
+        let v_refit = closed_form::mean_t(20, refit.batches, &family);
+        assert!(
+            (v_direct - v_refit).abs() / v_refit < 0.05,
+            "record-driven B={} ({v_direct}) vs refit B={} ({v_refit})",
+            direct.batches,
+            refit.batches
+        );
+        // both regime classifications come from the same fitted family
+        assert_eq!(direct.regime, refit.regime);
+    }
+
+    #[test]
+    fn plan_from_records_consumes_engine_records() {
+        let tau = Arc::new(ServiceDist::shifted_exp(0.05, 1.0));
+        let set = ScenarioSet::spectrum(1, 20, Arc::clone(&tau), 3_000, 7).unwrap();
+        let results = sweep::run(&set, &sweep::RunConfig::default()).unwrap();
+        let plan = plan_from_records(&results, Objective::MeanCompletion).unwrap();
+        assert_eq!(plan.workers, 20);
+        assert_eq!(plan.batches * plan.batch_size, 20);
+        assert!(plan.predicted_mean.is_finite() && plan.predicted_mean > 0.0);
+        assert!(plan.speedup_vs_no_redundancy > 0.0);
+        // the records carry the τ family, so the regime survives
+        assert!(plan.regime.is_some());
+        assert!(plan_from_records(&[], Objective::MeanCompletion).is_err());
     }
 
     #[test]

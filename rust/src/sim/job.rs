@@ -306,11 +306,16 @@ pub struct JobSimulator {
 }
 
 impl JobSimulator {
-    pub fn new(layout: Layout, tau: ServiceDist) -> JobSimulator {
+    /// Build a simulator for `layout` with service times drawn from
+    /// `tau`. Takes the distribution by [`Borrow`](std::borrow::Borrow)
+    /// — an owned [`ServiceDist`], a reference, or a shared
+    /// `Arc<ServiceDist>` all work without cloning the distribution
+    /// (only its compiled [`Sampler`] is kept).
+    pub fn new(layout: Layout, tau: impl std::borrow::Borrow<ServiceDist>) -> JobSimulator {
         let fast_disjoint = fast_disjoint_layout(&layout);
         JobSimulator {
             layout,
-            sampler: tau.sampler(),
+            sampler: tau.borrow().sampler(),
             model: ServiceModel::SizeDependentPerWorker,
             failure: FailureModel::None,
             fast_disjoint,

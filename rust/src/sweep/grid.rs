@@ -14,6 +14,9 @@
 //!   so an estimate depends only on *what* is asked, never on where the
 //!   case sits in the grid or how the grid is sharded.
 
+use std::ops::Range;
+use std::sync::Arc;
+
 use crate::batching::{operating_points, Policy};
 use crate::dist::ServiceDist;
 use crate::eval::{substream, Scenario};
@@ -90,7 +93,11 @@ impl ScenarioSet {
                 Error::Config(format!("job {job_id} has no completed tasks in the trace"))
             })?;
             let n = analysis.n_tasks;
-            let tau = analysis.service_dist();
+            // One τ allocation per job, shared by every case via `Arc`:
+            // an empirical bootstrap carries the job's full sample set
+            // (~8 KB at 1000 tasks), and the job expands into
+            // batches × crash × backends cases.
+            let tau = Arc::new(analysis.service_dist());
             let batches: Vec<usize> = match &spec.batches {
                 Some(bs) => {
                     for &b in bs {
@@ -112,8 +119,8 @@ impl ScenarioSet {
                         FailureModel::Crash { p }
                     };
                     for &backend in &spec.backends {
-                        let scenario =
-                            Scenario::balanced(n, b, tau.clone()).with_failures(failures);
+                        let scenario = Scenario::balanced(n, b, Arc::clone(&tau))
+                            .with_failures(failures);
                         let reps =
                             if backend == Backend::Analytic { 0 } else { spec.reps };
                         let key = case_key(&scenario, backend, reps, spec.seed);
@@ -133,6 +140,41 @@ impl ScenarioSet {
         Ok(ScenarioSet { cases })
     }
 
+    /// Expand the divisor spectrum of one workload: a balanced
+    /// Monte-Carlo case per feasible B, every case sharing `tau`
+    /// through the same `Arc`. This is the grid
+    /// [`crate::planner::plan_from_samples`] runs, and the engine-level
+    /// equivalent of [`crate::eval::Estimator::sweep`].
+    pub fn spectrum(
+        job_id: u64,
+        n: usize,
+        tau: Arc<ServiceDist>,
+        reps: usize,
+        seed: u64,
+    ) -> Result<ScenarioSet> {
+        if n == 0 {
+            return Err(Error::Config("spectrum needs a worker budget >= 1".into()));
+        }
+        if reps == 0 {
+            return Err(Error::Config("spectrum needs reps >= 1".into()));
+        }
+        let mut cases = Vec::new();
+        for op in operating_points(n) {
+            let scenario = Scenario::balanced(n, op.batches, Arc::clone(&tau));
+            let key = case_key(&scenario, Backend::MonteCarlo, reps, seed);
+            cases.push(SweepCase {
+                index: cases.len(),
+                job_id,
+                scenario,
+                backend: Backend::MonteCarlo,
+                reps,
+                key,
+                stream_seed: substream(seed, key),
+            });
+        }
+        Ok(ScenarioSet { cases })
+    }
+
     pub fn len(&self) -> usize {
         self.cases.len()
     }
@@ -145,6 +187,39 @@ impl ScenarioSet {
     pub fn expected_keys(&self) -> Vec<u64> {
         self.cases.iter().map(|c| c.key).collect()
     }
+
+    /// The cases of process-shard `k` of `m`: contiguous balanced
+    /// blocks over the grid, sizes differing by at most one case.
+    /// Deterministic, so independent processes agree on the partition
+    /// without coordination.
+    pub fn shard(&self, k: usize, m: usize) -> Result<&[SweepCase]> {
+        if m == 0 || k >= m {
+            return Err(Error::Config(format!(
+                "invalid shard {k}/{m}: need M >= 1 and 0 <= K < M"
+            )));
+        }
+        Ok(&self.cases[shard_range(self.cases.len(), k, m)])
+    }
+
+    /// Identity of the whole sweep: a stable hash over the case-key
+    /// sequence. Two specs produce the same sweep key iff they expand
+    /// to the same grid (and would write the same store); per-shard
+    /// store files carry it in their header so a merge can refuse a
+    /// shard that belongs to a different sweep.
+    pub fn sweep_key(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.write(b"replica-sweep-set-v1");
+        h.write_u64(self.cases.len() as u64);
+        for case in &self.cases {
+            h.write_u64(case.key);
+        }
+        h.finish()
+    }
+}
+
+/// Case-index range of contiguous shard `k` of `m` over `total` cases.
+pub fn shard_range(total: usize, k: usize, m: usize) -> Range<usize> {
+    (k * total / m)..((k + 1) * total / m)
 }
 
 /// Content-address one case: a stable FNV-1a hash over a canonical
@@ -376,5 +451,91 @@ mod tests {
         s.backends = vec![Backend::Analytic];
         let set = ScenarioSet::from_trace(&trace, &s).unwrap();
         assert!(set.cases.iter().all(|c| c.reps == 0));
+    }
+
+    #[test]
+    fn cases_share_one_tau_allocation_per_job() {
+        // the acceptance criterion of the Arc refactor: expanding a job
+        // into batches x crash cases must not clone its empirical τ
+        let trace = small_trace();
+        let mut s = spec();
+        s.crash = vec![0.0, 0.3];
+        let set = ScenarioSet::from_trace(&trace, &s).unwrap();
+        for job in [1u64, 5, 10] {
+            let cases: Vec<&SweepCase> =
+                set.cases.iter().filter(|c| c.job_id == job).collect();
+            assert_eq!(cases.len(), 12); // 6 divisors x 2 crash levels
+            for c in &cases[1..] {
+                assert!(
+                    Arc::ptr_eq(&cases[0].scenario.tau, &c.scenario.tau),
+                    "job {job}: per-case τ clone detected"
+                );
+            }
+            assert!(
+                Arc::strong_count(&cases[0].scenario.tau) >= cases.len(),
+                "job {job}: τ Arc not shared by all {} cases",
+                cases.len()
+            );
+        }
+        // distinct jobs have distinct allocations
+        let (a, b) = (&set.cases[0], set.cases.last().unwrap());
+        assert!(!Arc::ptr_eq(&a.scenario.tau, &b.scenario.tau));
+    }
+
+    #[test]
+    fn shard_ranges_partition_the_grid() {
+        let trace = small_trace();
+        let set = ScenarioSet::from_trace(&trace, &spec()).unwrap();
+        for m in [1usize, 2, 3, 4, 7, 59, 60, 61] {
+            let mut covered = 0usize;
+            for k in 0..m {
+                let range = shard_range(set.len(), k, m);
+                assert_eq!(range.start, covered, "m={m} k={k}: gap or overlap");
+                covered = range.end;
+                let slice = set.shard(k, m).unwrap();
+                assert_eq!(slice.len(), range.len());
+                // balanced: sizes differ by at most one
+                assert!(slice.len() >= set.len() / m && slice.len() <= set.len() / m + 1);
+            }
+            assert_eq!(covered, set.len(), "m={m}: shards must cover the grid");
+        }
+        assert!(set.shard(0, 0).is_err());
+        assert!(set.shard(2, 2).is_err());
+    }
+
+    #[test]
+    fn sweep_key_identifies_the_grid() {
+        let trace = small_trace();
+        let a = ScenarioSet::from_trace(&trace, &spec()).unwrap();
+        let b = ScenarioSet::from_trace(&trace, &spec()).unwrap();
+        assert_eq!(a.sweep_key(), b.sweep_key());
+        let mut other = spec();
+        other.seed = 6;
+        let c = ScenarioSet::from_trace(&trace, &other).unwrap();
+        assert_ne!(a.sweep_key(), c.sweep_key());
+        let mut narrowed = spec();
+        narrowed.jobs = Some(vec![1]);
+        let d = ScenarioSet::from_trace(&trace, &narrowed).unwrap();
+        assert_ne!(a.sweep_key(), d.sweep_key(), "a sub-grid is a different sweep");
+    }
+
+    #[test]
+    fn spectrum_expands_divisors_over_one_shared_tau() {
+        let tau = Arc::new(ServiceDist::exp(1.0));
+        let set = ScenarioSet::spectrum(3, 12, Arc::clone(&tau), 100, 9).unwrap();
+        assert_eq!(set.len(), 6); // divisors of 12
+        for (i, c) in set.cases.iter().enumerate() {
+            assert_eq!(c.index, i);
+            assert_eq!(c.job_id, 3);
+            assert_eq!(c.backend, Backend::MonteCarlo);
+            assert_eq!(c.reps, 100);
+            assert!(Arc::ptr_eq(&c.scenario.tau, &tau));
+        }
+        // keys match what a trace-driven grid would assign to the same
+        // scenarios (content addressing is constructor-independent)
+        let again = ScenarioSet::spectrum(3, 12, tau, 100, 9).unwrap();
+        assert_eq!(set.expected_keys(), again.expected_keys());
+        assert!(ScenarioSet::spectrum(0, 0, Arc::new(ServiceDist::exp(1.0)), 1, 0).is_err());
+        assert!(ScenarioSet::spectrum(0, 4, Arc::new(ServiceDist::exp(1.0)), 0, 0).is_err());
     }
 }

@@ -1,0 +1,210 @@
+//! Deterministic merge of per-shard sweep stores.
+//!
+//! A multi-process sweep runs `replica sweep --spec FILE --shard K/M`
+//! once per shard: each process owns a contiguous slice of the grid
+//! ([`crate::sweep::grid::shard_range`]) and a private store file
+//! ([`shard_path`]) headed by the sweep's identity key, so M writers
+//! never contend for one file. [`merge`] stitches those shard files
+//! back into the canonical grid-ordered store.
+//!
+//! The merged output is **byte-identical to a single-process run** of
+//! the same spec. That falls out of two properties the engine already
+//! guarantees: every case's estimate depends only on its content key
+//! (its RNG stream is `substream(spec.seed, key)`, independent of shard
+//! boundaries), and record rendering is a pure function of case +
+//! outcome (sorted keys, shortest-roundtrip floats). The merge
+//! therefore re-renders each record from the expanded grid and the
+//! shard-recorded outcome, in grid order — the exact bytes a lone
+//! process would have streamed. CI's `sweep-shard-determinism` job
+//! `cmp`s the two files on every run.
+//!
+//! Failure handling is conservative: a shard file from a different
+//! sweep (mismatched sweep key) is refused, missing shard files and
+//! incomplete shards abort with the unfinished cases named (resume the
+//! shard and re-merge), and overlapping shards are tolerated only if
+//! their duplicate records agree byte-for-byte — a disagreement means
+//! the determinism contract broke, which must never be papered over.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::sweep::grid::ScenarioSet;
+use crate::sweep::store::{parse_record, parse_shard_header, render_record, CaseOutcome};
+use crate::util::error::{Error, Result};
+
+/// Summary of one merge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MergeReport {
+    /// Shard files read.
+    pub shards: usize,
+    /// Cases written to the canonical store (= the full grid).
+    pub cases: usize,
+    /// Records seen more than once across shard files (overlapping
+    /// shard ranges); each duplicate was verified byte-identical.
+    pub duplicates: usize,
+}
+
+/// Conventional per-shard store path for canonical output `out`:
+/// `results.jsonl` → `results.shard-K-of-M.jsonl` (a missing `.jsonl`
+/// extension is simply appended to).
+pub fn shard_path(out: &Path, k: usize, m: usize) -> PathBuf {
+    let full = out.to_string_lossy();
+    let stem = full.strip_suffix(".jsonl").unwrap_or(&full);
+    PathBuf::from(format!("{stem}.shard-{k}-of-{m}.jsonl"))
+}
+
+/// Merge the `m` conventionally-named shard files of `out` (as written
+/// by `m` processes running `--shard 0/m .. --shard m-1/m`) into the
+/// canonical store at `out`.
+pub fn merge_shards(
+    set: &ScenarioSet,
+    out: &Path,
+    m: usize,
+) -> Result<(MergeReport, Vec<CaseOutcome>)> {
+    if m == 0 {
+        return Err(Error::Config("merge needs a shard count >= 1".into()));
+    }
+    let files: Vec<PathBuf> = (0..m).map(|k| shard_path(out, k, m)).collect();
+    merge(set, &files, out)
+}
+
+/// Merge explicit shard files into the canonical store at `out`.
+/// Shard files may come from different shardings of the same sweep
+/// (e.g. a 2-way and a 4-way run) and may overlap; together they must
+/// cover the whole grid. Returns the report plus every case's outcome
+/// in grid order, so callers can build gain reports without re-reading
+/// the store they just wrote.
+pub fn merge(
+    set: &ScenarioSet,
+    shard_files: &[PathBuf],
+    out: &Path,
+) -> Result<(MergeReport, Vec<CaseOutcome>)> {
+    if shard_files.is_empty() {
+        return Err(Error::Config("merge needs at least one shard file".into()));
+    }
+    let sweep_key = set.sweep_key();
+    let index_of: BTreeMap<u64, usize> =
+        set.cases.iter().map(|case| (case.key, case.index)).collect();
+    let mut outcomes: Vec<Option<CaseOutcome>> = vec![None; set.cases.len()];
+    let mut duplicates = 0usize;
+    for path in shard_files {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Config(format!(
+                "cannot read shard file {}: {e} (was that shard run?)",
+                path.display()
+            ))
+        })?;
+        let mut lines = text.split_inclusive('\n').filter_map(|line| {
+            // ignore a torn trailing line (the shard was killed after
+            // its last flush); the cases it held simply stay missing
+            line.strip_suffix('\n')
+        });
+        let header = lines.next().and_then(parse_shard_header).ok_or_else(|| {
+            Error::Config(format!(
+                "{} is not a shard store (first line is not a shard header); \
+                 merge inputs must be files written by `sweep --shard K/M`",
+                path.display()
+            ))
+        })?;
+        if header.sweep_key != sweep_key {
+            return Err(Error::Config(format!(
+                "shard file {} belongs to a different sweep \
+                 (sweep key {:016x}, this spec expands to {sweep_key:016x}); \
+                 refusing to merge — check the spec, seed, and reps match the run",
+                path.display(),
+                header.sweep_key
+            )));
+        }
+        for line in lines {
+            let (key, outcome) = parse_record(line).map_err(|e| {
+                Error::Parse(format!("corrupt record in {}: {e}", path.display()))
+            })?;
+            let Some(&index) = index_of.get(&key) else {
+                return Err(Error::Config(format!(
+                    "shard file {} holds record {key:016x}, which is not in this grid \
+                     despite a matching sweep key — the file is corrupt",
+                    path.display()
+                )));
+            };
+            match &outcomes[index] {
+                None => outcomes[index] = Some(outcome),
+                Some(existing) => {
+                    duplicates += 1;
+                    let case = &set.cases[index];
+                    if render_record(case, existing) != render_record(case, &outcome) {
+                        return Err(Error::Config(format!(
+                            "shard files disagree on case {key:016x} (job {}, B={}): \
+                             the determinism contract is broken; refusing to merge",
+                            case.job_id,
+                            case.batches()
+                        )));
+                    }
+                }
+            }
+        }
+    }
+    let missing = outcomes.iter().filter(|outcome| outcome.is_none()).count();
+    if missing > 0 {
+        let first = set
+            .cases
+            .iter()
+            .zip(&outcomes)
+            .find(|(_, outcome)| outcome.is_none())
+            .map(|(case, _)| case)
+            .expect("missing > 0");
+        return Err(Error::Config(format!(
+            "merge is missing {missing} of {} cases (first: {} — job {}, B={}); \
+             run the unfinished shard(s) to completion and re-merge",
+            set.cases.len(),
+            first.key_hex(),
+            first.job_id,
+            first.batches()
+        )));
+    }
+    let outcomes: Vec<CaseOutcome> =
+        outcomes.into_iter().map(|outcome| outcome.expect("coverage checked")).collect();
+    let mut text = String::new();
+    for (case, outcome) in set.cases.iter().zip(&outcomes) {
+        text.push_str(&render_record(case, outcome));
+        text.push('\n');
+    }
+    // write-then-rename: a kill mid-merge never leaves a torn canonical
+    // store (and an existing store is replaced atomically)
+    let tmp = PathBuf::from(format!("{}.tmp", out.display()));
+    std::fs::write(&tmp, &text)?;
+    std::fs::rename(&tmp, out)?;
+    let report =
+        MergeReport { shards: shard_files.len(), cases: set.cases.len(), duplicates };
+    Ok((report, outcomes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_path_convention() {
+        assert_eq!(
+            shard_path(Path::new("results.jsonl"), 0, 4),
+            PathBuf::from("results.shard-0-of-4.jsonl")
+        );
+        assert_eq!(
+            shard_path(Path::new("/tmp/x/r.jsonl"), 3, 4),
+            PathBuf::from("/tmp/x/r.shard-3-of-4.jsonl")
+        );
+        // no .jsonl suffix: the shard tag is appended
+        assert_eq!(
+            shard_path(Path::new("store"), 1, 2),
+            PathBuf::from("store.shard-1-of-2.jsonl")
+        );
+    }
+
+    #[test]
+    fn merge_refuses_empty_inputs() {
+        let set = ScenarioSet { cases: Vec::new() };
+        assert!(merge(&set, &[], Path::new("/tmp/never.jsonl")).is_err());
+        assert!(merge_shards(&set, Path::new("/tmp/never.jsonl"), 0).is_err());
+    }
+    // end-to-end merge behavior (byte identity, overlap, refusal,
+    // resume) is covered by tests/sweep_merge.rs
+}

@@ -24,23 +24,34 @@
 //!   its prefix and truncates at most one partial line) and re-runs are
 //!   incremental (cache hits are never re-evaluated); resumed output is
 //!   **byte-identical** to an uninterrupted run.
+//! * [`merge`](mod@merge) — the multi-process path: `--shard K/M` runs
+//!   write per-shard stores (own file, own cache, sweep-identity
+//!   header), and [`merge()`](fn@merge) reassembles the canonical
+//!   grid-ordered store **byte-identical to a single-process run** —
+//!   possible because each case's RNG stream derives from its content
+//!   key, never from where or when it ran. Long-lived caches are
+//!   compacted with [`store::EstimateCache::gc`].
 //! * [`report`] — the replication-gain report: per-job optimal
 //!   redundancy, speedup over the B = N baseline, and the
 //!   E\[T\]-vs-predictability trade-off, with tail classes from
 //!   [`crate::dist::TailFit`].
 //!
 //! `experiments::traces_exp` (Figs. 11–13), the `replica sweep --spec`
-//! CLI command, and CI's regression artifacts are all thin layers over
-//! this one engine.
+//! CLI command (plus `replica sweep-merge`), and CI's regression
+//! artifacts — including the `sweep-shard-determinism` job that
+//! byte-compares a 4-process run against a single-process one — are
+//! all thin layers over this one engine.
 
 pub mod grid;
+pub mod merge;
 pub mod report;
 pub mod runner;
 pub mod spec;
 pub mod store;
 
-pub use grid::{case_key, ScenarioSet, SweepCase};
+pub use grid::{case_key, shard_range, ScenarioSet, SweepCase};
+pub use merge::{merge, merge_shards, shard_path, MergeReport};
 pub use report::{gain_report, gain_table, headline_speedup, GainRow};
 pub use runner::{run, run_spec, CaseResult, RunConfig};
 pub use spec::{Backend, SweepSpec, Workload, DEFAULT_SHARD_SIZE, DEFAULT_SWEEP_REPS};
-pub use store::{CaseOutcome, StoredEstimate};
+pub use store::{CacheGc, CaseOutcome, EstimateCache, StoredEstimate};

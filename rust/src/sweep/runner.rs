@@ -17,14 +17,26 @@
 //! resume points, pool width, and cache hits can change *when* a value
 //! is computed but never *what* it is — so an interrupted-and-resumed
 //! run writes byte-identical output to an uninterrupted one.
+//!
+//! The same property scales past one process: with
+//! [`RunConfig::shard`] set to `(k, m)`, a process evaluates only the
+//! k-th contiguous slice of the grid and streams it to a private
+//! per-shard store (+ per-shard cache), so m machines can split a
+//! sweep with no shared files and no coordination beyond agreeing on
+//! the spec. [`crate::sweep::merge()`](fn@crate::sweep::merge) then
+//! reassembles the canonical store, byte-identical to a
+//! single-process run.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use crate::eval::{Analytic, Estimator, MonteCarlo, Scenario};
 use crate::sweep::grid::{ScenarioSet, SweepCase};
+use crate::sweep::merge::shard_path;
 use crate::sweep::spec::{Backend, SweepSpec, DEFAULT_SHARD_SIZE};
-use crate::sweep::store::{render_record, CaseOutcome, EstimateCache, ResultStore, StoredEstimate};
+use crate::sweep::store::{
+    render_record, CaseOutcome, EstimateCache, ResultStore, ShardHeader, StoredEstimate,
+};
 use crate::traces::Trace;
 use crate::util::error::Result;
 
@@ -33,6 +45,8 @@ use crate::util::error::Result;
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     /// Result store path (`None` = in-memory run, nothing persisted).
+    /// For process-sharded runs this is the *canonical* path; the
+    /// process actually writes [`shard_path`]`(out, k, m)`.
     pub out: Option<PathBuf>,
     /// Estimate-cache path (`None` = in-memory cache).
     pub cache: Option<PathBuf>,
@@ -43,6 +57,13 @@ pub struct RunConfig {
     pub limit_shards: Option<usize>,
     /// Per-scenario Monte-Carlo fan-out cap (0 = pool width).
     pub threads: usize,
+    /// Process-level shard selector `(k, m)`: evaluate only the k-th of
+    /// m contiguous grid slices and persist to a per-shard store with a
+    /// sweep-identity header, so m processes can run one sweep with no
+    /// shared files. Merge the shard stores back into the canonical
+    /// store with [`crate::sweep::merge()`](fn@crate::sweep::merge).
+    /// `None` = the whole grid.
+    pub shard: Option<(usize, usize)>,
 }
 
 impl Default for RunConfig {
@@ -53,6 +74,7 @@ impl Default for RunConfig {
             shard_size: DEFAULT_SHARD_SIZE,
             limit_shards: None,
             threads: 0,
+            shard: None,
         }
     }
 }
@@ -64,6 +86,21 @@ impl RunConfig {
         let cache = PathBuf::from(format!("{}.cache.jsonl", out.display()));
         RunConfig { out: Some(out), cache: Some(cache), ..RunConfig::default() }
     }
+
+    /// Persisted single-shard run `k` of `m`: the store is the
+    /// per-shard file derived from the canonical `out` path, and the
+    /// cache sits next to it (per-shard too, so concurrent shard
+    /// processes never share a writable file).
+    pub fn sharded(out: PathBuf, k: usize, m: usize) -> RunConfig {
+        let store = shard_path(&out, k, m);
+        let cache = PathBuf::from(format!("{}.cache.jsonl", store.display()));
+        RunConfig {
+            out: Some(out),
+            cache: Some(cache),
+            shard: Some((k, m)),
+            ..RunConfig::default()
+        }
+    }
 }
 
 /// One evaluated grid point.
@@ -74,13 +111,29 @@ pub struct CaseResult {
 }
 
 /// Run (or resume) a sweep. Returns the results of every case
-/// evaluated so far in grid order — the full grid unless
-/// `limit_shards` stopped the run early.
+/// evaluated so far in grid order — the full grid (or, for a
+/// process-sharded run, the full process slice) unless `limit_shards`
+/// stopped the run early.
 pub fn run(set: &ScenarioSet, cfg: &RunConfig) -> Result<Vec<CaseResult>> {
-    let expected = set.expected_keys();
+    let cases: &[SweepCase] = match cfg.shard {
+        Some((k, m)) => set.shard(k, m)?,
+        None => &set.cases,
+    };
+    let expected: Vec<u64> = cases.iter().map(|case| case.key).collect();
     let (mut store, prefix) = match &cfg.out {
         Some(path) => {
-            let (store, prefix) = ResultStore::open(path, &expected)?;
+            let (store, prefix) = match cfg.shard {
+                Some((k, m)) => {
+                    let header = ShardHeader {
+                        shard: k,
+                        of: m,
+                        cases: cases.len(),
+                        sweep_key: set.sweep_key(),
+                    };
+                    ResultStore::open_shard(&shard_path(path, k, m), header, &expected)?
+                }
+                None => ResultStore::open(path, &expected)?,
+            };
             (Some(store), prefix)
         }
         None => (None, Vec::new()),
@@ -89,21 +142,20 @@ pub fn run(set: &ScenarioSet, cfg: &RunConfig) -> Result<Vec<CaseResult>> {
         Some(path) => EstimateCache::open(path)?,
         None => EstimateCache::in_memory(),
     };
-    let mut results: Vec<CaseResult> = set
-        .cases
+    let mut results: Vec<CaseResult> = cases
         .iter()
         .zip(prefix)
         .map(|(case, outcome)| CaseResult { case: case.clone(), outcome })
         .collect();
 
     let mut shards_done = 0usize;
-    while results.len() < set.cases.len() {
+    while results.len() < cases.len() {
         if cfg.limit_shards.is_some_and(|limit| shards_done >= limit) {
             break;
         }
         let lo = results.len();
-        let hi = (lo + cfg.shard_size.max(1)).min(set.cases.len());
-        let shard = &set.cases[lo..hi];
+        let hi = (lo + cfg.shard_size.max(1)).min(cases.len());
+        let shard = &cases[lo..hi];
         let outcomes = evaluate_shard(shard, &mut cache, cfg.threads)?;
         for (case, outcome) in shard.iter().zip(&outcomes) {
             if let Some(store) = &mut store {
@@ -304,7 +356,7 @@ mod tests {
         // swap the empirical τ for a closed-form family, keeping keys
         // consistent is irrelevant here (in-memory, no cache reuse)
         for case in &mut set.cases {
-            case.scenario.tau = crate::dist::ServiceDist::exp(1.0);
+            case.scenario.tau = crate::dist::ServiceDist::exp(1.0).into();
         }
         let results = run(&set, &RunConfig::default()).unwrap();
         for r in &results {
@@ -316,6 +368,29 @@ mod tests {
                 other => panic!("{other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn process_shard_runs_cover_their_slice_identically() {
+        let (_, set) = small_set(150);
+        let full = run(&set, &RunConfig::default()).unwrap();
+        let mut sharded = Vec::new();
+        for k in 0..3 {
+            let cfg = RunConfig { shard: Some((k, 3)), ..RunConfig::default() };
+            sharded.extend(run(&set, &cfg).unwrap());
+        }
+        // concatenated shard slices = the whole grid, bit-identical
+        assert_eq!(sharded.len(), full.len());
+        for (a, b) in full.iter().zip(&sharded) {
+            assert_eq!(a.case.key, b.case.key);
+            let (CaseOutcome::Ok(a), CaseOutcome::Ok(b)) = (&a.outcome, &b.outcome) else {
+                panic!("unexpected error outcome");
+            };
+            assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+            assert_eq!(a.p99.to_bits(), b.p99.to_bits());
+        }
+        let bad = RunConfig { shard: Some((3, 3)), ..RunConfig::default() };
+        assert!(run(&set, &bad).is_err());
     }
 
     #[test]

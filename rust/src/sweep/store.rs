@@ -11,17 +11,26 @@
 //!   key sequence, truncates everything from the first invalid or
 //!   out-of-order line (a kill can leave at most one partial line), and
 //!   resumes after the surviving prefix.
+//! * A **per-shard store** (`results.shard-K-of-M.jsonl`, opened via
+//!   [`ResultStore::open_shard`]) is the same format prefixed by one
+//!   identity header line naming the shard slice and the sweep key —
+//!   so M processes can each own a file with no coordination, a
+//!   foreign shard file is refused instead of overwritten, and
+//!   [`crate::sweep::merge`](mod@crate::sweep::merge) can stitch the
+//!   shards back into the canonical store.
 //! * The **estimate cache** keys finished estimates by content address,
 //!   so a re-run — same spec, a widened spec, or a run whose result
 //!   file was lost — never re-evaluates a scenario it has already paid
-//!   for. Lines are unordered; corrupt tails are truncated on load.
+//!   for. Lines are unordered; corrupt tails are truncated on load,
+//!   and [`EstimateCache::gc`] compacts away keys the current grid no
+//!   longer asks about.
 //!
 //! Undefined statistics (an all-failed Monte-Carlo estimate is all-NaN
 //! by construction) are stored as JSON `null` and flagged
 //! `"all_failed": true`, keeping the line parseable instead of
 //! poisoning the file with bare `NaN` tokens.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
@@ -120,6 +129,46 @@ fn outcome_fields(outcome: &CaseOutcome) -> Vec<(&'static str, Json)> {
             ("via", Json::Str(e.via.clone())),
         ],
     }
+}
+
+/// Identity header of a per-shard store file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardHeader {
+    /// Shard index (0-based).
+    pub shard: usize,
+    /// Total shard count.
+    pub of: usize,
+    /// Number of cases this shard covers.
+    pub cases: usize,
+    /// [`crate::sweep::ScenarioSet::sweep_key`] of the whole grid.
+    pub sweep_key: u64,
+}
+
+/// Render a shard store's first line (no trailing newline). Pure, like
+/// every other store rendering — resuming a shard re-derives the exact
+/// header bytes.
+pub fn render_shard_header(header: ShardHeader) -> String {
+    Json::obj(vec![
+        ("cases", Json::Num(header.cases as f64)),
+        ("of", Json::Num(header.of as f64)),
+        ("shard", Json::Num(header.shard as f64)),
+        ("sweep", Json::Str(format!("{:016x}", header.sweep_key))),
+    ])
+    .to_string_compact()
+}
+
+/// Parse a shard header line; `None` when the line is not a header
+/// (e.g. an ordinary record, or a canonical store handed to the merge
+/// by mistake).
+pub fn parse_shard_header(line: &str) -> Option<ShardHeader> {
+    let doc = parse(line).ok()?;
+    let sweep_key = u64::from_str_radix(doc.get("sweep")?.as_str()?, 16).ok()?;
+    Some(ShardHeader {
+        shard: doc.get("shard")?.as_usize()?,
+        of: doc.get("of")?.as_usize()?,
+        cases: doc.get("cases")?.as_usize()?,
+        sweep_key,
+    })
 }
 
 /// Parse any store/cache line back into `(key, outcome)`.
@@ -235,6 +284,73 @@ impl ResultStore {
         Ok((ResultStore { file }, outcomes))
     }
 
+    /// Open (or create) the per-shard store of one process in a
+    /// multi-process sweep. The first line is the shard's identity
+    /// header ([`render_shard_header`]); records follow in grid order
+    /// exactly like the canonical store and resume the same way. A file
+    /// whose header names a different sweep, slice, or shard count is
+    /// another run's output and is refused, never truncated; only a
+    /// torn header line (a kill before the first flush) is rebuilt.
+    pub fn open_shard(
+        path: &Path,
+        header: ShardHeader,
+        expected: &[u64],
+    ) -> Result<(ResultStore, Vec<CaseOutcome>)> {
+        let mut file =
+            OpenOptions::new().read(true).write(true).create(true).truncate(false).open(path)?;
+        let text = read_valid_prefix(&mut file)?;
+        let header_line = render_shard_header(header);
+        let mut lines = complete_lines(&text);
+        match lines.next() {
+            None => {
+                // fresh file, or one torn line from a kill before the
+                // header was flushed: start over with the header
+                file.set_len(0)?;
+                file.seek(SeekFrom::Start(0))?;
+                file.write_all(header_line.as_bytes())?;
+                file.write_all(b"\n")?;
+                return Ok((ResultStore { file }, Vec::new()));
+            }
+            Some(line) if line == header_line => {}
+            Some(line) => {
+                let found = match parse_shard_header(line) {
+                    Some(h) => format!(
+                        "shard {}/{} of sweep {:016x}",
+                        h.shard, h.of, h.sweep_key
+                    ),
+                    None => "no shard header".to_string(),
+                };
+                return Err(Error::Config(format!(
+                    "existing shard file {} does not belong to this sweep slice \
+                     (found {found}, expected shard {}/{} of sweep {:016x}); \
+                     refusing to overwrite it — delete the file or pass a \
+                     different output path",
+                    path.display(),
+                    header.shard,
+                    header.of,
+                    header.sweep_key
+                )));
+            }
+        }
+        let mut outcomes = Vec::new();
+        let mut good_bytes = header_line.len() as u64 + 1;
+        for line in lines {
+            if outcomes.len() >= expected.len() {
+                break;
+            }
+            match parse_record(line) {
+                Ok((key, outcome)) if key == expected[outcomes.len()] => {
+                    outcomes.push(outcome);
+                    good_bytes += line.len() as u64 + 1;
+                }
+                _ => break,
+            }
+        }
+        file.set_len(good_bytes)?;
+        file.seek(SeekFrom::End(0))?;
+        Ok((ResultStore { file }, outcomes))
+    }
+
     /// Append one record line (newline added here).
     pub fn append(&mut self, line: &str) -> Result<()> {
         self.file.write_all(line.as_bytes())?;
@@ -312,6 +428,47 @@ impl EstimateCache {
         }
         Ok(())
     }
+
+    /// Compact the cache: drop every key not in `live` and rewrite the
+    /// backing file to hold exactly the survivors. Long-lived caches
+    /// accumulate dead keys as specs change (every reps/seed/axis edit
+    /// re-keys its scenarios); GC reclaims that space without touching
+    /// any estimate the current grid still asks about.
+    ///
+    /// The rewrite is in place (truncate + rewrite + flush), so a kill
+    /// mid-GC can lose cache entries — acceptable for a cache, whose
+    /// loss only costs re-evaluation, never correctness.
+    pub fn gc(&mut self, live: &BTreeSet<u64>) -> Result<CacheGc> {
+        let before = self.map.len();
+        self.map.retain(|key, _| live.contains(key));
+        let kept = self.map.len();
+        let mut reclaimed_bytes = 0u64;
+        if let Some(file) = &mut self.file {
+            let old_len = file.metadata()?.len();
+            let mut text = String::new();
+            for (key, outcome) in &self.map {
+                text.push_str(&render_cache_line(*key, outcome));
+                text.push('\n');
+            }
+            file.set_len(0)?;
+            file.seek(SeekFrom::Start(0))?;
+            file.write_all(text.as_bytes())?;
+            file.flush()?;
+            reclaimed_bytes = old_len.saturating_sub(text.len() as u64);
+        }
+        Ok(CacheGc { live: kept, dead: before - kept, reclaimed_bytes })
+    }
+}
+
+/// What one [`EstimateCache::gc`] pass found and freed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheGc {
+    /// Keys the current grid still asks about (kept).
+    pub live: usize,
+    /// Keys absent from the current grid (dropped).
+    pub dead: usize,
+    /// Bytes the backing file shrank by (0 for in-memory caches).
+    pub reclaimed_bytes: u64,
 }
 
 #[cfg(test)]
@@ -486,6 +643,93 @@ mod tests {
         let (_, prefix) = ResultStore::open(&path, &[20]).unwrap();
         assert!(prefix.is_empty());
         assert_eq!(std::fs::metadata(&path).unwrap().len(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_header_roundtrip_is_exact() {
+        let h = ShardHeader { shard: 2, of: 4, cases: 17, sweep_key: 0xFEED_F00D_1234_5678 };
+        let line = render_shard_header(h);
+        assert_eq!(parse_shard_header(&line), Some(h));
+        // a header re-rendered from its parse reproduces the bytes
+        assert_eq!(render_shard_header(parse_shard_header(&line).unwrap()), line);
+        // ordinary records are not headers
+        let record = render_cache_line(1, &CaseOutcome::Ok(est(1.0, 10)));
+        assert_eq!(parse_shard_header(&record), None);
+        assert_eq!(parse_shard_header("not json"), None);
+    }
+
+    #[test]
+    fn shard_store_resumes_and_refuses_foreign_headers() {
+        let dir = std::env::temp_dir().join("replica_sweep_shard_store");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("results.shard-1-of-2.jsonl");
+        let header = ShardHeader { shard: 1, of: 2, cases: 2, sweep_key: 0xAB };
+        let expected = [7u64, 8];
+        {
+            let (mut store, prefix) =
+                ResultStore::open_shard(&path, header, &expected).unwrap();
+            assert!(prefix.is_empty());
+            store.append(&render_cache_line(7, &CaseOutcome::Ok(est(1.0, 10)))).unwrap();
+            store.flush().unwrap();
+        }
+        // resume: header validated, one record survives
+        let (_, prefix) = ResultStore::open_shard(&path, header, &expected).unwrap();
+        assert_eq!(prefix.len(), 1);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2, "header + one record");
+        assert_eq!(text.lines().next().unwrap(), render_shard_header(header));
+        // a different sweep key is refused, file untouched
+        let foreign = ShardHeader { sweep_key: 0xCD, ..header };
+        let err = ResultStore::open_shard(&path, foreign, &expected).unwrap_err();
+        assert!(err.to_string().contains("refusing to overwrite"), "{err}");
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), text);
+        // so is a different slice of the same sweep
+        let wrong_slice = ShardHeader { shard: 0, ..header };
+        assert!(ResultStore::open_shard(&path, wrong_slice, &expected).is_err());
+        // a torn header line (kill before first flush) is rebuilt
+        std::fs::write(&path, "{\"cases\":2,\"of").unwrap();
+        let (_, prefix) = ResultStore::open_shard(&path, header, &expected).unwrap();
+        assert!(prefix.is_empty());
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, format!("{}\n", render_shard_header(header)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cache_gc_compacts_the_backing_file() {
+        let dir = std::env::temp_dir().join("replica_sweep_cache_gc");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.jsonl");
+        let mut cache = EstimateCache::open(&path).unwrap();
+        for key in 1u64..=6 {
+            cache.insert(key, CaseOutcome::Ok(est(key as f64, 100))).unwrap();
+        }
+        cache.flush().unwrap();
+        let before = std::fs::metadata(&path).unwrap().len();
+        let live: BTreeSet<u64> = [2u64, 4, 6].into_iter().collect();
+        let stats = cache.gc(&live).unwrap();
+        assert_eq!((stats.live, stats.dead), (3, 3));
+        assert!(stats.reclaimed_bytes > 0);
+        let after = std::fs::metadata(&path).unwrap().len();
+        assert_eq!(before - after, stats.reclaimed_bytes);
+        assert!(cache.get(2).is_some() && cache.get(3).is_none());
+        // the rewritten file reloads to exactly the survivors
+        drop(cache);
+        let reloaded = EstimateCache::open(&path).unwrap();
+        assert_eq!(reloaded.len(), 3);
+        assert!(reloaded.get(4).is_some());
+        // a second GC with the same live set is a no-op
+        let mut reloaded = reloaded;
+        let again = reloaded.gc(&live).unwrap();
+        assert_eq!((again.live, again.dead, again.reclaimed_bytes), (3, 0, 0));
+        // in-memory caches GC without a file
+        let mut mem = EstimateCache::in_memory();
+        mem.insert(1, CaseOutcome::Ok(est(1.0, 10))).unwrap();
+        let stats = mem.gc(&BTreeSet::new()).unwrap();
+        assert_eq!((stats.live, stats.dead, stats.reclaimed_bytes), (0, 1, 0));
         std::fs::remove_dir_all(&dir).ok();
     }
 

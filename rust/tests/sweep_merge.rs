@@ -1,0 +1,249 @@
+//! Integration tests for the multi-process sweep path: per-shard
+//! stores, the deterministic merge, and estimate-cache GC.
+//!
+//! The contract under test is the one CI's `sweep-shard-determinism`
+//! job enforces at cluster scale: running a sweep as M shard processes
+//! and merging their stores must produce a canonical store
+//! **byte-identical** to a single-process run — including across
+//! overlapping shardings, kills mid-shard, and resumes — while foreign
+//! or incomplete shards are refused with actionable errors.
+
+use std::path::{Path, PathBuf};
+
+use replica::sweep::{
+    merge, merge_shards, run, shard_path, EstimateCache, RunConfig, ScenarioSet, SweepSpec,
+    Workload,
+};
+
+fn test_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("replica_sweep_merge_{name}"));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn spec(seed: u64) -> SweepSpec {
+    let mut spec = SweepSpec::for_trace();
+    spec.workload = Some(Workload::Generate { jobs: 3, tasks_per_job: 12, seed: 7 });
+    spec.reps = 150;
+    spec.seed = seed;
+    spec.shard_size = 4;
+    spec
+}
+
+fn expand(spec: &SweepSpec) -> ScenarioSet {
+    ScenarioSet::from_trace(&spec.load_trace().unwrap(), spec).unwrap()
+}
+
+/// Single-process reference run into `dir/single.jsonl`.
+fn reference_store(set: &ScenarioSet, dir: &Path) -> String {
+    let out = dir.join("single.jsonl");
+    let cfg = RunConfig { shard_size: 4, ..RunConfig::persisted(out.clone()) };
+    let results = run(set, &cfg).unwrap();
+    assert_eq!(results.len(), set.len());
+    std::fs::read_to_string(&out).unwrap()
+}
+
+/// Run shard `k` of `m` to completion against canonical path `out`.
+fn run_shard(set: &ScenarioSet, out: &Path, k: usize, m: usize) {
+    let cfg = RunConfig { shard_size: 4, ..RunConfig::sharded(out.to_path_buf(), k, m) };
+    let results = run(set, &cfg).unwrap();
+    assert_eq!(results.len(), set.shard(k, m).unwrap().len());
+}
+
+#[test]
+fn sharded_run_merges_byte_identical_to_single_process() {
+    let spec = spec(5);
+    let set = expand(&spec);
+    assert_eq!(set.len(), 18); // 3 jobs x 6 divisors of 12
+
+    let dir = test_dir("identical");
+    let reference = reference_store(&set, &dir);
+
+    let out = dir.join("merged.jsonl");
+    for k in 0..3 {
+        run_shard(&set, &out, k, 3);
+        assert!(shard_path(&out, k, 3).exists());
+    }
+    let (report, outcomes) = merge_shards(&set, &out, 3).unwrap();
+    assert_eq!((report.shards, report.cases, report.duplicates), (3, 18, 0));
+    assert_eq!(outcomes.len(), 18, "merge returns every outcome in grid order");
+    assert_eq!(
+        std::fs::read_to_string(&out).unwrap(),
+        reference,
+        "merged multi-process store must be byte-identical to the single-process run"
+    );
+
+    // merging again over the same shard files is idempotent
+    merge_shards(&set, &out, 3).unwrap();
+    assert_eq!(std::fs::read_to_string(&out).unwrap(), reference);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn overlapping_shardings_merge_cleanly() {
+    let spec = spec(8);
+    let set = expand(&spec);
+    let dir = test_dir("overlap");
+    let reference = reference_store(&set, &dir);
+
+    let out = dir.join("merged.jsonl");
+    // a 2-way sharding plus a 1-way (whole-grid) shard: every case is
+    // covered at least twice, with shard boundaries that disagree
+    run_shard(&set, &out, 0, 2);
+    run_shard(&set, &out, 1, 2);
+    run_shard(&set, &out, 0, 1);
+    let files = vec![
+        shard_path(&out, 0, 2),
+        shard_path(&out, 1, 2),
+        shard_path(&out, 0, 1),
+    ];
+    let (report, _) = merge(&set, &files, &out).unwrap();
+    assert_eq!(report.shards, 3);
+    assert_eq!(report.duplicates, set.len(), "every case seen twice");
+    assert_eq!(std::fs::read_to_string(&out).unwrap(), reference);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn missing_and_incomplete_shards_are_refused_with_context() {
+    let spec = spec(11);
+    let set = expand(&spec);
+    let dir = test_dir("missing");
+    let out = dir.join("merged.jsonl");
+
+    // only shard 0 of 2 ran: shard 1's file does not exist
+    run_shard(&set, &out, 0, 2);
+    let err = merge_shards(&set, &out, 2).unwrap_err();
+    assert!(err.to_string().contains("cannot read shard file"), "{err}");
+
+    // shard 1 ran but was stopped after one engine shard (4 of 9 cases)
+    let partial = RunConfig {
+        shard_size: 4,
+        limit_shards: Some(1),
+        ..RunConfig::sharded(out.clone(), 1, 2)
+    };
+    let results = run(&set, &partial).unwrap();
+    assert_eq!(results.len(), 4);
+    let err = merge_shards(&set, &out, 2).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("missing 5 of 18 cases"), "{msg}");
+    assert!(msg.contains("re-merge"), "{msg}");
+
+    // resuming shard 1 to completion fixes the merge
+    run_shard(&set, &out, 1, 2);
+    let (report, _) = merge_shards(&set, &out, 2).unwrap();
+    assert_eq!(report.cases, 18);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn foreign_shards_are_refused_at_open_and_at_merge() {
+    let spec_a = spec(5);
+    let spec_b = spec(6); // different seed => every key differs
+    let set_a = expand(&spec_a);
+    let set_b = expand(&spec_b);
+    let dir = test_dir("foreign");
+    let out = dir.join("merged.jsonl");
+
+    run_shard(&set_a, &out, 0, 1);
+
+    // the merge refuses a shard whose header names another sweep
+    let files = vec![shard_path(&out, 0, 1)];
+    let err = merge(&set_b, &files, &out).unwrap_err();
+    assert!(err.to_string().contains("different sweep"), "{err}");
+
+    // a shard *run* against the existing file of another sweep is
+    // refused too (never truncated)
+    let before = std::fs::read_to_string(shard_path(&out, 0, 1)).unwrap();
+    let cfg = RunConfig { shard_size: 4, ..RunConfig::sharded(out.clone(), 0, 1) };
+    let err = run(&set_b, &cfg).unwrap_err();
+    assert!(err.to_string().contains("refusing to overwrite"), "{err}");
+    assert_eq!(std::fs::read_to_string(shard_path(&out, 0, 1)).unwrap(), before);
+
+    // a canonical (headerless) store is not a shard file
+    let single = dir.join("single.jsonl");
+    run(&set_a, &RunConfig { shard_size: 4, ..RunConfig::persisted(single.clone()) }).unwrap();
+    let err = merge(&set_a, &[single], &out).unwrap_err();
+    assert!(err.to_string().contains("not a shard store"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn killed_mid_shard_resume_keeps_merge_byte_identical() {
+    let spec = spec(9);
+    let set = expand(&spec);
+    let dir = test_dir("kill_resume");
+    let reference = reference_store(&set, &dir);
+
+    let out = dir.join("merged.jsonl");
+    run_shard(&set, &out, 1, 2);
+    run_shard(&set, &out, 0, 2);
+    let shard0 = shard_path(&out, 0, 2);
+    let full = std::fs::read(&shard0).unwrap();
+
+    // "kill" shard 0 at arbitrary bytes — inside the header line, at a
+    // record boundary, mid-record, one byte short — then resume it and
+    // re-merge; the canonical store never changes
+    let offsets =
+        [0usize, 3, full.len() / 4, full.len() / 2, full.len() - 1];
+    for &cut in &offsets {
+        std::fs::write(&shard0, &full[..cut]).unwrap();
+        run_shard(&set, &out, 0, 2); // resume
+        assert_eq!(
+            std::fs::read(&shard0).unwrap(),
+            full,
+            "cut at byte {cut}: resumed shard store diverged"
+        );
+        let (report, _) = merge_shards(&set, &out, 2).unwrap();
+        assert_eq!(report.cases, set.len());
+        assert_eq!(
+            std::fs::read_to_string(&out).unwrap(),
+            reference,
+            "cut at byte {cut}: merged store diverged from the single-process run"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn shard_cache_gc_drops_only_dead_keys() {
+    let wide = spec(13);
+    let set_wide = expand(&wide);
+    let dir = test_dir("cache_gc");
+    let out = dir.join("results.jsonl");
+
+    // one persisted run fills the cache with the wide grid
+    let cfg = RunConfig { shard_size: 4, ..RunConfig::persisted(out.clone()) };
+    run(&set_wide, &cfg).unwrap();
+    let cache_path = cfg.cache.clone().unwrap();
+    let before = std::fs::read_to_string(&cache_path).unwrap().lines().count();
+    assert_eq!(before, 18);
+
+    // the spec narrows to one job: two thirds of the cache is dead
+    let mut narrow = wide.clone();
+    narrow.jobs = Some(vec![2]);
+    let set_narrow = expand(&narrow);
+    let live: std::collections::BTreeSet<u64> =
+        set_narrow.expected_keys().into_iter().collect();
+    let mut cache = EstimateCache::open(&cache_path).unwrap();
+    let stats = cache.gc(&live).unwrap();
+    drop(cache);
+    assert_eq!((stats.live, stats.dead), (6, 12));
+    assert!(stats.reclaimed_bytes > 0);
+    assert_eq!(std::fs::read_to_string(&cache_path).unwrap().lines().count(), 6);
+
+    // the surviving entries still serve the narrow sweep: a re-run is
+    // pure cache hits (no new cache lines) and matches the wide run's
+    // records for job 2 bit-for-bit
+    let narrow_cfg = RunConfig {
+        out: Some(dir.join("narrow.jsonl")),
+        cache: Some(cache_path.clone()),
+        shard_size: 4,
+        ..RunConfig::default()
+    };
+    let narrow_results = run(&set_narrow, &narrow_cfg).unwrap();
+    assert_eq!(narrow_results.len(), 6);
+    assert_eq!(std::fs::read_to_string(&cache_path).unwrap().lines().count(), 6);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -37,8 +37,7 @@ fn cfg(dir: &Path) -> RunConfig {
         out: Some(dir.join("results.jsonl")),
         cache: Some(dir.join("cache.jsonl")),
         shard_size: 4,
-        limit_shards: None,
-        threads: 0,
+        ..RunConfig::default()
     }
 }
 

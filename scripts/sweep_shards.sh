@@ -1,0 +1,47 @@
+#!/usr/bin/env bash
+# Fan one sweep spec across M local shard processes, then merge the
+# per-shard stores into the canonical grid-ordered store.
+#
+#   scripts/sweep_shards.sh SPEC OUT M [extra `replica sweep` flags...]
+#
+# Each shard process runs `replica sweep --spec SPEC --out OUT
+# --shard K/M`, writing OUT's per-shard store (OUT with `.jsonl`
+# replaced by `.shard-K-of-M.jsonl`) and a per-shard estimate cache —
+# no file is shared between processes. A failed or killed shard can be
+# resumed by rerunning this script (finished shards are no-op resumes).
+# The final merge writes OUT byte-identical to a single-process
+# `replica sweep --spec SPEC --out OUT` run; CI's
+# sweep-shard-determinism job cmp's exactly that.
+set -euo pipefail
+
+if [ "$#" -lt 3 ]; then
+  echo "usage: $0 SPEC OUT M [extra sweep flags...]" >&2
+  exit 2
+fi
+spec=$1
+out=$2
+m=$3
+shift 3
+
+root="$(cd "$(dirname "$0")/.." && pwd)"
+bin="$root/rust/target/release/replica"
+if [ ! -x "$bin" ]; then
+  (cd "$root/rust" && cargo build --release)
+fi
+
+pids=()
+for ((k = 0; k < m; k++)); do
+  "$bin" sweep --spec "$spec" --out "$out" --shard "$k/$m" "$@" &
+  pids+=("$!")
+done
+
+status=0
+for pid in "${pids[@]}"; do
+  wait "$pid" || status=1
+done
+if [ "$status" -ne 0 ]; then
+  echo "sweep_shards: a shard process failed; rerun this script to resume" >&2
+  exit 1
+fi
+
+"$bin" sweep-merge --spec "$spec" --out "$out" --shards "$m" "$@"
