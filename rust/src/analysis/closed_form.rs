@@ -167,7 +167,7 @@ pub fn numeric_mean_var_assignment(
         }
         1.0 - prod
     };
-    let rmin = *assignment.iter().max().unwrap();
+    let rmin = assignment.iter().copied().max().unwrap_or(1);
     mean_var_from_survival(s_job, batch, rmin, assignment.len())
 }
 

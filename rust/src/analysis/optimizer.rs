@@ -91,13 +91,8 @@ pub fn sexp_mean_optimal_b_cor2(n: usize, delta: f64, mu: f64) -> usize {
     let target = n as f64 * delta * mu;
     feasible_b(n)
         .into_iter()
-        .min_by(|&a, &b| {
-            (a as f64 - target)
-                .abs()
-                .partial_cmp(&(b as f64 - target).abs())
-                .unwrap()
-        })
-        .unwrap()
+        .min_by(|&a, &b| (a as f64 - target).abs().total_cmp(&(b as f64 - target).abs()))
+        .unwrap_or(n)
 }
 
 /// Theorem 7: regime of the CoV-optimal point for τ ~ SExp.

@@ -23,8 +23,7 @@ impl Args {
             if let Some(flag) = tok.strip_prefix("--") {
                 if let Some((k, v)) = flag.split_once('=') {
                     a.flags.insert(k.to_string(), v.to_string());
-                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
-                    let v = it.next().unwrap();
+                } else if let Some(v) = it.next_if(|n| !n.starts_with("--")) {
                     a.flags.insert(flag.to_string(), v);
                 } else {
                     a.flags.insert(flag.to_string(), "true".to_string());

@@ -154,7 +154,10 @@ pub fn sweep(args: &mut Args) -> Result<()> {
         vec!["B", "batch size", "E[T]", "CoV[T]", "speedup vs B=N"],
     );
     let sweep = planner.sweep();
-    let baseline = sweep.last().expect("non-empty").mean;
+    let baseline = sweep
+        .last()
+        .ok_or_else(|| Error::Internal("sweep produced no points".into()))?
+        .mean;
     for p in &sweep {
         t.row(vec![
             p.batches.to_string(),

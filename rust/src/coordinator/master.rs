@@ -214,7 +214,9 @@ impl Coordinator {
                 .batch_workers
                 .iter()
                 .position(|ws| ws.contains(&w))
-                .expect("every worker hosts a batch");
+                .ok_or_else(|| {
+                    Error::Internal(format!("worker {w} hosts no batch in the layout"))
+                })?;
             self.work_txs[w]
                 .send(WorkItem { round, batch, beta: beta.clone(), tasks, delay })
                 .map_err(|_| Error::Coordinator(format!("worker {w} hung up")))?;

@@ -57,9 +57,8 @@ impl AliasTable {
                 large.push(i);
             }
         }
-        while !small.is_empty() && !large.is_empty() {
-            let s = small.pop().expect("checked non-empty");
-            let l = *large.last().expect("checked non-empty");
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
             alias[s] = l as u32;
             // donate (1 − prob[s]) from cell l to top up cell s; l
             // stays a donor until it dips below one cell of mass

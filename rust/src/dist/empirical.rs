@@ -18,7 +18,7 @@ impl Empirical {
     pub fn new(mut samples: Vec<f64>) -> Empirical {
         assert!(!samples.is_empty(), "Empirical needs at least one sample");
         assert!(samples.iter().all(|x| x.is_finite()), "Empirical samples must be finite");
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(f64::total_cmp);
         Empirical { sorted: samples }
     }
 

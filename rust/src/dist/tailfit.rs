@@ -66,7 +66,7 @@ impl TailFit {
     /// samples equal) fall back to an exponential classification.
     pub fn classify(samples: &[f64]) -> TailFit {
         let mut xs: Vec<f64> = samples.iter().copied().filter(|x| x.is_finite()).collect();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
         let n = xs.len();
         if n < 3 {
             let min = xs.first().copied().unwrap_or(0.0).max(0.0);

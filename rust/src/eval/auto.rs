@@ -1,7 +1,7 @@
 //! Auto backend: exact when possible, simulation when not.
 
 use crate::eval::{substream, Analytic, Estimate, Estimator, MonteCarlo, Scenario};
-use crate::util::error::Result;
+use crate::util::error::{Error, Result};
 
 /// Analytic-first estimator with a transparent Monte-Carlo fallback.
 ///
@@ -78,10 +78,15 @@ impl Estimator for Auto {
                 results[i] = Some(estimate);
             }
         }
-        Ok(results
+        results
             .into_iter()
-            .map(|estimate| estimate.expect("every scenario answered"))
-            .collect())
+            .enumerate()
+            .map(|(i, estimate)| {
+                estimate.ok_or_else(|| {
+                    Error::Internal(format!("scenario {i} answered by neither backend"))
+                })
+            })
+            .collect()
     }
 }
 

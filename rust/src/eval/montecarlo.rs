@@ -154,7 +154,9 @@ impl MonteCarlo {
             });
         }
 
-        if let Some((_, _, error)) = first_error.into_inner().unwrap() {
+        let first_error =
+            first_error.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if let Some((_, _, error)) = first_error {
             return Err(error);
         }
 
@@ -238,9 +240,13 @@ fn run_unit(
     // final minimum (and thus the reported error) is unchanged and
     // stays independent of scheduling. One lock per unit, amortized
     // over >= MIN_UNIT_REPS replications.
-    if let Some((s, r, _)) = first_error.lock().unwrap().as_ref() {
-        if (*s, *r) < (scen, lo) {
-            return;
+    {
+        let seen =
+            first_error.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if let Some((s, r, _)) = seen.as_ref() {
+            if (*s, *r) < (scen, lo) {
+                return;
+            }
         }
     }
     for (k, slot) in slots.iter_mut().enumerate() {
@@ -262,7 +268,7 @@ fn record_error(
     rep: usize,
     error: Error,
 ) {
-    let mut guard = slot.lock().unwrap();
+    let mut guard = slot.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
     let replace = match guard.as_ref() {
         None => true,
         Some((s, r, _)) => (scen, rep) < (*s, *r),
@@ -407,12 +413,16 @@ impl Default for MonteCarlo {
 impl Estimator for MonteCarlo {
     fn evaluate(&self, scenario: &Scenario) -> Result<Estimate> {
         let mut batch = self.run_batch(&[(scenario, self.seed)])?;
-        Ok(batch.pop().expect("one item in, one estimate out"))
+        batch
+            .pop()
+            .ok_or_else(|| Error::Internal("one item in, zero estimates out".into()))
     }
 
     fn evaluate_at(&self, scenario: &Scenario, index: u64) -> Result<Estimate> {
         let mut batch = self.run_batch(&[(scenario, substream(self.seed, index))])?;
-        Ok(batch.pop().expect("one item in, one estimate out"))
+        batch
+            .pop()
+            .ok_or_else(|| Error::Internal("one item in, zero estimates out".into()))
     }
 
     fn evaluate_many(&self, scenarios: &[Scenario]) -> Result<Vec<Estimate>> {

@@ -60,7 +60,7 @@ pub fn run(
         })
         .collect();
     // sort by numeric mean so the table reads best-to-worst
-    rows.sort_by(|x, y| x.mean_numeric.partial_cmp(&y.mean_numeric).unwrap());
+    rows.sort_by(|x, y| x.mean_numeric.total_cmp(&y.mean_numeric));
     Ok(rows)
 }
 

@@ -65,10 +65,7 @@ pub fn table(mus: &[f64]) -> Table {
     let argmins: Vec<usize> = sweeps
         .iter()
         .map(|sw| {
-            sw.iter()
-                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-                .map(|(b, _, _)| *b)
-                .unwrap()
+            sw.iter().min_by(|a, b| a.1.total_cmp(&b.1)).map_or(0, |(b, _, _)| *b)
         })
         .collect();
     for (i, b) in feasible_b(N).into_iter().enumerate() {

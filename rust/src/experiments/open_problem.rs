@@ -35,7 +35,7 @@ pub fn explore(n: usize, b: usize, tau: &ServiceDist) -> Result<Vec<ConcaveRow>>
             ConcaveRow { assignment: a, mean }
         })
         .collect();
-    rows.sort_by(|x, y| x.mean.partial_cmp(&y.mean).unwrap());
+    rows.sort_by(|x, y| x.mean.total_cmp(&y.mean));
     Ok(rows)
 }
 
@@ -62,7 +62,7 @@ pub fn table(n: usize, b: usize) -> Result<Table> {
     ] {
         let rows = explore(n, b, &tau)?;
         let best = &rows[0];
-        let worst = rows.last().unwrap();
+        let worst = rows.last().unwrap_or(best);
         let optimal = best.assignment == balanced(n, b);
         t.row(vec![
             tau.label(),

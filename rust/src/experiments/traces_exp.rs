@@ -66,7 +66,11 @@ pub fn job_sweep(
             }
         })
         .collect::<Result<_>>()?;
-    let baseline = rows.last().expect("non-empty").1; // B = N (no redundancy)
+    // last row is B = N (no redundancy)
+    let baseline = rows
+        .last()
+        .ok_or_else(|| Error::Internal(format!("job {job_id}: sweep has no rows")))?
+        .1;
     Ok(rows.into_iter().map(|(b, m)| (b, m / baseline)).collect())
 }
 
@@ -106,7 +110,7 @@ pub fn table(
     let argmins: Vec<usize> = sweeps
         .iter()
         .map(|sw| {
-            sw.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).map(|(b, _)| *b).unwrap()
+            sw.iter().min_by(|a, b| a.1.total_cmp(&b.1)).map_or(0, |(b, _)| *b)
         })
         .collect();
     let bs: Vec<usize> = sweeps[0].iter().map(|(b, _)| *b).collect();

@@ -111,7 +111,7 @@ impl Summary {
         if self.samples.is_empty() {
             return f64::NAN;
         }
-        self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        self.samples.sort_by(f64::total_cmp);
         let idx = ((q * (self.samples.len() - 1) as f64).round()) as usize;
         self.samples[idx]
     }

@@ -167,7 +167,11 @@ impl Planner {
         let chosen = choose(&sweep, objective).ok_or_else(|| {
             Error::Config("no operating point produced a finite estimate".into())
         })?;
-        let baseline = sweep.last().expect("non-empty").mean; // B = N
+        // last point is B = N (no redundancy)
+        let baseline = sweep
+            .last()
+            .ok_or_else(|| Error::Internal("sweep produced no points".into()))?
+            .mean;
         Ok(Plan {
             workers: self.n,
             batches: chosen.batches,

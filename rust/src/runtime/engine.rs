@@ -91,7 +91,9 @@ impl Engine {
             log::debug!("compiled artifact '{name}' from {}", path.display());
             self.compiled.insert(name.to_string(), exe);
         }
-        Ok(self.compiled.get(name).expect("just inserted"))
+        self.compiled.get(name).ok_or_else(|| {
+            Error::Internal(format!("artifact '{name}' vanished after compilation"))
+        })
     }
 
     /// Execute an entrypoint with plain (fresh) inputs.
@@ -155,13 +157,18 @@ impl Engine {
         for (i, a) in args.iter().enumerate() {
             match a {
                 Arg::Fresh(_) => {
-                    let (idx, buf) =
-                        scratch_iter.next().expect("scratch entry per fresh arg");
+                    let (idx, buf) = scratch_iter.next().ok_or_else(|| {
+                        Error::Internal(format!("{name}: no scratch buffer for input {i}"))
+                    })?;
                     debug_assert_eq!(*idx, i);
                     buf_refs.push(buf);
                 }
                 Arg::Cached { key, .. } => {
-                    buf_refs.push(self.buffers.get(key).expect("inserted in pass 1"));
+                    buf_refs.push(self.buffers.get(key).ok_or_else(|| {
+                        Error::Internal(format!(
+                            "{name}: input {i} missing from the device cache"
+                        ))
+                    })?);
                 }
             }
         }

@@ -144,14 +144,13 @@ pub fn merge(
         }
     }
     let missing = outcomes.iter().filter(|outcome| outcome.is_none()).count();
-    if missing > 0 {
-        let first = set
-            .cases
-            .iter()
-            .zip(&outcomes)
-            .find(|(_, outcome)| outcome.is_none())
-            .map(|(case, _)| case)
-            .expect("missing > 0");
+    let first_gap = set
+        .cases
+        .iter()
+        .zip(&outcomes)
+        .find(|(_, outcome)| outcome.is_none())
+        .map(|(case, _)| case);
+    if let Some(first) = first_gap {
         return Err(Error::Config(format!(
             "merge is missing {missing} of {} cases (first: {} — job {}, B={}); \
              run the unfinished shard(s) to completion and re-merge",
@@ -161,8 +160,8 @@ pub fn merge(
             first.batches()
         )));
     }
-    let outcomes: Vec<CaseOutcome> =
-        outcomes.into_iter().map(|outcome| outcome.expect("coverage checked")).collect();
+    // every slot is Some: `first_gap` above found no gap
+    let outcomes: Vec<CaseOutcome> = outcomes.into_iter().flatten().collect();
     let mut text = String::new();
     for (case, outcome) in set.cases.iter().zip(&outcomes) {
         text.push_str(&render_record(case, outcome));

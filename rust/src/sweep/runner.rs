@@ -38,7 +38,7 @@ use crate::sweep::store::{
     render_record, CaseOutcome, EstimateCache, ResultStore, ShardHeader, StoredEstimate,
 };
 use crate::traces::Trace;
-use crate::util::error::Result;
+use crate::util::error::{Error, Result};
 
 /// Engine configuration (everything that is *not* part of a case's
 /// content: where to persist, how to shard, how wide to fan out).
@@ -236,9 +236,12 @@ fn evaluate_shard(
                 for &i in &idxs {
                     let item = [(&shard[i].scenario, shard[i].stream_seed)];
                     outcomes[i] = Some(match mc.run_batch(&item) {
-                        Ok(mut v) => {
-                            CaseOutcome::Ok(StoredEstimate::of(&v.pop().expect("one estimate")))
-                        }
+                        Ok(mut v) => match v.pop() {
+                            Some(est) => CaseOutcome::Ok(StoredEstimate::of(&est)),
+                            None => CaseOutcome::Error(
+                                "one item in, zero estimates out".to_string(),
+                            ),
+                        },
                         Err(e) => CaseOutcome::Error(e.to_string()),
                     });
                 }
@@ -246,10 +249,18 @@ fn evaluate_shard(
         }
     }
     for &i in &fresh {
-        let outcome = outcomes[i].clone().expect("every fresh case evaluated");
+        let outcome = outcomes[i].clone().ok_or_else(|| {
+            Error::Internal(format!("fresh case {i} was never evaluated"))
+        })?;
         cache.insert(shard[i].key, outcome)?;
     }
-    Ok(outcomes.into_iter().map(|o| o.expect("every case answered")).collect())
+    outcomes
+        .into_iter()
+        .enumerate()
+        .map(|(i, o)| {
+            o.ok_or_else(|| Error::Internal(format!("case {i} was never evaluated")))
+        })
+        .collect()
 }
 
 fn analytic_outcome(scenario: &Scenario) -> CaseOutcome {

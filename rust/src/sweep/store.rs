@@ -234,7 +234,8 @@ fn read_valid_prefix(file: &mut File) -> Result<String> {
         Err(e) => e.valid_up_to(),
     };
     bytes.truncate(valid);
-    Ok(String::from_utf8(bytes).expect("prefix validated"))
+    String::from_utf8(bytes)
+        .map_err(|e| Error::Internal(format!("validated UTF-8 prefix rejected: {e}")))
 }
 
 /// The grid-ordered JSONL result store.

@@ -28,7 +28,7 @@ impl JobAnalysis {
         let fit = TailFit::classify(&st);
         let empirical = Empirical::new(st.clone());
         let mut sorted = st;
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         let p99 = sorted[((sorted.len() - 1) as f64 * 0.99) as usize];
         Some(JobAnalysis {
             job_id,
@@ -65,7 +65,7 @@ pub fn job_ccdf(trace: &Trace, job_id: u64, max_points: usize) -> Vec<(f64, f64)
     if st.is_empty() {
         return Vec::new();
     }
-    st.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    st.sort_by(f64::total_cmp);
     let n = st.len();
     let stride = (n / max_points.max(1)).max(1);
     let mut pts = Vec::new();

@@ -31,6 +31,12 @@ pub enum Error {
 
     /// Coordinator-level failures (worker panic, channel closed, ...).
     Coordinator(String),
+
+    /// An internal invariant was violated. Reaching this variant is a
+    /// bug in the crate, not in the caller's input; it exists so library
+    /// code can propagate broken invariants instead of panicking (the
+    /// detlint D2 rule).
+    Internal(String),
 }
 
 impl fmt::Display for Error {
@@ -45,6 +51,9 @@ impl fmt::Display for Error {
                 write!(f, "missing artifact: {msg} (run `make artifacts`)")
             }
             Error::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+            Error::Internal(msg) => {
+                write!(f, "internal invariant violated: {msg} (please file a bug)")
+            }
         }
     }
 }

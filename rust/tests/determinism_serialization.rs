@@ -1,0 +1,86 @@
+//! Byte-identity regression tests for every result-serialization path.
+//!
+//! The determinism contract (rust/README.md, enforced at the source
+//! level by `tools/detlint`) promises that serialized results are
+//! **byte-identical** across repeated runs and across evaluation
+//! fan-out widths. These tests pin the contract end to end: evaluate →
+//! serialize twice → compare raw bytes, so an accidental `HashMap` (or
+//! any other iteration-order dependence) on an export path fails CI
+//! with a one-line diff, not a flaky downstream figure.
+
+use std::path::PathBuf;
+
+use replica::metrics::{export_csv, export_json, SeriesExport};
+use replica::sweep::{run, CaseOutcome, RunConfig, ScenarioSet, SweepSpec, Workload};
+
+fn test_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("replica_det_ser_{name}"));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn small_set() -> ScenarioSet {
+    let mut spec = SweepSpec::for_trace();
+    spec.workload = Some(Workload::Generate { jobs: 2, tasks_per_job: 8, seed: 11 });
+    spec.reps = 120;
+    spec.seed = 3;
+    spec.shard_size = 4;
+    ScenarioSet::from_trace(&spec.load_trace().unwrap(), &spec).unwrap()
+}
+
+/// Evaluate the set at the given fan-out width and serialize the
+/// resulting curve through both exporters, returning the raw bytes.
+fn evaluate_and_export(dir: &std::path::Path, tag: &str, threads: usize) -> (String, String) {
+    let set = small_set();
+    let cfg = RunConfig { threads, ..RunConfig::default() };
+    let results = run(&set, &cfg).unwrap();
+    assert_eq!(results.len(), set.len());
+
+    let mut series = SeriesExport::new("sweep", "case", vec!["mean", "p99"]);
+    for (i, result) in results.iter().enumerate() {
+        let est = match &result.outcome {
+            CaseOutcome::Ok(est) => est,
+            CaseOutcome::Error(msg) => panic!("case {i} failed: {msg}"),
+        };
+        series.push(i as f64, vec![est.mean, est.p99]);
+    }
+    let csv_path = dir.join(format!("{tag}.csv"));
+    let json_path = dir.join(format!("{tag}.json"));
+    export_csv(&csv_path, &[series.clone()]).unwrap();
+    export_json(&json_path, &[series]).unwrap();
+    (std::fs::read_to_string(&csv_path).unwrap(), std::fs::read_to_string(&json_path).unwrap())
+}
+
+#[test]
+fn exports_are_byte_identical_across_runs_and_fanout() {
+    let dir = test_dir("fanout");
+    // serial run, run 1
+    let (csv_a, json_a) = evaluate_and_export(&dir, "a", 1);
+    // serial run, run 2: identical process state must not matter
+    let (csv_b, json_b) = evaluate_and_export(&dir, "b", 1);
+    // wide run: pool scheduling must not reach the output bytes
+    let (csv_c, json_c) = evaluate_and_export(&dir, "c", 4);
+    assert_eq!(csv_a, csv_b, "CSV export differs between identical runs");
+    assert_eq!(json_a, json_b, "JSON export differs between identical runs");
+    assert_eq!(csv_a, csv_c, "CSV export depends on evaluation fan-out width");
+    assert_eq!(json_a, json_c, "JSON export depends on evaluation fan-out width");
+    assert!(csv_a.lines().count() > 1, "export actually carried rows");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn persisted_store_is_byte_identical_across_runs() {
+    let dir = test_dir("store");
+    let set = small_set();
+    let mut stores = Vec::new();
+    for tag in ["x", "y"] {
+        let out = dir.join(format!("{tag}.jsonl"));
+        let cfg = RunConfig { shard_size: 4, ..RunConfig::persisted(out.clone()) };
+        let results = run(&set, &cfg).unwrap();
+        assert_eq!(results.len(), set.len());
+        stores.push(std::fs::read_to_string(&out).unwrap());
+    }
+    assert_eq!(stores[0], stores[1], "persisted sweep store differs between identical runs");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,6 @@
+//@path: src/sweep/cache_map.rs
+use std::collections::HashMap;
+
+pub struct Cache {
+    entries: HashMap<u64, String>,
+}

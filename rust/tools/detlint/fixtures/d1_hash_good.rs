@@ -1,0 +1,6 @@
+//@path: src/runtime/lookup.rs
+use std::collections::HashMap;
+
+pub struct Lookup {
+    entries: HashMap<u64, String>,
+}

@@ -1,0 +1,6 @@
+//@path: src/sweep/cache_tree.rs
+use std::collections::BTreeMap;
+
+pub struct Cache {
+    entries: BTreeMap<u64, String>,
+}

@@ -1,0 +1,7 @@
+//@path: src/dist/jitter.rs
+use crate::util::rng::Pcg64;
+
+pub fn jitter() -> f64 {
+    let mut rng = Pcg64::new(42);
+    rng.next_f64()
+}

@@ -1,0 +1,7 @@
+//@path: src/eval/streams.rs
+use crate::eval::substream;
+use crate::util::rng::Pcg64;
+
+pub fn stream(seed: u64, index: u64) -> Pcg64 {
+    Pcg64::new(substream(seed, index))
+}

@@ -1,0 +1,6 @@
+//@path: src/sim/clock.rs
+use std::time::Instant;
+
+pub fn stamp() -> Instant {
+    Instant::now()
+}

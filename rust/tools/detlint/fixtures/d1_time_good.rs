@@ -1,0 +1,6 @@
+//@path: src/metrics/wallclock.rs
+use std::time::Instant;
+
+pub fn stamp() -> Instant {
+    Instant::now()
+}

@@ -1,0 +1,7 @@
+//@path: benches/bench_clock.rs
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    println!("{:?}", t0.elapsed());
+}

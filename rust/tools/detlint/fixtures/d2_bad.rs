@@ -1,0 +1,9 @@
+//@path: src/util/numbers.rs
+pub fn parse(s: &str) -> u32 {
+    let v = s.parse::<u32>().unwrap();
+    let w = v.checked_add(1).expect("overflow");
+    if w == 0 {
+        panic!("zero");
+    }
+    todo!()
+}

@@ -1,0 +1,4 @@
+//@path: src/sim/tuning.rs
+pub fn knob() -> Option<String> {
+    std::env::var("REPLICA_KNOB").ok()
+}

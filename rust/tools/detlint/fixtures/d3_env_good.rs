@@ -1,0 +1,4 @@
+//@path: src/config/env.rs
+pub fn knob() -> Option<String> {
+    std::env::var("REPLICA_KNOB").ok()
+}

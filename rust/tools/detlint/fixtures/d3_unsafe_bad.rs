@@ -1,0 +1,4 @@
+//@path: src/util/bytes.rs
+pub fn first_byte(v: &[u8]) -> u8 {
+    unsafe { *v.as_ptr() }
+}

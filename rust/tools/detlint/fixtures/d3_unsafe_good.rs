@@ -1,0 +1,7 @@
+//@path: src/util/bytes_ok.rs
+pub fn first_byte(v: &[u8]) -> u8 {
+    assert!(!v.is_empty());
+    // SAFETY: the assert above guarantees the slice is non-empty, so
+    // the pointer is valid for one read.
+    unsafe { *v.as_ptr() }
+}

@@ -1,0 +1,7 @@
+//@path: src/eval/batch.rs
+use crate::sim::pool::WorkerPool;
+
+pub fn mean_of(xs: &[f64]) -> f64 {
+    let total = xs.iter().sum::<f64>();
+    total / xs.len() as f64
+}

@@ -1,0 +1,6 @@
+//@path: src/eval/batch_ok.rs
+use crate::sim::pool::WorkerPool;
+
+fn reduce(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>()
+}

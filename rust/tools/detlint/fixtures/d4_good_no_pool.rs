@@ -1,0 +1,4 @@
+//@path: src/analysis/moments.rs
+pub fn mean_of(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}

@@ -1,0 +1,12 @@
+//@path: src/sweep/notes.rs
+//! Doc comment mentions HashMap, x.unwrap() and Instant::now().
+
+/* block comment: SystemTime::now, static mut, Pcg64::new(1)
+   /* nested: .expect( todo! */ still a comment */
+pub fn describe() -> String {
+    let plain = "HashMap .unwrap() Instant::now() env::var";
+    let raw = r#"panic!("inside a raw string") todo!"#;
+    let brace = '{';
+    let escaped = '\n';
+    format!("{plain}{raw}{brace}{escaped}")
+}

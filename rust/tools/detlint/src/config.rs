@@ -1,0 +1,198 @@
+//! Hand-rolled parser for `detlint.toml`.
+//!
+//! The environment is fully offline, so no `toml` crate: the config is
+//! restricted to the tiny subset the lint needs — `[[allow]]` tables
+//! with string values and a `[d4]` table with one string array. Every
+//! allowlist entry must carry a one-line `reason`; entries without one
+//! are reported as lint errors by [`crate::lint_repo`], not here.
+
+/// One `[[allow]]` entry: suppress findings of `rule` in `file` on
+/// lines whose raw text contains `pattern`, because `reason`.
+#[derive(Clone, Debug)]
+pub struct AllowEntry {
+    pub file: String,
+    pub rule: String,
+    pub pattern: String,
+    pub reason: String,
+    /// Line of the `[[allow]]` header in detlint.toml (diagnostics).
+    pub line: usize,
+}
+
+/// Parsed detlint configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub allows: Vec<AllowEntry>,
+    /// Function names that are allowed to hold float reductions in
+    /// pool-parallel files (the serial-reduction helpers, rule D4).
+    pub d4_helpers: Vec<String>,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config { allows: Vec::new(), d4_helpers: vec!["reduce".to_string()] }
+    }
+}
+
+enum Section {
+    Top,
+    Allow,
+    D4,
+}
+
+impl Config {
+    /// Parse the configuration text. Structural problems (unknown
+    /// sections or keys, unquoted values) are hard errors; *semantic*
+    /// problems (stale entries, missing reasons) are lint findings.
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut section = Section::Top;
+        for (idx, raw) in text.lines().enumerate() {
+            let ln = idx + 1;
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if line == "[[allow]]" {
+                cfg.allows.push(AllowEntry {
+                    file: String::new(),
+                    rule: String::new(),
+                    pattern: String::new(),
+                    reason: String::new(),
+                    line: ln,
+                });
+                section = Section::Allow;
+            } else if line == "[d4]" {
+                section = Section::D4;
+            } else if line.starts_with('[') {
+                return Err(format!("detlint.toml:{ln}: unknown section `{line}`"));
+            } else if let Some((key, value)) = line.split_once('=') {
+                let key = key.trim();
+                let value = value.trim();
+                match section {
+                    Section::Top => {
+                        return Err(format!(
+                            "detlint.toml:{ln}: key `{key}` outside any section"
+                        ));
+                    }
+                    Section::Allow => {
+                        let entry = cfg
+                            .allows
+                            .last_mut()
+                            .ok_or_else(|| format!("detlint.toml:{ln}: no open entry"))?;
+                        let s = unquote(value).ok_or_else(|| {
+                            format!("detlint.toml:{ln}: `{key}` wants a quoted string")
+                        })?;
+                        match key {
+                            "file" => entry.file = s,
+                            "rule" => entry.rule = s,
+                            "pattern" => entry.pattern = s,
+                            "reason" => entry.reason = s,
+                            _ => {
+                                return Err(format!(
+                                    "detlint.toml:{ln}: unknown key `{key}` in [[allow]]"
+                                ));
+                            }
+                        }
+                    }
+                    Section::D4 => match key {
+                        "helpers" => {
+                            cfg.d4_helpers = parse_string_array(value).ok_or_else(|| {
+                                format!(
+                                    "detlint.toml:{ln}: `helpers` wants an array of strings"
+                                )
+                            })?;
+                        }
+                        _ => {
+                            return Err(format!(
+                                "detlint.toml:{ln}: unknown key `{key}` in [d4]"
+                            ));
+                        }
+                    },
+                }
+            } else {
+                return Err(format!("detlint.toml:{ln}: cannot parse `{line}`"));
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// `"text"` → `text`. Rejects anything else, including embedded quotes
+/// (patterns never need them: they match raw source substrings).
+fn unquote(value: &str) -> Option<String> {
+    let inner = value.strip_prefix('"')?.strip_suffix('"')?;
+    if inner.contains('"') {
+        return None;
+    }
+    Some(inner.to_string())
+}
+
+fn parse_string_array(value: &str) -> Option<Vec<String>> {
+    let inner = value.strip_prefix('[')?.strip_suffix(']')?;
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        out.push(unquote(part)?);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_entries_and_helpers() {
+        let text = "\
+# a comment
+
+[d4]
+helpers = [\"reduce\", \"merge_serial\"]
+
+[[allow]]
+file = \"src/sim/pool.rs\"
+rule = \"D2\"
+pattern = \".unwrap()\"
+reason = \"poisoning implies a worker already panicked\"
+";
+        let cfg = Config::parse(text).unwrap();
+        assert_eq!(cfg.d4_helpers, vec!["reduce", "merge_serial"]);
+        assert_eq!(cfg.allows.len(), 1);
+        let e = &cfg.allows[0];
+        assert_eq!(e.file, "src/sim/pool.rs");
+        assert_eq!(e.rule, "D2");
+        assert_eq!(e.pattern, ".unwrap()");
+        assert!(e.reason.contains("panicked"));
+        assert_eq!(e.line, 6);
+    }
+
+    #[test]
+    fn empty_config_keeps_default_helpers() {
+        let cfg = Config::parse("").unwrap();
+        assert!(cfg.allows.is_empty());
+        assert_eq!(cfg.d4_helpers, vec!["reduce"]);
+    }
+
+    #[test]
+    fn rejects_unknown_section() {
+        assert!(Config::parse("[nope]\n").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        assert!(Config::parse("[[allow]]\nfiles = \"x\"\n").is_err());
+    }
+
+    #[test]
+    fn rejects_unquoted_value() {
+        assert!(Config::parse("[[allow]]\nfile = src/lib.rs\n").is_err());
+    }
+
+    #[test]
+    fn rejects_key_outside_section() {
+        assert!(Config::parse("file = \"x\"\n").is_err());
+    }
+}

@@ -1,0 +1,277 @@
+//! A tiny line-preserving Rust scanner.
+//!
+//! Not a real lexer: it only needs to tell *code* apart from *comments
+//! and literal contents*, so the rule patterns in [`crate::rules`]
+//! never fire on a string that happens to contain `.unwrap()` or a
+//! comment that mentions `HashMap`. The scanner handles line comments,
+//! nested block comments, string literals with escapes (including the
+//! `\<newline>` continuation, which must not swallow the line break),
+//! raw strings (`r"…"`, `r#"…"#`), and char literals vs lifetimes.
+//!
+//! Known simplification: byte/raw-byte literals (`b"…"`, `br"…"`) are
+//! scanned as ordinary strings, which is fine because `b"…"` allows
+//! the same escapes and `br"…"` does not occur in this crate.
+
+/// One source line, split into blanked code and extracted comments.
+#[derive(Clone, Debug, Default)]
+pub struct LexedLine {
+    /// Code with comments and literal *contents* blanked to spaces.
+    /// Delimiters (`"`, `'`, `r#"`) are preserved so columns line up.
+    pub code: String,
+    /// The comment text that appeared on this line, if any.
+    pub comment: String,
+}
+
+enum State {
+    Normal,
+    LineComment,
+    /// Block comment with its nesting depth.
+    Block(u32),
+    Str,
+    /// Raw string with its `#` count.
+    RawStr(usize),
+    Char,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Scan `src` into per-line code/comment pairs. Line `i` of the input
+/// (0-based) is element `i` of the output.
+pub fn lex(src: &str) -> Vec<LexedLine> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = Vec::new();
+    let mut line = LexedLine::default();
+    let mut state = State::Normal;
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        let next = if i + 1 < n { chars[i + 1] } else { '\0' };
+        if c == '\n' {
+            out.push(std::mem::take(&mut line));
+            if matches!(state, State::LineComment) {
+                state = State::Normal;
+            }
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Normal => {
+                if c == '/' && next == '/' {
+                    state = State::LineComment;
+                    line.code.push_str("  ");
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    state = State::Block(1);
+                    line.code.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Str;
+                    line.code.push('"');
+                    i += 1;
+                } else if c == 'r' && raw_string_hashes(&chars, i).is_some() {
+                    let hashes = raw_string_hashes(&chars, i).unwrap_or(0);
+                    state = State::RawStr(hashes);
+                    line.code.push('r');
+                    for _ in 0..hashes {
+                        line.code.push('#');
+                    }
+                    line.code.push('"');
+                    i += 2 + hashes;
+                } else if c == '\'' {
+                    if next == '\\' {
+                        // escaped char literal: '\n', '\u{..}', ...
+                        state = State::Char;
+                        line.code.push('\'');
+                        i += 1;
+                    } else if i + 2 < n && chars[i + 2] == '\'' && next != '\'' {
+                        // simple char literal 'x' — blank the payload so
+                        // '{' and '}' cannot corrupt brace depth
+                        line.code.push('\'');
+                        line.code.push_str("  ");
+                        i += 3;
+                    } else {
+                        // a lifetime: keep as code
+                        line.code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    line.code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                line.comment.push(c);
+                line.code.push(' ');
+                i += 1;
+            }
+            State::Block(depth) => {
+                if c == '/' && next == '*' {
+                    state = State::Block(depth + 1);
+                    line.code.push_str("  ");
+                    i += 2;
+                } else if c == '*' && next == '/' {
+                    line.code.push_str("  ");
+                    state = if depth == 1 {
+                        State::Normal
+                    } else {
+                        State::Block(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    line.comment.push(c);
+                    line.code.push(' ');
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    if next == '\n' {
+                        // string continuation: let the main loop see the
+                        // newline so line numbers stay correct
+                        line.code.push(' ');
+                        i += 1;
+                    } else {
+                        line.code.push_str("  ");
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    state = State::Normal;
+                    line.code.push('"');
+                    i += 1;
+                } else {
+                    line.code.push(' ');
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                let closes = c == '"'
+                    && chars[i + 1..].iter().take(hashes).filter(|&&h| h == '#').count()
+                        == hashes;
+                if closes {
+                    state = State::Normal;
+                    line.code.push('"');
+                    for _ in 0..hashes {
+                        line.code.push('#');
+                    }
+                    i += 1 + hashes;
+                } else {
+                    line.code.push(' ');
+                    i += 1;
+                }
+            }
+            State::Char => {
+                if c == '\\' {
+                    line.code.push_str("  ");
+                    i += 2;
+                } else if c == '\'' {
+                    state = State::Normal;
+                    line.code.push('\'');
+                    i += 1;
+                } else {
+                    line.code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !line.code.is_empty() || !line.comment.is_empty() {
+        out.push(line);
+    }
+    out
+}
+
+/// If position `i` (an `r`) starts a raw string, return its `#` count.
+/// The `r` must not be the tail of an identifier (`for r in ...`).
+fn raw_string_hashes(chars: &[char], i: usize) -> Option<usize> {
+    if i > 0 && is_ident(chars[i - 1]) {
+        return None;
+    }
+    let mut j = i + 1;
+    let mut hashes = 0;
+    while j < chars.len() && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < chars.len() && chars[j] == '"' {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        lex(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn line_comments_are_blanked() {
+        let code = code_of("let x = 1; // x.unwrap()\n");
+        assert_eq!(code[0].trim_end(), "let x = 1;");
+        let comments: Vec<String> = lex("let x = 1; // x.unwrap()\n")
+            .into_iter()
+            .map(|l| l.comment)
+            .collect();
+        assert!(comments[0].contains("x.unwrap()"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "a /* one /* two */ still */ b\nc\n";
+        let code = code_of(src);
+        assert!(!code[0].contains("one"));
+        assert!(!code[0].contains("still"));
+        assert!(code[0].contains('a') && code[0].contains('b'));
+        assert_eq!(code[1].trim_end(), "c");
+    }
+
+    #[test]
+    fn string_contents_are_blanked_delimiters_kept() {
+        let code = code_of("let s = \".unwrap()\";\n");
+        assert!(!code[0].contains(".unwrap()"));
+        assert!(code[0].contains('"'));
+    }
+
+    #[test]
+    fn string_continuation_keeps_line_count() {
+        let src = "let s = \"first \\\n    second\";\nlet y = 2;\n";
+        let code = code_of(src);
+        assert_eq!(code.len(), 3);
+        assert_eq!(code[2].trim_end(), "let y = 2;");
+    }
+
+    #[test]
+    fn raw_strings() {
+        let code = code_of("let s = r#\"no \".unwrap()\" here\"#;\nnext\n");
+        assert!(!code[0].contains(".unwrap()"));
+        assert_eq!(code[1].trim_end(), "next");
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let code = code_of("let c = '{'; let v: Vec<&'static str> = vec![];\n");
+        assert!(!code[0].contains('{'), "char payload must be blanked: {}", code[0]);
+        assert!(code[0].contains("'static"));
+    }
+
+    #[test]
+    fn escaped_char_literal() {
+        let code = code_of("let c = '\\n'; let d = x.unwrap();\n");
+        assert!(code[0].contains(".unwrap()"));
+    }
+
+    #[test]
+    fn multiline_string_tracks_lines() {
+        let src = "let s = \"line one\nline two\";\nlet z = 1;\n";
+        let code = code_of(src);
+        assert_eq!(code.len(), 3);
+        assert!(!code[1].contains("line two"));
+        assert_eq!(code[2].trim_end(), "let z = 1;");
+    }
+}

@@ -1,0 +1,181 @@
+//! detlint — source-level determinism & safety lint for the replica
+//! crate.
+//!
+//! The crate's headline guarantee is that estimates are bit-identical
+//! across thread counts, shard layouts, and kill/resume. detlint
+//! enforces the source-level half of that contract (see the
+//! "Determinism contract" section of `rust/README.md`):
+//!
+//! - **D1-TIME** — no `Instant::now`/`SystemTime::now` outside
+//!   `metrics/` and `benches/`.
+//! - **D1-HASH** — no `HashMap`/`HashSet` in result-serializing
+//!   modules (`sweep/`, `metrics/`, `planner/`, `util/json.rs`).
+//! - **D1-RNG** — no direct `Pcg64::new` seeding outside `util/rng`
+//!   and `eval/` (substream derivation).
+//! - **D2** — no `unwrap`/`expect`/`panic!`/`todo!` in non-test
+//!   library code.
+//! - **D3-MUT / D3-ENV / D3-UNSAFE** — no `static mut`, no
+//!   environment reads outside `config/` + `sim/pool.rs`, and every
+//!   `unsafe` carries a `// SAFETY:` comment.
+//! - **D4** — float reductions in pool-parallel files must live in a
+//!   serial-reduction helper.
+//!
+//! Violations are either fixed or allowlisted in `rust/detlint.toml`,
+//! where every entry needs a one-line justification; unexplained or
+//! stale entries are themselves findings (rule `ALLOWLIST`).
+
+pub mod config;
+pub mod lexer;
+pub mod rules;
+
+pub use config::{AllowEntry, Config};
+pub use rules::{lint_source, Finding, Rule};
+
+use std::path::{Path, PathBuf};
+
+/// Directories under the `rust/` root that are linted.
+pub const WALK_DIRS: &[&str] = &["src", "tests", "benches", "examples"];
+
+/// Result of a whole-repo lint run.
+#[derive(Debug)]
+pub struct Report {
+    /// Findings that survived the allowlist, plus allowlist problems.
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+}
+
+/// Lint every `.rs` file under the walk dirs of `root` (the `rust/`
+/// directory), apply the allowlist, and validate the allowlist itself.
+pub fn lint_repo(root: &Path, cfg: &Config) -> std::io::Result<Report> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for dir in WALK_DIRS {
+        collect_rs_files(&root.join(dir), &mut files)?;
+    }
+    files.sort();
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut used = vec![false; cfg.allows.len()];
+    for path in &files {
+        let rel = rel_path(root, path);
+        let src = std::fs::read_to_string(path)?;
+        for finding in lint_source(&rel, &src, cfg) {
+            let mut suppressed = false;
+            for (i, entry) in cfg.allows.iter().enumerate() {
+                if entry.file == finding.file
+                    && entry.rule == finding.rule.id()
+                    && !entry.pattern.is_empty()
+                    && finding.raw.contains(&entry.pattern)
+                {
+                    used[i] = true;
+                    suppressed = true;
+                }
+            }
+            if !suppressed {
+                findings.push(finding);
+            }
+        }
+    }
+
+    for (i, entry) in cfg.allows.iter().enumerate() {
+        let mut bad = |message: String| {
+            findings.push(Finding {
+                file: "detlint.toml".to_string(),
+                line: entry.line,
+                rule: Rule::Allowlist,
+                message,
+                raw: String::new(),
+            });
+        };
+        let well_formed = describe_malformed(entry);
+        if let Some(problem) = well_formed {
+            bad(problem);
+        } else if !root.join(&entry.file).is_file() {
+            bad(format!("stale entry: `{}` does not exist", entry.file));
+        } else if !used[i] {
+            bad(format!(
+                "stale entry: `{}` / {} / `{}` suppresses nothing",
+                entry.file, entry.rule, entry.pattern
+            ));
+        }
+    }
+
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(Report { findings, files: files.len() })
+}
+
+/// Structural problems with one allowlist entry, if any.
+fn describe_malformed(entry: &AllowEntry) -> Option<String> {
+    if entry.file.is_empty() {
+        return Some("entry is missing `file`".to_string());
+    }
+    if Rule::from_id(&entry.rule).is_none() {
+        return Some(format!("unknown rule `{}`", entry.rule));
+    }
+    if entry.pattern.is_empty() {
+        return Some("entry is missing `pattern` (blanket allows are not allowed)".into());
+    }
+    if entry.reason.trim().is_empty() {
+        return Some(format!(
+            "entry for `{}` / {} has no justification (`reason = ...`)",
+            entry.file, entry.rule
+        ));
+    }
+    None
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// `root/src/sim/pool.rs` → `src/sim/pool.rs`, with `/` separators.
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    let parts: Vec<String> =
+        rel.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+    parts.join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_path_uses_forward_slashes() {
+        let root = Path::new("/repo/rust");
+        let path = Path::new("/repo/rust/src/sim/pool.rs");
+        assert_eq!(rel_path(root, path), "src/sim/pool.rs");
+    }
+
+    #[test]
+    fn malformed_entries_are_described() {
+        let mut entry = AllowEntry {
+            file: "src/lib.rs".into(),
+            rule: "D2".into(),
+            pattern: ".unwrap()".into(),
+            reason: "because".into(),
+            line: 1,
+        };
+        assert!(describe_malformed(&entry).is_none());
+        entry.reason.clear();
+        assert!(describe_malformed(&entry).is_some_and(|m| m.contains("justification")));
+        entry.rule = "D9".into();
+        assert!(describe_malformed(&entry).is_some_and(|m| m.contains("unknown rule")));
+        entry.rule = "D2".into();
+        entry.pattern.clear();
+        assert!(describe_malformed(&entry).is_some_and(|m| m.contains("pattern")));
+    }
+}

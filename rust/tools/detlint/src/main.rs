@@ -1,0 +1,63 @@
+//! CLI entry point: `cargo run -p detlint [-- --root PATH]`.
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage/config/IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use detlint::{lint_repo, Config};
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(findings) if findings == 0 => ExitCode::SUCCESS,
+        Ok(_) => ExitCode::FAILURE,
+        Err(message) => {
+            eprintln!("detlint: {message}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run() -> Result<usize, String> {
+    // Default root: the rust/ directory two levels above this crate.
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    root.pop();
+    root.pop();
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => {
+                root = PathBuf::from(
+                    args.next().ok_or_else(|| "--root needs a path".to_string())?,
+                );
+            }
+            "--help" | "-h" => {
+                println!("usage: detlint [--root PATH]");
+                println!("lints src/, tests/, benches/, examples/ under PATH");
+                println!("against the rules in PATH/detlint.toml");
+                return Ok(0);
+            }
+            other => return Err(format!("unknown argument `{other}`")),
+        }
+    }
+
+    let config_path = root.join("detlint.toml");
+    let cfg = if config_path.is_file() {
+        let text = std::fs::read_to_string(&config_path)
+            .map_err(|e| format!("{}: {e}", config_path.display()))?;
+        Config::parse(&text)?
+    } else {
+        Config::default()
+    };
+
+    let report = lint_repo(&root, &cfg).map_err(|e| format!("walking {}: {e}", root.display()))?;
+    for f in &report.findings {
+        println!("{}:{}: [{}] {}", f.file, f.line, f.rule.id(), f.message);
+    }
+    if report.findings.is_empty() {
+        println!("detlint: clean ({} files)", report.files);
+    } else {
+        println!("detlint: {} finding(s) in {} files", report.findings.len(), report.files);
+    }
+    Ok(report.findings.len())
+}

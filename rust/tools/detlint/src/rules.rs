@@ -1,0 +1,416 @@
+//! The determinism & safety rules (D1–D4) and the per-file scanner.
+//!
+//! Rules operate on comment/literal-blanked code lines from
+//! [`crate::lexer`], with two pieces of region state tracked by brace
+//! depth: test regions (`#[cfg(test)]` mods and `#[test]` fns, where
+//! most rules do not apply) and the enclosing function name (for the
+//! D4 serial-reduction helpers).
+
+use crate::config::Config;
+use crate::lexer::{lex, LexedLine};
+
+/// Rule identifiers. `Allowlist` covers problems with detlint.toml
+/// itself (missing justification, stale entry) — those are produced by
+/// [`crate::lint_repo`], never by [`lint_source`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    D1Time,
+    D1Hash,
+    D1Rng,
+    D2,
+    D3Mut,
+    D3Env,
+    D3Unsafe,
+    D4,
+    Allowlist,
+}
+
+impl Rule {
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::D1Time => "D1-TIME",
+            Rule::D1Hash => "D1-HASH",
+            Rule::D1Rng => "D1-RNG",
+            Rule::D2 => "D2",
+            Rule::D3Mut => "D3-MUT",
+            Rule::D3Env => "D3-ENV",
+            Rule::D3Unsafe => "D3-UNSAFE",
+            Rule::D4 => "D4",
+            Rule::Allowlist => "ALLOWLIST",
+        }
+    }
+
+    /// The rules an `[[allow]]` entry may name (everything but
+    /// `Allowlist`: config problems cannot be allowlisted away).
+    pub fn from_id(id: &str) -> Option<Rule> {
+        match id {
+            "D1-TIME" => Some(Rule::D1Time),
+            "D1-HASH" => Some(Rule::D1Hash),
+            "D1-RNG" => Some(Rule::D1Rng),
+            "D2" => Some(Rule::D2),
+            "D3-MUT" => Some(Rule::D3Mut),
+            "D3-ENV" => Some(Rule::D3Env),
+            "D3-UNSAFE" => Some(Rule::D3Unsafe),
+            "D4" => Some(Rule::D4),
+            _ => None,
+        }
+    }
+}
+
+/// One lint finding.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Path relative to the `rust/` root, with `/` separators.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+    /// Raw source text of the line (allowlist patterns match this).
+    pub raw: String,
+}
+
+/// How many comment lines above an `unsafe` keyword may hold its
+/// `// SAFETY:` justification.
+const SAFETY_LOOKBACK: usize = 10;
+
+/// Lint one file. `path` is the `rust/`-relative path and drives the
+/// per-module scoping below; fixtures use an `//@path:` directive to
+/// pick theirs.
+pub fn lint_source(path: &str, src: &str, cfg: &Config) -> Vec<Finding> {
+    let lines = lex(src);
+    let raw_lines: Vec<&str> = src.lines().collect();
+
+    let in_src = path.starts_with("src/");
+    let in_examples = path.starts_with("examples/");
+    // D1-TIME: wall-clock reads are fine in metrics (that is what the
+    // module is for) and in benches (they *measure* wall-clock).
+    let time_exempt = path.starts_with("src/metrics/") || path.starts_with("benches/");
+    // D1-HASH: modules that serialize or reduce results, where
+    // iteration order would reach bytes on disk.
+    let hash_scoped = path.starts_with("src/sweep/")
+        || path.starts_with("src/metrics/")
+        || path.starts_with("src/planner/")
+        || path == "src/util/json.rs";
+    // D1-RNG: seeding is the business of util/rng and eval::substream.
+    let rng_exempt = path == "src/util/rng.rs" || path.starts_with("src/eval/");
+    // D3-ENV: process environment is config, read in config/ (and the
+    // pool's thread-count override, set before the pool starts).
+    let env_exempt = path.starts_with("src/config/") || path == "src/sim/pool.rs";
+    // D4 applies to files that touch the worker pool.
+    let pool_file = lines.iter().any(|l| {
+        l.code.contains("WorkerPool")
+            || l.code.contains("PoolScope")
+            || l.code.contains("sim::pool")
+    });
+
+    let mut findings: Vec<Finding> = Vec::new();
+    // Depths at which a test region / named fn opened.
+    let mut test_stack: Vec<i64> = Vec::new();
+    let mut fn_stack: Vec<(i64, String)> = Vec::new();
+    let mut pending_test = false;
+    let mut pending_test_item = false;
+    let mut pending_fn: Option<String> = None;
+    let mut depth: i64 = 0;
+
+    for (idx, line) in lines.iter().enumerate() {
+        let ln = idx + 1;
+        let code = line.code.as_str();
+        let squeezed: String = code.chars().filter(|c| !c.is_whitespace()).collect();
+        if squeezed.contains("#[cfg(test)]") || squeezed.contains("#[test]") {
+            pending_test = true;
+            pending_test_item = false;
+        }
+        if pending_test && (contains_word(code, "mod") || contains_word(code, "fn")) {
+            pending_test_item = true;
+        }
+        if let Some(name) = fn_name(code) {
+            pending_fn = Some(name);
+        }
+
+        // Region state as of the *start* of this line.
+        let in_test = !test_stack.is_empty();
+        let cur_fn = fn_stack.last().map(|(_, n)| n.as_str()).unwrap_or("");
+        let raw = raw_lines.get(idx).copied().unwrap_or("");
+        let mut push = |rule: Rule, message: String| {
+            findings.push(Finding {
+                file: path.to_string(),
+                line: ln,
+                rule,
+                message,
+                raw: raw.to_string(),
+            });
+        };
+
+        if !in_test {
+            if (in_src || in_examples) && !time_exempt {
+                for pat in ["Instant::now", "SystemTime::now"] {
+                    if code.contains(pat) {
+                        push(
+                            Rule::D1Time,
+                            format!("`{pat}` outside metrics/ and benches/"),
+                        );
+                    }
+                }
+            }
+            if in_src {
+                if !rng_exempt && code.contains("Pcg64::new(") {
+                    push(
+                        Rule::D1Rng,
+                        "direct RNG seeding outside util/rng and eval::substream"
+                            .to_string(),
+                    );
+                }
+                for pat in [".unwrap()", ".expect(", "panic!", "todo!"] {
+                    if code.contains(pat) {
+                        push(Rule::D2, format!("`{pat}` in non-test library code"));
+                    }
+                }
+                if !env_exempt && code.contains("env::var") {
+                    push(
+                        Rule::D3Env,
+                        "environment read outside config/ and sim/pool.rs".to_string(),
+                    );
+                }
+                if pool_file && !cfg.d4_helpers.iter().any(|h| h == cur_fn) {
+                    let reductions =
+                        [".sum::<f32>(", ".sum::<f64>(", ".product::<", ".fold("];
+                    for pat in reductions {
+                        if code.contains(pat) {
+                            push(
+                                Rule::D4,
+                                format!(
+                                    "`{pat}` reduction in pool-parallel code outside a \
+                                     serial-reduction helper"
+                                ),
+                            );
+                        }
+                    }
+                }
+                if hash_scoped && (code.contains("HashMap") || code.contains("HashSet")) {
+                    push(
+                        Rule::D1Hash,
+                        "hash collection in a result-serializing module (iteration \
+                         order reaches output bytes) — use BTreeMap/BTreeSet"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+        if code.contains("static mut") {
+            push(Rule::D3Mut, "`static mut` is forbidden".to_string());
+        }
+        if contains_word(code, "unsafe") {
+            let lookback = idx.saturating_sub(SAFETY_LOOKBACK);
+            let justified =
+                lines[lookback..=idx].iter().any(|l| l.comment.contains("SAFETY:"));
+            if !justified {
+                push(
+                    Rule::D3Unsafe,
+                    format!(
+                        "`unsafe` without a `// SAFETY:` comment within \
+                         {SAFETY_LOOKBACK} lines"
+                    ),
+                );
+            }
+        }
+
+        // Brace scan: update region state for the following lines.
+        for c in code.chars() {
+            match c {
+                '{' => {
+                    if pending_test && pending_test_item {
+                        test_stack.push(depth);
+                        pending_test = false;
+                    }
+                    if let Some(name) = pending_fn.take() {
+                        fn_stack.push((depth, name));
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if test_stack.last() == Some(&depth) {
+                        test_stack.pop();
+                    }
+                    if fn_stack.last().map(|(d, _)| *d) == Some(depth) {
+                        fn_stack.pop();
+                    }
+                }
+                ';' => {
+                    // a bodyless item (`fn f();`, `#[cfg(test)] mod t;`)
+                    // resolves its pending state without a brace
+                    if !code.contains('{') {
+                        pending_fn = None;
+                        if pending_test && pending_test_item {
+                            pending_test = false;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    findings
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Does `code` contain `word` with non-identifier chars on both sides?
+/// `word` must be ASCII (all our keywords are).
+fn contains_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let at = from + pos;
+        let end = at + word.len();
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = at + 1;
+    }
+    false
+}
+
+/// The name after the first `fn` keyword on the line, if any.
+fn fn_name(code: &str) -> Option<String> {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("fn") {
+        let at = from + pos;
+        let end = at + 2;
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let after_ws = end < bytes.len() && bytes[end].is_ascii_whitespace();
+        if before_ok && after_ws {
+            let name: String = code[end..]
+                .trim_start()
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            if !name.is_empty() {
+                return Some(name);
+            }
+        }
+        from = at + 2;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(path: &str, src: &str) -> Vec<(usize, &'static str)> {
+        lint_source(path, src, &Config::default())
+            .into_iter()
+            .map(|f| (f.line, f.rule.id()))
+            .collect()
+    }
+
+    #[test]
+    fn d2_flags_library_code_not_tests() {
+        let src = "\
+pub fn go() {
+    let x = y.unwrap();
+}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let x = y.unwrap();
+    }
+}
+";
+        assert_eq!(ids("src/a.rs", src), vec![(2, "D2")]);
+    }
+
+    #[test]
+    fn d2_ignores_unwrap_or_variants() {
+        let src = "pub fn go() -> u32 {\n    y.unwrap_or(0).max(y.unwrap_or_else(|| 1))\n}\n";
+        assert!(ids("src/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d1_time_scoping() {
+        let src = "fn f() {\n    let t = Instant::now();\n}\n";
+        assert_eq!(ids("src/sim/job.rs", src), vec![(2, "D1-TIME")]);
+        assert!(ids("src/metrics/timer.rs", src).is_empty());
+        assert!(ids("benches/bench_x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d1_hash_scoping() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(ids("src/sweep/report.rs", src), vec![(1, "D1-HASH")]);
+        assert!(ids("src/runtime/engine.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d1_rng_scoping() {
+        let src = "fn f() {\n    let rng = Pcg64::new(7);\n}\n";
+        assert_eq!(ids("src/dist/sample.rs", src), vec![(2, "D1-RNG")]);
+        assert!(ids("src/eval/montecarlo.rs", src).is_empty());
+        assert!(ids("src/util/rng.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d3_env_scoping() {
+        let src = "fn f() {\n    let v = std::env::var(\"X\");\n}\n";
+        assert_eq!(ids("src/util/misc.rs", src), vec![(2, "D3-ENV")]);
+        assert!(ids("src/config/load.rs", src).is_empty());
+        assert!(ids("src/sim/pool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d3_unsafe_needs_safety_comment() {
+        let bad = "fn f() {\n    unsafe { ptr.read() }\n}\n";
+        assert_eq!(ids("src/a.rs", bad), vec![(2, "D3-UNSAFE")]);
+        let good =
+            "fn f() {\n    // SAFETY: ptr is valid for reads\n    unsafe { ptr.read() }\n}\n";
+        assert!(ids("src/a.rs", good).is_empty());
+    }
+
+    #[test]
+    fn d4_only_in_pool_files_outside_helpers() {
+        let pool = "\
+use crate::sim::pool::WorkerPool;
+fn gather(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>()
+}
+fn reduce(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>()
+}
+";
+        assert_eq!(ids("src/eval/x.rs", pool), vec![(3, "D4")]);
+        let no_pool = "fn gather(xs: &[f64]) -> f64 {\n    xs.iter().sum::<f64>()\n}\n";
+        assert!(ids("src/eval/x.rs", no_pool).is_empty());
+    }
+
+    #[test]
+    fn patterns_in_strings_and_comments_do_not_fire() {
+        let src = "\
+fn f() -> String {
+    // HashMap iteration would be bad here; x.unwrap() too
+    let s = \"Instant::now() .unwrap() HashMap\";
+    s.to_string()
+}
+";
+        assert!(ids("src/sweep/report.rs", src).is_empty());
+    }
+
+    #[test]
+    fn out_of_line_test_mod_does_not_poison_rest_of_file() {
+        let src = "\
+#[cfg(test)]
+mod tests;
+pub fn f() {
+    x.unwrap();
+}
+";
+        assert_eq!(ids("src/a.rs", src), vec![(4, "D2")]);
+    }
+}

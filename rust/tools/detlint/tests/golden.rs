@@ -1,0 +1,166 @@
+//! Golden-file tests over the fixture corpus: every fixture's findings
+//! must match its `.expected` file exactly, and the corpus must give
+//! every rule at least one true-positive and one true-negative.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use detlint::{lint_repo, lint_source, Config};
+
+fn fixtures_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures")
+}
+
+fn fixture_sources() -> Vec<PathBuf> {
+    let mut out: Vec<PathBuf> = fs::read_dir(fixtures_dir())
+        .expect("fixtures/ exists")
+        .map(|e| e.expect("read fixtures dir").path())
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("rs"))
+        .collect();
+    out.sort();
+    out
+}
+
+/// The `//@path:` directive on a fixture's first line.
+fn pseudo_path(path: &Path, src: &str) -> String {
+    src.lines()
+        .next()
+        .and_then(|l| l.strip_prefix("//@path:"))
+        .unwrap_or_else(|| panic!("{}: missing //@path directive", path.display()))
+        .trim()
+        .to_string()
+}
+
+#[test]
+fn fixtures_match_goldens() {
+    let sources = fixture_sources();
+    assert!(sources.len() >= 16, "fixture corpus shrank: {} files", sources.len());
+    for path in sources {
+        let src = fs::read_to_string(&path).expect("read fixture");
+        let pseudo = pseudo_path(&path, &src);
+        let got: Vec<String> = lint_source(&pseudo, &src, &Config::default())
+            .into_iter()
+            .map(|f| format!("{} {}", f.line, f.rule.id()))
+            .collect();
+        let golden = path.with_extension("expected");
+        let want: Vec<String> = fs::read_to_string(&golden)
+            .unwrap_or_else(|_| panic!("{}: missing golden file", golden.display()))
+            .lines()
+            .map(|l| l.trim().to_string())
+            .filter(|l| !l.is_empty() && !l.starts_with('#'))
+            .collect();
+        assert_eq!(got, want, "{} disagrees with its golden", path.display());
+    }
+}
+
+#[test]
+fn every_rule_has_positive_and_negative_fixtures() {
+    let all_rules: BTreeSet<&str> = [
+        "D1-TIME", "D1-HASH", "D1-RNG", "D2", "D3-MUT", "D3-ENV", "D3-UNSAFE", "D4",
+    ]
+    .into_iter()
+    .collect();
+    let mut positives: BTreeSet<String> = BTreeSet::new();
+    let mut negative_stems: BTreeSet<String> = BTreeSet::new();
+    for path in fixture_sources() {
+        let src = fs::read_to_string(&path).expect("read fixture");
+        let findings = lint_source(&pseudo_path(&path, &src), &src, &Config::default());
+        let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("").to_string();
+        if findings.is_empty() {
+            negative_stems.insert(stem);
+        } else {
+            for f in findings {
+                positives.insert(f.rule.id().to_string());
+            }
+        }
+    }
+    for rule in &all_rules {
+        assert!(positives.contains(*rule), "no true-positive fixture for {rule}");
+        let prefix = rule.to_lowercase().replace('-', "_");
+        assert!(
+            negative_stems.iter().any(|s| s.starts_with(&prefix) && s.contains("good"))
+                || negative_stems.contains("lexer_tricky"),
+            "no true-negative fixture for {rule}"
+        );
+    }
+}
+
+/// A scratch repo layout for exercising `lint_repo` end to end.
+fn scratch_repo(tag: &str, lib_rs: &str) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("detlint-test-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&root);
+    fs::create_dir_all(root.join("src")).expect("create scratch repo");
+    fs::write(root.join("src/lib.rs"), lib_rs).expect("write scratch lib.rs");
+    root
+}
+
+#[test]
+fn allowlist_suppresses_matches_and_flags_stale_entries() {
+    let root = scratch_repo("allow", "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n");
+    let toml = "\
+[[allow]]
+file = \"src/lib.rs\"
+rule = \"D2\"
+pattern = \".unwrap()\"
+reason = \"exercised by the golden test\"
+
+[[allow]]
+file = \"src/lib.rs\"
+rule = \"D2\"
+pattern = \".expect(\"
+reason = \"nothing matches this pattern\"
+
+[[allow]]
+file = \"src/gone.rs\"
+rule = \"D2\"
+pattern = \".unwrap()\"
+reason = \"file was deleted\"
+";
+    let cfg = Config::parse(toml).expect("config parses");
+    let report = lint_repo(&root, &cfg).expect("lint scratch repo");
+    fs::remove_dir_all(&root).expect("clean up scratch repo");
+
+    let rendered: Vec<String> = report
+        .findings
+        .iter()
+        .map(|f| format!("{}:{} {} {}", f.file, f.line, f.rule.id(), f.message))
+        .collect();
+    // the unwrap is suppressed; the other two entries are stale
+    assert_eq!(rendered.len(), 2, "got: {rendered:?}");
+    assert!(rendered[0].contains("detlint.toml:7"), "got: {rendered:?}");
+    assert!(rendered[0].contains("suppresses nothing"), "got: {rendered:?}");
+    assert!(rendered[1].contains("detlint.toml:13"), "got: {rendered:?}");
+    assert!(rendered[1].contains("does not exist"), "got: {rendered:?}");
+}
+
+#[test]
+fn unexplained_allowlist_entry_is_a_finding() {
+    let root = scratch_repo("reason", "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n");
+    let toml = "\
+[[allow]]
+file = \"src/lib.rs\"
+rule = \"D2\"
+pattern = \".unwrap()\"
+";
+    let cfg = Config::parse(toml).expect("config parses");
+    let report = lint_repo(&root, &cfg).expect("lint scratch repo");
+    fs::remove_dir_all(&root).expect("clean up scratch repo");
+
+    assert_eq!(report.findings.len(), 1);
+    let f = &report.findings[0];
+    assert_eq!(f.rule.id(), "ALLOWLIST");
+    assert!(f.message.contains("justification"), "got: {}", f.message);
+}
+
+#[test]
+fn unsuppressed_findings_survive_lint_repo() {
+    let root = scratch_repo("plain", "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n");
+    let report = lint_repo(&root, &Config::default()).expect("lint scratch repo");
+    fs::remove_dir_all(&root).expect("clean up scratch repo");
+
+    assert_eq!(report.files, 1);
+    assert_eq!(report.findings.len(), 1);
+    assert_eq!(report.findings[0].rule.id(), "D2");
+    assert_eq!(report.findings[0].line, 2);
+}

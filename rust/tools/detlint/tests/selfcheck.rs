@@ -1,0 +1,51 @@
+//! The shipped configuration must hold: linting the real crate with
+//! the committed `detlint.toml` yields zero findings — no unfixed
+//! violations, no unjustified or stale allowlist entries.
+
+use std::path::PathBuf;
+
+use detlint::{lint_repo, Config};
+
+fn rust_root() -> PathBuf {
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    root.pop();
+    root.pop();
+    root
+}
+
+#[test]
+fn repo_is_clean_under_shipped_config() {
+    let root = rust_root();
+    let text = std::fs::read_to_string(root.join("detlint.toml"))
+        .expect("detlint.toml is committed at the rust/ root");
+    let cfg = Config::parse(&text).expect("detlint.toml parses");
+    let report = lint_repo(&root, &cfg).expect("walk the crate");
+    let rendered: Vec<String> = report
+        .findings
+        .iter()
+        .map(|f| format!("{}:{}: [{}] {}", f.file, f.line, f.rule.id(), f.message))
+        .collect();
+    assert!(
+        rendered.is_empty(),
+        "detlint is not clean on the repo:\n{}",
+        rendered.join("\n")
+    );
+    assert!(report.files >= 60, "expected the whole crate, scanned {}", report.files);
+}
+
+#[test]
+fn shipped_config_justifies_every_entry() {
+    let root = rust_root();
+    let text = std::fs::read_to_string(root.join("detlint.toml"))
+        .expect("detlint.toml is committed at the rust/ root");
+    let cfg = Config::parse(&text).expect("detlint.toml parses");
+    assert!(!cfg.allows.is_empty(), "the shipped allowlist documents known exceptions");
+    for entry in &cfg.allows {
+        assert!(
+            entry.reason.trim().len() >= 10,
+            "detlint.toml:{}: reason too thin: {:?}",
+            entry.line,
+            entry.reason
+        );
+    }
+}

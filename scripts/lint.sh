@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Run the full lint gate locally, mirroring CI's blocking lint jobs:
+#
+#   1. detlint      — source-level determinism & safety rules (D1-D4),
+#                     configured by rust/detlint.toml; stale or
+#                     unjustified allowlist entries fail too
+#   2. clippy       — whole workspace, all targets, warnings denied
+#   3. rustfmt      — formatting check only (nothing is rewritten)
+#
+# Usage: scripts/lint.sh
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "== detlint (determinism & safety rules, rust/detlint.toml) =="
+cargo run -q -p detlint
+
+echo "== clippy (workspace, all targets, -D warnings) =="
+cargo clippy --workspace --all-targets -- -D warnings
+
+echo "== rustfmt (check only) =="
+cargo fmt --all --check
+
+echo "OK: all lint gates passed"
