@@ -129,6 +129,47 @@ pub fn cov_t(n: usize, b: usize, tau: &ServiceDist) -> f64 {
     }
 }
 
+/// Expected total cost in worker-seconds for the balanced policy under
+/// **up-front** replication with kill-at-batch-completion: every one of
+/// the batch's `r = N/B` replicas runs until the batch's first
+/// finisher, so
+///
+/// `cost = B · r · E[min_r((N/B)·τ)] = N · E[min_r(k·τ)]`, `k = N/B`.
+///
+/// Closed per family (`x = B/(Nα)` for Pareto):
+///
+/// * Exp(μ): `k·τ ~ Exp(μ/k)`, min of r ~ Exp(rμ/k) = Exp(μ) → `N/μ` —
+///   independent of B, replication exactly cancels the size-dependent
+///   slowdown in cost just as it does in E\[T\] at B = 1.
+/// * SExp(Δ,μ): shift survives the min → `N·(kΔ + 1/μ)`.
+/// * Pareto(σ,α): min of r ~ Pareto(kσ, rα) → `N·kσ/(1 − x)` when
+///   `x < 1`, ∞ otherwise (same divergence threshold as the mean).
+///
+/// Falls back to numeric integration of `S_batch(t)^r` for non-closed
+/// families. Timed policies have no closed cost; they go through MC.
+pub fn cost_t(n: usize, b: usize, tau: &ServiceDist) -> f64 {
+    let (nf, bf) = (n as f64, b as f64);
+    let k = nf / bf; // batch size = replication degree
+    match tau {
+        ServiceDist::Exp { mu } => nf / mu,
+        ServiceDist::ShiftedExp { delta, mu } => nf * (k * delta + 1.0 / mu),
+        ServiceDist::Pareto { sigma, alpha } => {
+            let x = bf / (nf * alpha); // 1/(rα) of the batch-level min
+            if x >= 1.0 {
+                f64::INFINITY
+            } else {
+                nf * k * sigma / (1.0 - x)
+            }
+        }
+        other => {
+            let r = n / b;
+            let batch = ServiceDist::scaled(k, other.clone());
+            let s_min = |t: f64| batch.ccdf(t).powi(r as i32);
+            nf * mean_var_from_survival(s_min, &batch, r, 1).0
+        }
+    }
+}
+
 /// Numeric E\[T\] for the balanced policy with arbitrary τ: batch service
 /// is `(N/B)·τ`, replicated on N/B workers, T = max over B batches.
 pub fn numeric_mean_t(n: usize, b: usize, tau: &ServiceDist) -> f64 {
@@ -353,6 +394,40 @@ mod tests {
         let (m91, _) = numeric_mean_var_assignment(&[9, 1], &batch);
         assert!(m55 < m64, "{m55} !< {m64}");
         assert!(m64 < m91, "{m64} !< {m91}");
+    }
+
+    #[test]
+    fn cost_closed_forms_match_numeric_min_integral() {
+        // exercise the numeric fallback through families with no closed
+        // cost arm that alias a closed one: Weibull(1, 1/μ) ≡ Exp(μ)
+        // and Bimodal(p_slow = 0) ≡ SExp(fast)
+        for b in [1usize, 2, 4, 10, 20] {
+            close_rel(
+                cost_t(20, b, &ServiceDist::weibull(1.0, 1.0)),
+                cost_t(20, b, &ServiceDist::exp(1.0)),
+                5e-3,
+            );
+            close_rel(
+                cost_t(20, b, &ServiceDist::bimodal(0.0, (0.05, 1.0), (1.0, 0.5))),
+                cost_t(20, b, &ServiceDist::shifted_exp(0.05, 1.0)),
+                5e-3,
+            );
+        }
+    }
+
+    #[test]
+    fn cost_closed_forms_are_sane() {
+        // Exp: cost = N/μ regardless of B
+        for b in [1usize, 2, 5, 10] {
+            close_rel(cost_t(10, b, &ServiceDist::exp(2.0)), 5.0, 1e-12);
+        }
+        // SExp: N·(kΔ + 1/μ), decreasing in B through the shift term
+        close_rel(cost_t(10, 1, &ServiceDist::shifted_exp(0.1, 1.0)), 20.0, 1e-12);
+        close_rel(cost_t(10, 10, &ServiceDist::shifted_exp(0.1, 1.0)), 11.0, 1e-12);
+        // Pareto: N·kσ/(1 − B/(Nα)), ∞ past the divergence threshold
+        let c = cost_t(10, 10, &ServiceDist::pareto(1.0, 2.0));
+        close_rel(c, 10.0 / (1.0 - 0.5), 1e-12);
+        assert!(cost_t(4, 4, &ServiceDist::pareto(1.0, 0.9)).is_infinite());
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! CLI subcommand implementations.
 
+use std::io::BufRead;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
@@ -10,8 +11,9 @@ use crate::dist::ServiceDist;
 use crate::eval::{Analytic, Auto, Estimator, MonteCarlo, Scenario};
 use crate::experiments::{self, DEFAULT_REPS};
 use crate::metrics::{export_csv, fnum, Table};
-use crate::planner::{Objective, Planner};
+use crate::planner::{Objective, Planner, SweepPoint};
 use crate::runtime::{artifacts_dir, GradientOps, RuntimeService};
+use crate::sim::policy::ReplicationPolicy;
 use crate::traces::{load_trace, write_trace, GeneratorConfig, JobAnalysis};
 use crate::util::error::{Error, Result};
 
@@ -56,7 +58,42 @@ fn objective_from(args: &mut Args) -> Result<Objective> {
                 .map_err(|e| Error::Config(format!("bad tradeoff weight: {e}")))?;
             Ok(Objective::Tradeoff(w))
         }
+        Some(o) if o.starts_with("cost=") => {
+            let w = o["cost=".len()..]
+                .parse::<f64>()
+                .map_err(|e| Error::Config(format!("bad cost weight: {e}")))?;
+            Ok(Objective::CostLatency(w))
+        }
         Some(other) => Err(Error::Config(format!("unknown objective '{other}'"))),
+    }
+}
+
+/// Resolve the replication policy from `--policy NAME` + `--spec-t T`.
+/// Absent flags mean the paper's up-front policy.
+fn replication_from(args: &mut Args) -> Result<ReplicationPolicy> {
+    let name = args.get("policy");
+    let t = match args.get("spec-t") {
+        None => None,
+        Some(v) => Some(
+            v.parse::<f64>().map_err(|e| Error::Config(format!("--spec-t {v}: {e}")))?,
+        ),
+    };
+    match name.as_deref() {
+        None if t.is_none() => Ok(ReplicationPolicy::Upfront),
+        None => Err(Error::Config(
+            "--spec-t needs --policy speculative|relaunch".into(),
+        )),
+        Some(name) => ReplicationPolicy::parse(name, t),
+    }
+}
+
+/// Format a cost cell: expected total worker-seconds, or `-` when the
+/// evaluation path does not track cost.
+fn cost_cell(cost: f64) -> String {
+    if cost.is_nan() {
+        "-".into()
+    } else {
+        fnum(cost)
     }
 }
 
@@ -64,8 +101,17 @@ pub fn plan(args: &mut Args) -> Result<()> {
     let n = args.get_usize("workers", 100)?;
     let tau = service_from(args)?;
     let objective = objective_from(args)?;
+    // the cost objective only separates candidates when the launch time
+    // is part of the search, so it implies the joint (B, t) planner
+    let joint = args.get_bool("joint") || matches!(objective, Objective::CostLatency(_));
     let planner = Planner::new(n, tau.clone());
-    let plan = planner.plan(objective);
+    let plan = if joint {
+        let reps = args.get_usize("reps", DEFAULT_REPS)?;
+        let seed = args.get_u64("seed", 0)?;
+        planner.plan_joint(objective, reps, seed)?
+    } else {
+        planner.plan(objective)
+    };
     let mut t = Table::new(
         &format!("Redundancy plan: N={n}, tau ~ {}", tau.label()),
         vec!["field", "value"],
@@ -74,8 +120,10 @@ pub fn plan(args: &mut Args) -> Result<()> {
     t.row(vec!["batch size".into(), plan.batch_size.to_string()]);
     t.row(vec!["replication".into(), plan.replication.to_string()]);
     t.row(vec!["policy".into(), plan.policy.name().into()]);
+    t.row(vec!["replication policy".into(), plan.replication_policy.label()]);
     t.row(vec!["predicted E[T]".into(), fnum(plan.predicted_mean)]);
     t.row(vec!["predicted CoV".into(), fnum(plan.predicted_cov)]);
+    t.row(vec!["predicted cost".into(), cost_cell(plan.predicted_cost)]);
     t.row(vec![
         "speedup vs B=N".into(),
         format!("{}x", fnum(plan.speedup_vs_no_redundancy)),
@@ -116,13 +164,16 @@ pub fn simulate(args: &mut Args) -> Result<()> {
     let n = args.get_usize("workers", 100)?;
     let b = args.get_usize("batches", n)?;
     let tau = service_from(args)?;
+    let replication = replication_from(args)?;
     let estimator = estimator_from(args)?;
-    let est = estimator.evaluate(&Scenario::balanced(n, b, tau.clone()))?;
+    let scenario = Scenario::balanced(n, b, tau.clone()).with_replication(replication);
+    let est = estimator.evaluate(&scenario)?;
     let mut t = Table::new(
         &format!("Evaluation: N={n}, B={b}, tau ~ {}", tau.label()),
         vec!["metric", "value"],
     );
     t.row(vec!["backend".into(), est.provenance.backend().into()]);
+    t.row(vec!["replication policy".into(), replication.label()]);
     if est.replications > 0 {
         t.row(vec![
             "replications".into(),
@@ -134,6 +185,7 @@ pub fn simulate(args: &mut Args) -> Result<()> {
     t.row(vec!["p50".into(), fnum(est.p50)]);
     t.row(vec!["p95".into(), fnum(est.p95)]);
     t.row(vec!["p99".into(), fnum(est.p99)]);
+    t.row(vec!["cost".into(), cost_cell(est.cost)]);
     t.row(vec!["failure rate".into(), fnum(est.failure_rate)]);
     t.print();
     if est.all_failed() {
@@ -148,12 +200,34 @@ pub fn sweep(args: &mut Args) -> Result<()> {
     }
     let n = args.get_usize("workers", 100)?;
     let tau = service_from(args)?;
+    let replication = replication_from(args)?;
     let planner = Planner::new(n, tau.clone());
+    let sweep = if replication.is_upfront() {
+        planner.sweep()
+    } else {
+        // timed policies have no closed forms: evaluate every feasible
+        // operating point by Monte-Carlo on per-point substreams
+        let reps = args.get_usize("reps", DEFAULT_REPS)?;
+        let seed = args.get_u64("seed", 0)?;
+        let bs = crate::analysis::optimizer::feasible_b(n);
+        let scenarios: Vec<Scenario> = bs
+            .iter()
+            .map(|&b| Scenario::balanced(n, b, tau.clone()).with_replication(replication))
+            .collect();
+        let estimates = MonteCarlo::new(reps, seed).evaluate_many(&scenarios)?;
+        bs.iter()
+            .zip(estimates.iter())
+            .map(|(&b, e)| SweepPoint { batches: b, mean: e.mean, cov: e.cov, cost: e.cost })
+            .collect()
+    };
     let mut t = Table::new(
-        &format!("Spectrum sweep: N={n}, tau ~ {}", tau.label()),
-        vec!["B", "batch size", "E[T]", "CoV[T]", "speedup vs B=N"],
+        &format!(
+            "Spectrum sweep: N={n}, tau ~ {}, policy {}",
+            tau.label(),
+            replication.label()
+        ),
+        vec!["B", "batch size", "E[T]", "CoV[T]", "cost", "speedup vs B=N"],
     );
-    let sweep = planner.sweep();
     let baseline = sweep
         .last()
         .ok_or_else(|| Error::Internal("sweep produced no points".into()))?
@@ -164,6 +238,7 @@ pub fn sweep(args: &mut Args) -> Result<()> {
             (n / p.batches).to_string(),
             fnum(p.mean),
             fnum(p.cov),
+            cost_cell(p.cost),
             format!("{}x", fnum(baseline / p.mean)),
         ]);
     }
@@ -229,6 +304,59 @@ fn maybe_cache_gc(
     Ok(())
 }
 
+/// `--cache-import DIR`: adopt estimates from the `*.cache.jsonl`
+/// files of earlier runs into this run's cache, so a new sweep (or a
+/// re-sharded one) starts warm. DIR is read-only — imported files are
+/// never modified. Entries already in the run's own cache win; across
+/// imported files, the lexicographically first file wins. Cache keys
+/// are content-addressed, so a foreign entry the current grid never
+/// asks about is dead weight at worst (and `--cache-gc` reclaims it).
+fn import_cache(dir: &Path, cache: Option<&Path>) -> Result<usize> {
+    let Some(cache) = cache else {
+        return Err(Error::Config(
+            "--cache-import needs a persisted run to import into".into(),
+        ));
+    };
+    let mut files: Vec<PathBuf> = Vec::new();
+    for entry in std::fs::read_dir(dir)
+        .map_err(|e| Error::Config(format!("--cache-import {}: {e}", dir.display())))?
+    {
+        let path = entry?.path();
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if name.ends_with(".cache.jsonl") && path.as_path() != cache {
+            files.push(path);
+        }
+    }
+    files.sort();
+    if files.is_empty() {
+        return Err(Error::Config(format!(
+            "--cache-import {}: no *.cache.jsonl files found",
+            dir.display()
+        )));
+    }
+    let mut dest = crate::sweep::EstimateCache::open(cache)?;
+    let mut adopted = 0usize;
+    for file in &files {
+        let text = std::fs::read_to_string(file)?;
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            // a torn tail (killed writer) ends the file, exactly as
+            // EstimateCache::open treats its own backing file
+            let Ok((key, outcome)) = crate::sweep::store::parse_record(line) else {
+                break;
+            };
+            if dest.get(key).is_none() {
+                dest.insert(key, outcome)?;
+                adopted += 1;
+            }
+        }
+    }
+    dest.flush()?;
+    Ok(adopted)
+}
+
 /// `replica sweep --spec FILE`: the sharded, resumable trace-sweep
 /// engine. Results stream to a JSONL store (`--out`, default
 /// `sweep_results.jsonl`) with an on-disk estimate cache (`--cache`,
@@ -237,7 +365,9 @@ fn maybe_cache_gc(
 /// replication-gain report at the end. With `--shard K/M` the process
 /// evaluates only its slice of the grid into a per-shard store (see
 /// `replica sweep-merge`); with `--cache-gc` the estimate cache is
-/// compacted against the current grid after the run.
+/// compacted against the current grid after the run; with
+/// `--cache-import DIR` estimates from earlier runs' caches are
+/// adopted first (DIR is read-only — nothing in it is modified).
 fn sweep_from_spec(args: &mut Args, spec_path: &str) -> Result<()> {
     let spec = spec_with_overrides(args, spec_path)?;
     let out = PathBuf::from(args.get("out").unwrap_or_else(|| "sweep_results.jsonl".into()));
@@ -268,6 +398,10 @@ fn sweep_from_spec(args: &mut Args, spec_path: &str) -> Result<()> {
     cfg.threads = args.get_usize("threads", 0)?;
     let cache_gc = args.get_bool("cache-gc");
     let objective = objective_from(args)?;
+    if let Some(dir) = args.get("cache-import") {
+        let adopted = import_cache(Path::new(&dir), cfg.cache.as_deref())?;
+        println!("cache import {dir}: {adopted} entries adopted");
+    }
     let trace = spec.load_trace()?;
     let set = crate::sweep::ScenarioSet::from_trace(&trace, &spec)?;
     let results = crate::sweep::run(&set, &cfg)?;
@@ -322,7 +456,13 @@ fn sweep_from_spec(args: &mut Args, spec_path: &str) -> Result<()> {
 /// files are located by the `--shard K/M` naming convention; explicit
 /// shard-file paths may be passed as positionals instead (they may
 /// overlap, e.g. shards from different shardings of the same sweep).
+///
+/// With `--report-only` the merge (and the spec) are skipped entirely:
+/// the gain report streams straight from the `--out` store's records.
 pub fn sweep_merge(args: &mut Args) -> Result<()> {
+    if args.get_bool("report-only") {
+        return report_only(args);
+    }
     let spec_path = args
         .get("spec")
         .ok_or_else(|| Error::Config("sweep-merge needs --spec FILE".into()))?;
@@ -378,6 +518,46 @@ pub fn sweep_merge(args: &mut Args) -> Result<()> {
                 maybe_cache_gc(true, Some(cache.as_path()), &set)?;
             }
         }
+    }
+    Ok(())
+}
+
+/// `replica sweep-merge --report-only --out FILE`: the §VII gain report
+/// straight from an existing result store — no spec re-parse, no trace
+/// re-generation, no grid expansion. Every store record carries its
+/// full case description (job, N, B, backend, crash, policy), so the
+/// rows stream from the records alone; only the trace-derived tail
+/// class is unavailable and its column stays empty.
+fn report_only(args: &mut Args) -> Result<()> {
+    let out = PathBuf::from(args.get("out").unwrap_or_else(|| "sweep_results.jsonl".into()));
+    let objective = objective_from(args)?;
+    let file = std::fs::File::open(&out)
+        .map_err(|e| Error::Config(format!("--report-only {}: {e}", out.display())))?;
+    let mut records = Vec::new();
+    for (i, line) in std::io::BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        if i == 0 && crate::sweep::store::parse_shard_header(&line).is_some() {
+            return Err(Error::Config(format!(
+                "{} is a per-shard store; run sweep-merge without --report-only first",
+                out.display()
+            )));
+        }
+        let row = crate::sweep::parse_report_line(&line)
+            .map_err(|e| Error::Parse(format!("{}:{}: {e}", out.display(), i + 1)))?;
+        records.push(row);
+    }
+    let rows = crate::sweep::gain_report_from_records(&records, objective);
+    crate::sweep::gain_table(
+        &format!("Replication gains — {} ({} records)", out.display(), records.len()),
+        &rows,
+    )
+    .print();
+    let headline = crate::sweep::headline_speedup(&rows);
+    if headline.is_finite() {
+        println!("headline speedup (best job): {}x", fnum(headline));
     }
     Ok(())
 }
@@ -636,8 +816,38 @@ mod tests {
         assert_eq!(objective_from(&mut a).unwrap(), Objective::Predictability);
         let mut a = args("plan --objective tradeoff=0.3");
         assert_eq!(objective_from(&mut a).unwrap(), Objective::Tradeoff(0.3));
+        let mut a = args("plan --objective cost=0.5");
+        assert_eq!(objective_from(&mut a).unwrap(), Objective::CostLatency(0.5));
+        let mut a = args("plan --objective cost=lots");
+        assert!(objective_from(&mut a).is_err());
         let mut a = args("plan --objective speed");
         assert!(objective_from(&mut a).is_err());
+    }
+
+    #[test]
+    fn replication_policy_parsing() {
+        let mut a = args("simulate");
+        assert_eq!(replication_from(&mut a).unwrap(), ReplicationPolicy::Upfront);
+        let mut a = args("simulate --policy upfront");
+        assert_eq!(replication_from(&mut a).unwrap(), ReplicationPolicy::Upfront);
+        let mut a = args("simulate --policy speculative --spec-t 2.5");
+        assert_eq!(
+            replication_from(&mut a).unwrap(),
+            ReplicationPolicy::SpeculativeAt { t: 2.5 }
+        );
+        let mut a = args("simulate --policy relaunch --spec-t 1");
+        assert_eq!(
+            replication_from(&mut a).unwrap(),
+            ReplicationPolicy::RelaunchAt { t: 1.0 }
+        );
+        // timed policies need a timeout; a timeout needs a policy;
+        // up-front takes none
+        assert!(replication_from(&mut args("simulate --policy speculative")).is_err());
+        assert!(replication_from(&mut args("simulate --spec-t 2")).is_err());
+        assert!(replication_from(&mut args("simulate --policy upfront --spec-t 2")).is_err());
+        assert!(replication_from(&mut args("simulate --policy lazy --spec-t 2")).is_err());
+        assert!(replication_from(&mut args("simulate --policy relaunch --spec-t -1")).is_err());
+        assert!(replication_from(&mut args("simulate --policy relaunch --spec-t x")).is_err());
     }
 
     #[test]
@@ -646,6 +856,39 @@ mod tests {
         sweep(&mut args("sweep --workers 20 --family exp --mu 1")).unwrap();
         simulate(&mut args("simulate --workers 12 --batches 3 --family exp --reps 500"))
             .unwrap();
+    }
+
+    #[test]
+    fn timed_policies_flow_through_simulate_and_sweep() {
+        simulate(&mut args(
+            "simulate --workers 12 --batches 3 --family exp --reps 400 \
+             --policy speculative --spec-t 2",
+        ))
+        .unwrap();
+        sweep(&mut args(
+            "sweep --workers 12 --family exp --reps 300 --policy relaunch --spec-t 2",
+        ))
+        .unwrap();
+        // the analytic backend has closed forms only for the up-front
+        // policy; a timed policy must be refused, not silently ignored
+        assert!(simulate(&mut args(
+            "simulate --workers 12 --batches 3 --family exp --backend analytic \
+             --policy speculative --spec-t 1",
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn cost_objective_plans_jointly() {
+        // heavy-tail service: replicas are mostly idle insurance, so a
+        // speculative launch should be on the table; either way the
+        // joint plan must come back with a finite cost prediction
+        plan(&mut args(
+            "plan --workers 12 --family pareto --sigma 1 --alpha 1.2 \
+             --objective cost=0.5 --reps 400 --seed 7",
+        ))
+        .unwrap();
+        plan(&mut args("plan --workers 12 --family exp --joint=true --reps 400")).unwrap();
     }
 
     #[test]
@@ -812,6 +1055,105 @@ mod tests {
         // per-shard stores and caches exist under the naming convention
         assert!(dir.join("merged.shard-0-of-2.jsonl").exists());
         assert!(dir.join("merged.shard-1-of-2.jsonl.cache.jsonl").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_merge_report_only_reads_the_store_alone() {
+        let dir = std::env::temp_dir().join("replica_cli_report_only");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = dir.join("spec.json");
+        std::fs::write(
+            &spec,
+            r#"{"workload": {"generate": {"jobs": 2, "tasks_per_job": 12, "seed": 3}},
+                "policies": ["upfront", {"speculative": 2.0}], "reps": 100, "seed": 1}"#,
+        )
+        .unwrap();
+        let out = dir.join("results.jsonl");
+        sweep(&mut args(&format!("sweep --spec {} --out {}", spec.display(), out.display())))
+            .unwrap();
+        // the report needs only the store: no --spec, no trace
+        sweep_merge(&mut args(&format!(
+            "sweep-merge --report-only --out {}",
+            out.display()
+        )))
+        .unwrap();
+        // a per-shard store is not a complete run: refuse with a hint
+        let shard_out = dir.join("sharded.jsonl");
+        sweep(&mut args(&format!(
+            "sweep --spec {} --out {} --shard 0/2",
+            spec.display(),
+            shard_out.display()
+        )))
+        .unwrap();
+        assert!(sweep_merge(&mut args(&format!(
+            "sweep-merge --report-only --out {}",
+            dir.join("sharded.shard-0-of-2.jsonl").display()
+        )))
+        .is_err());
+        // and so is a missing or malformed store
+        assert!(sweep_merge(&mut args(&format!(
+            "sweep-merge --report-only --out {}",
+            dir.join("nope.jsonl").display()
+        )))
+        .is_err());
+        let garbled = dir.join("garbled.jsonl");
+        std::fs::write(&garbled, "{\"key\":\"00aa\",\"error\":\"x\"}\n").unwrap();
+        assert!(sweep_merge(&mut args(&format!(
+            "sweep-merge --report-only --out {}",
+            garbled.display()
+        )))
+        .is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cache_import_warms_a_fresh_run() {
+        let dir = std::env::temp_dir().join("replica_cli_cache_import");
+        std::fs::remove_dir_all(&dir).ok();
+        let (warm, cold) = (dir.join("warm"), dir.join("cold"));
+        std::fs::create_dir_all(&warm).unwrap();
+        std::fs::create_dir_all(&cold).unwrap();
+        let spec = dir.join("spec.json");
+        std::fs::write(
+            &spec,
+            r#"{"workload": {"generate": {"jobs": 2, "tasks_per_job": 12, "seed": 3}},
+                "reps": 100, "seed": 1}"#,
+        )
+        .unwrap();
+        let first = warm.join("results.jsonl");
+        sweep(&mut args(&format!("sweep --spec {} --out {}", spec.display(), first.display())))
+            .unwrap();
+        // fresh store, fresh cache, warmed from the first run's cache
+        // directory: every case is a hit, so the new cache gains no
+        // appended lines beyond the 12 imported ones
+        let second = cold.join("results.jsonl");
+        sweep(&mut args(&format!(
+            "sweep --spec {} --out {} --cache-import {}",
+            spec.display(),
+            second.display(),
+            warm.display()
+        )))
+        .unwrap();
+        let a = std::fs::read_to_string(&first).unwrap();
+        let b = std::fs::read_to_string(&second).unwrap();
+        assert_eq!(a, b, "a cache-warmed run must reproduce the original bytes");
+        let imported =
+            std::fs::read_to_string(cold.join("results.jsonl.cache.jsonl")).unwrap();
+        assert_eq!(imported.lines().count(), 12, "all 12 estimates come from the import");
+        // the source cache is untouched
+        let source =
+            std::fs::read_to_string(warm.join("results.jsonl.cache.jsonl")).unwrap();
+        assert_eq!(source.lines().count(), 12);
+        // a directory with no caches (or none at all) is a config error
+        assert!(sweep(&mut args(&format!(
+            "sweep --spec {} --out {} --cache-import {}",
+            spec.display(),
+            cold.join("again.jsonl").display(),
+            dir.join("empty").display()
+        )))
+        .is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

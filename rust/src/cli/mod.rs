@@ -1,14 +1,18 @@
 //! Command-line interface (hand-rolled; no clap offline).
 //!
 //! ```text
-//! replica plan       --workers 100 --family pareto --alpha 1.5 [--objective mean|cov|tradeoff=0.5]
+//! replica plan       --workers 100 --family pareto --alpha 1.5
+//!                    [--objective mean|cov|tradeoff=0.5|cost=0.5] [--joint]
 //! replica simulate   --workers 100 --batches 10 --family sexp --delta 0.05 --mu 1
 //!                    [--backend mc|analytic|auto] [--reps 20000] [--pool-threads 0]
+//!                    [--policy upfront|speculative|relaunch --spec-t T]
 //! replica sweep      --workers 100 --family sexp --delta 0.05 --mu 1
+//!                    [--policy upfront|speculative|relaunch --spec-t T]
 //! replica sweep      --spec sweep.json [--out results.jsonl] [--cache cache.jsonl]
 //!                    [--limit-shards K] [--shard K/M] [--cache-gc]
-//!                    [--objective mean|cov|tradeoff=0.5]
+//!                    [--cache-import DIR] [--objective mean|cov|tradeoff=0.5|cost=0.5]
 //! replica sweep-merge --spec sweep.json --out results.jsonl --shards M
+//! replica sweep-merge --report-only --out results.jsonl
 //! replica trace gen      --out trace.csv [--tasks 100] [--seed 42]
 //! replica trace analyze  --trace trace.csv
 //! replica experiment <fig3|fig6|fig7_8|fig9_10|regimes|assignment|traces|all> [--reps N] [--out dir]
@@ -32,7 +36,10 @@ pub fn run(argv: Vec<String>) -> Result<()> {
     // explicit `=true` spelling before parsing.
     let argv: Vec<String> = argv
         .into_iter()
-        .map(|tok| if tok == "--cache-gc" { "--cache-gc=true".to_string() } else { tok })
+        .map(|tok| match tok.as_str() {
+            "--cache-gc" | "--report-only" | "--joint" => format!("{tok}=true"),
+            _ => tok,
+        })
         .collect();
     let mut args = Args::parse(argv)?;
     // Size the process-wide simulation pool before any command touches
@@ -78,7 +85,9 @@ COMMANDS:
               rerunning the same command resumes a killed run); with
               --shard K/M: one process of an M-way distributed sweep
   sweep-merge merge the per-shard stores of a --shard K/M sweep into the
-              canonical store (byte-identical to a single-process run)
+              canonical store (byte-identical to a single-process run);
+              with --report-only: print the gain report straight from an
+              existing merged store, no spec or trace needed
   trace       gen | analyze Google-cluster-shaped traces
   experiment  regenerate a paper figure (fig3, fig6, fig7_8, fig9_10,
               regimes, assignment, traces, all)
@@ -90,7 +99,16 @@ COMMON FLAGS:
   --batches B           batch count (must divide N)
   --family F            exp | sexp | pareto | weibull | bimodal
   --mu X --delta X --alpha X --sigma X --shape X --scale X
-  --objective O         mean | cov | tradeoff=W
+  --objective O         mean | cov | tradeoff=W | cost=W (cost=W scores
+                        w*E[T] + (1-w)*expected worker-seconds; plan
+                        then searches (B, t) jointly)
+  --policy P            when replicas launch: upfront (default, the
+                        paper's policy) | speculative | relaunch
+                        (timed policies need --spec-t)
+  --spec-t T            timeout for speculative/relaunch policies
+  --joint               (plan) search batch counts and speculative
+                        timeouts jointly by Monte-Carlo (implied by
+                        --objective cost=W)
   --backend B           mc | analytic | auto (simulate; default mc)
   --reps N              Monte-Carlo replications
   --seed N              RNG seed
@@ -114,4 +132,9 @@ SWEEP-ENGINE FLAGS (sweep --spec FILE / sweep-merge):
   --shards M            (sweep-merge) how many shard files to merge
   --cache-gc            after the run, drop cache keys the current grid
                         no longer asks about and report space reclaimed
+  --cache-import DIR    before the run, adopt estimates from DIR's
+                        *.cache.jsonl files into this run's cache
+                        (DIR itself is never written)
+  --report-only         (sweep-merge) skip the merge and print the gain
+                        report from the --out store's records alone
 ";

@@ -20,10 +20,13 @@ use crate::util::math::bisect;
 pub struct Analytic;
 
 impl Analytic {
-    /// Does a closed form exist for this scenario?
+    /// Does a closed form exist for this scenario? Timed replication
+    /// policies have none (the paper only derives up-front forms), so
+    /// they always route to Monte-Carlo.
     pub fn supports(scenario: &Scenario) -> bool {
         matches!(scenario.policy, Policy::BalancedNonOverlapping { .. })
             && scenario.failures == FailureModel::None
+            && scenario.replication.is_upfront()
             && matches!(
                 *scenario.tau,
                 ServiceDist::Exp { .. }
@@ -58,6 +61,7 @@ impl Estimator for Analytic {
             p50: job_quantile(n, b, &scenario.tau, 0.50),
             p95: job_quantile(n, b, &scenario.tau, 0.95),
             p99: job_quantile(n, b, &scenario.tau, 0.99),
+            cost: closed_form::cost_t(n, b, &scenario.tau),
             failure_rate: 0.0,
             replications: 0,
             completed: 0,
@@ -97,6 +101,8 @@ mod tests {
         // B=4, Exp(2): E[T] = H_4/2
         let est = Analytic.evaluate(&Scenario::balanced(20, 4, ServiceDist::exp(2.0))).unwrap();
         assert!((est.mean - h1(4) / 2.0).abs() < 1e-12);
+        // up-front cost for Exp(μ) is N/μ regardless of B
+        assert!((est.cost - 10.0).abs() < 1e-12);
         assert_eq!(est.provenance, Provenance::Analytic);
         assert_eq!(est.failure_rate, 0.0);
         assert_eq!(est.ci95, 0.0);
@@ -135,6 +141,11 @@ mod tests {
         // failure injection
         let s = Scenario::balanced(6, 3, ServiceDist::exp(1.0))
             .with_failures(FailureModel::Crash { p: 0.1 });
+        assert!(Analytic.evaluate(&s).is_err());
+        // timed replication policy (no closed forms)
+        let s = Scenario::balanced(6, 3, ServiceDist::exp(1.0)).with_replication(
+            crate::sim::policy::ReplicationPolicy::SpeculativeAt { t: 1.0 },
+        );
         assert!(Analytic.evaluate(&s).is_err());
         // infeasible B
         let s = Scenario::balanced(10, 3, ServiceDist::exp(1.0));

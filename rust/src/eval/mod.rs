@@ -47,6 +47,7 @@ use std::sync::Arc;
 use crate::batching::{operating_points, OperatingPoint, Policy};
 use crate::dist::ServiceDist;
 use crate::sim::job::FailureModel;
+use crate::sim::policy::ReplicationPolicy;
 use crate::util::error::Result;
 
 /// Default replication count for Monte-Carlo backends constructed via
@@ -86,6 +87,10 @@ pub struct Scenario {
     /// Worker failure model (only the Monte-Carlo backend can evaluate
     /// scenarios with failures).
     pub failures: FailureModel,
+    /// Replication *timing* policy: when a batch's replicas launch
+    /// (up-front by default — the paper's model; timed policies are
+    /// Monte-Carlo-only and add a worker-seconds cost axis).
+    pub replication: ReplicationPolicy,
 }
 
 impl Scenario {
@@ -98,7 +103,13 @@ impl Scenario {
         policy: Policy,
         tau: impl Into<Arc<ServiceDist>>,
     ) -> Scenario {
-        Scenario { workers, policy, tau: tau.into(), failures: FailureModel::None }
+        Scenario {
+            workers,
+            policy,
+            tau: tau.into(),
+            failures: FailureModel::None,
+            replication: ReplicationPolicy::Upfront,
+        }
     }
 
     /// The common case: balanced non-overlapping batches (the provably
@@ -116,9 +127,23 @@ impl Scenario {
         self
     }
 
-    /// Short human-readable description for errors and reports.
+    /// Select the replication timing policy (see [`ReplicationPolicy`]).
+    pub fn with_replication(mut self, replication: ReplicationPolicy) -> Scenario {
+        self.replication = replication;
+        self
+    }
+
+    /// Short human-readable description for errors and reports. The
+    /// replication policy appears only when it is not the up-front
+    /// default, keeping pre-policy labels stable.
     pub fn label(&self) -> String {
-        format!("N={} {} tau~{}", self.workers, self.policy.name(), self.tau.label())
+        let base =
+            format!("N={} {} tau~{}", self.workers, self.policy.name(), self.tau.label());
+        if self.replication.is_upfront() {
+            base
+        } else {
+            format!("{base} {}", self.replication.label())
+        }
     }
 }
 
@@ -163,6 +188,12 @@ pub struct Estimate {
     pub p50: f64,
     pub p95: f64,
     pub p99: f64,
+    /// Expected total **cost** in worker-seconds under
+    /// kill-at-batch-completion (see [`ReplicationPolicy`] for the
+    /// per-policy semantics). NaN when the evaluation path does not
+    /// track cost (overlapping layouts, failure injection,
+    /// materialized random layouts) or when every replication failed.
+    pub cost: f64,
     /// Fraction of replications where coverage failed (always 0 for
     /// analytic estimates — closed forms assume full coverage).
     pub failure_rate: f64,
@@ -256,10 +287,16 @@ mod tests {
         let s = Scenario::balanced(12, 3, ServiceDist::exp(1.0));
         assert_eq!(s.workers, 12);
         assert_eq!(s.failures, FailureModel::None);
+        assert_eq!(s.replication, ReplicationPolicy::Upfront);
         assert!(matches!(s.policy, Policy::BalancedNonOverlapping { batches: 3 }));
         let s = s.with_failures(FailureModel::Crash { p: 0.1 });
         assert!(matches!(s.failures, FailureModel::Crash { .. }));
         assert!(s.label().contains("balanced-nonoverlap"));
+        // the up-front default keeps pre-policy labels byte-stable
+        assert!(!s.label().contains("upfront"));
+        let timed = Scenario::balanced(12, 3, ServiceDist::exp(1.0))
+            .with_replication(ReplicationPolicy::SpeculativeAt { t: 0.5 });
+        assert!(timed.label().contains("speculative(t=0.5)"));
     }
 
     #[test]

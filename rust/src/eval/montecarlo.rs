@@ -11,10 +11,12 @@
 use crate::batching::Policy;
 use crate::dist::Sampler;
 use crate::eval::{substream, Estimate, Estimator, Provenance, Scenario};
-use crate::metrics::Summary;
+use crate::metrics::{CostAccumulator, Summary};
 use crate::sim::job::{
-    FailureModel, JobOutcome, JobSimulator, ServiceModel, SimScratch, SimView,
+    fast_disjoint_layout, FailureModel, JobOutcome, JobSimulator, ServiceModel, SimScratch,
+    SimView,
 };
+use crate::sim::policy::ReplicationPolicy;
 use crate::sim::pool::WorkerPool;
 use crate::util::error::{Error, Result};
 use crate::util::rng::Pcg64;
@@ -111,9 +113,12 @@ impl MonteCarlo {
         let n_scen = preps.len();
 
         // One exact-size outcome buffer for the whole batch; scenario i
-        // owns slots [i·reps, (i+1)·reps).
+        // owns slots [i·reps, (i+1)·reps). Costs ride in a parallel
+        // buffer with the same ownership map (NaN = cost untracked).
         let mut outcomes: Vec<JobOutcome> = Vec::with_capacity(n_scen * self.reps);
         outcomes.resize(n_scen * self.reps, JobOutcome::Failed);
+        let mut costs: Vec<f64> = Vec::with_capacity(n_scen * self.reps);
+        costs.resize(n_scen * self.reps, f64::NAN);
 
         // A randomized per-replication draw can fail even though the
         // up-front probe succeeded; keep the first error in
@@ -130,7 +135,8 @@ impl MonteCarlo {
             let mut scratch = RepScratch::default();
             for (i, prep) in preps.iter().enumerate() {
                 let slots = &mut outcomes[i * self.reps..(i + 1) * self.reps];
-                run_unit(prep, slots, i, 0, &mut scratch, &first_error);
+                let cost_slots = &mut costs[i * self.reps..(i + 1) * self.reps];
+                run_unit(prep, slots, cost_slots, i, 0, &mut scratch, &first_error);
             }
         } else {
             let chunk_len = self.reps.div_ceil(chunks_per_scenario(
@@ -138,15 +144,19 @@ impl MonteCarlo {
             ));
             let errors = &first_error;
             WorkerPool::global().scope(|scope| {
-                for (i, (prep, slice)) in
-                    preps.iter().zip(outcomes.chunks_mut(self.reps)).enumerate()
+                let slices =
+                    outcomes.chunks_mut(self.reps).zip(costs.chunks_mut(self.reps));
+                for (i, (prep, (slice, cost_slice))) in
+                    preps.iter().zip(slices).enumerate()
                 {
                     let mut lo = 0usize;
-                    for slots in slice.chunks_mut(chunk_len) {
+                    for (slots, cost_slots) in
+                        slice.chunks_mut(chunk_len).zip(cost_slice.chunks_mut(chunk_len))
+                    {
                         let len = slots.len();
                         scope.submit(move || {
                             let mut scratch = RepScratch::default();
-                            run_unit(prep, slots, i, lo, &mut scratch, errors);
+                            run_unit(prep, slots, cost_slots, i, lo, &mut scratch, errors);
                         });
                         lo += len;
                     }
@@ -163,19 +173,30 @@ impl MonteCarlo {
         let mut estimates = Vec::with_capacity(n_scen);
         for (i, (_, seed)) in items.iter().enumerate() {
             let slots = &outcomes[i * self.reps..(i + 1) * self.reps];
-            estimates.push(self.reduce(slots, *seed, threads));
+            let cost_slots = &costs[i * self.reps..(i + 1) * self.reps];
+            estimates.push(self.reduce(slots, cost_slots, *seed, threads));
         }
         Ok(estimates)
     }
 
     /// Serial reduction in replication order: float accumulation is
     /// independent of how units were scheduled above.
-    fn reduce(&self, outcomes: &[JobOutcome], seed: u64, threads: usize) -> Estimate {
+    fn reduce(
+        &self,
+        outcomes: &[JobOutcome],
+        costs: &[f64],
+        seed: u64,
+        threads: usize,
+    ) -> Estimate {
         let mut summary = Summary::new();
+        let mut cost = CostAccumulator::new();
         let mut failed = 0usize;
-        for outcome in outcomes {
+        for (outcome, c) in outcomes.iter().zip(costs.iter()) {
             match outcome {
-                JobOutcome::Done(t) => summary.record(*t),
+                JobOutcome::Done(t) => {
+                    summary.record(*t);
+                    cost.record(*c);
+                }
                 JobOutcome::Failed => failed += 1,
             }
         }
@@ -192,6 +213,7 @@ impl MonteCarlo {
                 p50: f64::NAN,
                 p95: f64::NAN,
                 p99: f64::NAN,
+                cost: f64::NAN,
                 failure_rate: 1.0,
                 replications: self.reps,
                 completed: 0,
@@ -205,6 +227,7 @@ impl MonteCarlo {
             p50: summary.quantile(0.50),
             p95: summary.quantile(0.95),
             p99: summary.quantile(0.99),
+            cost: cost.mean(),
             failure_rate: failed as f64 / self.reps as f64,
             replications: self.reps,
             completed,
@@ -229,6 +252,7 @@ fn chunks_per_scenario(threads: usize, scenarios: usize, reps: usize) -> usize {
 fn run_unit(
     prep: &Prepared<'_>,
     slots: &mut [JobOutcome],
+    costs: &mut [f64],
     scen: usize,
     lo: usize,
     scratch: &mut RepScratch,
@@ -249,9 +273,12 @@ fn run_unit(
             }
         }
     }
-    for (k, slot) in slots.iter_mut().enumerate() {
+    for (k, (slot, cost)) in slots.iter_mut().zip(costs.iter_mut()).enumerate() {
         match prep.sample_rep(lo + k, scratch) {
-            Ok(outcome) => *slot = outcome,
+            Ok((outcome, c)) => {
+                *slot = outcome;
+                *cost = c;
+            }
             Err(error) => {
                 record_error(first_error, scen, lo + k, error);
                 return;
@@ -308,10 +335,36 @@ fn prepare<'s>(scenario: &'s Scenario, seed: u64) -> Result<Prepared<'s>> {
     let randomized = matches!(scenario.policy, Policy::RandomNonOverlapping { .. });
     let mut layout_rng = Pcg64::new(substream(seed, LAYOUT_STREAM));
     let probe = scenario.policy.layout(n, &mut layout_rng)?;
+    if !scenario.replication.is_upfront() {
+        // Timed replication is only defined on the disjoint fast path:
+        // a fixed layout of disjoint equal-size batches with no failure
+        // injection. Reject everything else here, before any unit is
+        // queued, instead of silently reporting all-failed.
+        if randomized {
+            return Err(Error::Config(format!(
+                "replication policy {} needs a deterministic layout, \
+                 not a randomized assignment",
+                scenario.replication.label()
+            )));
+        }
+        if scenario.failures != FailureModel::None {
+            return Err(Error::Config(format!(
+                "replication policy {} does not support failure injection",
+                scenario.replication.label()
+            )));
+        }
+        if !fast_disjoint_layout(&probe) {
+            return Err(Error::Config(format!(
+                "replication policy {} needs disjoint equal-size batches",
+                scenario.replication.label()
+            )));
+        }
+    }
     let path = if !randomized {
         RepPath::Fixed(
             JobSimulator::new(probe, scenario.tau.as_ref())
-                .with_failures(scenario.failures),
+                .with_failures(scenario.failures)
+                .with_replication(scenario.replication),
         )
     } else if scenario.failures == FailureModel::None {
         RepPath::RandomPicks {
@@ -332,13 +385,18 @@ fn prepare<'s>(scenario: &'s Scenario, seed: u64) -> Result<Prepared<'s>> {
 struct RepScratch {
     sim: SimScratch,
     batch_min: Vec<f64>,
+    batch_count: Vec<u32>,
 }
 
 impl Prepared<'_> {
-    fn sample_rep(&self, rep: usize, scratch: &mut RepScratch) -> Result<JobOutcome> {
+    fn sample_rep(
+        &self,
+        rep: usize,
+        scratch: &mut RepScratch,
+    ) -> Result<(JobOutcome, f64)> {
         let mut rng = Pcg64::new(substream(self.seed, rep as u64));
         match &self.path {
-            RepPath::Fixed(sim) => Ok(sim.sample_into(&mut rng, &mut scratch.sim)),
+            RepPath::Fixed(sim) => Ok(sim.sample_with_cost(&mut rng, &mut scratch.sim)),
             RepPath::RandomPicks { batches, batch_size, sampler } => {
                 Ok(sample_random_picks(
                     self.scenario.workers,
@@ -347,6 +405,7 @@ impl Prepared<'_> {
                     sampler,
                     &mut rng,
                     &mut scratch.batch_min,
+                    &mut scratch.batch_count,
                 ))
             }
             RepPath::RandomMaterialize { sampler } => {
@@ -361,8 +420,11 @@ impl Prepared<'_> {
                     // always takes the event-driven route — the fast
                     // flag would be dead, so skip the O(N) verification
                     fast_disjoint: false,
+                    // prepare() rejects timed policies off the fast
+                    // path, so only up-front reaches here
+                    replication: ReplicationPolicy::Upfront,
                 };
-                Ok(view.sample_into(&mut rng, &mut scratch.sim))
+                Ok((view.sample_into(&mut rng, &mut scratch.sim), f64::NAN))
             }
         }
     }
@@ -373,7 +435,9 @@ impl Prepared<'_> {
 /// same `below(B)` draw the layout builder makes) and its size-scaled
 /// service time folds into that batch's minimum in a single pass. The
 /// job fails iff some batch attracted no worker (Lemma 1 coverage),
-/// otherwise `T = max_b min_{w∈b} S_w`.
+/// otherwise `T = max_b min_{w∈b} S_w` with up-front cost
+/// `Σ_b count_b · min_b` (every picker of batch `b` runs until its
+/// first finisher).
 fn sample_random_picks(
     workers: usize,
     batches: usize,
@@ -381,27 +445,33 @@ fn sample_random_picks(
     sampler: &Sampler,
     rng: &mut Pcg64,
     batch_min: &mut Vec<f64>,
-) -> JobOutcome {
+    batch_count: &mut Vec<u32>,
+) -> (JobOutcome, f64) {
     batch_min.clear();
     batch_min.resize(batches, f64::INFINITY);
+    batch_count.clear();
+    batch_count.resize(batches, 0u32);
     let size = batch_size as f64;
     for _ in 0..workers {
         let pick = rng.below(batches as u64) as usize;
+        batch_count[pick] += 1;
         let s = size * sampler.sample_one(rng);
         if s < batch_min[pick] {
             batch_min[pick] = s;
         }
     }
     let mut t_job: f64 = 0.0;
-    for &m in batch_min.iter() {
+    let mut cost = 0.0;
+    for (&m, &c) in batch_min.iter().zip(batch_count.iter()) {
         if m == f64::INFINITY {
-            return JobOutcome::Failed; // uncovered batch
+            return (JobOutcome::Failed, f64::NAN); // uncovered batch
         }
         if m > t_job {
             t_job = m;
         }
+        cost += c as f64 * m;
     }
-    JobOutcome::Done(t_job)
+    (JobOutcome::Done(t_job), cost)
 }
 
 impl Default for MonteCarlo {
@@ -550,6 +620,98 @@ mod tests {
         assert_eq!(est.failure_rate, 1.0);
         assert!(est.mean.is_nan() && est.ci95.is_nan() && est.cov.is_nan());
         assert!(est.p50.is_nan() && est.p99.is_nan());
+        assert!(est.cost.is_nan());
+    }
+
+    #[test]
+    fn upfront_cost_matches_closed_form() {
+        // balanced N=20, B=4: r = k = 5, each worker serves an Exp(1/5)
+        // stretch, the batch runs 5 workers until its min — expected
+        // cost per batch is 5·E[min of 5 Exp(0.2)] = 5, total n/mu = 20.
+        let est = MonteCarlo::new(30_000, 13)
+            .evaluate(&Scenario::balanced(20, 4, ServiceDist::exp(1.0)))
+            .unwrap();
+        assert!((est.cost - 20.0).abs() < 0.5, "cost {}", est.cost);
+        // the pick path tracks cost too (random assignment, no failures)
+        let random = Scenario::new(
+            20,
+            Policy::RandomNonOverlapping { batches: 2 },
+            ServiceDist::exp(1.0),
+        );
+        let est = MonteCarlo::new(20_000, 13).evaluate(&random).unwrap();
+        assert!(est.cost.is_finite() && est.cost > 0.0, "cost {}", est.cost);
+    }
+
+    #[test]
+    fn speculative_policy_flows_through_with_lower_cost() {
+        let tau = ServiceDist::pareto(1.0, 2.0);
+        let upfront = Scenario::balanced(12, 3, tau.clone());
+        let spec = Scenario::balanced(12, 3, tau)
+            .with_replication(ReplicationPolicy::SpeculativeAt { t: 8.0 });
+        let mc = MonteCarlo::new(20_000, 21);
+        let eu = mc.evaluate(&upfront).unwrap();
+        let es = mc.evaluate(&spec).unwrap();
+        // speculation pays latency to save worker-seconds
+        assert!(es.mean >= eu.mean, "{} vs {}", es.mean, eu.mean);
+        assert!(es.cost < 0.7 * eu.cost, "{} vs {}", es.cost, eu.cost);
+        // and the cost column is thread-invariant like everything else
+        let serial = MonteCarlo::serial(5_000, 21).evaluate(&spec).unwrap();
+        let par = MonteCarlo { reps: 5_000, seed: 21, threads: 4 }
+            .evaluate(&spec)
+            .unwrap();
+        assert_eq!(serial.mean.to_bits(), par.mean.to_bits());
+        assert_eq!(serial.cost.to_bits(), par.cost.to_bits());
+    }
+
+    #[test]
+    fn upfront_estimates_are_pool_width_invariant() {
+        // the policy refactor must not perturb the up-front path: the
+        // same bits at 1, 2, 4, and 8 evaluation lanes, and an explicit
+        // `Upfront` annotation changes nothing vs the plain
+        // (pre-refactor-shaped) scenario at any width
+        let tau = ServiceDist::shifted_exp(0.05, 1.0);
+        let plain = Scenario::balanced(16, 4, tau.clone());
+        let annotated =
+            Scenario::balanced(16, 4, tau).with_replication(ReplicationPolicy::Upfront);
+        let golden = MonteCarlo { reps: 4_000, seed: 17, threads: 1 }
+            .evaluate(&plain)
+            .unwrap();
+        for threads in [1usize, 2, 4, 8] {
+            for s in [&plain, &annotated] {
+                let est = MonteCarlo { reps: 4_000, seed: 17, threads }.evaluate(s).unwrap();
+                assert_eq!(golden.mean.to_bits(), est.mean.to_bits(), "{threads} lanes");
+                assert_eq!(golden.cov.to_bits(), est.cov.to_bits(), "{threads} lanes");
+                assert_eq!(golden.p50.to_bits(), est.p50.to_bits(), "{threads} lanes");
+                assert_eq!(golden.p99.to_bits(), est.p99.to_bits(), "{threads} lanes");
+                assert_eq!(golden.cost.to_bits(), est.cost.to_bits(), "{threads} lanes");
+            }
+        }
+    }
+
+    #[test]
+    fn timed_policies_reject_unsupported_combinations() {
+        let spec = ReplicationPolicy::SpeculativeAt { t: 1.0 };
+        // failure injection
+        let s = Scenario::balanced(8, 2, ServiceDist::exp(1.0))
+            .with_failures(FailureModel::Crash { p: 0.1 })
+            .with_replication(spec);
+        assert!(MonteCarlo::new(10, 0).evaluate(&s).is_err());
+        // randomized assignment
+        let s = Scenario::new(
+            8,
+            Policy::RandomNonOverlapping { batches: 2 },
+            ServiceDist::exp(1.0),
+        )
+        .with_replication(spec);
+        assert!(MonteCarlo::new(10, 0).evaluate(&s).is_err());
+        // overlapping (non-disjoint) layout
+        let s = Scenario::new(
+            8,
+            Policy::CyclicOverlapping { batches: 4 },
+            ServiceDist::exp(1.0),
+        )
+        .with_replication(spec);
+        assert!(MonteCarlo::new(10, 0).evaluate(&s).is_err());
     }
 
     #[test]

@@ -9,13 +9,14 @@
 //! one interface:
 //!
 //! * [`eval`] — the unified evaluation API. An [`eval::Scenario`] names
-//!   the question, an [`eval::Estimate`] is the rich answer (mean ± CI,
-//!   CoV, p50/p95/p99, failure rate, provenance), and the
-//!   [`eval::Estimator`] trait abstracts the backend: exact closed
-//!   forms ([`eval::Analytic`]), a thread-parallel seed-stable
-//!   simulator ([`eval::MonteCarlo`]), or analytic-with-MC-fallback
-//!   ([`eval::Auto`]). Everything above — planner, experiments, CLI,
-//!   benches — consumes this trait.
+//!   the question (including *when* replicas launch, via
+//!   [`sim::policy::ReplicationPolicy`]), an [`eval::Estimate`] is the
+//!   rich answer (mean ± CI, CoV, p50/p95/p99, expected worker-seconds
+//!   cost, failure rate, provenance), and the [`eval::Estimator`] trait
+//!   abstracts the backend: exact closed forms ([`eval::Analytic`]), a
+//!   thread-parallel seed-stable simulator ([`eval::MonteCarlo`]), or
+//!   analytic-with-MC-fallback ([`eval::Auto`]). Everything above —
+//!   planner, experiments, CLI, benches — consumes this trait.
 //!
 //! The substrates underneath:
 //!
@@ -35,10 +36,15 @@
 //!   classification of Theorems 5–10. The [`eval::Analytic`] backend is
 //!   the supported way in.
 //! * [`sim`] — the job-level discrete-event simulator that
-//!   [`eval::MonteCarlo`] replicates over (with failure injection).
+//!   [`eval::MonteCarlo`] replicates over (with failure injection), and
+//!   [`sim::policy`] — the replication *timing* family (up-front,
+//!   speculative-at-`t`, relaunch-at-`t`) with a completion-time and
+//!   worker-seconds cost semantics per member.
 //! * [`planner`] — the redundancy planner: given N and a service-time
 //!   model (analytic or fitted from traces), chooses the batch count B
-//!   minimizing mean compute time, CoV, or a weighted trade-off. One
+//!   minimizing mean compute time, CoV, a weighted trade-off, or a
+//!   cost–latency blend ([`planner::Objective::CostLatency`], searched
+//!   jointly over `(B, t)` by [`planner::Planner::plan_joint`]). One
 //!   code path ([`planner::Planner::plan_with`]) parameterized by any
 //!   [`eval::Estimator`].
 //! * [`coordinator`] — a live master–worker engine (threads + channels)
@@ -52,11 +58,13 @@
 //!   out over the worker pool, results stream to a JSONL store with an
 //!   on-disk estimate cache (kill-and-resume is byte-identical,
 //!   re-runs are incremental, `--cache-gc` compacts stale keys), and a
-//!   replication-gain report summarizes per-job optima
-//!   (`replica sweep --spec`). Multi-process runs split the grid with
-//!   `--shard K/M` into per-shard stores that
+//!   replication-gain report summarizes per-job optima per policy
+//!   (`replica sweep --spec`, re-printable from a store alone via
+//!   `replica sweep-merge --report-only`). Multi-process runs split the
+//!   grid with `--shard K/M` into per-shard stores that
 //!   `replica sweep-merge` reassembles byte-identically to a
-//!   single-process run.
+//!   single-process run, and `--cache-import DIR` warms a new run from
+//!   earlier caches without touching them.
 //! * [`experiments`] — one module per paper figure/table; the bench
 //!   harness and CLI call into these.
 //!

@@ -10,5 +10,5 @@ mod table;
 pub use bench::{bench, BenchResult};
 pub use export::{export_csv, export_json, SeriesExport};
 pub use histogram::Histogram;
-pub use summary::Summary;
+pub use summary::{CostAccumulator, Summary};
 pub use table::{fnum, Table};

@@ -117,6 +117,44 @@ impl Summary {
     }
 }
 
+/// Streaming mean for per-replication cost (total worker-seconds).
+///
+/// A plain sequential sum, not Welford: cost only needs a mean, the
+/// record order is the replication order (so the float result is
+/// schedule-independent), and a single NaN — a replication whose
+/// execution path does not track cost — deliberately poisons the whole
+/// mean rather than being silently dropped.
+#[derive(Clone, Debug, Default)]
+pub struct CostAccumulator {
+    sum: f64,
+    n: u64,
+}
+
+impl CostAccumulator {
+    pub fn new() -> CostAccumulator {
+        CostAccumulator::default()
+    }
+
+    pub fn record(&mut self, cost: f64) {
+        self.sum += cost;
+        self.n += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Mean recorded cost; NaN when nothing was recorded or any
+    /// recorded cost was NaN.
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -192,5 +230,25 @@ mod tests {
         let mut s = Summary::moments_only();
         s.record(1.0);
         s.quantile(0.5);
+    }
+
+    #[test]
+    fn cost_accumulator_means_in_record_order() {
+        let mut c = CostAccumulator::new();
+        assert!(c.mean().is_nan());
+        for x in [1.0, 2.0, 6.0] {
+            c.record(x);
+        }
+        assert_eq!(c.count(), 3);
+        assert!((c.mean() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_accumulator_propagates_nan() {
+        let mut c = CostAccumulator::new();
+        c.record(1.0);
+        c.record(f64::NAN);
+        c.record(2.0);
+        assert!(c.mean().is_nan());
     }
 }

@@ -8,7 +8,16 @@
 //! * [`Objective::MeanCompletion`] — minimize E\[T\] (Theorems 3, 5, 8),
 //! * [`Objective::Predictability`] — minimize CoV\[T\] (Theorems 4, 7, 10),
 //! * [`Objective::Tradeoff`] — a weighted blend (the "system
-//!   administrator's middle point" of §VI-A).
+//!   administrator's middle point" of §VI-A),
+//! * [`Objective::CostLatency`] — a weighted blend of E\[T\] and
+//!   expected total worker-seconds, for clusters that pay for
+//!   replication rather than getting it free.
+//!
+//! Beyond choosing B, [`Planner::plan_joint`] searches the joint
+//! (B, t) space: every feasible batch count crossed with the up-front
+//! policy and speculative launch timeouts derived from the service
+//! distribution's quantiles (see
+//! [`crate::sim::policy::ReplicationPolicy`]).
 //!
 //! All planning flows through one code path, [`Planner::plan_with`],
 //! parameterized by an [`Estimator`] backend: [`Planner::plan`] uses
@@ -34,6 +43,7 @@ use crate::analysis::optimizer::{self, Regime};
 use crate::batching::Policy;
 use crate::dist::{ServiceDist, TailFit};
 use crate::eval::{Auto, Estimator, MonteCarlo, Scenario};
+use crate::sim::policy::ReplicationPolicy;
 use crate::sweep::{self, CaseOutcome, CaseResult, ScenarioSet};
 use crate::util::error::{Error, Result};
 
@@ -46,6 +56,10 @@ pub enum Objective {
     Predictability,
     /// Minimize `w·E[T]/E* + (1−w)·CoV/CoV*` for `w ∈ [0,1]`.
     Tradeoff(f64),
+    /// Minimize `w·E[T]/E* + (1−w)·cost/cost*` for `w ∈ [0,1]`, where
+    /// cost is expected total worker-seconds. Points without a tracked
+    /// cost score +∞ under this objective.
+    CostLatency(f64),
 }
 
 /// A redundancy plan: the chosen operating point plus predictions.
@@ -58,35 +72,54 @@ pub struct Plan {
     /// The policy to deploy (always balanced non-overlapping — the
     /// provably optimal family, Theorems 1–2 and §V).
     pub policy: Policy,
+    /// When the batch's replicas launch: up-front (the paper's policy,
+    /// and the default everywhere except [`Planner::plan_joint`]) or a
+    /// timed policy with its chosen timeout.
+    pub replication_policy: ReplicationPolicy,
     /// Predicted E[T] at the chosen point.
     pub predicted_mean: f64,
     /// Predicted CoV[T] at the chosen point.
     pub predicted_cov: f64,
+    /// Predicted expected total worker-seconds at the chosen point
+    /// (NaN when the evaluation path does not track cost).
+    pub predicted_cost: f64,
     /// Speedup of E[T] vs the no-redundancy baseline (B = N).
     pub speedup_vs_no_redundancy: f64,
     /// Regime classification when the family has one.
     pub regime: Option<Regime>,
 }
 
-/// One row of a spectrum sweep.
+/// One row of a spectrum sweep. `cost` is expected total
+/// worker-seconds (NaN when the evaluation path does not track it —
+/// NaN costs only matter under [`Objective::CostLatency`]).
 #[derive(Clone, Copy, Debug)]
 pub struct SweepPoint {
     pub batches: usize,
     pub mean: f64,
     pub cov: f64,
+    pub cost: f64,
 }
 
 /// Score one operating point under `objective`, given the sweep-wide
-/// normalization anchors (the minimum mean and CoV over the spectrum —
-/// only the tradeoff objective uses them). Lower is better; NaN points
-/// (e.g. all-failed Monte-Carlo estimates) score +∞ so they can never
-/// win.
-pub fn score_point(p: &SweepPoint, objective: Objective, min_mean: f64, min_cov: f64) -> f64 {
+/// normalization anchors (the minimum mean, CoV, and cost over the
+/// spectrum — only the blended objectives use them). Lower is better;
+/// NaN points (e.g. all-failed Monte-Carlo estimates, or missing cost
+/// under the cost objective) score +∞ so they can never win.
+pub fn score_point(
+    p: &SweepPoint,
+    objective: Objective,
+    min_mean: f64,
+    min_cov: f64,
+    min_cost: f64,
+) -> f64 {
     let score = match objective {
         Objective::MeanCompletion => p.mean,
         Objective::Predictability => p.cov,
         Objective::Tradeoff(w) => {
             w * p.mean / min_mean.max(1e-300) + (1.0 - w) * p.cov / min_cov.max(1e-300)
+        }
+        Objective::CostLatency(w) => {
+            w * p.mean / min_mean.max(1e-300) + (1.0 - w) * p.cost / min_cost.max(1e-300)
         }
     };
     if score.is_nan() {
@@ -103,9 +136,12 @@ pub fn score_point(p: &SweepPoint, objective: Objective, min_mean: f64, min_cov:
 pub fn choose(sweep: &[SweepPoint], objective: Objective) -> Option<SweepPoint> {
     let min_mean = sweep.iter().map(|p| p.mean).fold(f64::INFINITY, f64::min);
     let min_cov = sweep.iter().map(|p| p.cov).fold(f64::INFINITY, f64::min);
+    // f64::min skips NaN, so an all-NaN cost column leaves the anchor
+    // at +∞ — harmless for the objectives that ignore cost.
+    let min_cost = sweep.iter().map(|p| p.cost).fold(f64::INFINITY, f64::min);
     let mut best: Option<(SweepPoint, f64)> = None;
     for p in sweep {
-        let score = score_point(p, objective, min_mean, min_cov);
+        let score = score_point(p, objective, min_mean, min_cov, min_cost);
         if score.is_finite() && best.as_ref().is_none_or(|(_, s)| score < *s) {
             best = Some((*p, score));
         }
@@ -178,8 +214,10 @@ impl Planner {
             batch_size: self.n / chosen.batches,
             replication: self.n / chosen.batches,
             policy: Policy::BalancedNonOverlapping { batches: chosen.batches },
+            replication_policy: ReplicationPolicy::Upfront,
             predicted_mean: chosen.mean,
             predicted_cov: chosen.cov,
+            predicted_cost: chosen.cost,
             speedup_vs_no_redundancy: baseline / chosen.mean,
             regime: self.regime(objective),
         })
@@ -205,8 +243,10 @@ impl Planner {
             batch_size: self.n / b,
             replication: self.n / b,
             policy: Policy::BalancedNonOverlapping { batches: b },
+            replication_policy: ReplicationPolicy::Upfront,
             predicted_mean: est.mean,
             predicted_cov: est.cov,
+            predicted_cost: est.cost,
             speedup_vs_no_redundancy: baseline.mean / est.mean,
             regime: self.regime(objective),
         }
@@ -265,24 +305,130 @@ impl Planner {
                 batches: op.batches,
                 mean: est.mean,
                 cov: est.cov,
+                cost: est.cost,
             })
             .collect())
     }
 
-    /// Pareto-efficient frontier of (E\[T\], CoV): points not dominated
-    /// in both metrics — the menu a system administrator picks from.
+    /// Pareto-efficient frontier of (E\[T\], CoV, cost): points not
+    /// dominated in all tracked metrics — the menu a system
+    /// administrator picks from. Cost compares as equal when either
+    /// side is NaN, so sweeps without a cost column degrade to the old
+    /// two-axis front.
     pub fn tradeoff_front(&self) -> Vec<SweepPoint> {
         let sweep = self.sweep();
         sweep
             .iter()
-            .filter(|p| {
-                !sweep.iter().any(|q| {
-                    (q.mean < p.mean && q.cov <= p.cov) || (q.mean <= p.mean && q.cov < p.cov)
-                })
-            })
+            .filter(|p| !sweep.iter().any(|q| dominates(q, p)))
             .copied()
             .collect()
     }
+
+    /// Joint (B, t) plan: sweep every feasible batch count crossed with
+    /// the up-front policy and speculative timeouts derived from the
+    /// batch-level service quantiles (`t = (N/B)·Q_τ(q)` for
+    /// `q ∈` [`JOINT_T_QUANTILES`]), score all candidates under
+    /// `objective`, and return the winner. The up-front points are
+    /// always in the candidate set, so the joint plan is never worse
+    /// (in score) than the pure-B plan on the same sweep.
+    ///
+    /// All candidates — including those with closed forms — are
+    /// evaluated by Monte-Carlo on per-candidate substreams, so scores
+    /// compare simulation to simulation rather than mixing estimator
+    /// noise floors.
+    pub fn plan_joint(
+        &self,
+        objective: Objective,
+        reps: usize,
+        seed: u64,
+    ) -> Result<Plan> {
+        let mut scenarios = Vec::new();
+        let mut tags: Vec<(usize, ReplicationPolicy)> = Vec::new();
+        for b in optimizer::feasible_b(self.n) {
+            let k = (self.n / b) as f64;
+            scenarios.push(Scenario::balanced(self.n, b, self.tau.clone()));
+            tags.push((b, ReplicationPolicy::Upfront));
+            if self.n / b < 2 {
+                continue; // r = 1: no replicas to time, identical to up-front
+            }
+            for q in JOINT_T_QUANTILES {
+                let t = k * self.tau.quantile(q);
+                if !t.is_finite() || t <= 0.0 {
+                    continue;
+                }
+                let policy = ReplicationPolicy::SpeculativeAt { t };
+                let scenario = Scenario::balanced(self.n, b, self.tau.clone())
+                    .with_replication(policy);
+                scenarios.push(scenario);
+                tags.push((b, policy));
+            }
+        }
+        let estimates = MonteCarlo::new(reps, seed).evaluate_many(&scenarios)?;
+        let points: Vec<SweepPoint> = tags
+            .iter()
+            .zip(estimates.iter())
+            .map(|((b, _), est)| SweepPoint {
+                batches: *b,
+                mean: est.mean,
+                cov: est.cov,
+                cost: est.cost,
+            })
+            .collect();
+        let min_mean = points.iter().map(|p| p.mean).fold(f64::INFINITY, f64::min);
+        let min_cov = points.iter().map(|p| p.cov).fold(f64::INFINITY, f64::min);
+        let min_cost = points.iter().map(|p| p.cost).fold(f64::INFINITY, f64::min);
+        let mut best: Option<(usize, f64)> = None;
+        for (i, p) in points.iter().enumerate() {
+            let score = score_point(p, objective, min_mean, min_cov, min_cost);
+            if score.is_finite() && best.is_none_or(|(_, s)| score < s) {
+                best = Some((i, score));
+            }
+        }
+        let (idx, _) = best.ok_or_else(|| {
+            Error::Config("no (B, t) candidate produced a finite estimate".into())
+        })?;
+        let (b, policy) = tags[idx];
+        let chosen = &points[idx];
+        // baseline: the up-front B = N point (always a candidate)
+        let baseline = tags
+            .iter()
+            .zip(points.iter())
+            .find(|((bb, pp), _)| *bb == self.n && pp.is_upfront())
+            .map(|(_, p)| p.mean)
+            .ok_or_else(|| Error::Internal("joint sweep lost its baseline".into()))?;
+        Ok(Plan {
+            workers: self.n,
+            batches: b,
+            batch_size: self.n / b,
+            replication: self.n / b,
+            policy: Policy::BalancedNonOverlapping { batches: b },
+            replication_policy: policy,
+            predicted_mean: chosen.mean,
+            predicted_cov: chosen.cov,
+            predicted_cost: chosen.cost,
+            speedup_vs_no_redundancy: baseline / chosen.mean,
+            regime: None, // theorem regimes only classify up-front plans
+        })
+    }
+}
+
+/// Quantiles of τ whose batch-level values (`(N/B)·Q_τ(q)`) serve as
+/// speculative-timeout candidates in [`Planner::plan_joint`].
+pub const JOINT_T_QUANTILES: [f64; 3] = [0.5, 0.75, 0.9];
+
+/// Three-axis Pareto dominance for [`Planner::tradeoff_front`]:
+/// `q` dominates `p` when it is no worse on every tracked metric and
+/// strictly better on at least one. NaN cost on either side makes the
+/// cost axis a tie.
+fn dominates(q: &SweepPoint, p: &SweepPoint) -> bool {
+    let cost_tracked = !(q.cost.is_nan() || p.cost.is_nan());
+    let no_worse = q.mean <= p.mean
+        && q.cov <= p.cov
+        && (!cost_tracked || q.cost <= p.cost);
+    let better = q.mean < p.mean
+        || q.cov < p.cov
+        || (cost_tracked && q.cost < p.cost);
+    no_worse && better
 }
 
 /// Monte-Carlo budget of [`plan_from_samples`]'s spectrum sweep. Leaner
@@ -363,6 +509,7 @@ pub fn plan_from_records(results: &[CaseResult], objective: Objective) -> Result
                 batches: r.case.batches(),
                 mean: e.mean,
                 cov: e.cov,
+                cost: e.cost,
             }),
             CaseOutcome::Error(_) => None,
         })
@@ -387,8 +534,10 @@ pub fn plan_from_records(results: &[CaseResult], objective: Objective) -> Result
         batch_size: n / chosen.batches,
         replication: n / chosen.batches,
         policy: Policy::BalancedNonOverlapping { batches: chosen.batches },
+        replication_policy: ReplicationPolicy::Upfront,
         predicted_mean: chosen.mean,
         predicted_cov: chosen.cov,
+        predicted_cost: chosen.cost,
         speedup_vs_no_redundancy: baseline.mean / chosen.mean,
         regime,
     })
@@ -420,6 +569,10 @@ mod tests {
         assert_eq!(plan.replication, plan.batch_size);
         assert!(plan.predicted_mean > 0.0);
         assert!(plan.speedup_vs_no_redundancy > 0.0);
+        // pure-B planning always deploys the paper's up-front policy,
+        // with the closed-form cost prediction attached
+        assert!(plan.replication_policy.is_upfront());
+        assert!(plan.predicted_cost.is_finite() && plan.predicted_cost > 0.0);
         match plan.policy {
             Policy::BalancedNonOverlapping { batches } => assert_eq!(batches, plan.batches),
             _ => panic!("planner must emit the balanced policy"),
@@ -498,15 +651,78 @@ mod tests {
         for a in &front {
             for b in &front {
                 if a.batches != b.batches {
-                    assert!(
-                        !(b.mean < a.mean && b.cov < a.cov),
-                        "{:?} dominated by {:?}",
-                        a,
-                        b
-                    );
+                    assert!(!dominates(b, a), "{:?} dominated by {:?}", a, b);
                 }
             }
         }
+        // the analytic sweep carries a cost column, so front points do too
+        assert!(front.iter().all(|p| p.cost.is_finite() && p.cost > 0.0));
+    }
+
+    #[test]
+    fn nan_cost_makes_the_cost_axis_a_tie() {
+        let a = SweepPoint { batches: 1, mean: 1.0, cov: 0.5, cost: f64::NAN };
+        let b = SweepPoint { batches: 2, mean: 2.0, cov: 0.5, cost: 1.0 };
+        // b is worse on mean; its tracked cost cannot rescue it, and
+        // a's untracked cost cannot count against it
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        // equal tracked metrics + NaN cost on one side: no domination
+        let c = SweepPoint { batches: 4, mean: 1.0, cov: 0.5, cost: 0.1 };
+        assert!(!dominates(&a, &c) && !dominates(&c, &a));
+        // with cost tracked on both sides it breaks the tie
+        let d = SweepPoint { batches: 5, mean: 1.0, cov: 0.5, cost: 0.2 };
+        assert!(dominates(&c, &d) && !dominates(&d, &c));
+    }
+
+    #[test]
+    fn speculative_beats_upfront_on_cost_at_better_mean_for_heavy_tails() {
+        // The acceptance scenario for timed replication: under a heavy
+        // tail, up-front full diversity (B = 1) pays N·k worker-seconds
+        // of insurance and its mean still carries the k = N scaling,
+        // while a speculative point at modest B gets the straggler
+        // insurance almost free — primaries usually beat the timeout.
+        // spec(B=3, t = 4·Q(0.9)) vs upfront(B=1), N=12, Pareto(1, 2):
+        // analytically mean ≈ 10.1 vs 12.5 and cost ≈ 25 vs 150.
+        let tau = ServiceDist::pareto(1.0, 2.0);
+        let mc = MonteCarlo::new(20_000, 33);
+        let up = mc.evaluate(&Scenario::balanced(12, 1, tau.clone())).unwrap();
+        let t = 4.0 * tau.quantile(0.9);
+        let spec = Scenario::balanced(12, 3, tau)
+            .with_replication(ReplicationPolicy::SpeculativeAt { t });
+        let sp = mc.evaluate(&spec).unwrap();
+        assert!(sp.mean <= up.mean, "mean {} vs {}", sp.mean, up.mean);
+        assert!(sp.cost < 0.5 * up.cost, "cost {} vs {}", sp.cost, up.cost);
+    }
+
+    #[test]
+    fn joint_plan_picks_a_timed_policy_when_cost_dominates() {
+        // Pareto(1, 1.5), N=12: every up-front point costs ≥ 36
+        // worker-seconds while speculative candidates at interior B run
+        // near primary-only cost (≈ 28) — so a cost-heavy objective
+        // must land on a timed policy.
+        let p = Planner::new(12, ServiceDist::pareto(1.0, 1.5));
+        let plan = p.plan_joint(Objective::CostLatency(0.1), 20_000, 7).unwrap();
+        assert!(
+            !plan.replication_policy.is_upfront(),
+            "joint plan chose {:?}",
+            plan.replication_policy
+        );
+        assert!(plan.predicted_cost.is_finite() && plan.predicted_cost > 0.0);
+        assert_eq!(12 % plan.batches, 0);
+        assert_eq!(plan.batch_size, 12 / plan.batches);
+        assert!(plan.regime.is_none());
+        // deterministic: same seed, same plan
+        let again = p.plan_joint(Objective::CostLatency(0.1), 20_000, 7).unwrap();
+        assert_eq!(plan.batches, again.batches);
+        assert_eq!(plan.replication_policy, again.replication_policy);
+        assert_eq!(plan.predicted_cost.to_bits(), again.predicted_cost.to_bits());
+        // under the pure mean objective the joint search still returns
+        // a coherent plan (possibly up-front — that candidate set is
+        // always included)
+        let joint = p.plan_joint(Objective::MeanCompletion, 4_000, 7).unwrap();
+        assert!(joint.predicted_mean.is_finite() && joint.predicted_mean > 0.0);
+        assert_eq!(12 % joint.batches, 0);
     }
 
     #[test]
@@ -569,17 +785,35 @@ mod tests {
     #[test]
     fn choose_skips_nan_points_and_matches_plan() {
         let pts = vec![
-            SweepPoint { batches: 1, mean: f64::NAN, cov: f64::NAN },
-            SweepPoint { batches: 2, mean: 3.0, cov: 0.5 },
-            SweepPoint { batches: 4, mean: 2.0, cov: 0.9 },
+            SweepPoint { batches: 1, mean: f64::NAN, cov: f64::NAN, cost: f64::NAN },
+            SweepPoint { batches: 2, mean: 3.0, cov: 0.5, cost: 10.0 },
+            SweepPoint { batches: 4, mean: 2.0, cov: 0.9, cost: 30.0 },
         ];
         let best = choose(&pts, Objective::MeanCompletion).unwrap();
         assert_eq!(best.batches, 4);
         let best = choose(&pts, Objective::Predictability).unwrap();
         assert_eq!(best.batches, 2);
+        // cost-dominant blend prefers the cheap point; mean-dominant the fast one
+        let best = choose(&pts, Objective::CostLatency(0.1)).unwrap();
+        assert_eq!(best.batches, 2);
+        let best = choose(&pts, Objective::CostLatency(0.9)).unwrap();
+        assert_eq!(best.batches, 4);
         assert!(choose(&[], Objective::MeanCompletion).is_none());
-        let all_nan = vec![SweepPoint { batches: 1, mean: f64::NAN, cov: f64::NAN }];
+        let all_nan = vec![SweepPoint {
+            batches: 1,
+            mean: f64::NAN,
+            cov: f64::NAN,
+            cost: f64::NAN,
+        }];
         assert!(choose(&all_nan, Objective::MeanCompletion).is_none());
+        // a NaN cost can never win the cost objective, even when every
+        // competitor is more expensive on the tracked axes
+        let missing_cost = vec![
+            SweepPoint { batches: 1, mean: 1.0, cov: 0.1, cost: f64::NAN },
+            SweepPoint { batches: 2, mean: 5.0, cov: 0.5, cost: 10.0 },
+        ];
+        let best = choose(&missing_cost, Objective::CostLatency(0.5)).unwrap();
+        assert_eq!(best.batches, 2);
         // the extracted scorer drives plan_with: same winner either way
         let p = Planner::new(100, ServiceDist::shifted_exp(0.05, 1.0));
         let plan = p.plan(Objective::MeanCompletion);

@@ -17,10 +17,23 @@
 //! replication loop does no per-draw enum dispatch and no per-sample
 //! allocation. [`JobSimulator::sample`] stays as the allocating
 //! convenience wrapper.
+//!
+//! Replication timing: [`JobSimulator::with_replication`] selects a
+//! [`ReplicationPolicy`] — up-front (the paper's, and the default),
+//! speculative-at-`t`, or relaunch-at-`t`. The timed policies reuse the
+//! disjoint-layout fast path's draw discipline verbatim (one batched
+//! fill of `n_workers` draws, consumed in `batch_workers` order), so
+//! the up-front policy's output is bit-identical to the pre-policy
+//! kernel, and every policy shares one stream layout per replication.
+//! [`JobSimulator::sample_with_cost`] additionally reports the
+//! execution's **cost** in worker-seconds (kill-at-batch-completion;
+//! NaN on paths that do not track cost — overlap, failures, Failed
+//! outcomes).
 
 use crate::batching::Layout;
 use crate::dist::{Sampler, ServiceDist};
 use crate::sim::event::EventQueue;
+use crate::sim::policy::ReplicationPolicy;
 use crate::util::rng::Pcg64;
 
 /// Worker failure model for a single job execution.
@@ -136,6 +149,7 @@ pub(crate) struct SimView<'a> {
     pub(crate) model: ServiceModel,
     pub(crate) failure: FailureModel,
     pub(crate) fast_disjoint: bool,
+    pub(crate) replication: ReplicationPolicy,
 }
 
 impl SimView<'_> {
@@ -155,24 +169,42 @@ impl SimView<'_> {
         rng: &mut Pcg64,
         scratch: &mut SimScratch,
     ) -> JobOutcome {
-        match self.failure {
-            FailureModel::None if self.fast_disjoint => self.sample_fast(rng, scratch),
-            FailureModel::None => self.sample_general(rng, scratch),
-            _ => self.sample_with_events(rng),
+        self.sample_with_cost(rng, scratch).0
+    }
+
+    /// Sample one job execution, returning `(outcome, cost)` where cost
+    /// is total worker-seconds under kill-at-batch-completion. Cost is
+    /// NaN on the overlap/failure paths (which do not track it) and for
+    /// Failed outcomes.
+    pub(crate) fn sample_with_cost(
+        &self,
+        rng: &mut Pcg64,
+        scratch: &mut SimScratch,
+    ) -> (JobOutcome, f64) {
+        match self.replication {
+            ReplicationPolicy::Upfront => match self.failure {
+                FailureModel::None if self.fast_disjoint => self.sample_fast(rng, scratch),
+                FailureModel::None => (self.sample_general(rng, scratch), f64::NAN),
+                _ => (self.sample_with_events(rng), f64::NAN),
+            },
+            ReplicationPolicy::SpeculativeAt { t } => self.sample_speculative(t, rng, scratch),
+            ReplicationPolicy::RelaunchAt { t } => self.sample_relaunch(t, rng, scratch),
         }
     }
 
     /// Disjoint-batch fast path: `T = max_b min_{w∈b} S_w`, one batched
-    /// fill, no per-task bookkeeping.
-    fn sample_fast(&self, rng: &mut Pcg64, scratch: &mut SimScratch) -> JobOutcome {
+    /// fill, no per-task bookkeeping. Cost: every replica of batch `b`
+    /// runs `[0, D_b]`, so the batch adds `r_b · D_b` worker-seconds.
+    fn sample_fast(&self, rng: &mut Pcg64, scratch: &mut SimScratch) -> (JobOutcome, f64) {
         let n_draws = self.layout.n_workers();
         scratch.services.resize(n_draws, 0.0);
         self.sampler.fill(rng, &mut scratch.services);
         let mut next = 0usize;
         let mut t_job: f64 = 0.0;
+        let mut cost: f64 = 0.0;
         for (b, workers) in self.layout.batch_workers.iter().enumerate() {
             if workers.is_empty() {
-                return JobOutcome::Failed; // uncovered batch (random assignment)
+                return (JobOutcome::Failed, f64::NAN); // uncovered batch (random assignment)
             }
             let size = self.layout.batches[b].len() as f64;
             let mut min_s = f64::INFINITY;
@@ -187,11 +219,124 @@ impl SimView<'_> {
                     min_s = s;
                 }
             }
+            cost += workers.len() as f64 * min_s;
             if min_s > t_job {
                 t_job = min_s;
             }
         }
-        JobOutcome::Done(t_job)
+        (JobOutcome::Done(t_job), cost)
+    }
+
+    /// Speculative-at-`t` on the disjoint fast path. Same single fill
+    /// and draw order as [`SimView::sample_fast`] — the first draw of a
+    /// batch is its primary, the rest are the backups launched at `t`.
+    /// Preconditions (disjoint layout, no failure injection) are
+    /// enforced by the eval layer; this path degrades to `Failed`
+    /// rather than panicking if they are violated.
+    fn sample_speculative(
+        &self,
+        t: f64,
+        rng: &mut Pcg64,
+        scratch: &mut SimScratch,
+    ) -> (JobOutcome, f64) {
+        if !self.fast_disjoint || self.failure != FailureModel::None {
+            return (JobOutcome::Failed, f64::NAN);
+        }
+        let n_draws = self.layout.n_workers();
+        scratch.services.resize(n_draws, 0.0);
+        self.sampler.fill(rng, &mut scratch.services);
+        let mut next = 0usize;
+        let mut t_job: f64 = 0.0;
+        let mut cost: f64 = 0.0;
+        for (b, workers) in self.layout.batch_workers.iter().enumerate() {
+            if workers.is_empty() {
+                return (JobOutcome::Failed, f64::NAN);
+            }
+            let size = self.layout.batches[b].len() as f64;
+            let scale = |tau: f64| match self.model {
+                ServiceModel::SizeDependentPerWorker => size * tau,
+                ServiceModel::PerBatchDirect => tau,
+            };
+            let primary = scale(scratch.services[next]);
+            next += 1;
+            let r = workers.len();
+            let (done, batch_cost) = if r == 1 || primary <= t {
+                // backups never launch; their draws are still consumed
+                // so every policy shares one stream layout
+                next += r - 1;
+                (primary, primary)
+            } else {
+                let mut backup_min = f64::INFINITY;
+                let backup_lo = next;
+                for _ in 1..r {
+                    let s = scale(scratch.services[next]);
+                    next += 1;
+                    if s < backup_min {
+                        backup_min = s;
+                    }
+                }
+                let done = primary.min(t + backup_min);
+                // primary runs [0, done]; backup i runs [t, min(t+s_i, done)]
+                let mut c = done;
+                for &tau in &scratch.services[backup_lo..next] {
+                    c += scale(tau).min(done - t);
+                }
+                (done, c)
+            };
+            cost += batch_cost;
+            if done > t_job {
+                t_job = done;
+            }
+        }
+        (JobOutcome::Done(t_job), cost)
+    }
+
+    /// Relaunch-at-`t` on the disjoint fast path: the batch's `r`
+    /// assigned workers become sequential attempts; attempt `i` starts
+    /// at `(i−1)·t` and is cancelled at its own deadline unless it is
+    /// the last. Exactly one worker is busy at a time, so cost = D.
+    fn sample_relaunch(
+        &self,
+        t: f64,
+        rng: &mut Pcg64,
+        scratch: &mut SimScratch,
+    ) -> (JobOutcome, f64) {
+        if !self.fast_disjoint || self.failure != FailureModel::None {
+            return (JobOutcome::Failed, f64::NAN);
+        }
+        let n_draws = self.layout.n_workers();
+        scratch.services.resize(n_draws, 0.0);
+        self.sampler.fill(rng, &mut scratch.services);
+        let mut next = 0usize;
+        let mut t_job: f64 = 0.0;
+        let mut cost: f64 = 0.0;
+        for (b, workers) in self.layout.batch_workers.iter().enumerate() {
+            if workers.is_empty() {
+                return (JobOutcome::Failed, f64::NAN);
+            }
+            let size = self.layout.batches[b].len() as f64;
+            let r = workers.len();
+            let mut done = f64::NAN;
+            for i in 0..r {
+                let tau = scratch.services[next];
+                next += 1;
+                if !done.is_nan() {
+                    continue; // finished earlier; drain the batch's draws
+                }
+                let s = match self.model {
+                    ServiceModel::SizeDependentPerWorker => size * tau,
+                    ServiceModel::PerBatchDirect => tau,
+                };
+                if s <= t || i == r - 1 {
+                    done = i as f64 * t + s;
+                }
+            }
+            cost += done;
+            if done > t_job {
+                t_job = done;
+            }
+        }
+        (JobOutcome::Done(t_job), cost)
     }
 
     /// General overlap path: per-task earliest-recovery scan.
@@ -303,6 +448,9 @@ pub struct JobSimulator {
     /// fall back to the general path. Verified exactly (bitsets), not
     /// by size sums — see [`fast_disjoint_layout`].
     fast_disjoint: bool,
+    /// When replicas launch (up-front by default; timed policies run on
+    /// the disjoint fast path only — see [`ReplicationPolicy`]).
+    replication: ReplicationPolicy,
 }
 
 impl JobSimulator {
@@ -319,6 +467,7 @@ impl JobSimulator {
             model: ServiceModel::SizeDependentPerWorker,
             failure: FailureModel::None,
             fast_disjoint,
+            replication: ReplicationPolicy::Upfront,
         }
     }
 
@@ -329,6 +478,16 @@ impl JobSimulator {
 
     pub fn with_failures(mut self, failure: FailureModel) -> Self {
         self.failure = failure;
+        self
+    }
+
+    /// Select the replication timing policy. Timed policies
+    /// (speculative/relaunch) require a disjoint layout and no failure
+    /// injection; violating combinations yield `Failed` outcomes —
+    /// [`crate::eval::MonteCarlo`] rejects them with a config error
+    /// before any sampling starts.
+    pub fn with_replication(mut self, replication: ReplicationPolicy) -> Self {
+        self.replication = replication;
         self
     }
 
@@ -344,6 +503,7 @@ impl JobSimulator {
             model: self.model,
             failure: self.failure,
             fast_disjoint: self.fast_disjoint,
+            replication: self.replication,
         }
     }
 
@@ -358,6 +518,17 @@ impl JobSimulator {
     /// the allocation-free entry point replication loops should use.
     pub fn sample_into(&self, rng: &mut Pcg64, scratch: &mut SimScratch) -> JobOutcome {
         self.view().sample_into(rng, scratch)
+    }
+
+    /// Sample one execution and its cost in worker-seconds (see
+    /// [`ReplicationPolicy`] for the per-policy cost semantics; NaN on
+    /// paths that do not track cost).
+    pub fn sample_with_cost(
+        &self,
+        rng: &mut Pcg64,
+        scratch: &mut SimScratch,
+    ) -> (JobOutcome, f64) {
+        self.view().sample_with_cost(rng, scratch)
     }
 }
 
@@ -579,6 +750,136 @@ mod tests {
             batch_workers: vec![vec![0], vec![0]],
         };
         assert!(!fast_disjoint_layout(&layout));
+    }
+
+    #[test]
+    fn speculative_at_zero_matches_upfront() {
+        // t = 0: backups launch immediately → identical completion
+        // times (bitwise: same fill, same consumption order) and the
+        // same cost up to summation order
+        let mut rng = Pcg64::new(40);
+        for b in [1usize, 2, 3, 4, 6, 12] {
+            let layout =
+                Policy::BalancedNonOverlapping { batches: b }.layout(12, &mut rng).unwrap();
+            let upfront = JobSimulator::new(layout.clone(), ServiceDist::pareto(1.0, 2.0));
+            let spec = JobSimulator::new(layout, ServiceDist::pareto(1.0, 2.0))
+                .with_replication(ReplicationPolicy::SpeculativeAt { t: 0.0 });
+            let mut scratch = SimScratch::new();
+            for rep in 0..200u64 {
+                let mut a = Pcg64::new(1_000 + rep);
+                let mut c = Pcg64::new(1_000 + rep);
+                let (out_u, cost_u) = upfront.sample_with_cost(&mut a, &mut scratch);
+                let (out_s, cost_s) = spec.sample_with_cost(&mut c, &mut scratch);
+                let (Some(tu), Some(ts)) = (out_u.time(), out_s.time()) else {
+                    panic!("balanced layouts never fail");
+                };
+                assert_eq!(tu.to_bits(), ts.to_bits(), "B={b}");
+                assert!((cost_u - cost_s).abs() / cost_u < 1e-12, "B={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn upfront_cost_is_replicas_times_completion() {
+        // B=1: every one of the N workers runs exactly [0, T]
+        let n = 8;
+        let mut rng = Pcg64::new(41);
+        let layout = Policy::BalancedNonOverlapping { batches: 1 }.layout(n, &mut rng).unwrap();
+        let sim = JobSimulator::new(layout, ServiceDist::exp(1.0));
+        let mut scratch = SimScratch::new();
+        for _ in 0..100 {
+            let (out, cost) = sim.sample_with_cost(&mut rng, &mut scratch);
+            let t = out.time().unwrap();
+            assert_eq!(cost.to_bits(), (n as f64 * t).to_bits());
+        }
+    }
+
+    #[test]
+    fn huge_timeout_reduces_both_timed_policies_to_primary_only() {
+        // t far above any service time: the primary always beats the
+        // deadline, so speculative and relaunch agree bitwise — D = s_1
+        // per batch and cost = completion work only
+        let mut rng = Pcg64::new(42);
+        let layout = Policy::BalancedNonOverlapping { batches: 3 }.layout(12, &mut rng).unwrap();
+        let tau = ServiceDist::shifted_exp(0.05, 1.0);
+        let spec = JobSimulator::new(layout.clone(), tau.clone())
+            .with_replication(ReplicationPolicy::SpeculativeAt { t: 1e12 });
+        let relaunch = JobSimulator::new(layout, tau)
+            .with_replication(ReplicationPolicy::RelaunchAt { t: 1e12 });
+        let mut scratch = SimScratch::new();
+        for rep in 0..200u64 {
+            let mut a = Pcg64::new(2_000 + rep);
+            let mut b = Pcg64::new(2_000 + rep);
+            let (out_s, cost_s) = spec.sample_with_cost(&mut a, &mut scratch);
+            let (out_r, cost_r) = relaunch.sample_with_cost(&mut b, &mut scratch);
+            assert_eq!(out_s.time().unwrap().to_bits(), out_r.time().unwrap().to_bits());
+            assert_eq!(cost_s.to_bits(), cost_r.to_bits());
+        }
+    }
+
+    #[test]
+    fn relaunch_cost_equals_sum_of_batch_completions() {
+        // one worker busy at a time → the job's cost is Σ_b D_b; with
+        // B=1 that is exactly T
+        let mut rng = Pcg64::new(43);
+        let layout = Policy::BalancedNonOverlapping { batches: 1 }.layout(6, &mut rng).unwrap();
+        let sim = JobSimulator::new(layout, ServiceDist::exp(1.0))
+            .with_replication(ReplicationPolicy::RelaunchAt { t: 0.4 });
+        let mut scratch = SimScratch::new();
+        for _ in 0..200 {
+            let (out, cost) = sim.sample_with_cost(&mut rng, &mut scratch);
+            assert_eq!(cost.to_bits(), out.time().unwrap().to_bits());
+        }
+    }
+
+    #[test]
+    fn speculative_trades_latency_for_cost_on_average() {
+        // a positive timeout can only delay completion, and for a
+        // heavy-tail τ it saves real worker-seconds: up-front pays
+        // r·E[min_r] ≈ r·σ while speculation usually pays one draw
+        let n = 12;
+        let b = 3;
+        let mut rng = Pcg64::new(44);
+        let layout = Policy::BalancedNonOverlapping { batches: b }.layout(n, &mut rng).unwrap();
+        let tau = ServiceDist::pareto(1.0, 2.0);
+        let upfront = JobSimulator::new(layout.clone(), tau.clone());
+        let spec = JobSimulator::new(layout, tau)
+            .with_replication(ReplicationPolicy::SpeculativeAt { t: 8.0 });
+        let mut scratch = SimScratch::new();
+        let reps = 20_000u64;
+        let (mut t_u, mut c_u, mut t_s, mut c_s) = (0.0, 0.0, 0.0, 0.0);
+        for rep in 0..reps {
+            let mut a = Pcg64::new(3_000 + rep);
+            let mut c = Pcg64::new(3_000 + rep);
+            let (out, cost) = upfront.sample_with_cost(&mut a, &mut scratch);
+            let (out2, cost2) = spec.sample_with_cost(&mut c, &mut scratch);
+            let (ta, ts) = (out.time().unwrap(), out2.time().unwrap());
+            assert!(ts >= ta, "speculation cannot beat upfront on the same draws");
+            t_u += ta;
+            c_u += cost;
+            t_s += ts;
+            c_s += cost2;
+        }
+        assert!(t_s >= t_u);
+        assert!(
+            c_s < 0.7 * c_u,
+            "expected a large cost saving: spec {} vs upfront {}",
+            c_s / reps as f64,
+            c_u / reps as f64
+        );
+    }
+
+    #[test]
+    fn timed_policies_degrade_to_failed_off_the_fast_path() {
+        // overlapping layout: the timed kernels refuse (no panic)
+        let mut rng = Pcg64::new(45);
+        let layout = Policy::CyclicOverlapping { batches: 4 }.layout(12, &mut rng).unwrap();
+        let sim = JobSimulator::new(layout, ServiceDist::exp(1.0))
+            .with_replication(ReplicationPolicy::SpeculativeAt { t: 0.5 });
+        let mut scratch = SimScratch::new();
+        let (out, cost) = sim.sample_with_cost(&mut rng, &mut scratch);
+        assert_eq!(out, JobOutcome::Failed);
+        assert!(cost.is_nan());
     }
 
     #[test]

@@ -15,16 +15,22 @@
 //! * [`pool`] — the persistent scoped worker pool the maintained
 //!   driver fans scenario×replication-chunk units across (no per-call
 //!   thread spawn/join).
+//! * [`policy`] — replication *timing* policies
+//!   ([`policy::ReplicationPolicy`]): up-front (the paper's),
+//!   speculative-at-`t`, and relaunch-at-`t`, each with a
+//!   worker-seconds cost semantics alongside completion time.
 //!
 //! [`Layout`]: crate::batching::Layout
 
 pub mod event;
 pub mod job;
 pub mod montecarlo;
+pub mod policy;
 pub mod pool;
 
 pub use event::{Event, EventQueue};
 pub use job::{FailureModel, JobOutcome, JobSimulator, SimScratch};
+pub use policy::ReplicationPolicy;
 #[allow(deprecated)]
 pub use montecarlo::{simulate_policy, McEstimate};
 pub use pool::WorkerPool;

@@ -1,0 +1,170 @@
+//! Replication *timing* policies — when a batch's replicas launch.
+//!
+//! The paper replicates every batch up front: all `r = N/B` workers of
+//! a batch start at time 0 and the first finisher wins. Real clusters
+//! rarely pay for that: speculative execution launches backups only for
+//! batches still unfinished at a straggler timeout `t` (Wang, Joshi &
+//! Wornell, arXiv 1503.03128), and relaunch-style mitigation cancels a
+//! straggling attempt and resubmits it instead of adding a replica.
+//! [`ReplicationPolicy`] names these three members of the family; the
+//! job kernel ([`crate::sim::job`]) gives each a completion-time *and*
+//! a **cost** semantics, where cost is total worker-seconds consumed
+//! (replicas are killed the moment their batch completes).
+//!
+//! Semantics of `t` (per batch, service times `s_1..s_r` in worker
+//! order, first listed worker = the primary):
+//!
+//! * [`Upfront`](ReplicationPolicy::Upfront) — all `r` replicas start
+//!   at 0: `D = min_i s_i`, `cost = r·D`. Today's behavior, and the
+//!   `t = 0` limit of speculation.
+//! * [`SpeculativeAt { t }`](ReplicationPolicy::SpeculativeAt) — the
+//!   primary starts alone; if it has not finished by `t`, the batch's
+//!   remaining `r − 1` workers launch at `t`:
+//!   `D = min(s_1, t + min_{i≥2} s_i)`,
+//!   `cost = D + Σ_{i≥2} min(s_i, D − t)` (zero extra cost when the
+//!   primary beats the timeout).
+//! * [`RelaunchAt { t }`](ReplicationPolicy::RelaunchAt) — one attempt
+//!   at a time: attempt `i` starts at `(i−1)·t` and is cancelled at its
+//!   own `t`-deadline unless it is the last (`i = r`), which runs to
+//!   completion. `D = (i*−1)·t + s_{i*}` for the first attempt that
+//!   beats its deadline (or the last), and `cost = D` — exactly one
+//!   worker is ever busy.
+//!
+//! A job's completion time is still `T = max_b D_b` and its cost the
+//! sum of batch costs. Only the up-front policy has closed forms; the
+//! timed policies are evaluated by Monte-Carlo on the disjoint-layout
+//! fast path (no failure injection, no overlapping/random layouts —
+//! the eval layer rejects those combinations up front).
+
+use crate::util::error::{Error, Result};
+
+/// When a batch's replicas launch (see the module docs for the exact
+/// completion-time and worker-seconds semantics of each member).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum ReplicationPolicy {
+    /// All replicas start at time 0 — the paper's policy.
+    #[default]
+    Upfront,
+    /// Backups launch at time `t` for batches the primary has not
+    /// finished by then (speculative execution).
+    SpeculativeAt {
+        /// Straggler timeout (same unit as service times).
+        t: f64,
+    },
+    /// Cancel-and-resubmit: each attempt gets `t` seconds before it is
+    /// replaced; the final attempt runs to completion.
+    RelaunchAt {
+        /// Per-attempt deadline (same unit as service times).
+        t: f64,
+    },
+}
+
+impl ReplicationPolicy {
+    /// Stable short name: `upfront`, `speculative`, or `relaunch`.
+    /// Part of the sweep-store record format — do not repurpose.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplicationPolicy::Upfront => "upfront",
+            ReplicationPolicy::SpeculativeAt { .. } => "speculative",
+            ReplicationPolicy::RelaunchAt { .. } => "relaunch",
+        }
+    }
+
+    /// The timeout parameter, when the policy has one.
+    pub fn t(&self) -> Option<f64> {
+        match self {
+            ReplicationPolicy::Upfront => None,
+            ReplicationPolicy::SpeculativeAt { t } | ReplicationPolicy::RelaunchAt { t } => {
+                Some(*t)
+            }
+        }
+    }
+
+    /// `true` for the paper's up-front policy (the compatibility
+    /// default everywhere: old stores, specs without a `policies` axis,
+    /// CLI without `--policy`).
+    pub fn is_upfront(&self) -> bool {
+        matches!(self, ReplicationPolicy::Upfront)
+    }
+
+    /// Human-readable label, e.g. `speculative(t=0.5)`.
+    pub fn label(&self) -> String {
+        match self {
+            ReplicationPolicy::Upfront => "upfront".to_string(),
+            ReplicationPolicy::SpeculativeAt { t } => format!("speculative(t={t})"),
+            ReplicationPolicy::RelaunchAt { t } => format!("relaunch(t={t})"),
+        }
+    }
+
+    /// Build a policy from its stable name and optional timeout —
+    /// the one parser the CLI, spec files, and store records share.
+    /// Timed policies require a finite `t ≥ 0`; `upfront` rejects one.
+    pub fn parse(name: &str, t: Option<f64>) -> Result<ReplicationPolicy> {
+        match (name, t) {
+            ("upfront", None) => Ok(ReplicationPolicy::Upfront),
+            ("upfront", Some(_)) => {
+                Err(Error::Config("policy 'upfront' takes no timeout t".into()))
+            }
+            ("speculative" | "relaunch", Some(t)) if !(t.is_finite() && t >= 0.0) => Err(
+                Error::Config(format!("policy '{name}' needs a finite t >= 0, got {t}")),
+            ),
+            ("speculative", Some(t)) => Ok(ReplicationPolicy::SpeculativeAt { t }),
+            ("relaunch", Some(t)) => Ok(ReplicationPolicy::RelaunchAt { t }),
+            ("speculative" | "relaunch", None) => Err(Error::Config(format!(
+                "policy '{name}' needs a timeout (--spec-t T or {{\"{name}\": T}})"
+            ))),
+            (other, _) => Err(Error::Config(format!(
+                "unknown replication policy '{other}' \
+                 (expected upfront | speculative | relaunch)"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_and_t_roundtrip_through_parse() {
+        for policy in [
+            ReplicationPolicy::Upfront,
+            ReplicationPolicy::SpeculativeAt { t: 0.5 },
+            ReplicationPolicy::RelaunchAt { t: 2.0 },
+        ] {
+            let back = ReplicationPolicy::parse(policy.name(), policy.t()).unwrap();
+            assert_eq!(back, policy);
+        }
+    }
+
+    #[test]
+    fn default_is_upfront() {
+        assert!(ReplicationPolicy::default().is_upfront());
+        assert_eq!(ReplicationPolicy::default().t(), None);
+    }
+
+    #[test]
+    fn labels_are_distinct_and_carry_t() {
+        assert_eq!(ReplicationPolicy::Upfront.label(), "upfront");
+        assert_eq!(
+            ReplicationPolicy::SpeculativeAt { t: 0.25 }.label(),
+            "speculative(t=0.25)"
+        );
+        assert_eq!(ReplicationPolicy::RelaunchAt { t: 1.0 }.label(), "relaunch(t=1)");
+    }
+
+    #[test]
+    fn parse_rejects_bad_inputs() {
+        assert!(ReplicationPolicy::parse("upfront", Some(1.0)).is_err());
+        assert!(ReplicationPolicy::parse("speculative", None).is_err());
+        assert!(ReplicationPolicy::parse("relaunch", Some(-1.0)).is_err());
+        assert!(ReplicationPolicy::parse("speculative", Some(f64::NAN)).is_err());
+        assert!(ReplicationPolicy::parse("speculative", Some(f64::INFINITY)).is_err());
+        assert!(ReplicationPolicy::parse("eager", None).is_err());
+        // t = 0 is legal (speculation at 0 ≡ upfront, a tested identity)
+        assert_eq!(
+            ReplicationPolicy::parse("speculative", Some(0.0)).unwrap(),
+            ReplicationPolicy::SpeculativeAt { t: 0.0 }
+        );
+    }
+}

@@ -1,8 +1,10 @@
 //! Grid expansion and content addressing.
 //!
 //! A [`ScenarioSet`] is the deterministic expansion of a [`SweepSpec`]
-//! over a trace: `jobs × batch counts × crash levels × backends`, in
-//! that nesting order. Each case carries a **content key** — a stable
+//! over a trace: `jobs × batch counts × crash levels × replication
+//! policies × backends`, in that nesting order (a single-policy
+//! `["upfront"]` axis reproduces the pre-policy order exactly). Each
+//! case carries a **content key** — a stable
 //! 64-bit hash of everything that determines its estimate (scenario,
 //! estimator configuration, spec seed) — which is simultaneously:
 //!
@@ -21,6 +23,7 @@ use crate::batching::{operating_points, Policy};
 use crate::dist::ServiceDist;
 use crate::eval::{substream, Scenario};
 use crate::sim::job::FailureModel;
+use crate::sim::policy::ReplicationPolicy;
 use crate::sweep::spec::{Backend, SweepSpec};
 use crate::traces::{JobAnalysis, Trace};
 use crate::util::error::{Error, Result};
@@ -118,21 +121,32 @@ impl ScenarioSet {
                     } else {
                         FailureModel::Crash { p }
                     };
-                    for &backend in &spec.backends {
-                        let scenario = Scenario::balanced(n, b, Arc::clone(&tau))
-                            .with_failures(failures);
-                        let reps =
-                            if backend == Backend::Analytic { 0 } else { spec.reps };
-                        let key = case_key(&scenario, backend, reps, spec.seed);
-                        cases.push(SweepCase {
-                            index: cases.len(),
-                            job_id,
-                            scenario,
-                            backend,
-                            reps,
-                            key,
-                            stream_seed: substream(spec.seed, key),
-                        });
+                    for &replication in &spec.policies {
+                        if !replication.is_upfront() && p > 0.0 {
+                            return Err(Error::Config(format!(
+                                "policy '{}' cannot be combined with failure \
+                                 injection (crash={p}); timed policies are only \
+                                 simulated without failures",
+                                replication.label()
+                            )));
+                        }
+                        for &backend in &spec.backends {
+                            let scenario = Scenario::balanced(n, b, Arc::clone(&tau))
+                                .with_failures(failures)
+                                .with_replication(replication);
+                            let reps =
+                                if backend == Backend::Analytic { 0 } else { spec.reps };
+                            let key = case_key(&scenario, backend, reps, spec.seed);
+                            cases.push(SweepCase {
+                                index: cases.len(),
+                                job_id,
+                                scenario,
+                                backend,
+                                reps,
+                                key,
+                                stream_seed: substream(spec.seed, key),
+                            });
+                        }
                     }
                 }
             }
@@ -224,10 +238,10 @@ pub fn shard_range(total: usize, k: usize, m: usize) -> Range<usize> {
 
 /// Content-address one case: a stable FNV-1a hash over a canonical
 /// encoding of the scenario (workers, policy, τ including every
-/// empirical sample bit, failure model), the estimator configuration
-/// (backend, replication budget), and the spec seed. Not a
-/// cryptographic hash — it only needs to separate the cases of
-/// overlapping sweep specs.
+/// empirical sample bit, failure model, replication policy), the
+/// estimator configuration (backend, replication budget), and the spec
+/// seed. Not a cryptographic hash — it only needs to separate the
+/// cases of overlapping sweep specs.
 pub fn case_key(scenario: &Scenario, backend: Backend, reps: usize, seed: u64) -> u64 {
     let mut h = Fnv::new();
     h.write(b"replica-sweep-v1");
@@ -238,6 +252,15 @@ pub fn case_key(scenario: &Scenario, backend: Backend, reps: usize, seed: u64) -
     h.write(backend.name().as_bytes());
     h.write_u64(reps as u64);
     h.write_u64(seed);
+    // The replication policy extends the encoding only when timed:
+    // every pre-policy store addressed its (implicitly up-front) cases
+    // without these bytes, and those addresses must not move.
+    if !scenario.replication.is_upfront() {
+        h.write(scenario.replication.name().as_bytes());
+        if let Some(t) = scenario.replication.t() {
+            h.write_f64(t);
+        }
+    }
     h.finish()
 }
 
@@ -431,6 +454,59 @@ mod tests {
         assert_eq!(c.crash(), 0.3);
         assert_eq!(c.backend, Backend::Auto);
         assert_eq!(c.key_hex().len(), 16);
+    }
+
+    #[test]
+    fn policy_axis_multiplies_and_preserves_upfront_keys() {
+        let trace = small_trace();
+        let base = ScenarioSet::from_trace(&trace, &spec()).unwrap();
+        let mut s = spec();
+        s.policies = vec![
+            ReplicationPolicy::Upfront,
+            ReplicationPolicy::SpeculativeAt { t: 1.0 },
+            ReplicationPolicy::RelaunchAt { t: 1.0 },
+        ];
+        let set = ScenarioSet::from_trace(&trace, &s).unwrap();
+        assert_eq!(set.len(), base.len() * 3);
+        // the up-front slice of the widened grid keeps the exact keys
+        // of the single-policy grid: old stores stay addressable
+        let upfront: Vec<u64> = set
+            .cases
+            .iter()
+            .filter(|c| c.scenario.replication.is_upfront())
+            .map(|c| c.key)
+            .collect();
+        assert_eq!(upfront, base.expected_keys());
+        // timed policies with different t (and different policies at
+        // the same t) address different estimates
+        let mut keys = set.expected_keys();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), set.len());
+        let mut s2 = spec();
+        s2.policies = vec![ReplicationPolicy::SpeculativeAt { t: 2.0 }];
+        let set2 = ScenarioSet::from_trace(&trace, &s2).unwrap();
+        let spec1: Vec<&SweepCase> = set
+            .cases
+            .iter()
+            .filter(|c| !c.scenario.replication.is_upfront())
+            .collect();
+        for (a, b) in spec1.iter().zip(&set2.cases) {
+            assert_ne!(a.key, b.key, "t must be part of the content address");
+        }
+    }
+
+    #[test]
+    fn timed_policies_reject_the_crash_axis() {
+        let trace = small_trace();
+        let mut s = spec();
+        s.crash = vec![0.0, 0.3];
+        s.policies = vec![ReplicationPolicy::SpeculativeAt { t: 1.0 }];
+        let err = ScenarioSet::from_trace(&trace, &s).unwrap_err();
+        assert!(err.to_string().contains("failure injection"), "{err}");
+        // crash = [0] is fine for the same policy
+        s.crash = vec![0.0];
+        assert!(ScenarioSet::from_trace(&trace, &s).is_ok());
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //!
 //! * [`SweepSpec`] ([`spec`]) — a JSON spec naming the workload (trace
 //!   file or generator parameters) and the axes: jobs × batch counts ×
-//!   crash levels × backends.
+//!   crash levels × replication policies × backends.
 //! * [`ScenarioSet`] ([`grid`]) — the deterministic expansion of a spec
 //!   into content-addressed cases: each case's key is a stable hash of
 //!   scenario + estimator config + seed, and doubles as its cache
@@ -33,8 +33,11 @@
 //!   compacted with [`store::EstimateCache::gc`].
 //! * [`report`] — the replication-gain report: per-job optimal
 //!   redundancy, speedup over the B = N baseline, and the
-//!   E\[T\]-vs-predictability trade-off, with tail classes from
-//!   [`crate::dist::TailFit`].
+//!   E\[T\]-vs-predictability (and, on the policy axis, cost)
+//!   trade-off, with tail classes from [`crate::dist::TailFit`].
+//!   [`gain_report_from_records`] builds the same rows straight from
+//!   parsed store lines (`sweep-merge --report-only`), with no spec
+//!   re-expansion or trace re-generation.
 //!
 //! `experiments::traces_exp` (Figs. 11–13), the `replica sweep --spec`
 //! CLI command (plus `replica sweep-merge`), and CI's regression
@@ -51,7 +54,10 @@ pub mod store;
 
 pub use grid::{case_key, shard_range, ScenarioSet, SweepCase};
 pub use merge::{merge, merge_shards, shard_path, MergeReport};
-pub use report::{gain_report, gain_table, headline_speedup, GainRow};
+pub use report::{
+    gain_report, gain_report_from_records, gain_table, headline_speedup, parse_report_line,
+    GainRow, RecordRow,
+};
 pub use runner::{run, run_spec, CaseResult, RunConfig};
 pub use spec::{Backend, SweepSpec, Workload, DEFAULT_SHARD_SIZE, DEFAULT_SWEEP_REPS};
 pub use store::{CacheGc, CaseOutcome, EstimateCache, StoredEstimate};

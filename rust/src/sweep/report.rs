@@ -12,11 +12,16 @@ use std::collections::BTreeMap;
 use crate::dist::{TailClass, TailFit};
 use crate::metrics::{fnum, Table};
 use crate::planner::{choose, Objective, SweepPoint};
+use crate::sim::policy::ReplicationPolicy;
 use crate::sweep::runner::CaseResult;
-use crate::sweep::store::CaseOutcome;
+use crate::sweep::spec::Backend;
+use crate::sweep::store::{parse_record, CaseOutcome};
 use crate::traces::Trace;
+use crate::util::error::{Error, Result};
+use crate::util::json::{parse, Json};
 
-/// One job's replication gain at one (backend, crash) axis point.
+/// One job's replication gain at one (backend, crash, policy) axis
+/// point.
 #[derive(Clone, Debug)]
 pub struct GainRow {
     pub job_id: u64,
@@ -26,6 +31,8 @@ pub struct GainRow {
     pub backend: &'static str,
     /// Crash probability of the failure axis (0 = none).
     pub crash: f64,
+    /// Replication policy of the policy axis.
+    pub policy: ReplicationPolicy,
     /// Tail class of the job's service times (when a trace was given).
     pub tail: Option<TailClass>,
     /// Optimal batch count under the objective (`None` when every
@@ -53,56 +60,179 @@ impl GainRow {
     }
 }
 
+/// Everything the gain report needs from one result-store line. The
+/// streaming `sweep-merge --report-only` path parses these straight
+/// out of the merged store, so the §VII report never re-expands the
+/// spec or re-generates the trace. (Tail classes do need the trace
+/// and are reported as `-` on that path.)
+#[derive(Clone, Debug)]
+pub struct RecordRow {
+    pub job_id: u64,
+    /// Worker budget (the record's `n` field).
+    pub n: usize,
+    /// Batch count (the record's `b` field).
+    pub batches: usize,
+    /// Requested backend (the record's `backend` field).
+    pub backend: Backend,
+    /// Crash probability (the record's `crash` field).
+    pub crash: f64,
+    pub outcome: CaseOutcome,
+}
+
+/// Parse one result-store line into a [`RecordRow`]. Cache lines are
+/// rejected — they key outcomes by content address only and carry no
+/// case fields to report on.
+pub fn parse_report_line(line: &str) -> Result<RecordRow> {
+    let (_, outcome) = parse_record(line)?;
+    let doc = parse(line)?;
+    let idx = |name: &str| -> Result<usize> {
+        doc.get(name).and_then(Json::as_usize).ok_or_else(|| {
+            Error::Parse(format!(
+                "store record missing '{name}' — cache lines carry no case \
+                 fields; report from the merged result store"
+            ))
+        })
+    };
+    let backend = doc
+        .get("backend")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Parse("store record missing 'backend'".into()))?;
+    let crash = doc
+        .get("crash")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| Error::Parse("store record missing 'crash'".into()))?;
+    Ok(RecordRow {
+        job_id: idx("job")? as u64,
+        n: idx("n")?,
+        batches: idx("b")?,
+        backend: Backend::parse(backend)?,
+        crash,
+        outcome,
+    })
+}
+
+/// One case, reduced to the fields the grouping logic needs —
+/// constructible both from in-memory [`CaseResult`]s and from parsed
+/// store records.
+struct CaseView<'a> {
+    job_id: u64,
+    n: usize,
+    batches: usize,
+    backend: &'static str,
+    crash: f64,
+    policy: ReplicationPolicy,
+    outcome: &'a CaseOutcome,
+}
+
 /// Build the per-job gain rows from sweep results, scoring operating
 /// points with the planner's objective rule. Rows come out sorted by
-/// (job, backend, crash).
+/// (job, backend, crash, policy).
 pub fn gain_report(
     results: &[CaseResult],
     trace: Option<&Trace>,
     objective: Objective,
 ) -> Vec<GainRow> {
-    // group by (job, backend, crash-bits); BTreeMap for stable order
-    let mut groups: BTreeMap<(u64, &'static str, u64), Vec<&CaseResult>> = BTreeMap::new();
-    for r in results {
-        groups
-            .entry((r.case.job_id, r.case.backend.name(), r.case.crash().to_bits()))
-            .or_default()
-            .push(r);
-    }
+    let views: Vec<CaseView> = results
+        .iter()
+        .map(|r| CaseView {
+            job_id: r.case.job_id,
+            n: r.case.scenario.workers,
+            batches: r.case.batches(),
+            backend: r.case.backend.name(),
+            crash: r.case.crash(),
+            policy: r.case.scenario.replication,
+            outcome: &r.outcome,
+        })
+        .collect();
     let mut tails: BTreeMap<u64, TailClass> = BTreeMap::new();
+    gain_rows(
+        &views,
+        |job_id| {
+            trace.map(|t| {
+                *tails
+                    .entry(job_id)
+                    .or_insert_with(|| TailFit::classify(&t.service_times(job_id)).class)
+            })
+        },
+        objective,
+    )
+}
+
+/// [`gain_report`] over parsed store records — the streaming
+/// report-only path. Error records carry no policy field on disk, so
+/// they group (and are counted) under the up-front row of their
+/// (job, backend, crash) axis point.
+pub fn gain_report_from_records(records: &[RecordRow], objective: Objective) -> Vec<GainRow> {
+    let views: Vec<CaseView> = records
+        .iter()
+        .map(|r| CaseView {
+            job_id: r.job_id,
+            n: r.n,
+            batches: r.batches,
+            backend: r.backend.name(),
+            crash: r.crash,
+            policy: match &r.outcome {
+                CaseOutcome::Ok(e) => e.policy,
+                CaseOutcome::Error(_) => ReplicationPolicy::Upfront,
+            },
+            outcome: &r.outcome,
+        })
+        .collect();
+    gain_rows(&views, |_| None, objective)
+}
+
+fn gain_rows(
+    views: &[CaseView],
+    mut tail_of: impl FnMut(u64) -> Option<TailClass>,
+    objective: Objective,
+) -> Vec<GainRow> {
+    // group by (job, backend, crash-bits, policy name, t-bits);
+    // BTreeMap for stable order (the policy itself carries an f64, so
+    // the key holds its canonical name + trigger-time bits instead)
+    type GroupKey = (u64, &'static str, u64, &'static str, u64);
+    let mut groups: BTreeMap<GroupKey, Vec<&CaseView>> = BTreeMap::new();
+    for v in views {
+        groups
+            .entry((
+                v.job_id,
+                v.backend,
+                v.crash.to_bits(),
+                v.policy.name(),
+                v.policy.t().unwrap_or(0.0).to_bits(),
+            ))
+            .or_default()
+            .push(v);
+    }
     let mut rows = Vec::with_capacity(groups.len());
-    for ((job_id, backend, crash_bits), group) in groups {
+    for ((job_id, backend, crash_bits, _, _), group) in groups {
         let mut points = Vec::new();
         let mut all_failed_points = 0usize;
         let mut error_points = 0usize;
-        for r in &group {
-            match &r.outcome {
+        for v in &group {
+            match v.outcome {
                 CaseOutcome::Error(_) => error_points += 1,
                 CaseOutcome::Ok(e) if e.all_failed() => all_failed_points += 1,
                 CaseOutcome::Ok(e) => points.push(SweepPoint {
-                    batches: r.case.batches(),
+                    batches: v.batches,
                     mean: e.mean,
                     cov: e.cov,
+                    cost: e.cost,
                 }),
             }
         }
         let optimum = choose(&points, objective);
         // the baseline is the group's largest-B point itself, not the
         // largest B that happened to survive
-        let max_b = group.iter().map(|r| r.case.batches()).max().unwrap_or(0);
+        let max_b = group.iter().map(|v| v.batches).max().unwrap_or(0);
         let baseline =
             points.iter().find(|p| p.batches == max_b && p.mean.is_finite()).copied();
-        let tail = trace.map(|t| {
-            *tails
-                .entry(job_id)
-                .or_insert_with(|| TailFit::classify(&t.service_times(job_id)).class)
-        });
         rows.push(GainRow {
             job_id,
-            n: group[0].case.scenario.workers,
+            n: group[0].n,
             backend,
             crash: f64::from_bits(crash_bits),
-            tail,
+            policy: group[0].policy,
+            tail: tail_of(job_id),
             optimum,
             baseline,
             all_failed_points,
@@ -124,8 +254,8 @@ pub fn gain_table(title: &str, rows: &[GainRow]) -> Table {
     let mut t = Table::new(
         title,
         vec![
-            "job", "N", "backend", "crash", "tail", "B*", "E[T]*", "CoV*", "E[T] B=N",
-            "CoV B=N", "speedup", "degraded",
+            "job", "N", "backend", "crash", "policy", "tail", "B*", "E[T]*", "CoV*",
+            "cost*", "E[T] B=N", "CoV B=N", "speedup", "degraded",
         ],
     );
     for row in rows {
@@ -134,9 +264,14 @@ pub fn gain_table(title: &str, rows: &[GainRow]) -> Table {
             Some(TailClass::ExponentialTail) => "exp",
             None => "-",
         };
-        let (b_star, mean_star, cov_star) = match &row.optimum {
-            Some(p) => (p.batches.to_string(), fnum(p.mean), fnum(p.cov)),
-            None => ("-".into(), "-".into(), "-".into()),
+        let (b_star, mean_star, cov_star, cost_star) = match &row.optimum {
+            Some(p) => (
+                p.batches.to_string(),
+                fnum(p.mean),
+                fnum(p.cov),
+                if p.cost.is_finite() { fnum(p.cost) } else { "-".into() },
+            ),
+            None => ("-".into(), "-".into(), "-".into(), "-".into()),
         };
         let (mean_base, cov_base) = match &row.baseline {
             Some(p) => (fnum(p.mean), fnum(p.cov)),
@@ -158,10 +293,12 @@ pub fn gain_table(title: &str, rows: &[GainRow]) -> Table {
             row.n.to_string(),
             row.backend.to_string(),
             fnum(row.crash),
+            row.policy.label(),
             tail.to_string(),
             b_star,
             mean_star,
             cov_star,
+            cost_star,
             mean_base,
             cov_base,
             speedup_cell,
@@ -204,6 +341,77 @@ mod tests {
         assert!(headline >= job7.speedup());
         let table = gain_table("gains", &rows);
         assert!(table.render().contains("heavy"));
+    }
+
+    #[test]
+    fn policy_axis_groups_into_separate_rows() {
+        let trace = GeneratorConfig::paper_workload(12, 3).generate();
+        let mut spec = SweepSpec::for_trace();
+        spec.reps = 200;
+        spec.seed = 3;
+        spec.jobs = Some(vec![1]);
+        spec.policies = vec![
+            ReplicationPolicy::Upfront,
+            ReplicationPolicy::SpeculativeAt { t: 2.0 },
+            ReplicationPolicy::SpeculativeAt { t: 4.0 },
+        ];
+        let set = ScenarioSet::from_trace(&trace, &spec).unwrap();
+        let results = run(&set, &RunConfig::default()).unwrap();
+        let rows = gain_report(&results, Some(&trace), Objective::MeanCompletion);
+        // one row per policy axis point, each over the full B spectrum
+        assert_eq!(rows.len(), 3);
+        let mut labels: Vec<String> = rows.iter().map(|r| r.policy.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), 3, "distinct t must not collapse into one row");
+        for row in &rows {
+            let opt = row.optimum.as_ref().unwrap();
+            if row.policy.is_upfront() {
+                assert!(opt.cost.is_nan(), "up-front store records carry no cost");
+            } else {
+                assert!(opt.cost.is_finite() && opt.cost > 0.0);
+            }
+        }
+        let rendered = gain_table("gains", &rows).render();
+        assert!(rendered.contains("policy"));
+        assert!(rendered.contains("speculative(t=2)"));
+    }
+
+    #[test]
+    fn record_level_report_matches_the_in_memory_report() {
+        use crate::sweep::store::render_record;
+        let trace = GeneratorConfig::paper_workload(12, 3).generate();
+        let mut spec = SweepSpec::for_trace();
+        spec.reps = 150;
+        spec.seed = 11;
+        spec.jobs = Some(vec![1, 6]);
+        spec.policies = vec![
+            ReplicationPolicy::Upfront,
+            ReplicationPolicy::SpeculativeAt { t: 2.0 },
+        ];
+        let set = ScenarioSet::from_trace(&trace, &spec).unwrap();
+        let results = run(&set, &RunConfig::default()).unwrap();
+        // re-parse what the store would hold, as --report-only does
+        let records: Vec<RecordRow> = results
+            .iter()
+            .map(|r| parse_report_line(&render_record(&r.case, &r.outcome)).unwrap())
+            .collect();
+        let from_memory = gain_report(&results, None, Objective::MeanCompletion);
+        let from_records = gain_report_from_records(&records, Objective::MeanCompletion);
+        assert_eq!(from_memory.len(), from_records.len());
+        for (a, b) in from_memory.iter().zip(&from_records) {
+            assert_eq!((a.job_id, a.backend, a.n), (b.job_id, b.backend, b.n));
+            assert_eq!(a.policy, b.policy);
+            assert_eq!(a.tail, b.tail, "no trace on either path: both None");
+            let (ao, bo) = (a.optimum.as_ref().unwrap(), b.optimum.as_ref().unwrap());
+            assert_eq!(ao.batches, bo.batches);
+            assert_eq!(ao.mean.to_bits(), bo.mean.to_bits());
+            assert_eq!(ao.cost.to_bits(), bo.cost.to_bits());
+            assert_eq!(a.speedup().to_bits(), b.speedup().to_bits());
+        }
+        // cache lines are not reportable
+        let cache_like = r#"{"key":"00000000000000aa","error":"x"}"#;
+        assert!(parse_report_line(cache_like).is_err());
     }
 
     #[test]

@@ -224,7 +224,10 @@ fn evaluate_shard(
         match mc.run_batch(&items) {
             Ok(estimates) => {
                 for (&i, est) in idxs.iter().zip(&estimates) {
-                    outcomes[i] = Some(CaseOutcome::Ok(StoredEstimate::of(est)));
+                    outcomes[i] = Some(CaseOutcome::Ok(StoredEstimate::of(
+                        est,
+                        shard[i].scenario.replication,
+                    )));
                 }
             }
             Err(_) => {
@@ -237,7 +240,10 @@ fn evaluate_shard(
                     let item = [(&shard[i].scenario, shard[i].stream_seed)];
                     outcomes[i] = Some(match mc.run_batch(&item) {
                         Ok(mut v) => match v.pop() {
-                            Some(est) => CaseOutcome::Ok(StoredEstimate::of(&est)),
+                            Some(est) => CaseOutcome::Ok(StoredEstimate::of(
+                                &est,
+                                shard[i].scenario.replication,
+                            )),
                             None => CaseOutcome::Error(
                                 "one item in, zero estimates out".to_string(),
                             ),
@@ -265,7 +271,7 @@ fn evaluate_shard(
 
 fn analytic_outcome(scenario: &Scenario) -> CaseOutcome {
     match Analytic.evaluate(scenario) {
-        Ok(est) => CaseOutcome::Ok(StoredEstimate::of(&est)),
+        Ok(est) => CaseOutcome::Ok(StoredEstimate::of(&est, scenario.replication)),
         Err(e) => CaseOutcome::Error(e.to_string()),
     }
 }
@@ -402,6 +408,50 @@ mod tests {
         }
         let bad = RunConfig { shard: Some((3, 3)), ..RunConfig::default() };
         assert!(run(&set, &bad).is_err());
+    }
+
+    #[test]
+    fn timed_policy_cases_flow_through_the_engine() {
+        use crate::sim::policy::ReplicationPolicy;
+        let trace = GeneratorConfig::paper_workload(12, 3).generate();
+        let mut spec = SweepSpec::for_trace();
+        spec.reps = 200;
+        spec.seed = 5;
+        spec.jobs = Some(vec![1]);
+        spec.batches = Some(vec![3]);
+        spec.policies = vec![
+            ReplicationPolicy::Upfront,
+            ReplicationPolicy::SpeculativeAt { t: 2.0 },
+            ReplicationPolicy::RelaunchAt { t: 2.0 },
+        ];
+        let set = ScenarioSet::from_trace(&trace, &spec).unwrap();
+        let results = run(&set, &RunConfig::default()).unwrap();
+        assert_eq!(results.len(), 3);
+        for r in &results {
+            let CaseOutcome::Ok(e) = &r.outcome else { panic!("{:?}", r.outcome) };
+            assert!(e.mean.is_finite());
+            assert_eq!(e.policy, r.case.scenario.replication);
+            if e.policy.is_upfront() {
+                assert!(e.cost.is_nan(), "up-front records never persist cost");
+            } else {
+                assert!(e.cost.is_finite() && e.cost > 0.0);
+            }
+            // the persisted line reproduces the in-memory record
+            let line = render_record(&r.case, &r.outcome);
+            let (key, back) = crate::sweep::store::parse_record(&line).unwrap();
+            assert_eq!(key, r.case.key);
+            assert_eq!(render_record(&r.case, &back), line);
+        }
+        // shard-size independence holds on the policy axis too
+        let again =
+            run(&set, &RunConfig { shard_size: 1, ..RunConfig::default() }).unwrap();
+        for (a, b) in results.iter().zip(&again) {
+            let (CaseOutcome::Ok(a), CaseOutcome::Ok(b)) = (&a.outcome, &b.outcome) else {
+                panic!("unexpected error outcome");
+            };
+            assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+            assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+        }
     }
 
     #[test]

@@ -1,9 +1,10 @@
 //! Sweep specification: the declarative input of the sweep engine.
 //!
 //! A spec names a workload (a trace file or generator parameters), the
-//! grid axes (jobs × batch counts × failure levels × backends), and the
-//! estimator budget. Specs are plain JSON so they can be committed,
-//! diffed, and fed to `replica sweep --spec` from CI:
+//! grid axes (jobs × batch counts × failure levels × replication
+//! policies × backends), and the estimator budget. Specs are plain
+//! JSON so they can be committed, diffed, and fed to
+//! `replica sweep --spec` from CI:
 //!
 //! ```json
 //! {
@@ -14,6 +15,7 @@
 //!   "reps": 2000,
 //!   "seed": 42,
 //!   "crash": [0, 0.05],
+//!   "policies": ["upfront", {"speculative": 1.5}, {"relaunch": 2.0}],
 //!   "shard_size": 64
 //! }
 //! ```
@@ -21,11 +23,16 @@
 //! Every field except `workload` is optional: `jobs` defaults to every
 //! job in the trace, `batches` to the full divisor spectrum of each
 //! job's task count, `backends` to `["mc"]`, `crash` to `[0]` (no
-//! failure injection), `reps` to [`DEFAULT_SWEEP_REPS`], `seed` to 0,
-//! and `shard_size` to [`DEFAULT_SHARD_SIZE`].
+//! failure injection), `policies` to `["upfront"]` (the pre-policy
+//! grid, so existing specs re-key nothing), `reps` to
+//! [`DEFAULT_SWEEP_REPS`], `seed` to 0, and `shard_size` to
+//! [`DEFAULT_SHARD_SIZE`]. A `policies` entry is either the string
+//! `"upfront"` or a one-key object `{"speculative": T}` /
+//! `{"relaunch": T}` naming the policy's trigger time.
 
 use std::path::{Path, PathBuf};
 
+use crate::sim::policy::ReplicationPolicy;
 use crate::traces::{load_trace, GeneratorConfig, Trace};
 use crate::util::error::{Error, Result};
 use crate::util::json::{parse, Json};
@@ -99,6 +106,8 @@ pub struct SweepSpec {
     pub seed: u64,
     /// Worker crash probabilities (one grid axis); `0` = no failures.
     pub crash: Vec<f64>,
+    /// Replication policies (one grid axis).
+    pub policies: Vec<ReplicationPolicy>,
     /// Scenarios per shard.
     pub shard_size: usize,
 }
@@ -114,6 +123,7 @@ impl SweepSpec {
             reps: DEFAULT_SWEEP_REPS,
             seed: 0,
             crash: vec![0.0],
+            policies: vec![ReplicationPolicy::Upfront],
             shard_size: DEFAULT_SHARD_SIZE,
         }
     }
@@ -123,8 +133,17 @@ impl SweepSpec {
     /// re-key every scenario), so unknown keys are hard errors.
     pub fn from_json(text: &str) -> Result<SweepSpec> {
         let doc = parse(text)?;
-        const KNOWN: [&str; 8] =
-            ["workload", "jobs", "batches", "backends", "reps", "seed", "crash", "shard_size"];
+        const KNOWN: [&str; 9] = [
+            "workload",
+            "jobs",
+            "batches",
+            "backends",
+            "reps",
+            "seed",
+            "crash",
+            "policies",
+            "shard_size",
+        ];
         if let Json::Obj(map) = &doc {
             for key in map.keys() {
                 if !KNOWN.contains(&key.as_str()) {
@@ -203,11 +222,34 @@ impl SweepSpec {
                 ps
             }
         };
+        let policies = match doc.get("policies") {
+            None => vec![ReplicationPolicy::Upfront],
+            Some(v) => {
+                let entries = expect_arr(v, "policies")?;
+                if entries.is_empty() {
+                    return Err(Error::Config("'policies' must be non-empty".into()));
+                }
+                entries
+                    .iter()
+                    .map(parse_policy_entry)
+                    .collect::<Result<Vec<ReplicationPolicy>>>()?
+            }
+        };
         let shard_size = get_usize(&doc, "shard_size", DEFAULT_SHARD_SIZE)?;
         if shard_size == 0 {
             return Err(Error::Config("'shard_size' must be >= 1".into()));
         }
-        Ok(SweepSpec { workload, jobs, batches, backends, reps, seed, crash, shard_size })
+        Ok(SweepSpec {
+            workload,
+            jobs,
+            batches,
+            backends,
+            reps,
+            seed,
+            crash,
+            policies,
+            shard_size,
+        })
     }
 
     /// Parse a spec file.
@@ -281,6 +323,31 @@ fn parse_workload(w: &Json) -> Result<Workload> {
     }
 }
 
+/// One `policies` entry: `"upfront"`, `{"speculative": T}`, or
+/// `{"relaunch": T}`.
+fn parse_policy_entry(v: &Json) -> Result<ReplicationPolicy> {
+    match v {
+        Json::Str(s) => ReplicationPolicy::parse(s, None),
+        Json::Obj(map) => {
+            if map.len() != 1 {
+                return Err(Error::Config(
+                    "'policies' object entries must have exactly one key, \
+                     {\"speculative\": T} or {\"relaunch\": T}"
+                        .into(),
+                ));
+            }
+            let (name, t) = map
+                .iter()
+                .next()
+                .ok_or_else(|| Error::Internal("one-entry map yielded nothing".into()))?;
+            ReplicationPolicy::parse(name, Some(expect_num(t, "policies entry t")?))
+        }
+        _ => Err(Error::Config(
+            "'policies' entries must be \"upfront\" or {\"speculative\"|\"relaunch\": T}".into(),
+        )),
+    }
+}
+
 fn expect_arr<'j>(v: &'j Json, what: &str) -> Result<&'j [Json]> {
     v.as_arr().ok_or_else(|| Error::Config(format!("'{what}' must be an array")))
 }
@@ -331,6 +398,7 @@ mod tests {
         assert_eq!(spec.backends, vec![Backend::MonteCarlo]);
         assert_eq!(spec.reps, DEFAULT_SWEEP_REPS);
         assert_eq!(spec.crash, vec![0.0]);
+        assert_eq!(spec.policies, vec![ReplicationPolicy::Upfront]);
         assert_eq!(spec.shard_size, DEFAULT_SHARD_SIZE);
     }
 
@@ -345,6 +413,7 @@ mod tests {
               "reps": 500,
               "seed": 9,
               "crash": [0, 0.5],
+              "policies": ["upfront", {"speculative": 1.5}, {"relaunch": 2}],
               "shard_size": 8
             }"#,
         )
@@ -358,6 +427,14 @@ mod tests {
         );
         assert_eq!((spec.reps, spec.seed, spec.shard_size), (500, 9, 8));
         assert_eq!(spec.crash, vec![0.0, 0.5]);
+        assert_eq!(
+            spec.policies,
+            vec![
+                ReplicationPolicy::Upfront,
+                ReplicationPolicy::SpeculativeAt { t: 1.5 },
+                ReplicationPolicy::RelaunchAt { t: 2.0 },
+            ]
+        );
     }
 
     #[test]
@@ -383,6 +460,12 @@ mod tests {
             r#"{"workload": {"trace": "t"}, "jobs": [1.9]}"#,
             r#"{"workload": {"trace": "t"}, "jobs": [-1]}"#,
             r#"{"workload": {"trace": "t"}, "batches": [2.5]}"#,
+            r#"{"workload": {"trace": "t"}, "policies": []}"#,
+            r#"{"workload": {"trace": "t"}, "policies": ["eager"]}"#,
+            r#"{"workload": {"trace": "t"}, "policies": [{"speculative": -1}]}"#,
+            r#"{"workload": {"trace": "t"}, "policies": [{"upfront": 1}]}"#,
+            r#"{"workload": {"trace": "t"}, "policies": [{"speculative": 1, "relaunch": 2}]}"#,
+            r#"{"workload": {"trace": "t"}, "policies": [7]}"#,
             r#"[1, 2]"#,
         ] {
             assert!(SweepSpec::from_json(bad).is_err(), "accepted: {bad}");

@@ -36,6 +36,7 @@ use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 use crate::eval::Estimate;
+use crate::sim::policy::ReplicationPolicy;
 use crate::sweep::grid::SweepCase;
 use crate::util::error::{Error, Result};
 use crate::util::json::{parse, Json};
@@ -52,13 +53,21 @@ pub struct StoredEstimate {
     pub p50: f64,
     pub p95: f64,
     pub p99: f64,
+    /// Expected total worker-seconds. NaN for up-front records — they
+    /// never persist a cost field (the pre-policy line format), so a
+    /// freshly evaluated record and one reconstituted from disk carry
+    /// the same value.
+    pub cost: f64,
     pub failure_rate: f64,
     pub replications: usize,
     pub completed: usize,
+    /// Replication policy the estimate was computed under. Up-front
+    /// records omit the field on disk and parse back to `Upfront`.
+    pub policy: ReplicationPolicy,
 }
 
 impl StoredEstimate {
-    pub fn of(est: &Estimate) -> StoredEstimate {
+    pub fn of(est: &Estimate, policy: ReplicationPolicy) -> StoredEstimate {
         StoredEstimate {
             via: est.provenance.backend().to_string(),
             mean: est.mean,
@@ -67,9 +76,13 @@ impl StoredEstimate {
             p50: est.p50,
             p95: est.p95,
             p99: est.p99,
+            // up-front lines don't persist cost; storing it would make
+            // fresh records differ from cache/store round trips
+            cost: if policy.is_upfront() { f64::NAN } else { est.cost },
             failure_rate: est.failure_rate,
             replications: est.replications,
             completed: est.completed,
+            policy,
         }
     }
 
@@ -115,19 +128,32 @@ fn render_cache_line(key: u64, outcome: &CaseOutcome) -> String {
 fn outcome_fields(outcome: &CaseOutcome) -> Vec<(&'static str, Json)> {
     match outcome {
         CaseOutcome::Error(msg) => vec![("error", Json::Str(msg.clone()))],
-        CaseOutcome::Ok(e) => vec![
-            ("all_failed", Json::Bool(e.all_failed())),
-            ("ci95", Json::num_or_null(e.ci95)),
-            ("completed", Json::Num(e.completed as f64)),
-            ("cov", Json::num_or_null(e.cov)),
-            ("failure_rate", Json::num_or_null(e.failure_rate)),
-            ("mean", Json::num_or_null(e.mean)),
-            ("p50", Json::num_or_null(e.p50)),
-            ("p95", Json::num_or_null(e.p95)),
-            ("p99", Json::num_or_null(e.p99)),
-            ("replications", Json::Num(e.replications as f64)),
-            ("via", Json::Str(e.via.clone())),
-        ],
+        CaseOutcome::Ok(e) => {
+            let mut fields = vec![
+                ("all_failed", Json::Bool(e.all_failed())),
+                ("ci95", Json::num_or_null(e.ci95)),
+                ("completed", Json::Num(e.completed as f64)),
+                ("cov", Json::num_or_null(e.cov)),
+                ("failure_rate", Json::num_or_null(e.failure_rate)),
+                ("mean", Json::num_or_null(e.mean)),
+                ("p50", Json::num_or_null(e.p50)),
+                ("p95", Json::num_or_null(e.p95)),
+                ("p99", Json::num_or_null(e.p99)),
+                ("replications", Json::Num(e.replications as f64)),
+                ("via", Json::Str(e.via.clone())),
+            ];
+            // Up-front records keep the exact pre-policy line format:
+            // policy/t/cost appear only for timed policies, so every
+            // byte of an existing store is reproduced unchanged.
+            if !e.policy.is_upfront() {
+                fields.push(("cost", Json::num_or_null(e.cost)));
+                fields.push(("policy", Json::Str(e.policy.name().to_string())));
+                if let Some(t) = e.policy.t() {
+                    fields.push(("t", Json::Num(t)));
+                }
+            }
+            fields
+        }
     }
 }
 
@@ -194,6 +220,17 @@ pub fn parse_record(line: &str) -> Result<(u64, CaseOutcome)> {
         .and_then(Json::as_str)
         .ok_or_else(|| Error::Parse("record has no 'via'".into()))?
         .to_string();
+    // Pre-policy records have no "policy" field: they were all written
+    // under up-front replication, so that is what they parse back to
+    // (and their untracked cost is NaN).
+    let policy = match doc.get("policy").and_then(Json::as_str) {
+        None => ReplicationPolicy::Upfront,
+        Some(name) => {
+            let t = doc.get("t").map(Json::as_f64_or_nan);
+            ReplicationPolicy::parse(name, t)
+                .map_err(|e| Error::Parse(format!("bad record policy: {e}")))?
+        }
+    };
     Ok((
         key,
         CaseOutcome::Ok(StoredEstimate {
@@ -204,9 +241,11 @@ pub fn parse_record(line: &str) -> Result<(u64, CaseOutcome)> {
             p50: field("p50"),
             p95: field("p95"),
             p99: field("p99"),
+            cost: field("cost"),
             failure_rate: field("failure_rate"),
             replications: count("replications")?,
             completed: count("completed")?,
+            policy,
         }),
     ))
 }
@@ -486,9 +525,11 @@ mod tests {
             p50: mean,
             p95: mean * 2.0,
             p99: mean * 3.0,
+            cost: f64::NAN,
             failure_rate: 0.0,
             replications: 100,
             completed,
+            policy: ReplicationPolicy::Upfront,
         }
     }
 
@@ -546,15 +587,79 @@ mod tests {
             p50: 1.9,
             p95: 3.0,
             p99: 3.5,
+            cost: 42.0,
             failure_rate: 0.25,
             replications: 400,
             completed: 300,
             provenance: Provenance::MonteCarlo { reps: 400, seed: 1, threads: 2 },
         };
-        let s = StoredEstimate::of(&e);
+        let s = StoredEstimate::of(&e, ReplicationPolicy::Upfront);
         assert_eq!(s.via, "monte-carlo");
         assert_eq!(s.completed, 300);
         assert!(!s.all_failed());
+        // up-front lines never persist cost, so the in-memory record
+        // drops it too (fresh == reconstituted)
+        assert!(s.cost.is_nan());
+        let t = StoredEstimate::of(&e, ReplicationPolicy::SpeculativeAt { t: 0.5 });
+        assert_eq!(t.cost, 42.0);
+        assert_eq!(t.policy, ReplicationPolicy::SpeculativeAt { t: 0.5 });
+    }
+
+    #[test]
+    fn upfront_lines_keep_the_pre_policy_format() {
+        // an up-front record renders without any of the new fields...
+        let line = render_cache_line(9, &CaseOutcome::Ok(est(1.5, 100)));
+        for field in ["cost", "policy", "\"t\""] {
+            assert!(!line.contains(field), "{field} leaked into {line}");
+        }
+        // ...and a literal pre-policy line (as written by older code)
+        // parses to an up-front record with untracked cost
+        let old = "{\"all_failed\":false,\"ci95\":0.1,\"completed\":100,\"cov\":0.5,\
+                   \"failure_rate\":0,\"key\":\"0000000000000009\",\"mean\":1.5,\
+                   \"p50\":1.5,\"p95\":3,\"p99\":4.5,\"replications\":100,\
+                   \"via\":\"monte-carlo\"}";
+        let (key, outcome) = parse_record(old).unwrap();
+        assert_eq!(key, 9);
+        match outcome {
+            CaseOutcome::Ok(e) => {
+                assert!(e.policy.is_upfront());
+                assert!(e.cost.is_nan());
+                assert_eq!(e.mean, 1.5);
+                // and it re-renders to the exact same bytes as a fresh
+                // up-front record — the byte-identity contract
+                assert_eq!(render_cache_line(9, &CaseOutcome::Ok(e)), old);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn timed_policy_records_roundtrip_exactly() {
+        let mut e = est(2.0, 100);
+        e.cost = 17.25;
+        e.policy = ReplicationPolicy::SpeculativeAt { t: 0.75 };
+        let line = render_cache_line(11, &CaseOutcome::Ok(e));
+        assert!(line.contains("\"policy\":\"speculative\""));
+        assert!(line.contains("\"t\":0.75"));
+        assert!(line.contains("\"cost\":17.25"));
+        let (key, back) = parse_record(&line).unwrap();
+        assert_eq!(key, 11);
+        match &back {
+            CaseOutcome::Ok(b) => {
+                assert_eq!(b.policy, ReplicationPolicy::SpeculativeAt { t: 0.75 });
+                assert_eq!(b.cost, 17.25);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(render_cache_line(key, &back), line);
+        // relaunch records roundtrip the same way
+        let mut r = est(3.0, 100);
+        r.cost = 9.5;
+        r.policy = ReplicationPolicy::RelaunchAt { t: 1.5 };
+        let line = render_cache_line(12, &CaseOutcome::Ok(r));
+        assert!(line.contains("\"policy\":\"relaunch\""));
+        let (key, back) = parse_record(&line).unwrap();
+        assert_eq!(render_cache_line(key, &back), line);
     }
 
     #[test]
