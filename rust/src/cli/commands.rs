@@ -5,7 +5,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use crate::cli::args::Args;
-use crate::config::SystemConfig;
+use crate::config::{ClusterConfig, SystemConfig};
 use crate::coordinator::{Coordinator, Dataset, GdConfig, NativeBackend, PjrtBackend};
 use crate::dist::ServiceDist;
 use crate::eval::{Analytic, Auto, Estimator, MonteCarlo, Scenario};
@@ -457,6 +457,9 @@ fn sweep_from_spec(args: &mut Args, spec_path: &str) -> Result<()> {
 /// shard-file paths may be passed as positionals instead (they may
 /// overlap, e.g. shards from different shardings of the same sweep).
 ///
+/// With `--allow-partial` an incomplete grid is tolerated: the covered
+/// prefix is written and every missing index range is printed as one
+/// JSON line (machine-readable progress for a sweep still in flight).
 /// With `--report-only` the merge (and the spec) are skipped entirely:
 /// the gain report streams straight from the `--out` store's records.
 pub fn sweep_merge(args: &mut Args) -> Result<()> {
@@ -483,6 +486,9 @@ pub fn sweep_merge(args: &mut Args) -> Result<()> {
             "sweep-merge needs --shards M or explicit shard-file positionals".into(),
         ));
     };
+    if args.get_bool("allow-partial") {
+        return merge_partial_cmd(&set, &shard_files, &out);
+    }
     let (report, outcomes) = crate::sweep::merge(&set, &shard_files, &out)?;
     println!(
         "merged {} shard files -> {} ({} cases, {} overlapping records verified)",
@@ -518,6 +524,58 @@ pub fn sweep_merge(args: &mut Args) -> Result<()> {
                 maybe_cache_gc(true, Some(cache.as_path()), &set)?;
             }
         }
+    }
+    Ok(())
+}
+
+/// The `--allow-partial` arm of [`sweep_merge`]: publish the covered
+/// prefix and print one compact JSON line per missing range, so a
+/// watcher script can track a distributed sweep without parsing prose.
+/// Shard files not written yet are tolerated — their slices simply
+/// show up as missing ranges.
+fn merge_partial_cmd(
+    set: &crate::sweep::ScenarioSet,
+    shard_files: &[PathBuf],
+    out: &Path,
+) -> Result<()> {
+    let present: Vec<PathBuf> =
+        shard_files.iter().filter(|f| f.exists()).cloned().collect();
+    for absent in shard_files.iter().filter(|f| !f.exists()) {
+        println!(
+            "shard file {} not written yet; its slice counts as missing",
+            absent.display()
+        );
+    }
+    if present.is_empty() {
+        return Err(Error::Config(
+            "--allow-partial: none of the shard files exist yet — nothing to merge"
+                .into(),
+        ));
+    }
+    let report = crate::sweep::merge_partial(set, &present, out)?;
+    println!(
+        "partial merge: {} of {} cases written to {} ({} covered across {} shard \
+         files, {} overlapping records verified)",
+        report.merged,
+        report.cases,
+        out.display(),
+        report.covered,
+        report.shards,
+        report.duplicates
+    );
+    for range in &report.missing {
+        // one machine-readable line per gap; `first_key` matches the
+        // store's key rendering, so the range survives re-expansion
+        println!(
+            "{{\"missing\":{{\"lo\":{},\"hi\":{},\"cases\":{},\"first_key\":\"{:016x}\"}}}}",
+            range.lo,
+            range.hi,
+            range.len(),
+            range.first_key
+        );
+    }
+    if report.missing.is_empty() {
+        println!("grid complete: the partial merge equals a strict merge");
     }
     Ok(())
 }
@@ -559,6 +617,111 @@ fn report_only(args: &mut Args) -> Result<()> {
     if headline.is_finite() {
         println!("headline speedup (best job): {}x", fnum(headline));
     }
+    Ok(())
+}
+
+/// Map the cluster timing/sizing flags onto a [`ClusterConfig`],
+/// starting from the defaults; cross-field invariants are validated
+/// here so a bad combination fails before any socket is opened.
+fn cluster_config_from(args: &mut Args) -> Result<ClusterConfig> {
+    let defaults = ClusterConfig::default();
+    let cfg = ClusterConfig {
+        lease_timeout_ms: args.get_u64("lease-timeout-ms", defaults.lease_timeout_ms)?,
+        heartbeat_ms: args.get_u64("heartbeat-ms", defaults.heartbeat_ms)?,
+        poll_ms: args.get_u64("poll-ms", defaults.poll_ms)?,
+        min_lease: args.get_usize("min-lease", defaults.min_lease)?,
+        max_lease: args.get_usize("max-lease", defaults.max_lease)?,
+        chunk: args.get_usize("chunk", defaults.chunk)?,
+        reconnect_base_ms: args.get_u64("reconnect-base-ms", defaults.reconnect_base_ms)?,
+        reconnect_max_ms: args.get_u64("reconnect-max-ms", defaults.reconnect_max_ms)?,
+        max_reconnects: u32::try_from(
+            args.get_usize("max-reconnects", defaults.max_reconnects as usize)?,
+        )
+        .map_err(|_| Error::Config("--max-reconnects is too large".into()))?,
+        linger_ms: args.get_u64("linger-ms", defaults.linger_ms)?,
+    };
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// `replica cluster-serve --spec FILE --out OUT [--listen ADDR]`: run
+/// the fault-tolerant sweep coordinator until the grid is complete.
+/// The finished store is byte-identical to a single-process
+/// `replica sweep --spec FILE --out OUT`; a restarted coordinator
+/// resumes from the store prefix plus the estimate cache and leases
+/// only what is still uncovered.
+pub fn cluster_serve(args: &mut Args) -> Result<()> {
+    let spec_path = args
+        .get("spec")
+        .ok_or_else(|| Error::Config("cluster-serve needs --spec FILE".into()))?;
+    let spec_text = std::fs::read_to_string(&spec_path)
+        .map_err(|e| Error::Config(format!("--spec {spec_path}: {e}")))?;
+    let out = PathBuf::from(args.get("out").unwrap_or_else(|| "sweep_results.jsonl".into()));
+    let listen = args.get("listen").unwrap_or_else(|| "127.0.0.1:7700".into());
+    let reps_override = match args.get("reps") {
+        None => None,
+        Some(v) => Some(
+            v.parse::<usize>().map_err(|e| Error::Config(format!("--reps {v}: {e}")))?,
+        ),
+    };
+    let seed_override = match args.get("seed") {
+        None => None,
+        Some(v) => Some(
+            v.parse::<u64>().map_err(|e| Error::Config(format!("--seed {v}: {e}")))?,
+        ),
+    };
+    let cfg = cluster_config_from(args)?;
+    let opts = crate::cluster::ServeOptions {
+        spec_text,
+        reps_override,
+        seed_override,
+        out: out.clone(),
+        listen: listen.clone(),
+        cfg,
+    };
+    println!("cluster-serve: listening on {listen}, store {}", out.display());
+    let clock: Arc<dyn crate::util::clock::Clock> =
+        Arc::new(crate::util::clock::MonotonicClock::new());
+    let report = crate::cluster::serve(&opts, clock)?;
+    println!(
+        "cluster sweep complete: {} cases ({} resumed from disk) via {} workers; \
+         {} expired leases reassigned, {} duplicate lines byte-verified",
+        report.cases,
+        report.resumed,
+        report.workers,
+        report.expired_leases,
+        report.duplicate_lines
+    );
+    println!("results: {}", out.display());
+    Ok(())
+}
+
+/// `replica cluster-work --connect ADDR [--worker NAME]`: run one sweep
+/// worker against a coordinator until the sweep completes. Survives
+/// coordinator restarts (exponential-backoff reconnect) and lease
+/// expiry under straggling (the slice is abandoned and re-leased;
+/// recomputation is cache-warm).
+pub fn cluster_work(args: &mut Args) -> Result<()> {
+    let connect = args
+        .get("connect")
+        .ok_or_else(|| Error::Config("cluster-work needs --connect ADDR".into()))?;
+    let worker =
+        args.get("worker").unwrap_or_else(|| format!("w-{}", std::process::id()));
+    let threads = args.get_usize("threads", 0)?;
+    let cfg = cluster_config_from(args)?;
+    let opts = crate::cluster::WorkOptions {
+        connect: connect.clone(),
+        worker: worker.clone(),
+        threads,
+        cfg,
+    };
+    let clock = crate::util::clock::MonotonicClock::new();
+    let report = crate::cluster::work(&opts, &clock)?;
+    println!(
+        "worker {worker} done: {} cases over {} leases \
+         ({} abandoned after expiry, {} reconnects)",
+        report.cases, report.leases, report.abandoned, report.reconnects
+    );
     Ok(())
 }
 
@@ -1216,6 +1379,86 @@ mod tests {
         assert!(sweep_merge(&mut args(&format!("sweep-merge --spec {}", spec.display())))
             .is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_merge_allow_partial_publishes_prefix() {
+        let dir = std::env::temp_dir().join("replica_cli_merge_partial");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = dir.join("spec.json");
+        std::fs::write(
+            &spec,
+            r#"{"workload": {"generate": {"jobs": 2, "tasks_per_job": 12, "seed": 3}},
+                "reps": 100, "seed": 1, "shard_size": 4}"#,
+        )
+        .unwrap();
+        let out = dir.join("merged.jsonl");
+        // only the *second* half of the grid ran: the prefix is empty,
+        // shard 0's file does not even exist yet
+        sweep(&mut args(&format!(
+            "sweep --spec {} --out {} --shard 1/2",
+            spec.display(),
+            out.display()
+        )))
+        .unwrap();
+        assert!(sweep_merge(&mut args(&format!(
+            "sweep-merge --spec {} --out {} --shards 2",
+            spec.display(),
+            out.display()
+        )))
+        .is_err());
+        sweep_merge(&mut args(&format!(
+            "sweep-merge --spec {} --out {} --shards 2 --allow-partial=true",
+            spec.display(),
+            out.display()
+        )))
+        .unwrap();
+        assert_eq!(std::fs::read_to_string(&out).unwrap(), "", "empty covered prefix");
+        // completing shard 0 makes the partial merge total
+        sweep(&mut args(&format!(
+            "sweep --spec {} --out {} --shard 0/2",
+            spec.display(),
+            out.display()
+        )))
+        .unwrap();
+        sweep_merge(&mut args(&format!(
+            "sweep-merge --spec {} --out {} --shards 2 --allow-partial=true",
+            spec.display(),
+            out.display()
+        )))
+        .unwrap();
+        assert_eq!(std::fs::read_to_string(&out).unwrap().lines().count(), 12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cluster_flags_map_onto_config() {
+        let mut a = args(
+            "cluster-work --lease-timeout-ms 9000 --heartbeat-ms 1500 --min-lease 4 \
+             --max-lease 16 --chunk 3",
+        );
+        let cfg = cluster_config_from(&mut a).unwrap();
+        assert_eq!(cfg.lease_timeout_ms, 9000);
+        assert_eq!(cfg.heartbeat_ms, 1500);
+        assert_eq!((cfg.min_lease, cfg.max_lease, cfg.chunk), (4, 16, 3));
+        // defaults survive for flags not given
+        assert_eq!(cfg.poll_ms, ClusterConfig::default().poll_ms);
+        // invalid combinations are rejected before any socket opens
+        let mut a = args("cluster-work --heartbeat-ms 8000 --lease-timeout-ms 9000");
+        assert!(cluster_config_from(&mut a).is_err());
+        let mut a = args("cluster-serve --min-lease 8 --max-lease 2");
+        assert!(cluster_config_from(&mut a).is_err());
+    }
+
+    #[test]
+    fn cluster_commands_validate_required_flags() {
+        assert!(cluster_serve(&mut args("cluster-serve")).is_err(), "--spec required");
+        assert!(
+            cluster_serve(&mut args("cluster-serve --spec /nonexistent/spec.json"))
+                .is_err()
+        );
+        assert!(cluster_work(&mut args("cluster-work")).is_err(), "--connect required");
     }
 
     #[test]

@@ -12,7 +12,12 @@
 //!                    [--limit-shards K] [--shard K/M] [--cache-gc]
 //!                    [--cache-import DIR] [--objective mean|cov|tradeoff=0.5|cost=0.5]
 //! replica sweep-merge --spec sweep.json --out results.jsonl --shards M
+//!                    [--allow-partial]
 //! replica sweep-merge --report-only --out results.jsonl
+//! replica cluster-serve --spec sweep.json --out results.jsonl
+//!                    [--listen 127.0.0.1:7700] [--lease-timeout-ms N]
+//!                    [--heartbeat-ms N] [--min-lease N] [--max-lease N]
+//! replica cluster-work  --connect 127.0.0.1:7700 [--worker NAME] [--threads N]
 //! replica trace gen      --out trace.csv [--tasks 100] [--seed 42]
 //! replica trace analyze  --trace trace.csv
 //! replica experiment <fig3|fig6|fig7_8|fig9_10|regimes|assignment|traces|all> [--reps N] [--out dir]
@@ -37,7 +42,9 @@ pub fn run(argv: Vec<String>) -> Result<()> {
     let argv: Vec<String> = argv
         .into_iter()
         .map(|tok| match tok.as_str() {
-            "--cache-gc" | "--report-only" | "--joint" => format!("{tok}=true"),
+            "--cache-gc" | "--report-only" | "--joint" | "--allow-partial" => {
+                format!("{tok}=true")
+            }
             _ => tok,
         })
         .collect();
@@ -56,6 +63,8 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         Some("simulate") => commands::simulate(&mut args),
         Some("sweep") => commands::sweep(&mut args),
         Some("sweep-merge") => commands::sweep_merge(&mut args),
+        Some("cluster-serve") => commands::cluster_serve(&mut args),
+        Some("cluster-work") => commands::cluster_work(&mut args),
         Some("trace") => commands::trace(&mut args),
         Some("experiment") => commands::experiment(&mut args),
         Some("gd-train") => commands::gd_train(&mut args),
@@ -86,8 +95,18 @@ COMMANDS:
               --shard K/M: one process of an M-way distributed sweep
   sweep-merge merge the per-shard stores of a --shard K/M sweep into the
               canonical store (byte-identical to a single-process run);
-              with --report-only: print the gain report straight from an
+              with --allow-partial: publish the covered prefix of a
+              still-running sweep and list the missing ranges; with
+              --report-only: print the gain report straight from an
               existing merged store, no spec or trace needed
+  cluster-serve  run the fault-tolerant sweep coordinator: lease grid
+              slices to cluster-work processes over TCP, with
+              heartbeats, dead-lease reassignment, and shrinking
+              leases; the finished store is byte-identical to a
+              single-process `sweep --spec` run, and a restarted
+              coordinator resumes from the store + cache
+  cluster-work   run one sweep worker against a coordinator; survives
+              coordinator restarts via exponential-backoff reconnect
   trace       gen | analyze Google-cluster-shaped traces
   experiment  regenerate a paper figure (fig3, fig6, fig7_8, fig9_10,
               regimes, assignment, traces, all)
@@ -135,6 +154,25 @@ SWEEP-ENGINE FLAGS (sweep --spec FILE / sweep-merge):
   --cache-import DIR    before the run, adopt estimates from DIR's
                         *.cache.jsonl files into this run's cache
                         (DIR itself is never written)
+  --allow-partial       (sweep-merge) tolerate an incomplete grid: write
+                        the covered prefix and print one JSON line per
+                        missing index range instead of refusing
   --report-only         (sweep-merge) skip the merge and print the gain
                         report from the --out store's records alone
+
+CLUSTER FLAGS (cluster-serve / cluster-work):
+  --listen ADDR         (serve) TCP address to accept workers on
+                        (default 127.0.0.1:7700)
+  --connect ADDR        (work) coordinator address to connect to
+  --worker NAME         (work) worker name in leases and logs
+                        (default w-<pid>)
+  --lease-timeout-ms N  lease deadline; a lease not heartbeat-renewed
+                        within N ms is reassigned (default 10000)
+  --heartbeat-ms N      worker heartbeat interval hint (default 2000;
+                        must be <= half the lease timeout)
+  --min-lease N         smallest lease, in cases (default 2)
+  --max-lease N         largest lease, in cases (default 64; actual
+                        size shrinks with the remaining grid)
+  --chunk N             (work) cases evaluated between heartbeats
+                        (default 8)
 ";

@@ -1,0 +1,295 @@
+//! The sweep worker: connects to a coordinator, leases grid slices,
+//! evaluates them through the exact same path as a single-process
+//! sweep, and ships back rendered store lines.
+//!
+//! The worker is a single synchronous loop: request → (lease | wait |
+//! done). A leased slice is evaluated in chunks with a heartbeat
+//! between chunks; a heartbeat answered `live: false` means the lease
+//! expired (this worker straggled) and was reassigned, so the slice is
+//! abandoned — any work already done stays in the worker's in-memory
+//! estimate cache, making a re-grant of the same cases free.
+//!
+//! Connection loss at any point (a SIGKILLed or restarted coordinator)
+//! triggers exponential-backoff reconnect; the coordinator's lease
+//! expiry reclaims whatever this worker held. Because every case's
+//! estimate depends only on its content key, none of this scheduling
+//! churn can change a single output byte.
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::cluster::protocol::{read_frame, write_frame, Message, PROTO_VERSION};
+use crate::config::ClusterConfig;
+use crate::sweep::grid::ScenarioSet;
+use crate::sweep::runner::evaluate_cases;
+use crate::sweep::spec::SweepSpec;
+use crate::sweep::store::{render_record, EstimateCache};
+use crate::util::clock::Clock;
+use crate::util::error::{Error, Result};
+
+/// Everything `cluster-work` needs besides a clock.
+pub struct WorkOptions {
+    /// Coordinator address, e.g. `127.0.0.1:7700`.
+    pub connect: String,
+    /// Worker name used in leases and logs (e.g. `w-<pid>`).
+    pub worker: String,
+    /// Per-slice Monte-Carlo fan-out cap (0 = pool width).
+    pub threads: usize,
+    pub cfg: ClusterConfig,
+}
+
+/// What one worker accomplished.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkReport {
+    /// Cases delivered and acknowledged.
+    pub cases: usize,
+    /// Leases completed.
+    pub leases: usize,
+    /// Leases abandoned after expiring under this worker.
+    pub abandoned: usize,
+    /// Times the connection was re-established.
+    pub reconnects: u32,
+}
+
+/// The expanded grid this worker serves, checked against the
+/// coordinator's identity on every (re)connect.
+struct Grid {
+    set: ScenarioSet,
+    sweep_key: u64,
+}
+
+fn is_connection_error(e: &Error) -> bool {
+    matches!(e, Error::Io(_) | Error::Parse(_))
+}
+
+fn connect(addr: &str, worker: &str, cfg: &ClusterConfig) -> Result<(TcpStream, Message)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let timeout = Duration::from_millis(cfg.lease_timeout_ms);
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    stream.set_nodelay(true)?;
+    write_frame(
+        &mut stream,
+        &Message::Hello { proto: PROTO_VERSION, worker: worker.to_string() },
+    )?;
+    let welcome = read_frame(&mut stream)?;
+    Ok((stream, welcome))
+}
+
+/// Build the scenario grid from the welcome frame and verify it is the
+/// same grid the coordinator expanded (any drift in spec parsing or
+/// keying between the two binaries is caught here, before any work).
+fn build_grid(welcome: &Message) -> Result<Grid> {
+    let Message::Welcome { proto, spec, reps, seed, sweep_key, cases, .. } = welcome else {
+        if let Message::Error { message } = welcome {
+            return Err(Error::Coordinator(message.clone()));
+        }
+        return Err(Error::Parse(format!("expected welcome frame, got {welcome:?}")));
+    };
+    if *proto != PROTO_VERSION {
+        return Err(Error::Config(format!(
+            "coordinator speaks protocol {proto}, this worker speaks {PROTO_VERSION}"
+        )));
+    }
+    let mut parsed = SweepSpec::from_json(spec)?;
+    parsed.reps = *reps;
+    parsed.seed = *seed;
+    let trace = parsed.load_trace()?;
+    let set = ScenarioSet::from_trace(&trace, &parsed)?;
+    if set.sweep_key() != *sweep_key || set.len() != *cases {
+        return Err(Error::Config(format!(
+            "grid mismatch: coordinator announced {cases} cases under sweep \
+             {sweep_key:016x}, this worker expanded {} under {:016x} — \
+             mixed binary versions?",
+            set.len(),
+            set.sweep_key()
+        )));
+    }
+    Ok(Grid { set, sweep_key: *sweep_key })
+}
+
+/// Evaluate one leased slice, heartbeating between chunks. Returns the
+/// rendered lines, or `None` if the lease expired and was abandoned.
+fn evaluate_lease(
+    stream: &mut TcpStream,
+    grid: &Grid,
+    cache: &mut EstimateCache,
+    opts: &WorkOptions,
+    id: u64,
+    lo: usize,
+    hi: usize,
+) -> Result<Option<Vec<String>>> {
+    let mut lines = Vec::with_capacity(hi - lo);
+    let mut pos = lo;
+    while pos < hi {
+        let end = (pos + opts.cfg.chunk.max(1)).min(hi);
+        let slice = &grid.set.cases[pos..end];
+        let outcomes = evaluate_cases(slice, cache, opts.threads)?;
+        lines.extend(
+            slice.iter().zip(&outcomes).map(|(case, outcome)| render_record(case, outcome)),
+        );
+        pos = end;
+        if pos < hi {
+            write_frame(
+                stream,
+                &Message::Heartbeat { worker: opts.worker.clone(), lease: id },
+            )?;
+            match read_frame(stream)? {
+                Message::Ok { live: true } => {}
+                Message::Ok { live: false } => {
+                    log::warn!(
+                        "cluster: lease {id} expired under worker {} (straggling?); \
+                         abandoning [{pos}, {hi})",
+                        opts.worker
+                    );
+                    return Ok(None);
+                }
+                Message::Error { message } => return Err(Error::Coordinator(message)),
+                other => {
+                    return Err(Error::Parse(format!(
+                        "unexpected heartbeat reply: {other:?}"
+                    )))
+                }
+            }
+        }
+    }
+    Ok(Some(lines))
+}
+
+/// One connected session: request/evaluate/deliver until `done`
+/// (`Ok(())`) or a failure — connection errors bubble up as
+/// `Error::Io`/`Error::Parse` and trigger a reconnect in [`work`].
+fn session(
+    stream: &mut TcpStream,
+    grid: &Grid,
+    cache: &mut EstimateCache,
+    opts: &WorkOptions,
+    clock: &dyn Clock,
+    report: &mut WorkReport,
+) -> Result<()> {
+    loop {
+        write_frame(stream, &Message::Request { worker: opts.worker.clone() })?;
+        match read_frame(stream)? {
+            Message::Done => {
+                let _ = write_frame(stream, &Message::Bye { worker: opts.worker.clone() });
+                return Ok(());
+            }
+            Message::Wait { ms } => {
+                clock.sleep_millis(ms.max(1));
+            }
+            Message::Lease { id, lo, hi } => {
+                if lo >= hi || hi > grid.set.len() {
+                    return Err(Error::Coordinator(format!(
+                        "coordinator leased nonsense slice [{lo}, {hi}) of a \
+                         {}-case grid",
+                        grid.set.len()
+                    )));
+                }
+                match evaluate_lease(stream, grid, cache, opts, id, lo, hi)? {
+                    None => report.abandoned += 1,
+                    Some(lines) => {
+                        write_frame(
+                            stream,
+                            &Message::Result {
+                                worker: opts.worker.clone(),
+                                lease: id,
+                                lo,
+                                hi,
+                                lines,
+                            },
+                        )?;
+                        match read_frame(stream)? {
+                            Message::Ok { .. } => {
+                                report.cases += hi - lo;
+                                report.leases += 1;
+                            }
+                            Message::Error { message } => {
+                                return Err(Error::Coordinator(message))
+                            }
+                            other => {
+                                return Err(Error::Parse(format!(
+                                    "unexpected result reply: {other:?}"
+                                )))
+                            }
+                        }
+                    }
+                }
+            }
+            Message::Error { message } => return Err(Error::Coordinator(message)),
+            other => {
+                return Err(Error::Parse(format!("unexpected request reply: {other:?}")))
+            }
+        }
+    }
+}
+
+/// Run a worker against the coordinator at `opts.connect` until the
+/// sweep completes. Survives coordinator restarts via
+/// exponential-backoff reconnect (sweep identity is re-verified on
+/// every welcome).
+pub fn work(opts: &WorkOptions, clock: &dyn Clock) -> Result<WorkReport> {
+    opts.cfg.validate()?;
+    let mut report = WorkReport::default();
+    let mut grid: Option<Grid> = None;
+    // in-memory: recomputing an abandoned-then-regranted slice is free,
+    // while nothing this worker caches can outlive the process and leak
+    // into another sweep
+    let mut cache = EstimateCache::in_memory();
+    let mut backoff = opts.cfg.reconnect_base_ms;
+    let mut attempts: u32 = 0;
+    let mut ever_connected = false;
+    loop {
+        let (mut stream, welcome) = match connect(&opts.connect, &opts.worker, &opts.cfg) {
+            Ok(ok) => ok,
+            Err(e) if is_connection_error(&e) => {
+                attempts += 1;
+                if attempts > opts.cfg.max_reconnects {
+                    return Err(Error::Coordinator(format!(
+                        "gave up on {} after {attempts} failed connection attempts \
+                         (last error: {e})",
+                        opts.connect
+                    )));
+                }
+                log::warn!(
+                    "cluster: connect to {} failed ({e}); retrying in {backoff} ms",
+                    opts.connect
+                );
+                clock.sleep_millis(backoff);
+                backoff = (backoff * 2).min(opts.cfg.reconnect_max_ms);
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
+        if ever_connected {
+            report.reconnects += 1;
+        }
+        ever_connected = true;
+        attempts = 0;
+        backoff = opts.cfg.reconnect_base_ms;
+        match &grid {
+            None => grid = Some(build_grid(&welcome)?),
+            Some(g) => {
+                // a restarted coordinator must be serving the same
+                // sweep; a different one is a hard error, not a retry
+                let fresh = build_grid(&welcome)?;
+                if fresh.sweep_key != g.sweep_key {
+                    return Err(Error::Config(format!(
+                        "coordinator at {} now serves sweep {:016x}, expected \
+                         {:016x}; refusing to mix grids",
+                        opts.connect, fresh.sweep_key, g.sweep_key
+                    )));
+                }
+            }
+        }
+        let g = grid
+            .as_ref()
+            .ok_or_else(|| Error::Internal("grid vanished after build".into()))?;
+        match session(&mut stream, g, &mut cache, opts, clock, &mut report) {
+            Ok(()) => return Ok(report),
+            Err(e) if is_connection_error(&e) => {
+                log::warn!("cluster: connection to {} lost ({e}); reconnecting", opts.connect);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}

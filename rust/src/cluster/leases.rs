@@ -1,0 +1,371 @@
+//! The coordinator's lease table: which grid slices are covered,
+//! leased, or waiting, and when a lease is declared dead.
+//!
+//! Pure bookkeeping over milliseconds-since-origin timestamps — the
+//! caller supplies `now` from a [`crate::util::clock::Clock`], so the
+//! expiry/reassignment logic is exhaustively testable with
+//! [`crate::util::clock::MockClock`] and no real sleeps.
+//!
+//! Grid indices move through three states: *pending* (uncovered,
+//! unleased), *leased* (granted to a worker, deadline ticking), and
+//! *covered* (a validated result line is held). Expiry moves a lease's
+//! uncovered indices back to pending; a late delivery from an expired
+//! lease is still welcome — the server accepts the first copy of every
+//! index and byte-compares any duplicate, so reassignment can only
+//! add redundancy, never change bytes.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One outstanding lease over grid slice `[lo, hi)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Lease {
+    pub id: u64,
+    pub lo: usize,
+    pub hi: usize,
+    pub worker: String,
+    /// Clock time (ms) after which the lease is expired.
+    pub deadline: u64,
+}
+
+/// Scheduling state for one sweep grid.
+pub struct LeaseTable {
+    total: usize,
+    pending: BTreeSet<usize>,
+    covered: BTreeSet<usize>,
+    active: BTreeMap<u64, Lease>,
+    next_id: u64,
+    lease_timeout_ms: u64,
+    min_lease: usize,
+    max_lease: usize,
+    /// Workers that ever held a lease (reporting only).
+    workers: BTreeSet<String>,
+    /// Leases that expired and were returned to the pool.
+    expired: usize,
+}
+
+impl LeaseTable {
+    /// A table over `total` grid indices, with everything in `covered`
+    /// already done (restart resume: store prefix + cache hits).
+    pub fn new(
+        total: usize,
+        covered: &BTreeSet<usize>,
+        lease_timeout_ms: u64,
+        min_lease: usize,
+        max_lease: usize,
+    ) -> LeaseTable {
+        let covered: BTreeSet<usize> =
+            covered.iter().copied().filter(|&i| i < total).collect();
+        let pending = (0..total).filter(|i| !covered.contains(i)).collect();
+        LeaseTable {
+            total,
+            pending,
+            covered,
+            active: BTreeMap::new(),
+            next_id: 1,
+            lease_timeout_ms,
+            min_lease: min_lease.max(1),
+            max_lease: max_lease.max(min_lease.max(1)),
+            workers: BTreeSet::new(),
+            expired: 0,
+        }
+    }
+
+    /// Uncovered cases (pending + currently leased).
+    pub fn remaining(&self) -> usize {
+        self.total - self.covered.len()
+    }
+
+    /// Every index has a validated result.
+    pub fn done(&self) -> bool {
+        self.covered.len() == self.total
+    }
+
+    pub fn is_covered(&self, index: usize) -> bool {
+        self.covered.contains(&index)
+    }
+
+    /// Outstanding lease count.
+    pub fn active_leases(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Leases that expired over the table's lifetime.
+    pub fn expired_leases(&self) -> usize {
+        self.expired
+    }
+
+    /// Distinct workers that ever held a lease.
+    pub fn workers_seen(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Lease size target: shrink as the grid drains so the tail is
+    /// spread across workers (work stealing) instead of one worker
+    /// holding the last big slice while the rest idle.
+    fn lease_size(&self) -> usize {
+        (self.remaining() / 4).clamp(self.min_lease, self.max_lease)
+    }
+
+    /// Grant the next contiguous pending run to `worker`, or `None` if
+    /// nothing is pending right now (the caller should tell the worker
+    /// to wait: outstanding leases may still expire and refill the
+    /// pool).
+    pub fn grant(&mut self, worker: &str, now: u64) -> Option<Lease> {
+        let lo = *self.pending.iter().next()?;
+        let want = self.lease_size();
+        let mut hi = lo + 1;
+        while hi - lo < want && self.pending.contains(&hi) {
+            hi += 1;
+        }
+        for i in lo..hi {
+            self.pending.remove(&i);
+        }
+        let lease = Lease {
+            id: self.next_id,
+            lo,
+            hi,
+            worker: worker.to_string(),
+            deadline: now + self.lease_timeout_ms,
+        };
+        self.next_id += 1;
+        self.workers.insert(worker.to_string());
+        self.active.insert(lease.id, lease.clone());
+        Some(lease)
+    }
+
+    /// Renew lease `id` if `worker` still holds it. Returns false when
+    /// the lease is gone (expired and possibly reassigned) — the
+    /// worker should abandon the slice.
+    pub fn heartbeat(&mut self, id: u64, worker: &str, now: u64) -> bool {
+        match self.active.get_mut(&id) {
+            Some(lease) if lease.worker == worker => {
+                lease.deadline = now + self.lease_timeout_ms;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Expire every lease whose deadline has passed, returning its
+    /// still-uncovered indices to pending. Returns the expired leases
+    /// (for logging).
+    pub fn expire(&mut self, now: u64) -> Vec<Lease> {
+        let dead: Vec<u64> = self
+            .active
+            .values()
+            .filter(|l| l.deadline < now)
+            .map(|l| l.id)
+            .collect();
+        let mut out = Vec::new();
+        for id in dead {
+            if let Some(lease) = self.active.remove(&id) {
+                for i in lease.lo..lease.hi {
+                    if !self.covered.contains(&i) {
+                        self.pending.insert(i);
+                    }
+                }
+                self.expired += 1;
+                out.push(lease);
+            }
+        }
+        out
+    }
+
+    /// Mark one index covered (a validated result line is in hand).
+    /// Idempotent; removes the index from pending if it was reassigned
+    /// but not yet re-leased.
+    pub fn cover(&mut self, index: usize) {
+        if index < self.total {
+            self.pending.remove(&index);
+            self.covered.insert(index);
+        }
+    }
+
+    /// Drop lease `id` after its results were delivered (or refused).
+    /// Returns whether the lease was still active.
+    pub fn release(&mut self, id: u64) -> bool {
+        self.active.remove(&id).is_some()
+    }
+
+    /// Cancel lease `id` and return its uncovered indices to pending
+    /// (a worker delivered garbage, or hung up mid-lease): the slice
+    /// becomes immediately re-leasable instead of waiting out the
+    /// deadline.
+    pub fn abort(&mut self, id: u64) {
+        if let Some(lease) = self.active.remove(&id) {
+            for i in lease.lo..lease.hi {
+                if !self.covered.contains(&i) {
+                    self.pending.insert(i);
+                }
+            }
+        }
+    }
+
+    /// Return all of `worker`'s leases to the pool (graceful `bye`).
+    pub fn release_worker(&mut self, worker: &str) {
+        let ids: Vec<u64> = self
+            .active
+            .values()
+            .filter(|l| l.worker == worker)
+            .map(|l| l.id)
+            .collect();
+        for id in ids {
+            if let Some(lease) = self.active.remove(&id) {
+                for i in lease.lo..lease.hi {
+                    if !self.covered.contains(&i) {
+                        self.pending.insert(i);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::{Clock, MockClock};
+
+    fn table(total: usize, timeout: u64) -> LeaseTable {
+        LeaseTable::new(total, &BTreeSet::new(), timeout, 2, 8)
+    }
+
+    #[test]
+    fn grants_cover_the_grid_in_contiguous_slices() {
+        let clock = MockClock::new(0);
+        let mut t = table(20, 1_000);
+        let a = t.grant("w1", clock.now_millis()).unwrap();
+        assert_eq!((a.lo, a.hi), (0, 5), "20 remaining / 4 = 5 cases");
+        let b = t.grant("w2", clock.now_millis()).unwrap();
+        assert_eq!(b.lo, a.hi, "slices are contiguous and disjoint");
+        assert_eq!(t.active_leases(), 2);
+        assert_eq!(t.workers_seen(), 2);
+    }
+
+    #[test]
+    fn lease_sizes_shrink_as_the_grid_drains() {
+        let clock = MockClock::new(0);
+        let mut t = LeaseTable::new(100, &BTreeSet::new(), 1_000, 2, 64);
+        let first = t.grant("w", clock.now_millis()).unwrap();
+        assert_eq!(first.hi - first.lo, 25, "100/4");
+        // cover everything but the last 8
+        for i in first.lo..first.hi {
+            t.cover(i);
+        }
+        t.release(first.id);
+        for i in 25..92 {
+            t.cover(i);
+        }
+        let tail = t.grant("w", clock.now_millis()).unwrap();
+        assert_eq!(tail.hi - tail.lo, 2, "8 remaining / 4 = 2: tail spreads out");
+    }
+
+    #[test]
+    fn expiry_returns_uncovered_indices_for_reassignment() {
+        let clock = MockClock::new(0);
+        let mut t = table(8, 1_000);
+        let lease = t.grant("w1", clock.now_millis()).unwrap();
+        assert_eq!((lease.lo, lease.hi), (0, 2));
+        // half the slice was delivered before the worker died
+        t.cover(0);
+        // no heartbeat within the window → expired
+        clock.advance(1_001);
+        let dead = t.expire(clock.now_millis());
+        assert_eq!(dead.len(), 1);
+        assert_eq!(dead[0].worker, "w1");
+        assert_eq!(t.expired_leases(), 1);
+        // only the uncovered index is reassigned
+        let next = t.grant("w2", clock.now_millis()).unwrap();
+        assert_eq!((next.lo, next.hi), (1, 3), "index 0 stays covered");
+    }
+
+    #[test]
+    fn heartbeat_renews_the_deadline() {
+        let clock = MockClock::new(0);
+        let mut t = table(4, 1_000);
+        let lease = t.grant("w", clock.now_millis()).unwrap();
+        clock.advance(900);
+        assert!(t.heartbeat(lease.id, "w", clock.now_millis()));
+        clock.advance(900);
+        assert!(t.expire(clock.now_millis()).is_empty(), "renewed at t=900");
+        clock.advance(200);
+        assert_eq!(t.expire(clock.now_millis()).len(), 1, "deadline was 900+1000");
+    }
+
+    #[test]
+    fn heartbeat_rejects_wrong_worker_and_dead_lease() {
+        let clock = MockClock::new(0);
+        let mut t = table(4, 1_000);
+        let lease = t.grant("w1", clock.now_millis()).unwrap();
+        assert!(!t.heartbeat(lease.id, "w2", clock.now_millis()));
+        clock.advance(2_000);
+        t.expire(clock.now_millis());
+        assert!(
+            !t.heartbeat(lease.id, "w1", clock.now_millis()),
+            "an expired lease cannot be revived — its slice may already be reassigned"
+        );
+    }
+
+    #[test]
+    fn late_duplicate_covers_only_what_is_still_open() {
+        // w1's lease expires; w2 re-leases and delivers; then w1's late
+        // result arrives. cover() is idempotent, so the duplicate is
+        // byte-compared upstream and changes nothing here.
+        let clock = MockClock::new(0);
+        let mut t = table(4, 100);
+        let l1 = t.grant("w1", clock.now_millis()).unwrap();
+        clock.advance(200);
+        t.expire(clock.now_millis());
+        let l2 = t.grant("w2", clock.now_millis()).unwrap();
+        assert_eq!((l2.lo, l2.hi), (l1.lo, l1.hi), "same slice reassigned");
+        for i in l2.lo..l2.hi {
+            t.cover(i);
+        }
+        t.release(l2.id);
+        // late delivery from w1: release is a no-op, coverage unchanged
+        assert!(!t.release(l1.id));
+        for i in l1.lo..l1.hi {
+            t.cover(i);
+        }
+        assert_eq!(t.remaining(), 4 - (l1.hi - l1.lo));
+    }
+
+    #[test]
+    fn restart_resume_leases_only_uncovered_indices() {
+        let clock = MockClock::new(0);
+        let covered: BTreeSet<usize> = [0, 1, 2, 5].into_iter().collect();
+        let mut t = LeaseTable::new(8, &covered, 1_000, 2, 64);
+        assert_eq!(t.remaining(), 4);
+        let a = t.grant("w", clock.now_millis()).unwrap();
+        assert_eq!((a.lo, a.hi), (3, 5), "contiguous run stops at covered 5");
+        let b = t.grant("w", clock.now_millis()).unwrap();
+        assert_eq!((b.lo, b.hi), (6, 8));
+        assert!(t.grant("w", clock.now_millis()).is_none(), "nothing pending");
+        t.cover(3);
+        t.cover(4);
+        t.cover(6);
+        t.cover(7);
+        assert!(t.done());
+    }
+
+    #[test]
+    fn bye_returns_a_workers_leases() {
+        let clock = MockClock::new(0);
+        let mut t = table(8, 1_000);
+        let l = t.grant("w1", clock.now_millis()).unwrap();
+        t.cover(l.lo);
+        t.release_worker("w1");
+        assert_eq!(t.active_leases(), 0);
+        let next = t.grant("w2", clock.now_millis()).unwrap();
+        assert_eq!(next.lo, l.lo + 1, "covered index not re-leased");
+    }
+
+    #[test]
+    fn grant_on_empty_pool_waits_rather_than_splitting_active_leases() {
+        let clock = MockClock::new(0);
+        let mut t = table(2, 1_000);
+        let _l = t.grant("w1", clock.now_millis()).unwrap();
+        assert!(t.grant("w2", clock.now_millis()).is_none());
+        assert!(!t.done(), "leased is not covered");
+    }
+}

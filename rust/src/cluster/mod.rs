@@ -1,0 +1,49 @@
+//! Fault-tolerant multi-process sweep cluster.
+//!
+//! `replica sweep --shard K/M` splits a grid *statically*: a killed
+//! process stalls its slice until a human resumes it. This module is
+//! the dynamic counterpart — a long-running coordinator
+//! (`replica cluster-serve`) that leases contiguous grid slices to
+//! worker processes (`replica cluster-work`) over a length-prefixed
+//! JSON TCP protocol, with:
+//!
+//! * **heartbeats + lease deadlines** ([`leases`]): a worker renews its
+//!   lease between evaluation chunks; a lease not renewed within the
+//!   deadline is declared dead and its slice reassigned — SIGKILLed
+//!   and straggling workers alike (the paper's relaunch-at-`t`
+//!   policies, applied to the reproduction's own shards);
+//! * **work stealing by shrinking leases**: lease sizes track the
+//!   remaining grid, so the tail is spread across workers instead of
+//!   one worker holding the last big slice;
+//! * **first-copy-wins, byte-compared**: duplicate deliveries of a
+//!   reassigned slice must match byte-for-byte (the same check
+//!   `sweep-merge` applies to overlapping shards) — a mismatch means
+//!   the determinism contract broke, and the serve aborts;
+//! * **graceful degradation** ([`server`]): the coordinator persists
+//!   every accepted result to the content-keyed estimate cache and the
+//!   grid-ordered store; a restarted coordinator resumes from
+//!   `store prefix ∪ cache hits` and leases only uncovered cases. A
+//!   worker survives coordinator outages with exponential-backoff
+//!   reconnect ([`client`]).
+//!
+//! Because each case's RNG stream is `substream(seed, key)` — a
+//! function of *what* is asked, never of where or when it ran — the
+//! assembled store is **byte-identical to a single-process
+//! `replica sweep`** no matter how many workers died, how leases
+//! moved, or how often a slice was recomputed. CI's `cluster-chaos`
+//! job enforces exactly that with `cmp` under worker SIGKILL and a
+//! coordinator restart.
+//!
+//! All timing goes through [`crate::util::clock::Clock`] (detlint
+//! D1-TIME keeps `Instant::now` out of this module) and all knobs
+//! through [`crate::config::ClusterConfig`].
+
+pub mod client;
+pub mod leases;
+pub mod protocol;
+pub mod server;
+
+pub use client::{work, WorkOptions, WorkReport};
+pub use leases::{Lease, LeaseTable};
+pub use protocol::{Message, PROTO_VERSION};
+pub use server::{serve, ServeOptions, ServeReport};

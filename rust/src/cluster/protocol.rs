@@ -1,0 +1,355 @@
+//! The coordinator⇄worker wire protocol.
+//!
+//! Frames are a 4-byte big-endian length prefix followed by one
+//! compact JSON object (hand-rolled over [`crate::util::json`]; no new
+//! dependencies). Every message is tagged by a `"type"` field. 64-bit
+//! identifiers (sweep keys, seeds, lease ids) travel as 16-digit hex
+//! *strings* — the codec's numbers are `f64`, which cannot hold a full
+//! `u64` — matching how the store renders case keys.
+//!
+//! Worker → coordinator: `hello`, `request`, `heartbeat`, `result`,
+//! `bye`. Coordinator → worker: `welcome`, `lease`, `wait`, `done`,
+//! `ok`, `error`. The exchange is strictly request/response (one reply
+//! per frame), so both sides can run plain blocking reads.
+//!
+//! Result lines travel as the exact rendered store lines
+//! ([`crate::sweep::render_record`] is a pure function of the case and
+//! outcome), so the coordinator can byte-compare duplicate deliveries
+//! of a reassigned slice and write worker-supplied bytes verbatim —
+//! the mechanism behind the byte-identical-store guarantee.
+
+use std::io::{Read, Write};
+
+use crate::util::error::{Error, Result};
+use crate::util::json::{parse, Json};
+
+/// Protocol version; bumped on any incompatible frame change.
+pub const PROTO_VERSION: u64 = 1;
+
+/// Refuse frames larger than this (a corrupt length prefix must not
+/// allocate gigabytes).
+const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// One protocol message. See the module docs for the exchange shape.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Worker introduces itself.
+    Hello { proto: u64, worker: String },
+    /// Coordinator's session setup: the raw sweep-spec JSON text plus
+    /// the resolved overrides and grid identity the worker must match.
+    Welcome {
+        proto: u64,
+        spec: String,
+        reps: usize,
+        seed: u64,
+        sweep_key: u64,
+        cases: usize,
+        heartbeat_ms: u64,
+    },
+    /// Worker asks for work.
+    Request { worker: String },
+    /// Coordinator grants grid slice `[lo, hi)` under lease `id`.
+    Lease { id: u64, lo: usize, hi: usize },
+    /// Nothing leasable right now (outstanding leases may yet expire);
+    /// retry after `ms`.
+    Wait { ms: u64 },
+    /// The grid is fully covered; the worker may exit.
+    Done,
+    /// Worker renews lease `id`.
+    Heartbeat { worker: String, lease: u64 },
+    /// Worker delivers the rendered store lines for slice `[lo, hi)`
+    /// computed under lease `id`.
+    Result { worker: String, lease: u64, lo: usize, hi: usize, lines: Vec<String> },
+    /// Generic acknowledgement. `live` is false when the acked lease is
+    /// no longer held (expired and reassigned) — the worker should
+    /// abandon the slice.
+    Ok { live: bool },
+    /// Worker is leaving; its leases can be returned to the pool.
+    Bye { worker: String },
+    /// Fatal coordinator-side failure (protocol violation, broken
+    /// determinism contract); the worker should report it and exit.
+    Error { message: String },
+}
+
+fn hex(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+fn field<'a>(doc: &'a Json, name: &str) -> Result<&'a Json> {
+    doc.get(name)
+        .ok_or_else(|| Error::Parse(format!("frame missing field '{name}'")))
+}
+
+fn get_str(doc: &Json, name: &str) -> Result<String> {
+    field(doc, name)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| Error::Parse(format!("frame field '{name}' is not a string")))
+}
+
+fn get_u64_hex(doc: &Json, name: &str) -> Result<u64> {
+    let s = get_str(doc, name)?;
+    u64::from_str_radix(&s, 16)
+        .map_err(|e| Error::Parse(format!("frame field '{name}'='{s}' is not hex: {e}")))
+}
+
+fn get_usize(doc: &Json, name: &str) -> Result<usize> {
+    field(doc, name)?
+        .as_usize()
+        .ok_or_else(|| Error::Parse(format!("frame field '{name}' is not a count")))
+}
+
+impl Message {
+    /// Render to the compact JSON payload (no length prefix).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Message::Hello { proto, worker } => Json::obj(vec![
+                ("proto", Json::Num(*proto as f64)),
+                ("type", Json::Str("hello".into())),
+                ("worker", Json::Str(worker.clone())),
+            ]),
+            Message::Welcome { proto, spec, reps, seed, sweep_key, cases, heartbeat_ms } => {
+                Json::obj(vec![
+                    ("cases", Json::Num(*cases as f64)),
+                    ("heartbeat_ms", Json::Num(*heartbeat_ms as f64)),
+                    ("proto", Json::Num(*proto as f64)),
+                    ("reps", Json::Num(*reps as f64)),
+                    ("seed", hex(*seed)),
+                    ("spec", Json::Str(spec.clone())),
+                    ("sweep", hex(*sweep_key)),
+                    ("type", Json::Str("welcome".into())),
+                ])
+            }
+            Message::Request { worker } => Json::obj(vec![
+                ("type", Json::Str("request".into())),
+                ("worker", Json::Str(worker.clone())),
+            ]),
+            Message::Lease { id, lo, hi } => Json::obj(vec![
+                ("hi", Json::Num(*hi as f64)),
+                ("id", hex(*id)),
+                ("lo", Json::Num(*lo as f64)),
+                ("type", Json::Str("lease".into())),
+            ]),
+            Message::Wait { ms } => Json::obj(vec![
+                ("ms", Json::Num(*ms as f64)),
+                ("type", Json::Str("wait".into())),
+            ]),
+            Message::Done => Json::obj(vec![("type", Json::Str("done".into()))]),
+            Message::Heartbeat { worker, lease } => Json::obj(vec![
+                ("lease", hex(*lease)),
+                ("type", Json::Str("heartbeat".into())),
+                ("worker", Json::Str(worker.clone())),
+            ]),
+            Message::Result { worker, lease, lo, hi, lines } => Json::obj(vec![
+                ("hi", Json::Num(*hi as f64)),
+                ("lease", hex(*lease)),
+                ("lines", Json::Arr(lines.iter().map(|l| Json::Str(l.clone())).collect())),
+                ("lo", Json::Num(*lo as f64)),
+                ("type", Json::Str("result".into())),
+                ("worker", Json::Str(worker.clone())),
+            ]),
+            Message::Ok { live } => Json::obj(vec![
+                ("live", Json::Bool(*live)),
+                ("type", Json::Str("ok".into())),
+            ]),
+            Message::Bye { worker } => Json::obj(vec![
+                ("type", Json::Str("bye".into())),
+                ("worker", Json::Str(worker.clone())),
+            ]),
+            Message::Error { message } => Json::obj(vec![
+                ("message", Json::Str(message.clone())),
+                ("type", Json::Str("error".into())),
+            ]),
+        }
+    }
+
+    /// Parse a payload back into a message.
+    pub fn from_json(doc: &Json) -> Result<Message> {
+        let tag = get_str(doc, "type")?;
+        match tag.as_str() {
+            "hello" => Ok(Message::Hello {
+                proto: get_usize(doc, "proto")? as u64,
+                worker: get_str(doc, "worker")?,
+            }),
+            "welcome" => Ok(Message::Welcome {
+                proto: get_usize(doc, "proto")? as u64,
+                spec: get_str(doc, "spec")?,
+                reps: get_usize(doc, "reps")?,
+                seed: get_u64_hex(doc, "seed")?,
+                sweep_key: get_u64_hex(doc, "sweep")?,
+                cases: get_usize(doc, "cases")?,
+                heartbeat_ms: get_usize(doc, "heartbeat_ms")? as u64,
+            }),
+            "request" => Ok(Message::Request { worker: get_str(doc, "worker")? }),
+            "lease" => Ok(Message::Lease {
+                id: get_u64_hex(doc, "id")?,
+                lo: get_usize(doc, "lo")?,
+                hi: get_usize(doc, "hi")?,
+            }),
+            "wait" => Ok(Message::Wait { ms: get_usize(doc, "ms")? as u64 }),
+            "done" => Ok(Message::Done),
+            "heartbeat" => Ok(Message::Heartbeat {
+                worker: get_str(doc, "worker")?,
+                lease: get_u64_hex(doc, "lease")?,
+            }),
+            "result" => {
+                let lines = field(doc, "lines")?
+                    .as_arr()
+                    .ok_or_else(|| Error::Parse("result 'lines' is not an array".into()))?
+                    .iter()
+                    .map(|l| {
+                        l.as_str().map(str::to_string).ok_or_else(|| {
+                            Error::Parse("result line is not a string".into())
+                        })
+                    })
+                    .collect::<Result<Vec<String>>>()?;
+                Ok(Message::Result {
+                    worker: get_str(doc, "worker")?,
+                    lease: get_u64_hex(doc, "lease")?,
+                    lo: get_usize(doc, "lo")?,
+                    hi: get_usize(doc, "hi")?,
+                    lines,
+                })
+            }
+            "ok" => Ok(Message::Ok {
+                live: field(doc, "live")?
+                    .as_bool()
+                    .ok_or_else(|| Error::Parse("ok 'live' is not a bool".into()))?,
+            }),
+            "bye" => Ok(Message::Bye { worker: get_str(doc, "worker")? }),
+            "error" => Ok(Message::Error { message: get_str(doc, "message")? }),
+            other => Err(Error::Parse(format!("unknown frame type '{other}'"))),
+        }
+    }
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame(w: &mut impl Write, msg: &Message) -> Result<()> {
+    let payload = msg.to_json().to_string_compact();
+    let bytes = payload.as_bytes();
+    if bytes.len() > MAX_FRAME_BYTES {
+        return Err(Error::Internal(format!(
+            "outgoing frame of {} bytes exceeds the {} byte cap",
+            bytes.len(),
+            MAX_FRAME_BYTES
+        )));
+    }
+    w.write_all(&(bytes.len() as u32).to_be_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame (blocking until a whole frame or an
+/// I/O error — callers set socket read timeouts to bound this).
+pub fn read_frame(r: &mut impl Read) -> Result<Message> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf)?;
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(Error::Parse(format!(
+            "incoming frame claims {len} bytes, over the {MAX_FRAME_BYTES} byte cap \
+             (corrupt stream?)"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    let text = std::str::from_utf8(&payload)
+        .map_err(|e| Error::Parse(format!("frame payload is not UTF-8: {e}")))?;
+    Message::from_json(&parse(text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Message) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        let back = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        roundtrip(Message::Hello { proto: PROTO_VERSION, worker: "w-1".into() });
+        roundtrip(Message::Welcome {
+            proto: PROTO_VERSION,
+            spec: "{\"reps\": 100}".into(),
+            reps: 100,
+            seed: u64::MAX,
+            sweep_key: 0xDEAD_BEEF_F00D_0001,
+            cases: 1600,
+            heartbeat_ms: 2000,
+        });
+        roundtrip(Message::Request { worker: "w".into() });
+        roundtrip(Message::Lease { id: 7, lo: 64, hi: 128 });
+        roundtrip(Message::Wait { ms: 250 });
+        roundtrip(Message::Done);
+        roundtrip(Message::Heartbeat { worker: "w".into(), lease: 7 });
+        roundtrip(Message::Result {
+            worker: "w".into(),
+            lease: 7,
+            lo: 0,
+            hi: 2,
+            lines: vec!["{\"key\":\"00\"}".into(), "{\"key\":\"01\"}".into()],
+        });
+        roundtrip(Message::Ok { live: true });
+        roundtrip(Message::Ok { live: false });
+        roundtrip(Message::Bye { worker: "w".into() });
+        roundtrip(Message::Error { message: "determinism contract broken".into() });
+    }
+
+    #[test]
+    fn full_u64_identifiers_survive_the_codec() {
+        // Json numbers are f64; a sweep key above 2^53 would be mangled
+        // as a number. The hex-string path must carry all 64 bits.
+        roundtrip(Message::Lease { id: 0xFEDC_BA98_7654_3210, lo: 0, hi: 1 });
+        roundtrip(Message::Heartbeat { worker: "w".into(), lease: u64::MAX });
+    }
+
+    #[test]
+    fn multiple_frames_stream_in_order() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Message::Done).unwrap();
+        write_frame(&mut buf, &Message::Wait { ms: 9 }).unwrap();
+        let mut r = buf.as_slice();
+        assert_eq!(read_frame(&mut r).unwrap(), Message::Done);
+        assert_eq!(read_frame(&mut r).unwrap(), Message::Wait { ms: 9 });
+        assert!(read_frame(&mut r).is_err(), "stream exhausted");
+    }
+
+    #[test]
+    fn oversized_and_corrupt_frames_are_refused() {
+        // corrupt length prefix claiming 1 GiB
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(1u32 << 30).to_be_bytes());
+        assert!(read_frame(&mut buf.as_slice()).is_err());
+        // truncated payload
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Message::Done).unwrap();
+        buf.truncate(buf.len() - 2);
+        assert!(read_frame(&mut buf.as_slice()).is_err());
+        // valid JSON, unknown tag
+        let payload = b"{\"type\":\"warp\"}";
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+        buf.extend_from_slice(payload);
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("unknown frame type"), "{err}");
+    }
+
+    #[test]
+    fn spec_text_with_newlines_and_quotes_survives() {
+        let spec = "{\n  \"workload\": \"generate\",\n  \"note\": \"a \\\"b\\\"\"\n}";
+        roundtrip(Message::Welcome {
+            proto: 1,
+            spec: spec.into(),
+            reps: 1,
+            seed: 0,
+            sweep_key: 0,
+            cases: 0,
+            heartbeat_ms: 1,
+        });
+    }
+}

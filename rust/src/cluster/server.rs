@@ -1,0 +1,441 @@
+//! The sweep coordinator: leases grid slices to workers over TCP and
+//! assembles the canonical result store.
+//!
+//! One thread per connection handles the request/response protocol
+//! ([`crate::cluster::protocol`]); all scheduling state lives behind
+//! one mutex ([`Shared`]): the [`LeaseTable`], the per-index rendered
+//! record lines, and the store/cache files. The main thread accepts
+//! connections, expires dead leases on every poll tick, and lingers
+//! briefly after completion so trailing workers hear `done`.
+//!
+//! **Durability / restart.** Every accepted result goes to the
+//! estimate cache immediately (content-keyed, order-free), and the
+//! grid-ordered store is extended whenever its covered prefix grows.
+//! A restarted coordinator re-opens both, rebuilds coverage as
+//! `store prefix ∪ cache hits`, and leases only uncovered indices —
+//! graceful degradation instead of a from-scratch rerun.
+//!
+//! **Byte-identity.** Workers ship the exact rendered store lines;
+//! the server re-renders each parsed line to validate purity, accepts
+//! the first copy of every index, and byte-compares any duplicate
+//! (reassigned slices, late deliveries from expired leases). Since
+//! every case's RNG stream is `substream(seed, key)`, any two honest
+//! computations of a case agree byte-for-byte, and the assembled store
+//! equals a single-process `replica sweep` run. A duplicate that does
+//! *not* match is a broken determinism contract and aborts the serve,
+//! mirroring `sweep-merge`'s overlap handling.
+
+use std::collections::BTreeSet;
+use std::io::ErrorKind;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::cluster::leases::LeaseTable;
+use crate::cluster::protocol::{read_frame, write_frame, Message, PROTO_VERSION};
+use crate::config::ClusterConfig;
+use crate::sweep::grid::{ScenarioSet, SweepCase};
+use crate::sweep::spec::SweepSpec;
+use crate::sweep::store::{
+    parse_record, render_record, CaseOutcome, EstimateCache, ResultStore,
+};
+use crate::util::clock::Clock;
+use crate::util::error::{Error, Result};
+
+/// Everything `cluster-serve` needs besides a clock.
+pub struct ServeOptions {
+    /// Raw sweep-spec JSON text (shipped verbatim to workers).
+    pub spec_text: String,
+    /// `--reps` override (applied before keying; shipped in `welcome`).
+    pub reps_override: Option<usize>,
+    /// `--seed` override (applied before keying; shipped in `welcome`).
+    pub seed_override: Option<u64>,
+    /// Canonical result-store path (cache derived as
+    /// `<out>.cache.jsonl`, like a single-process sweep).
+    pub out: PathBuf,
+    /// Listen address, e.g. `127.0.0.1:7700`.
+    pub listen: String,
+    pub cfg: ClusterConfig,
+}
+
+/// What one serve accomplished.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeReport {
+    /// Grid size.
+    pub cases: usize,
+    /// Cases already covered when the serve started (restart resume).
+    pub resumed: usize,
+    /// Distinct workers that held a lease.
+    pub workers: usize,
+    /// Leases that expired and were reassigned.
+    pub expired_leases: usize,
+    /// Duplicate record lines received and byte-verified.
+    pub duplicate_lines: usize,
+}
+
+struct Shared {
+    table: LeaseTable,
+    /// Validated record line per grid index (grid order).
+    lines: Vec<Option<String>>,
+    store: ResultStore,
+    /// Store length in records: `lines[..store_len]` are on disk.
+    store_len: usize,
+    cache: EstimateCache,
+    duplicates: usize,
+    /// Broken determinism contract / unrecoverable failure.
+    fatal: Option<String>,
+    /// Grid fully covered and flushed; answering `done` until linger
+    /// ends.
+    finished: bool,
+}
+
+/// Immutable per-serve context shared with handler threads.
+struct Session {
+    cases: Arc<Vec<SweepCase>>,
+    spec_text: String,
+    reps: usize,
+    seed: u64,
+    sweep_key: u64,
+    cfg: ClusterConfig,
+}
+
+fn lock(shared: &Mutex<Shared>) -> Result<MutexGuard<'_, Shared>> {
+    shared
+        .lock()
+        .map_err(|_| Error::Internal("cluster state lock poisoned".into()))
+}
+
+/// Extend the on-disk store with every newly covered prefix line.
+fn advance_store(s: &mut Shared) -> Result<()> {
+    let mut grew = false;
+    while let Some(Some(line)) = s.lines.get(s.store_len) {
+        s.store.append(line)?;
+        s.store_len += 1;
+        grew = true;
+    }
+    if grew {
+        s.cache.flush()?;
+        s.store.flush()?;
+    }
+    Ok(())
+}
+
+/// Validate one delivered line against its case: it must parse, carry
+/// the case's key, and re-render to the exact same bytes (rendering is
+/// pure, so any honest worker passes).
+fn validate_line(case: &SweepCase, line: &str) -> Result<CaseOutcome> {
+    let (key, outcome) = parse_record(line)?;
+    if key != case.key {
+        return Err(Error::Parse(format!(
+            "record key {key:016x} does not match case {} ({})",
+            case.index,
+            case.key_hex()
+        )));
+    }
+    if render_record(case, &outcome) != line {
+        return Err(Error::Parse(format!(
+            "record for case {} does not re-render to its own bytes",
+            case.index
+        )));
+    }
+    Ok(outcome)
+}
+
+/// Process one worker frame, returning the reply. Locks `shared` only
+/// for the duration of the state change — never across I/O.
+fn handle(msg: Message, session: &Session, shared: &Mutex<Shared>, now: u64) -> Message {
+    match try_handle(msg, session, shared, now) {
+        Ok(reply) => reply,
+        Err(e) => Message::Error { message: e.to_string() },
+    }
+}
+
+fn try_handle(
+    msg: Message,
+    session: &Session,
+    shared: &Mutex<Shared>,
+    now: u64,
+) -> Result<Message> {
+    match msg {
+        Message::Hello { proto, worker } => {
+            if proto != PROTO_VERSION {
+                return Ok(Message::Error {
+                    message: format!(
+                        "protocol version {proto} not supported (coordinator speaks \
+                         {PROTO_VERSION})"
+                    ),
+                });
+            }
+            log::info!("cluster: worker {worker} connected");
+            Ok(Message::Welcome {
+                proto: PROTO_VERSION,
+                spec: session.spec_text.clone(),
+                reps: session.reps,
+                seed: session.seed,
+                sweep_key: session.sweep_key,
+                cases: session.cases.len(),
+                heartbeat_ms: session.cfg.heartbeat_ms,
+            })
+        }
+        Message::Request { worker } => {
+            let mut s = lock(shared)?;
+            if let Some(msg) = &s.fatal {
+                return Ok(Message::Error { message: msg.clone() });
+            }
+            for lease in s.table.expire(now) {
+                log::warn!(
+                    "cluster: lease {} [{}, {}) of worker {} expired; reassigning",
+                    lease.id,
+                    lease.lo,
+                    lease.hi,
+                    lease.worker
+                );
+            }
+            if s.table.done() {
+                return Ok(Message::Done);
+            }
+            match s.table.grant(&worker, now) {
+                Some(lease) => {
+                    log::info!(
+                        "cluster: leased [{}, {}) to {worker} (lease {})",
+                        lease.lo,
+                        lease.hi,
+                        lease.id
+                    );
+                    Ok(Message::Lease { id: lease.id, lo: lease.lo, hi: lease.hi })
+                }
+                None => Ok(Message::Wait { ms: session.cfg.poll_ms }),
+            }
+        }
+        Message::Heartbeat { worker, lease } => {
+            let mut s = lock(shared)?;
+            let live = s.table.heartbeat(lease, &worker, now);
+            Ok(Message::Ok { live })
+        }
+        Message::Result { worker, lease, lo, hi, lines } => {
+            let mut s = lock(shared)?;
+            if let Some(msg) = &s.fatal {
+                return Ok(Message::Error { message: msg.clone() });
+            }
+            if lo >= hi || hi > session.cases.len() || lines.len() != hi - lo {
+                s.table.abort(lease);
+                return Ok(Message::Error {
+                    message: format!(
+                        "malformed result slice [{lo}, {hi}) with {} lines from {worker}",
+                        lines.len()
+                    ),
+                });
+            }
+            for (offset, line) in lines.iter().enumerate() {
+                let index = lo + offset;
+                let case = &session.cases[index];
+                let outcome = match validate_line(case, line) {
+                    Ok(outcome) => outcome,
+                    Err(e) => {
+                        // a corrupt worker must not stall its slice:
+                        // hand it straight back to the pool
+                        s.table.abort(lease);
+                        return Ok(Message::Error {
+                            message: format!("rejected result from {worker}: {e}"),
+                        });
+                    }
+                };
+                let duplicate = s.lines[index].as_ref().map(|existing| existing == line);
+                match duplicate {
+                    Some(true) => {
+                        s.duplicates += 1;
+                    }
+                    Some(false) => {
+                        // two validated computations of one content key
+                        // disagree: the determinism contract is broken;
+                        // refuse to write another byte (like
+                        // sweep-merge on mismatched overlap)
+                        let msg = format!(
+                            "duplicate record for case {} (key {}) differs between \
+                             workers; the determinism contract is broken — aborting \
+                             the serve",
+                            index,
+                            case.key_hex()
+                        );
+                        s.fatal = Some(msg.clone());
+                        return Ok(Message::Error { message: msg });
+                    }
+                    None => {
+                        if s.cache.get(case.key).is_none() {
+                            s.cache.insert(case.key, outcome)?;
+                        }
+                        s.lines[index] = Some(line.clone());
+                        s.table.cover(index);
+                    }
+                }
+            }
+            s.table.release(lease);
+            advance_store(&mut s)?;
+            Ok(Message::Ok { live: true })
+        }
+        Message::Bye { worker } => {
+            let mut s = lock(shared)?;
+            s.table.release_worker(&worker);
+            log::info!("cluster: worker {worker} said bye");
+            Ok(Message::Ok { live: false })
+        }
+        other => Ok(Message::Error {
+            message: format!("unexpected frame from worker: {other:?}"),
+        }),
+    }
+}
+
+fn handler_thread(
+    mut stream: TcpStream,
+    session: Arc<Session>,
+    shared: Arc<Mutex<Shared>>,
+    clock: Arc<dyn Clock>,
+) {
+    // a silent peer is dropped after a lease window; live workers
+    // heartbeat or re-request well within it
+    let timeout = Duration::from_millis(session.cfg.lease_timeout_ms);
+    let _ = stream.set_read_timeout(Some(timeout));
+    let _ = stream.set_write_timeout(Some(timeout));
+    let _ = stream.set_nodelay(true);
+    loop {
+        let msg = match read_frame(&mut stream) {
+            Ok(msg) => msg,
+            Err(_) => break, // disconnect, timeout, or garbage: expiry reclaims work
+        };
+        let said_bye = matches!(msg, Message::Bye { .. });
+        let reply = handle(msg, &session, &shared, clock.now_millis());
+        if write_frame(&mut stream, &reply).is_err() {
+            break;
+        }
+        if said_bye {
+            break;
+        }
+    }
+}
+
+/// Run the coordinator until the grid is covered (or a fatal
+/// determinism violation). Blocks; returns the final report.
+pub fn serve(opts: &ServeOptions, clock: Arc<dyn Clock>) -> Result<ServeReport> {
+    opts.cfg.validate()?;
+    let mut spec = SweepSpec::from_json(&opts.spec_text)?;
+    if let Some(reps) = opts.reps_override {
+        spec.reps = reps;
+    }
+    if let Some(seed) = opts.seed_override {
+        spec.seed = seed;
+    }
+    let trace = spec.load_trace()?;
+    let set = ScenarioSet::from_trace(&trace, &spec)?;
+    let expected = set.expected_keys();
+    let sweep_key = set.sweep_key();
+    let total = set.len();
+
+    // Re-open the partially written store (restart resume) and the
+    // content-keyed cache; coverage = store prefix ∪ cache hits.
+    let (store, prefix) = ResultStore::open(&opts.out, &expected)?;
+    let cache_path = PathBuf::from(format!("{}.cache.jsonl", opts.out.display()));
+    let cache = EstimateCache::open(&cache_path)?;
+    let mut lines: Vec<Option<String>> = vec![None; total];
+    let mut covered: BTreeSet<usize> = BTreeSet::new();
+    for (i, outcome) in prefix.iter().enumerate() {
+        lines[i] = Some(render_record(&set.cases[i], outcome));
+        covered.insert(i);
+    }
+    for i in prefix.len()..total {
+        if let Some(outcome) = cache.get(set.cases[i].key) {
+            lines[i] = Some(render_record(&set.cases[i], outcome));
+            covered.insert(i);
+        }
+    }
+    let resumed = covered.len();
+    let table = LeaseTable::new(
+        total,
+        &covered,
+        opts.cfg.lease_timeout_ms,
+        opts.cfg.min_lease,
+        opts.cfg.max_lease,
+    );
+    let shared = Arc::new(Mutex::new(Shared {
+        table,
+        lines,
+        store,
+        store_len: prefix.len(),
+        cache,
+        duplicates: 0,
+        fatal: None,
+        finished: false,
+    }));
+    // write out any cache-covered run that extends the store prefix
+    advance_store(&mut lock(&shared)?)?;
+
+    let session = Arc::new(Session {
+        cases: Arc::new(set.cases),
+        spec_text: opts.spec_text.clone(),
+        reps: spec.reps,
+        seed: spec.seed,
+        sweep_key,
+        cfg: opts.cfg.clone(),
+    });
+    let listener = TcpListener::bind(&opts.listen)
+        .map_err(|e| Error::Config(format!("cannot listen on {}: {e}", opts.listen)))?;
+    listener.set_nonblocking(true)?;
+    log::info!(
+        "cluster: serving {total} cases on {} ({resumed} already covered)",
+        opts.listen
+    );
+
+    let mut finished_at: Option<u64> = None;
+    loop {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                let session = Arc::clone(&session);
+                let shared = Arc::clone(&shared);
+                let clock = Arc::clone(&clock);
+                std::thread::Builder::new()
+                    .name("cluster-conn".into())
+                    .spawn(move || handler_thread(stream, session, shared, clock))?;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+        let now = clock.now_millis();
+        {
+            let mut s = lock(&shared)?;
+            if let Some(msg) = s.fatal.clone() {
+                return Err(Error::Coordinator(msg));
+            }
+            for lease in s.table.expire(now) {
+                log::warn!(
+                    "cluster: lease {} [{}, {}) of worker {} expired; reassigning",
+                    lease.id,
+                    lease.lo,
+                    lease.hi,
+                    lease.worker
+                );
+            }
+            if s.table.done() && !s.finished {
+                advance_store(&mut s)?;
+                s.finished = true;
+                finished_at = Some(now);
+                log::info!("cluster: grid covered; lingering for trailing workers");
+            }
+        }
+        if let Some(t0) = finished_at {
+            if now.saturating_sub(t0) >= opts.cfg.linger_ms {
+                break;
+            }
+        }
+        clock.sleep_millis(opts.cfg.poll_ms);
+    }
+
+    let s = lock(&shared)?;
+    Ok(ServeReport {
+        cases: total,
+        resumed,
+        workers: s.table.workers_seen(),
+        expired_leases: s.table.expired_leases(),
+        duplicate_lines: s.duplicates,
+    })
+}

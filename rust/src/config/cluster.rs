@@ -1,0 +1,129 @@
+//! Cluster runtime configuration.
+//!
+//! All socket/timing knobs of the [`crate::cluster`] runtime live
+//! here: lease deadlines, heartbeat cadence, lease sizing, and the
+//! worker's reconnect backoff. None of these affect sweep *results* —
+//! the store is fixed by the content-keyed RNG — only scheduling, so
+//! the CLI may tune them freely without re-keying anything.
+
+use crate::util::error::{Error, Result};
+
+/// Timing and sizing knobs for `cluster-serve` / `cluster-work`.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// A lease not renewed within this window is considered dead (its
+    /// worker crashed or is straggling) and its slice is reassigned.
+    pub lease_timeout_ms: u64,
+    /// Target heartbeat cadence; shipped to workers in the welcome
+    /// frame so both sides agree. Must be well under
+    /// `lease_timeout_ms`.
+    pub heartbeat_ms: u64,
+    /// Coordinator housekeeping period (lease-expiry sweeps) and the
+    /// retry hint sent to workers when no slice is currently leasable.
+    pub poll_ms: u64,
+    /// Smallest lease (cases) — the tail-end work-stealing granularity.
+    pub min_lease: usize,
+    /// Largest lease (cases) handed out while the grid is full.
+    pub max_lease: usize,
+    /// Cases a worker evaluates between heartbeats.
+    pub chunk: usize,
+    /// First reconnect delay after a dropped connection.
+    pub reconnect_base_ms: u64,
+    /// Backoff cap for reconnect delays (doubling up to this).
+    pub reconnect_max_ms: u64,
+    /// Consecutive failed connection attempts before a worker gives up.
+    pub max_reconnects: u32,
+    /// How long a finished coordinator keeps answering `done` so
+    /// trailing workers learn the sweep is over before it exits.
+    pub linger_ms: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            lease_timeout_ms: 10_000,
+            heartbeat_ms: 2_000,
+            poll_ms: 250,
+            min_lease: 2,
+            max_lease: 64,
+            chunk: 8,
+            reconnect_base_ms: 200,
+            reconnect_max_ms: 5_000,
+            max_reconnects: 25,
+            linger_ms: 2_000,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Validate cross-field invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.lease_timeout_ms == 0 || self.heartbeat_ms == 0 || self.poll_ms == 0 {
+            return Err(Error::Config(
+                "cluster timeouts must all be >= 1ms".into(),
+            ));
+        }
+        if self.heartbeat_ms * 2 > self.lease_timeout_ms {
+            return Err(Error::Config(format!(
+                "heartbeat ({} ms) must be at most half the lease timeout ({} ms), \
+                 or every lease would expire between renewals",
+                self.heartbeat_ms, self.lease_timeout_ms
+            )));
+        }
+        if self.min_lease == 0 || self.max_lease < self.min_lease {
+            return Err(Error::Config(format!(
+                "lease sizes must satisfy 1 <= min ({}) <= max ({})",
+                self.min_lease, self.max_lease
+            )));
+        }
+        if self.chunk == 0 {
+            return Err(Error::Config("chunk must be >= 1 case".into()));
+        }
+        if self.reconnect_base_ms == 0 || self.reconnect_max_ms < self.reconnect_base_ms {
+            return Err(Error::Config(format!(
+                "reconnect backoff must satisfy 1 <= base ({}) <= max ({})",
+                self.reconnect_base_ms, self.reconnect_max_ms
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ClusterConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn heartbeat_must_fit_in_lease_window() {
+        let cfg = ClusterConfig {
+            heartbeat_ms: 6_000,
+            lease_timeout_ms: 10_000,
+            ..ClusterConfig::default()
+        };
+        let err = cfg.validate().unwrap_err();
+        assert!(err.to_string().contains("half the lease timeout"), "{err}");
+    }
+
+    #[test]
+    fn lease_sizes_are_ordered() {
+        let cfg = ClusterConfig { min_lease: 10, max_lease: 5, ..ClusterConfig::default() };
+        assert!(cfg.validate().is_err());
+        let cfg = ClusterConfig { min_lease: 0, ..ClusterConfig::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn reconnect_backoff_is_ordered() {
+        let cfg = ClusterConfig {
+            reconnect_base_ms: 1_000,
+            reconnect_max_ms: 100,
+            ..ClusterConfig::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+}

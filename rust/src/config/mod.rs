@@ -4,8 +4,10 @@
 //! `replica.toml`-style files (flat `key = value` pairs under
 //! `[section]` headers — the subset we need; no serde offline).
 
+mod cluster;
 mod parse;
 
+pub use cluster::ClusterConfig;
 pub use parse::{parse_toml, TomlValue};
 
 use crate::dist::ServiceDist;

@@ -347,6 +347,73 @@ mod tests {
         assert!(Coordinator::new(cfg, ds, Arc::new(NativeBackend::new(8, 4))).is_err());
     }
 
+    /// A backend that fails on one chosen task — by returning `Err` or
+    /// by panicking — and behaves natively everywhere else. Exercises
+    /// the liveness contract: the master must surface a proper error,
+    /// never hang waiting for a result that will not come.
+    struct FaultyBackend {
+        inner: NativeBackend,
+        bad_task: u64,
+        panics: bool,
+    }
+
+    impl ComputeBackend for FaultyBackend {
+        fn d(&self) -> usize {
+            self.inner.d()
+        }
+        fn m(&self) -> usize {
+            self.inner.m()
+        }
+        fn partial_grad_loss(
+            &self,
+            beta: &[f32],
+            x: &[f32],
+            y: &[f32],
+        ) -> Result<(Vec<f32>, f32)> {
+            self.inner.partial_grad_loss(beta, x, y)
+        }
+        fn partial_grad_loss_keyed(
+            &self,
+            shard_key: u64,
+            beta: &[f32],
+            x: &[f32],
+            y: &[f32],
+        ) -> Result<(Vec<f32>, f32)> {
+            if shard_key == self.bad_task {
+                if self.panics {
+                    panic!("injected backend panic");
+                }
+                return Err(Error::Runtime("injected backend failure".into()));
+            }
+            self.inner.partial_grad_loss_keyed(shard_key, beta, x, y)
+        }
+    }
+
+    fn run_faulty(panics: bool) -> Error {
+        // B = N: every batch has exactly one host, so losing the faulty
+        // worker's result can never be papered over by a replica — the
+        // pre-fix behavior was a hung `recv()`, not an error
+        let cfg = quick_cfg(4, 4, 3);
+        let ds = Dataset::synthetic(4, 8, 3, 0.1, 5);
+        let backend =
+            Arc::new(FaultyBackend { inner: NativeBackend::new(8, 3), bad_task: 2, panics });
+        let mut c = Coordinator::new(cfg, ds, backend).unwrap();
+        c.run().unwrap_err()
+    }
+
+    #[test]
+    fn backend_error_fails_the_round_instead_of_hanging() {
+        let err = run_faulty(false);
+        assert!(err.to_string().contains("injected backend failure"), "{err}");
+    }
+
+    #[test]
+    fn backend_panic_fails_the_round_instead_of_hanging() {
+        let err = run_faulty(true);
+        assert!(err.to_string().contains("panicked"), "{err}");
+        assert!(err.to_string().contains("injected backend panic"), "{err}");
+    }
+
     #[test]
     fn diversity_reduces_latency_under_stragglers() {
         // Heavy-tailed stragglers + measurable delays: B=1 (full

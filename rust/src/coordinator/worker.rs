@@ -1,6 +1,14 @@
 //! Worker threads: sleep out the straggler delay, compute the batch
 //! gradient, report to the master.
+//!
+//! **Liveness contract:** every [`WorkItem`] produces exactly one
+//! [`WorkResult`], even when the backend errors *or panics*. The
+//! master's first-copy-wins collector counts results, so a worker
+//! that swallowed an item would hang the round forever — a panicking
+//! backend is therefore caught ([`std::panic::catch_unwind`]) and
+//! reported as an error result instead of silently killing the thread.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::Duration;
@@ -35,6 +43,50 @@ pub(crate) struct WorkResult {
     pub error: Option<String>,
 }
 
+/// Best-effort text of a panic payload (`panic!("...")` carries a
+/// `&str` or a `String`; anything else stays opaque).
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&'static str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("opaque panic payload")
+}
+
+/// Compute one item's mean gradient and loss; an `Err` from the backend
+/// becomes the result's error field.
+fn compute(
+    id: usize,
+    d: usize,
+    backend: &dyn ComputeBackend,
+    dataset: &Dataset,
+    item: &WorkItem,
+) -> (Vec<f32>, f32, Option<String>) {
+    let mut grad_sum = vec![0.0f32; d];
+    let mut loss_sum = 0.0f32;
+    let mut error = None;
+    for &t in item.tasks.iter() {
+        let shard = &dataset.shards[t];
+        match backend.partial_grad_loss_keyed(t as u64, &item.beta, &shard.x, &shard.y) {
+            Ok((g, l)) => {
+                for (a, b) in grad_sum.iter_mut().zip(&g) {
+                    *a += b;
+                }
+                loss_sum += l;
+            }
+            Err(e) => {
+                error = Some(format!("worker {id} task {t}: {e}"));
+                break;
+            }
+        }
+    }
+    let k = item.tasks.len().max(1) as f32;
+    for g in grad_sum.iter_mut() {
+        *g /= k;
+    }
+    (grad_sum, loss_sum / k, error)
+}
+
 /// The worker thread body: loop over rounds until the channel closes.
 pub(crate) fn worker_loop(
     id: usize,
@@ -43,40 +95,36 @@ pub(crate) fn worker_loop(
     rx: Receiver<WorkItem>,
     tx: Sender<WorkResult>,
 ) {
+    // the model width is fixed for the run (validated against the
+    // dataset in `Coordinator::new`)
+    let d = backend.d();
     while let Ok(item) = rx.recv() {
         // Straggler injection: the sampled service delay.
         if item.delay > Duration::ZERO {
             std::thread::sleep(item.delay);
         }
-        let d = backend.d();
-        let mut grad_sum = vec![0.0f32; d];
-        let mut loss_sum = 0.0f32;
-        let mut error = None;
-        for &t in item.tasks.iter() {
-            let shard = &dataset.shards[t];
-            match backend.partial_grad_loss_keyed(t as u64, &item.beta, &shard.x, &shard.y) {
-                Ok((g, l)) => {
-                    for (a, b) in grad_sum.iter_mut().zip(&g) {
-                        *a += b;
-                    }
-                    loss_sum += l;
-                }
-                Err(e) => {
-                    error = Some(format!("worker {id} task {t}: {e}"));
-                    break;
-                }
-            }
-        }
-        let k = item.tasks.len().max(1) as f32;
-        for g in grad_sum.iter_mut() {
-            *g /= k;
-        }
+        // a panicking backend must still yield a result, or the master
+        // waits forever on a round this worker will never report
+        let outcome =
+            catch_unwind(AssertUnwindSafe(|| compute(id, d, &*backend, &dataset, &item)));
+        let (grad, loss, error) = match outcome {
+            Ok(result) => result,
+            Err(payload) => (
+                vec![0.0f32; d],
+                0.0,
+                Some(format!(
+                    "worker {id} batch {} panicked: {}",
+                    item.batch,
+                    panic_text(&*payload)
+                )),
+            ),
+        };
         let send_result = tx.send(WorkResult {
             round: item.round,
             worker: id,
             batch: item.batch,
-            grad: grad_sum,
-            loss: loss_sum / k,
+            grad,
+            loss,
             error,
         });
         if send_result.is_err() {

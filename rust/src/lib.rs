@@ -65,6 +65,12 @@
 //!   `replica sweep-merge` reassembles byte-identically to a
 //!   single-process run, and `--cache-import DIR` warms a new run from
 //!   earlier caches without touching them.
+//! * [`cluster`] — the fault-tolerant multi-process sweep runtime:
+//!   `replica cluster-serve` leases grid slices to `replica
+//!   cluster-work` processes over a socket protocol with heartbeats,
+//!   dead-lease reassignment, and shrinking (work-stealing) leases;
+//!   the assembled store stays byte-identical to a single-process
+//!   sweep under worker kills and coordinator restarts.
 //! * [`experiments`] — one module per paper figure/table; the bench
 //!   harness and CLI call into these.
 //!
@@ -134,6 +140,7 @@
 pub mod analysis;
 pub mod batching;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod dist;

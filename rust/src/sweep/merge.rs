@@ -24,11 +24,19 @@
 //! shard and re-merge), and overlapping shards are tolerated only if
 //! their duplicate records agree byte-for-byte — a disagreement means
 //! the determinism contract broke, which must never be papered over.
+//!
+//! [`merge_partial`] relaxes exactly one of those refusals: an
+//! *incomplete* grid. It writes the longest contiguous covered prefix
+//! (a valid, resumable store — the same shape a killed single-process
+//! run leaves behind) and reports every uncovered index range instead
+//! of erroring, so an operator can see what is left while shards (or
+//! cluster workers) are still running. All other refusals — foreign
+//! sweeps, corrupt records, byte-level disagreement — stay hard errors.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use crate::sweep::grid::ScenarioSet;
+use crate::sweep::grid::{ScenarioSet, SweepCase};
 use crate::sweep::store::{parse_record, parse_shard_header, render_record, CaseOutcome};
 use crate::util::error::{Error, Result};
 
@@ -42,6 +50,51 @@ pub struct MergeReport {
     /// Records seen more than once across shard files (overlapping
     /// shard ranges); each duplicate was verified byte-identical.
     pub duplicates: usize,
+}
+
+/// One contiguous run of grid indices no shard file covered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MissingRange {
+    /// First uncovered grid index (inclusive).
+    pub lo: usize,
+    /// One past the last uncovered grid index.
+    pub hi: usize,
+    /// Content key of the first uncovered case — the stable name to
+    /// look the range up by, independent of grid re-expansion.
+    pub first_key: u64,
+}
+
+impl MissingRange {
+    /// Number of uncovered cases in this range.
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    /// A `MissingRange` always holds at least one case.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+}
+
+/// Summary of one [`merge_partial`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PartialMergeReport {
+    /// Shard files read.
+    pub shards: usize,
+    /// Cases in the full grid.
+    pub cases: usize,
+    /// Cases written to the store: the longest contiguous covered
+    /// prefix of the grid.
+    pub merged: usize,
+    /// Cases covered *somewhere* in the inputs (prefix + islands past
+    /// the first gap; the islands stay in their shard files and are
+    /// picked up by a later merge).
+    pub covered: usize,
+    /// Byte-verified duplicate records across overlapping shards.
+    pub duplicates: usize,
+    /// Every uncovered index range, in grid order. Empty means the
+    /// grid is complete and the output equals a strict [`merge`].
+    pub missing: Vec<MissingRange>,
 }
 
 /// Conventional per-shard store path for canonical output `out`:
@@ -79,6 +132,104 @@ pub fn merge(
     shard_files: &[PathBuf],
     out: &Path,
 ) -> Result<(MergeReport, Vec<CaseOutcome>)> {
+    let (duplicates, outcomes) = load_outcomes(set, shard_files)?;
+    let missing = outcomes.iter().filter(|outcome| outcome.is_none()).count();
+    let first_gap = set
+        .cases
+        .iter()
+        .zip(&outcomes)
+        .find(|(_, outcome)| outcome.is_none())
+        .map(|(case, _)| case);
+    if let Some(first) = first_gap {
+        return Err(Error::Config(format!(
+            "merge is missing {missing} of {} cases (first: {} — job {}, B={}); \
+             run the unfinished shard(s) to completion and re-merge \
+             (or pass --allow-partial for the covered prefix)",
+            set.cases.len(),
+            first.key_hex(),
+            first.job_id,
+            first.batches()
+        )));
+    }
+    // every slot is Some: `first_gap` above found no gap
+    let outcomes: Vec<CaseOutcome> = outcomes.into_iter().flatten().collect();
+    write_store(set.cases.iter().zip(&outcomes), out)?;
+    let report =
+        MergeReport { shards: shard_files.len(), cases: set.cases.len(), duplicates };
+    Ok((report, outcomes))
+}
+
+/// Merge what the shard files hold *so far*: write the longest
+/// contiguous covered prefix of the grid to `out` (a valid store that
+/// any later run, merge, or `cluster-serve` restart resumes from) and
+/// report every uncovered range instead of refusing. Covered islands
+/// past the first gap are not written — they stay in their shard files
+/// and cost nothing to re-merge later.
+pub fn merge_partial(
+    set: &ScenarioSet,
+    shard_files: &[PathBuf],
+    out: &Path,
+) -> Result<PartialMergeReport> {
+    let (duplicates, outcomes) = load_outcomes(set, shard_files)?;
+    let merged = outcomes.iter().take_while(|outcome| outcome.is_some()).count();
+    let covered = outcomes.iter().filter(|outcome| outcome.is_some()).count();
+    write_store(
+        set.cases
+            .iter()
+            .zip(&outcomes)
+            .take(merged)
+            .filter_map(|(case, outcome)| outcome.as_ref().map(|o| (case, o))),
+        out,
+    )?;
+    let mut missing = Vec::new();
+    let mut i = 0;
+    while i < outcomes.len() {
+        if outcomes[i].is_some() {
+            i += 1;
+            continue;
+        }
+        let lo = i;
+        while i < outcomes.len() && outcomes[i].is_none() {
+            i += 1;
+        }
+        missing.push(MissingRange { lo, hi: i, first_key: set.cases[lo].key });
+    }
+    Ok(PartialMergeReport {
+        shards: shard_files.len(),
+        cases: set.cases.len(),
+        merged,
+        covered,
+        duplicates,
+        missing,
+    })
+}
+
+/// Render the given `(case, outcome)` records in order and publish them
+/// at `out` via write-then-rename: a kill mid-merge never leaves a torn
+/// canonical store (and an existing store is replaced atomically).
+fn write_store<'a>(
+    records: impl Iterator<Item = (&'a SweepCase, &'a CaseOutcome)>,
+    out: &Path,
+) -> Result<()> {
+    let mut text = String::new();
+    for (case, outcome) in records {
+        text.push_str(&render_record(case, outcome));
+        text.push('\n');
+    }
+    let tmp = PathBuf::from(format!("{}.tmp", out.display()));
+    std::fs::write(&tmp, &text)?;
+    std::fs::rename(&tmp, out)?;
+    Ok(())
+}
+
+/// The shared loading pass: read every shard file, validate headers
+/// against this sweep's identity, place each record at its grid index,
+/// and byte-verify overlaps. Returns the duplicate count and the
+/// per-index outcomes (`None` = no shard covered that case).
+fn load_outcomes(
+    set: &ScenarioSet,
+    shard_files: &[PathBuf],
+) -> Result<(usize, Vec<Option<CaseOutcome>>)> {
     if shard_files.is_empty() {
         return Err(Error::Config("merge needs at least one shard file".into()));
     }
@@ -143,38 +294,7 @@ pub fn merge(
             }
         }
     }
-    let missing = outcomes.iter().filter(|outcome| outcome.is_none()).count();
-    let first_gap = set
-        .cases
-        .iter()
-        .zip(&outcomes)
-        .find(|(_, outcome)| outcome.is_none())
-        .map(|(case, _)| case);
-    if let Some(first) = first_gap {
-        return Err(Error::Config(format!(
-            "merge is missing {missing} of {} cases (first: {} — job {}, B={}); \
-             run the unfinished shard(s) to completion and re-merge",
-            set.cases.len(),
-            first.key_hex(),
-            first.job_id,
-            first.batches()
-        )));
-    }
-    // every slot is Some: `first_gap` above found no gap
-    let outcomes: Vec<CaseOutcome> = outcomes.into_iter().flatten().collect();
-    let mut text = String::new();
-    for (case, outcome) in set.cases.iter().zip(&outcomes) {
-        text.push_str(&render_record(case, outcome));
-        text.push('\n');
-    }
-    // write-then-rename: a kill mid-merge never leaves a torn canonical
-    // store (and an existing store is replaced atomically)
-    let tmp = PathBuf::from(format!("{}.tmp", out.display()));
-    std::fs::write(&tmp, &text)?;
-    std::fs::rename(&tmp, out)?;
-    let report =
-        MergeReport { shards: shard_files.len(), cases: set.cases.len(), duplicates };
-    Ok((report, outcomes))
+    Ok((duplicates, outcomes))
 }
 
 #[cfg(test)]

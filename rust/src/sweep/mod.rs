@@ -30,7 +30,10 @@
 //!   grid-ordered store **byte-identical to a single-process run** —
 //!   possible because each case's RNG stream derives from its content
 //!   key, never from where or when it ran. Long-lived caches are
-//!   compacted with [`store::EstimateCache::gc`].
+//!   compacted with [`store::EstimateCache::gc`], and
+//!   `sweep-merge --allow-partial` ([`merge_partial`]) publishes the
+//!   covered prefix of a still-running sweep plus a machine-readable
+//!   list of the uncovered ranges.
 //! * [`report`] — the replication-gain report: per-job optimal
 //!   redundancy, speedup over the B = N baseline, and the
 //!   E\[T\]-vs-predictability (and, on the policy axis, cost)
@@ -53,11 +56,14 @@ pub mod spec;
 pub mod store;
 
 pub use grid::{case_key, shard_range, ScenarioSet, SweepCase};
-pub use merge::{merge, merge_shards, shard_path, MergeReport};
+pub use merge::{
+    merge, merge_partial, merge_shards, shard_path, MergeReport, MissingRange,
+    PartialMergeReport,
+};
 pub use report::{
     gain_report, gain_report_from_records, gain_table, headline_speedup, parse_report_line,
     GainRow, RecordRow,
 };
-pub use runner::{run, run_spec, CaseResult, RunConfig};
+pub use runner::{evaluate_cases, run, run_spec, CaseResult, RunConfig};
 pub use spec::{Backend, SweepSpec, Workload, DEFAULT_SHARD_SIZE, DEFAULT_SWEEP_REPS};
 pub use store::{CacheGc, CaseOutcome, EstimateCache, StoredEstimate};

@@ -156,7 +156,7 @@ pub fn run(set: &ScenarioSet, cfg: &RunConfig) -> Result<Vec<CaseResult>> {
         let lo = results.len();
         let hi = (lo + cfg.shard_size.max(1)).min(cases.len());
         let shard = &cases[lo..hi];
-        let outcomes = evaluate_shard(shard, &mut cache, cfg.threads)?;
+        let outcomes = evaluate_cases(shard, &mut cache, cfg.threads)?;
         for (case, outcome) in shard.iter().zip(&outcomes) {
             if let Some(store) = &mut store {
                 store.append(&render_record(case, outcome))?;
@@ -187,13 +187,19 @@ pub fn run_spec(spec: &SweepSpec, cfg: &RunConfig) -> Result<(Trace, Vec<CaseRes
     Ok((trace, results))
 }
 
-/// Evaluate one shard: cache hits are reused, closed-form cases are
-/// answered inline, and every Monte-Carlo-bound case goes through one
-/// pooled batch. Per-case problems (no closed form, an infeasible
-/// hand-built scenario) become [`CaseOutcome::Error`] records instead
-/// of poisoning the shard; all-failed estimates likewise surface per
-/// scenario via their `all_failed` flag.
-fn evaluate_shard(
+/// Evaluate a contiguous run of cases: cache hits are reused,
+/// closed-form cases are answered inline, and every Monte-Carlo-bound
+/// case goes through one pooled batch. Per-case problems (no closed
+/// form, an infeasible hand-built scenario) become
+/// [`CaseOutcome::Error`] records instead of poisoning the batch;
+/// all-failed estimates likewise surface per scenario via their
+/// `all_failed` flag.
+///
+/// This is the single evaluation path shared by the in-process engine
+/// ([`run`], per shard) and the cluster worker
+/// ([`crate::cluster::client`], per leased slice) — both produce
+/// outcomes that depend only on each case's content key.
+pub fn evaluate_cases(
     shard: &[SweepCase],
     cache: &mut EstimateCache,
     threads: usize,

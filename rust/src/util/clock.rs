@@ -1,0 +1,123 @@
+//! Injectable time source for the cluster runtime.
+//!
+//! All wall-clock reads and sleeps in `cluster/` go through [`Clock`]
+//! so that lease-expiry and heartbeat logic is testable without real
+//! sleeps ([`MockClock`]) and so that detlint rule D1-TIME keeps a
+//! single audited `Instant::now` call site in library code
+//! ([`MonotonicClock`], this file). Timing never feeds a result path:
+//! the sweep store contents are fixed by the content-keyed RNG, and
+//! clocks only decide *scheduling* (when a lease expires, when a
+//! worker heartbeats).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// A monotonic millisecond clock plus a sleep primitive.
+///
+/// `now_millis` is relative to an arbitrary per-clock origin; only
+/// differences are meaningful. Implementations must be monotonic
+/// (never go backwards).
+pub trait Clock: Send + Sync {
+    /// Milliseconds since this clock's origin.
+    fn now_millis(&self) -> u64;
+    /// Block the calling thread for `ms` milliseconds (or simulate
+    /// doing so).
+    fn sleep_millis(&self, ms: u64);
+}
+
+/// The production clock: `Instant`-based monotonic time and real
+/// `thread::sleep`. This is the only `Instant::now` call site allowed
+/// in library code outside `src/metrics/` (see detlint D1-TIME).
+pub struct MonotonicClock {
+    origin: Instant,
+}
+
+impl MonotonicClock {
+    pub fn new() -> MonotonicClock {
+        MonotonicClock { origin: Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        MonotonicClock::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now_millis(&self) -> u64 {
+        self.origin.elapsed().as_millis() as u64
+    }
+
+    fn sleep_millis(&self, ms: u64) {
+        std::thread::sleep(Duration::from_millis(ms));
+    }
+}
+
+/// A manually-advanced clock for tests: `now_millis` reads an atomic
+/// counter, `sleep_millis` advances it (so code under test that
+/// "waits" makes progress instead of blocking), and tests can jump
+/// time forward with [`MockClock::advance`].
+pub struct MockClock {
+    now: AtomicU64,
+}
+
+impl MockClock {
+    pub fn new(start_millis: u64) -> MockClock {
+        MockClock { now: AtomicU64::new(start_millis) }
+    }
+
+    /// Jump the clock forward by `ms` milliseconds.
+    pub fn advance(&self, ms: u64) {
+        self.now.fetch_add(ms, Ordering::SeqCst);
+    }
+}
+
+impl Clock for MockClock {
+    fn now_millis(&self) -> u64 {
+        self.now.load(Ordering::SeqCst)
+    }
+
+    fn sleep_millis(&self, ms: u64) {
+        self.advance(ms);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotonic_clock_is_monotonic() {
+        let c = MonotonicClock::new();
+        let a = c.now_millis();
+        let b = c.now_millis();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn mock_clock_advances_on_sleep_and_advance() {
+        let c = MockClock::new(100);
+        assert_eq!(c.now_millis(), 100);
+        c.advance(50);
+        assert_eq!(c.now_millis(), 150);
+        c.sleep_millis(25);
+        assert_eq!(c.now_millis(), 175);
+    }
+
+    #[test]
+    fn mock_clock_is_shareable() {
+        use std::sync::Arc;
+        let c = Arc::new(MockClock::new(0));
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || c.advance(10))
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.now_millis(), 40);
+    }
+}

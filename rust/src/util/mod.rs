@@ -6,6 +6,7 @@
 //! `proptest` — only the hermetic shims vendored under `rust/vendor/`
 //! (`log`, `once_cell`, and the `xla` PJRT stub).
 
+pub mod clock;
 pub mod csv;
 pub mod error;
 pub mod json;

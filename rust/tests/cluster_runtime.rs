@@ -1,0 +1,185 @@
+//! Integration tests for the fault-tolerant sweep cluster: a real
+//! coordinator and real workers over loopback TCP, in one process.
+//!
+//! The contract under test is the headline invariant CI's
+//! `cluster-chaos` job enforces with OS processes and SIGKILL: however
+//! the grid is leased, reassigned, or resumed, the assembled store is
+//! **byte-identical** to a single-process `replica sweep` run.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::thread;
+
+use replica::cluster::{serve, work, ServeOptions, WorkOptions};
+use replica::config::ClusterConfig;
+use replica::sweep::{run, RunConfig, ScenarioSet, SweepSpec};
+use replica::util::clock::MonotonicClock;
+
+const SPEC: &str = r#"{"workload": {"generate": {"jobs": 2, "tasks_per_job": 12, "seed": 3}},
+    "reps": 100, "seed": 1, "shard_size": 4}"#;
+
+fn test_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("replica_cluster_runtime_{name}"));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Timing tuned for tests: short leases, fast polls, a linger long
+/// enough that no worker's final request can miss the coordinator.
+fn quick_cfg() -> ClusterConfig {
+    ClusterConfig {
+        lease_timeout_ms: 4_000,
+        heartbeat_ms: 500,
+        poll_ms: 25,
+        min_lease: 1,
+        max_lease: 4,
+        chunk: 2,
+        reconnect_base_ms: 50,
+        reconnect_max_ms: 200,
+        max_reconnects: 40,
+        linger_ms: 600,
+    }
+}
+
+/// Reserve a loopback address that is free right now.
+fn free_addr() -> String {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    drop(listener);
+    addr.to_string()
+}
+
+/// Single-process reference store for [`SPEC`].
+fn reference_store(dir: &Path) -> String {
+    let spec = SweepSpec::from_json(SPEC).unwrap();
+    let set = ScenarioSet::from_trace(&spec.load_trace().unwrap(), &spec).unwrap();
+    assert_eq!(set.len(), 12);
+    let out = dir.join("single.jsonl");
+    let cfg = RunConfig { shard_size: 4, ..RunConfig::persisted(out.clone()) };
+    run(&set, &cfg).unwrap();
+    std::fs::read_to_string(&out).unwrap()
+}
+
+fn serve_opts(out: &Path, listen: &str) -> ServeOptions {
+    ServeOptions {
+        spec_text: SPEC.to_string(),
+        reps_override: None,
+        seed_override: None,
+        out: out.to_path_buf(),
+        listen: listen.to_string(),
+        cfg: quick_cfg(),
+    }
+}
+
+fn work_opts(connect: &str, worker: &str) -> WorkOptions {
+    WorkOptions {
+        connect: connect.to_string(),
+        worker: worker.to_string(),
+        threads: 1,
+        cfg: quick_cfg(),
+    }
+}
+
+#[test]
+fn cluster_sweep_is_byte_identical_to_single_process() {
+    let dir = test_dir("identity");
+    let reference = reference_store(&dir);
+
+    let out = dir.join("cluster.jsonl");
+    let addr = free_addr();
+    let opts = serve_opts(&out, &addr);
+    let server = thread::spawn(move || serve(&opts, Arc::new(MonotonicClock::new())));
+    let workers: Vec<_> = (0..3)
+        .map(|i| {
+            let opts = work_opts(&addr, &format!("w{i}"));
+            thread::spawn(move || work(&opts, &MonotonicClock::new()))
+        })
+        .collect();
+
+    let mut delivered = 0usize;
+    for w in workers {
+        let report = w.join().unwrap().unwrap();
+        delivered += report.cases;
+    }
+    let report = server.join().unwrap().unwrap();
+    assert_eq!(report.cases, 12);
+    assert_eq!(report.resumed, 0);
+    assert!(report.workers >= 1, "at least one worker must have held a lease");
+    assert!(delivered >= 12, "every case was delivered at least once");
+
+    assert_eq!(
+        std::fs::read_to_string(&out).unwrap(),
+        reference,
+        "cluster-assembled store must be byte-identical to a single-process run"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn restarted_coordinator_resumes_from_store_prefix() {
+    let dir = test_dir("resume_prefix");
+    let reference = reference_store(&dir);
+
+    // simulate a coordinator killed after 4 cases: its store holds a
+    // valid 4-record prefix and no cache survives
+    let out = dir.join("cluster.jsonl");
+    let prefix: String =
+        reference.lines().take(4).map(|l| format!("{l}\n")).collect();
+    std::fs::write(&out, &prefix).unwrap();
+
+    let addr = free_addr();
+    let opts = serve_opts(&out, &addr);
+    let server = thread::spawn(move || serve(&opts, Arc::new(MonotonicClock::new())));
+    let workers: Vec<_> = (0..2)
+        .map(|i| {
+            let opts = work_opts(&addr, &format!("w{i}"));
+            thread::spawn(move || work(&opts, &MonotonicClock::new()))
+        })
+        .collect();
+    let mut delivered = 0usize;
+    for w in workers {
+        delivered += w.join().unwrap().unwrap().cases;
+    }
+    let report = server.join().unwrap().unwrap();
+    assert_eq!(report.resumed, 4, "the store prefix must be adopted, not recomputed");
+    assert!(delivered >= 8, "only the uncovered 8 cases needed work");
+    assert_eq!(std::fs::read_to_string(&out).unwrap(), reference);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn restarted_coordinator_resumes_from_cache_without_workers() {
+    let dir = test_dir("resume_cache");
+
+    // a full cluster run leaves store + cache; "kill" the coordinator
+    // by truncating the store to nothing while the cache survives
+    let spec = SweepSpec::from_json(SPEC).unwrap();
+    let set = ScenarioSet::from_trace(&spec.load_trace().unwrap(), &spec).unwrap();
+    let out = dir.join("cluster.jsonl");
+    let cfg = RunConfig { shard_size: 4, ..RunConfig::persisted(out.clone()) };
+    run(&set, &cfg).unwrap();
+    let reference = std::fs::read_to_string(&out).unwrap();
+    std::fs::write(&out, "").unwrap();
+
+    // the restarted serve needs no workers at all: coverage is rebuilt
+    // from the content-keyed cache and the store re-extended from it
+    let addr = free_addr();
+    let report =
+        serve(&serve_opts(&out, &addr), Arc::new(MonotonicClock::new())).unwrap();
+    assert_eq!(report.resumed, 12);
+    assert_eq!(report.workers, 0);
+    assert_eq!(std::fs::read_to_string(&out).unwrap(), reference);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn worker_gives_up_after_bounded_reconnects() {
+    // nothing listens here: the worker must back off, retry its bounded
+    // number of attempts, and fail with a clear error — never spin
+    let addr = free_addr();
+    let mut opts = work_opts(&addr, "w-orphan");
+    opts.cfg.max_reconnects = 2;
+    let err = work(&opts, &MonotonicClock::new()).unwrap_err();
+    assert!(err.to_string().contains("gave up"), "{err}");
+}

@@ -11,8 +11,8 @@
 use std::path::{Path, PathBuf};
 
 use replica::sweep::{
-    merge, merge_shards, run, shard_path, EstimateCache, RunConfig, ScenarioSet, SweepSpec,
-    Workload,
+    merge, merge_partial, merge_shards, run, shard_path, EstimateCache, MissingRange,
+    RunConfig, ScenarioSet, SweepSpec, Workload,
 };
 
 fn test_dir(name: &str) -> PathBuf {
@@ -166,6 +166,76 @@ fn foreign_shards_are_refused_at_open_and_at_merge() {
     run(&set_a, &RunConfig { shard_size: 4, ..RunConfig::persisted(single.clone()) }).unwrap();
     let err = merge(&set_a, &[single], &out).unwrap_err();
     assert!(err.to_string().contains("not a shard store"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn partial_merge_writes_prefix_and_names_missing_ranges() {
+    let spec = spec(21);
+    let set = expand(&spec);
+    let dir = test_dir("partial");
+    let reference = reference_store(&set, &dir);
+    let out = dir.join("merged.jsonl");
+
+    // only shards 0 and 2 of a 4-way sharding ran: coverage has two
+    // holes (shard 1's slice and shard 3's slice)
+    run_shard(&set, &out, 0, 4);
+    run_shard(&set, &out, 2, 4);
+    let lens: Vec<usize> = (0..4).map(|k| set.shard(k, 4).unwrap().len()).collect();
+    let starts: Vec<usize> = (0..4).map(|k| lens[..k].iter().sum()).collect();
+
+    // the strict merge refuses and points at --allow-partial
+    let files = vec![shard_path(&out, 0, 4), shard_path(&out, 2, 4)];
+    let err = merge(&set, &files, &out).unwrap_err();
+    assert!(err.to_string().contains("--allow-partial"), "{err}");
+
+    let report = merge_partial(&set, &files, &out).unwrap();
+    assert_eq!(report.cases, set.len());
+    assert_eq!(report.merged, lens[0], "prefix = shard 0's contiguous slice");
+    assert_eq!(report.covered, lens[0] + lens[2]);
+    assert_eq!(
+        report.missing,
+        vec![
+            MissingRange {
+                lo: starts[1],
+                hi: starts[2],
+                first_key: set.cases[starts[1]].key
+            },
+            MissingRange {
+                lo: starts[3],
+                hi: set.len(),
+                first_key: set.cases[starts[3]].key
+            },
+        ]
+    );
+
+    // the written prefix is exactly the reference's first lines — a
+    // valid store the single-process engine resumes from
+    let written = std::fs::read_to_string(&out).unwrap();
+    assert_eq!(written.lines().count(), lens[0]);
+    assert!(reference.starts_with(&written), "partial store must be a reference prefix");
+    let resume = RunConfig { shard_size: 4, ..RunConfig::persisted(out.clone()) };
+    run(&set, &resume).unwrap();
+    assert_eq!(std::fs::read_to_string(&out).unwrap(), reference);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn partial_merge_of_complete_shards_equals_strict_merge() {
+    let spec = spec(22);
+    let set = expand(&spec);
+    let dir = test_dir("partial_complete");
+    let reference = reference_store(&set, &dir);
+    let out = dir.join("merged.jsonl");
+    for k in 0..2 {
+        run_shard(&set, &out, k, 2);
+    }
+    let files = vec![shard_path(&out, 0, 2), shard_path(&out, 1, 2)];
+    let report = merge_partial(&set, &files, &out).unwrap();
+    assert_eq!(report.merged, set.len());
+    assert_eq!(report.covered, set.len());
+    assert!(report.missing.is_empty());
+    assert_eq!(std::fs::read_to_string(&out).unwrap(), reference);
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -1,0 +1,7 @@
+//@path: src/cluster/server.rs
+use std::time::Instant;
+
+pub fn lease_deadline() -> Instant {
+    // cluster code must inject util::clock::Clock instead
+    Instant::now()
+}

@@ -1,0 +1,16 @@
+//@path: src/util/clock.rs
+use std::time::Instant;
+
+pub struct MonotonicClock {
+    origin: Instant,
+}
+
+impl MonotonicClock {
+    pub fn new() -> MonotonicClock {
+        MonotonicClock { origin: Instant::now() }
+    }
+
+    pub fn now_millis(&self) -> u64 {
+        self.origin.elapsed().as_millis() as u64
+    }
+}

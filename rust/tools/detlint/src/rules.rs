@@ -84,8 +84,12 @@ pub fn lint_source(path: &str, src: &str, cfg: &Config) -> Vec<Finding> {
     let in_src = path.starts_with("src/");
     let in_examples = path.starts_with("examples/");
     // D1-TIME: wall-clock reads are fine in metrics (that is what the
-    // module is for) and in benches (they *measure* wall-clock).
-    let time_exempt = path.starts_with("src/metrics/") || path.starts_with("benches/");
+    // module is for), in benches (they *measure* wall-clock), and in
+    // util/clock.rs — the one audited `Instant::now` site behind the
+    // injectable `Clock` trait that all cluster timing goes through.
+    let time_exempt = path.starts_with("src/metrics/")
+        || path.starts_with("benches/")
+        || path == "src/util/clock.rs";
     // D1-HASH: modules that serialize or reduce results, where
     // iteration order would reach bytes on disk.
     let hash_scoped = path.starts_with("src/sweep/")
@@ -340,6 +344,10 @@ mod tests {
         assert_eq!(ids("src/sim/job.rs", src), vec![(2, "D1-TIME")]);
         assert!(ids("src/metrics/timer.rs", src).is_empty());
         assert!(ids("benches/bench_x.rs", src).is_empty());
+        // the Clock abstraction is the one library-code call site...
+        assert!(ids("src/util/clock.rs", src).is_empty());
+        // ...and the exemption is exact-path, not a prefix
+        assert_eq!(ids("src/util/clock_extra.rs", src), vec![(2, "D1-TIME")]);
     }
 
     #[test]

@@ -1,0 +1,106 @@
+#!/usr/bin/env bash
+# Chaos test for the fault-tolerant sweep cluster: run a coordinator
+# plus W workers, SIGKILL a random worker mid-sweep, then SIGKILL and
+# restart the coordinator itself, and byte-compare the assembled store
+# against a single-process `replica sweep` run.
+#
+#   scripts/cluster_chaos.sh SPEC OUTDIR [WORKERS]
+#
+# The invariant under test is the cluster module's headline contract:
+# every case's RNG stream is a function of its content key alone, so no
+# amount of lease reassignment, duplicate recomputation, or coordinator
+# restart can change a single output byte. CI's cluster-chaos job runs
+# exactly this script and fails on the final cmp.
+set -euo pipefail
+
+if [ "$#" -lt 2 ]; then
+  echo "usage: $0 SPEC OUTDIR [WORKERS]" >&2
+  exit 2
+fi
+spec=$1
+outdir=$2
+workers=${3:-4}
+
+root="$(cd "$(dirname "$0")/.." && pwd)"
+bin="$root/rust/target/release/replica"
+if [ ! -x "$bin" ]; then
+  (cd "$root/rust" && cargo build --release)
+fi
+
+mkdir -p "$outdir"
+single="$outdir/single.jsonl"
+clustered="$outdir/clustered.jsonl"
+port=$((20000 + RANDOM % 20000))
+addr="127.0.0.1:$port"
+
+# Block until FILE holds at least N lines (the estimate cache grows by
+# one line per finished case, so this is a progress gate). Gives up
+# after ~120s so a wedged cluster fails loudly instead of hanging CI.
+wait_for_lines() {
+  local file=$1 n=$2 i lines
+  for ((i = 0; i < 600; i++)); do
+    lines=0
+    if [ -f "$file" ]; then
+      lines=$(wc -l <"$file")
+    fi
+    if [ "$lines" -ge "$n" ]; then
+      return 0
+    fi
+    sleep 0.2
+  done
+  echo "cluster_chaos: timed out waiting for $n lines in $file" >&2
+  return 1
+}
+
+echo "=== single-process reference run"
+"$bin" sweep --spec "$spec" --out "$single" >/dev/null
+
+echo "=== coordinator on $addr + $workers workers"
+"$bin" cluster-serve --spec "$spec" --out "$clustered" --listen "$addr" \
+  >"$outdir/serve-1.log" 2>&1 &
+serve_pid=$!
+
+worker_pids=()
+for ((w = 0; w < workers; w++)); do
+  "$bin" cluster-work --connect "$addr" --worker "chaos-w$w" \
+    >"$outdir/worker-$w.log" 2>&1 &
+  worker_pids+=("$!")
+done
+
+echo "=== SIGKILL a random worker mid-sweep"
+wait_for_lines "$clustered.cache.jsonl" 40
+victim_idx=$((RANDOM % workers))
+victim=${worker_pids[victim_idx]}
+echo "killing worker chaos-w$victim_idx (pid $victim)"
+kill -9 "$victim" 2>/dev/null || true
+
+echo "=== SIGKILL the coordinator mid-sweep, then restart it"
+wait_for_lines "$clustered.cache.jsonl" 120
+kill -9 "$serve_pid" 2>/dev/null || true
+wait "$serve_pid" 2>/dev/null || true
+sleep 1
+"$bin" cluster-serve --spec "$spec" --out "$clustered" --listen "$addr" \
+  >"$outdir/serve-2.log" 2>&1 &
+serve_pid=$!
+
+# replace the killed worker so capacity survives the chaos
+"$bin" cluster-work --connect "$addr" --worker "chaos-replacement" \
+  >"$outdir/worker-replacement.log" 2>&1 &
+worker_pids+=("$!")
+
+echo "=== waiting for the restarted coordinator to finish"
+if ! wait "$serve_pid"; then
+  echo "cluster_chaos: restarted coordinator failed" >&2
+  sed -n '1,50p' "$outdir/serve-2.log" >&2 || true
+  exit 1
+fi
+
+for pid in "${worker_pids[@]}"; do
+  # the SIGKILLed worker reports failure by design; survivors must not
+  wait "$pid" 2>/dev/null || true
+done
+
+echo "=== byte-compare clustered store vs single-process store"
+cmp "$single" "$clustered"
+echo "byte-identical: $(sha256sum "$single")"
+grep -h "resumed from disk" "$outdir/serve-2.log" || true
