@@ -450,6 +450,148 @@ fn sweep_from_spec(args: &mut Args, spec_path: &str) -> Result<()> {
     Ok(())
 }
 
+/// `replica opensys --spec FILE`: the open-system serving sweep. Every
+/// case of the spec's grid (which must carry an `arrivals` axis) is
+/// evaluated through the same engine path as `sweep --spec`
+/// ([`crate::sweep::evaluate_cases`]), then two tables are printed:
+/// per-cell latency percentiles + utilization + worker-seconds per job,
+/// and the headline **B\*-vs-load curve** — the batch count that wins
+/// each (job, ρ) cell under `--objective`. Output is byte-identical
+/// across `--pool-threads` settings (each replication's RNG stream is
+/// fixed by the case's content key).
+pub fn opensys(args: &mut Args) -> Result<()> {
+    let spec_path = args
+        .get("spec")
+        .ok_or_else(|| Error::Config("opensys needs --spec FILE".into()))?;
+    let spec = spec_with_overrides(args, &spec_path)?;
+    if spec.arrivals.is_none() {
+        return Err(Error::Config(format!(
+            "spec {spec_path} has no 'arrivals' axis; opensys sweeps the open \
+             system — add \"arrivals\": {{\"rho\": [...]}} to the spec, or use \
+             `replica sweep --spec` for the closed-system grid"
+        )));
+    }
+    let threads = args.get_usize("threads", 0)?;
+    let objective = objective_from(args)?;
+    let trace = spec.load_trace()?;
+    let set = crate::sweep::ScenarioSet::from_trace(&trace, &spec)?;
+    let mut cache = crate::sweep::EstimateCache::in_memory();
+    let outcomes = crate::sweep::evaluate_cases(&set.cases, &mut cache, threads)?;
+
+    struct OpenRow {
+        job: u64,
+        rho: f64,
+        n: usize,
+        b: usize,
+        policy: ReplicationPolicy,
+        est: crate::sweep::StoredEstimate,
+    }
+    let mut rows: Vec<OpenRow> = Vec::new();
+    let mut t = Table::new(
+        &format!("Open-system sweep — {spec_path} ({} cases)", set.len()),
+        vec![
+            "job", "rho", "B", "policy", "E[T]", "ci95", "p50", "p95", "p99", "util",
+            "cost/job",
+        ],
+    );
+    for (case, outcome) in set.cases.iter().zip(&outcomes) {
+        let rho = case.rho().unwrap_or(f64::NAN);
+        let cells = |tail: Vec<String>| {
+            let mut row = vec![
+                case.job_id.to_string(),
+                fnum(rho),
+                case.batches().to_string(),
+                case.scenario.replication.label(),
+            ];
+            row.extend(tail);
+            row
+        };
+        match outcome {
+            crate::sweep::CaseOutcome::Error(msg) => {
+                t.row(cells(vec![format!("error: {msg}"), String::new(), String::new(),
+                    String::new(), String::new(), String::new(), String::new()]));
+            }
+            crate::sweep::CaseOutcome::Ok(est) => {
+                t.row(cells(vec![
+                    fnum(est.mean),
+                    fnum(est.ci95),
+                    fnum(est.p50),
+                    fnum(est.p95),
+                    fnum(est.p99),
+                    fnum(est.utilization),
+                    cost_cell(est.cost),
+                ]));
+                rows.push(OpenRow {
+                    job: case.job_id,
+                    rho,
+                    n: case.scenario.workers,
+                    b: case.batches(),
+                    policy: case.scenario.replication,
+                    est: est.clone(),
+                });
+            }
+        }
+    }
+    t.print();
+
+    // B* per (job, ρ): the operating point `--objective` picks from
+    // each load level's spectrum — the redundancy-collapse curve.
+    let mut curve = Table::new(
+        "B* vs load",
+        vec!["job", "rho", "B*", "r", "policy", "E[T]", "util", "vs B=N"],
+    );
+    let mut cells: Vec<(u64, u64)> = rows.iter().map(|r| (r.job, r.rho.to_bits())).collect();
+    cells.sort_unstable();
+    cells.dedup();
+    for (job, rho_bits) in cells {
+        let group: Vec<&OpenRow> = rows
+            .iter()
+            .filter(|r| r.job == job && r.rho.to_bits() == rho_bits)
+            .collect();
+        let points: Vec<SweepPoint> = group
+            .iter()
+            .map(|r| SweepPoint {
+                batches: r.b,
+                mean: r.est.mean,
+                cov: r.est.cov,
+                cost: r.est.cost,
+            })
+            .collect();
+        let Some(best) = crate::planner::choose(&points, objective) else {
+            continue;
+        };
+        // `choose` returns the winning point; recover its row (first
+        // match — policy ties can only arise from duplicate cells)
+        let Some(win) = group.iter().find(|r| {
+            r.b == best.batches && r.est.mean.to_bits() == best.mean.to_bits()
+        }) else {
+            continue;
+        };
+        let baseline = group
+            .iter()
+            .filter(|r| r.b == r.n)
+            .map(|r| r.est.mean)
+            .fold(f64::NAN, f64::min);
+        let vs = if baseline.is_finite() && win.est.mean > 0.0 {
+            format!("{}x", fnum(baseline / win.est.mean))
+        } else {
+            "-".into()
+        };
+        curve.row(vec![
+            job.to_string(),
+            fnum(f64::from_bits(rho_bits)),
+            win.b.to_string(),
+            (win.n / win.b).to_string(),
+            win.policy.label(),
+            fnum(win.est.mean),
+            fnum(win.est.utilization),
+            vs,
+        ]);
+    }
+    curve.print();
+    Ok(())
+}
+
 /// `replica sweep-merge --spec FILE --out OUT --shards M`: merge the
 /// per-shard stores of a multi-process sweep into the canonical
 /// grid-ordered store, byte-identical to a single-process run. Shard
@@ -1039,6 +1181,39 @@ mod tests {
              --policy speculative --spec-t 1",
         ))
         .is_err());
+    }
+
+    #[test]
+    fn opensys_runs_a_tiny_spec_and_refuses_closed_specs() {
+        let dir = std::env::temp_dir().join("replica_cli_opensys");
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = dir.join("open.json");
+        std::fs::write(
+            &spec,
+            r#"{
+              "workload": {"generate": {"jobs": 1, "tasks_per_job": 4, "seed": 1}},
+              "batches": [1, 4],
+              "arrivals": {"rho": [0.3], "jobs": 20, "warmup": 5},
+              "backends": ["mc"],
+              "reps": 20,
+              "seed": 3
+            }"#,
+        )
+        .unwrap();
+        opensys(&mut args(&format!("opensys --spec {}", spec.display()))).unwrap();
+        // a closed-system spec is refused with a pointer at `sweep`
+        let closed = dir.join("closed.json");
+        std::fs::write(
+            &closed,
+            r#"{"workload": {"generate": {"jobs": 1, "tasks_per_job": 4, "seed": 1}}}"#,
+        )
+        .unwrap();
+        let err =
+            opensys(&mut args(&format!("opensys --spec {}", closed.display()))).unwrap_err();
+        assert!(err.to_string().contains("arrivals"), "{err}");
+        // --spec is required
+        assert!(opensys(&mut args("opensys")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

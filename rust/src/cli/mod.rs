@@ -11,6 +11,8 @@
 //! replica sweep      --spec sweep.json [--out results.jsonl] [--cache cache.jsonl]
 //!                    [--limit-shards K] [--shard K/M] [--cache-gc]
 //!                    [--cache-import DIR] [--objective mean|cov|tradeoff=0.5|cost=0.5]
+//! replica opensys    --spec open_system.json [--pool-threads 0] [--threads 0]
+//!                    [--objective mean|cov|tradeoff=0.5|cost=0.5]
 //! replica sweep-merge --spec sweep.json --out results.jsonl --shards M
 //!                    [--allow-partial]
 //! replica sweep-merge --report-only --out results.jsonl
@@ -62,6 +64,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         Some("plan") => commands::plan(&mut args),
         Some("simulate") => commands::simulate(&mut args),
         Some("sweep") => commands::sweep(&mut args),
+        Some("opensys") => commands::opensys(&mut args),
         Some("sweep-merge") => commands::sweep_merge(&mut args),
         Some("cluster-serve") => commands::cluster_serve(&mut args),
         Some("cluster-work") => commands::cluster_work(&mut args),
@@ -93,6 +96,11 @@ COMMANDS:
               (scenario grid -> JSONL store + estimate cache + gain report;
               rerunning the same command resumes a killed run); with
               --shard K/M: one process of an M-way distributed sweep
+  opensys     the open-system serving sweep: jobs arrive as a stream
+              (spec needs an \"arrivals\" axis of offered loads rho),
+              each case reports sojourn-time percentiles, worker
+              utilization, and worker-seconds per job, and the B*-vs-load
+              table shows where redundancy stops paying as load grows
   sweep-merge merge the per-shard stores of a --shard K/M sweep into the
               canonical store (byte-identical to a single-process run);
               with --allow-partial: publish the covered prefix of a

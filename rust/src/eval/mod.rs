@@ -30,6 +30,11 @@
 //!   for empirical/bimodal service times, overlapping policies, and
 //!   failure injection. The choice is visible in
 //!   [`Estimate::provenance`].
+//! * [`OpenSystem`] — the *open-system* mode: instead of one job on an
+//!   idle cluster, a Poisson job stream at offered load ρ queues per
+//!   worker ([`crate::sim::queue`]) and the estimate summarizes sojourn
+//!   times. Same determinism contract (per-replication substreams);
+//!   [`OpenEstimate`] adds worker utilization.
 //!
 //! Consumers (planner, experiments, CLI, benches) write against
 //! [`Estimator`] and never hand-roll seed salting or layout reuse.
@@ -37,10 +42,14 @@
 mod analytic;
 mod auto;
 mod montecarlo;
+mod opensys;
 
 pub use analytic::Analytic;
 pub use auto::Auto;
 pub use montecarlo::MonteCarlo;
+pub use opensys::{
+    OpenConfig, OpenEstimate, OpenSystem, DEFAULT_OPEN_JOBS, DEFAULT_OPEN_WARMUP,
+};
 
 use std::sync::Arc;
 

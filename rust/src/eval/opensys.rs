@@ -1,0 +1,431 @@
+//! Open-system backend: sojourn-time statistics under offered load.
+//!
+//! [`OpenSystem`] drives the [`crate::sim::queue`] cluster simulator
+//! behind the [`Estimator`] trait: each replication simulates a whole
+//! Poisson job stream at offered load ρ through the scenario's cluster
+//! and the estimate summarizes the *sojourn* time (arrival → last batch
+//! complete) pooled over every measured job of every replication.
+//!
+//! ## Offered load
+//!
+//! ρ is normalized to the no-replication capacity: at `B = N` each job
+//! carries `N·E[τ]` worker-seconds of useful work, so the cluster
+//! saturates at one job per `E[τ]` and the arrival rate is
+//! `λ = ρ / E[τ]`. Replication (`B < N`) *adds* load on top — the extra
+//! copies burn worker-seconds that kill-on-batch-complete only partially
+//! recovers — which is exactly why B* shifts toward `N` as ρ grows.
+//!
+//! ## Field semantics
+//!
+//! The returned [`Estimate`] reuses the closed-system shape with
+//! open-system meanings:
+//!
+//! * `mean`/`cov`/percentiles — pooled per-job sojourn times,
+//! * `ci95` — the half-width treating pooled jobs as independent (jobs
+//!   within one stream are positively correlated, so read it as a lower
+//!   bound on the true uncertainty),
+//! * `cost` — mean busy worker-seconds burned per *arriving* job
+//!   (warmup included; killed and crashed copies count up to the
+//!   instant they stop),
+//! * `failure_rate` — fraction of measured jobs lost to crash faults,
+//! * `replications`/`completed` — simulated streams / streams with at
+//!   least one completed job.
+//!
+//! [`OpenEstimate`] adds the quantities with no closed-system analogue:
+//! worker utilization and the resolved arrival rate λ.
+//!
+//! ## Determinism
+//!
+//! Replication `rep` draws from `Pcg64::new(substream(stream_seed,
+//! rep))` and writes into its own pre-assigned slot; the reduction runs
+//! serially in replication order. Estimates are bit-identical for a
+//! fixed seed regardless of thread count or pool width.
+
+use std::sync::Mutex;
+
+use crate::batching::Policy;
+use crate::eval::{substream, Estimate, Estimator, Provenance, Scenario};
+use crate::metrics::Summary;
+use crate::sim::pool::WorkerPool;
+use crate::sim::queue::{Arrivals, OpenRun, OpenSim};
+use crate::util::error::{Error, Result};
+use crate::util::rng::Pcg64;
+
+/// Default measured jobs per replication.
+pub const DEFAULT_OPEN_JOBS: usize = 200;
+/// Default warmup jobs (simulated, excluded from statistics).
+pub const DEFAULT_OPEN_WARMUP: usize = 50;
+
+/// Replications below this length are not worth a pool unit of their
+/// own: one open-system replication is a whole stream simulation,
+/// orders of magnitude heavier than a closed-system job draw.
+const MIN_UNIT_OPEN_REPS: usize = 8;
+
+/// Open-system operating point: the offered load and the measurement
+/// window, carried per sweep case and hashed into its content key.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OpenConfig {
+    /// Offered load ρ ∈ (0, ∞), normalized so ρ = 1 saturates the
+    /// cluster at B = N (no replication). ρ ≥ 1 — and, with replication
+    /// overhead, loads well below 1 — can be unstable: the simulator
+    /// still terminates (finitely many jobs) but sojourns grow with the
+    /// measurement window.
+    pub rho: f64,
+    /// Measured jobs per replication.
+    pub jobs: usize,
+    /// Leading jobs simulated but excluded from statistics.
+    pub warmup: usize,
+}
+
+impl OpenConfig {
+    /// Operating point at load `rho` with the default window.
+    pub fn at(rho: f64) -> OpenConfig {
+        OpenConfig { rho, jobs: DEFAULT_OPEN_JOBS, warmup: DEFAULT_OPEN_WARMUP }
+    }
+}
+
+/// Open-system Monte-Carlo estimator (see the module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct OpenSystem {
+    /// Independent job-stream replications.
+    pub reps: usize,
+    /// Base seed; batch entry points derive per-item streams via
+    /// [`substream`].
+    pub seed: u64,
+    /// Fan-out cap: `0` defers to the pool width, `1` forces inline
+    /// serial execution.
+    pub threads: usize,
+    /// Offered load and measurement window.
+    pub open: OpenConfig,
+}
+
+/// An [`Estimate`] plus the open-system-only quantities.
+#[derive(Clone, Debug)]
+pub struct OpenEstimate {
+    /// Sojourn-time statistics (field semantics in the module docs).
+    pub estimate: Estimate,
+    /// Mean worker utilization: busy worker-seconds over `N · horizon`,
+    /// averaged across replications. Rises above ρ exactly when
+    /// replication overhead is not recovered by kills.
+    pub utilization: f64,
+    /// Resolved Poisson arrival rate `λ = ρ / E[τ]`.
+    pub lambda: f64,
+}
+
+impl OpenSystem {
+    /// Estimator at load `rho` with default window, seed, and pool-width
+    /// fan-out.
+    pub fn at(rho: f64, reps: usize, seed: u64) -> OpenSystem {
+        OpenSystem { reps, seed, threads: 0, open: OpenConfig::at(rho) }
+    }
+
+    /// Evaluate one scenario, returning utilization alongside the
+    /// estimate.
+    pub fn evaluate_open(&self, scenario: &Scenario) -> Result<OpenEstimate> {
+        self.evaluate_open_seeded(scenario, self.seed)
+    }
+
+    /// Evaluate on an explicit stream seed (the sweep runner passes the
+    /// case's content-derived `stream_seed` so results are independent
+    /// of grid position).
+    pub fn evaluate_open_seeded(
+        &self,
+        scenario: &Scenario,
+        stream_seed: u64,
+    ) -> Result<OpenEstimate> {
+        if self.reps == 0 {
+            return Err(Error::Config("open-system estimator needs reps ≥ 1".into()));
+        }
+        let batches = match scenario.policy {
+            Policy::BalancedNonOverlapping { batches } => batches,
+            _ => {
+                return Err(Error::Config(format!(
+                    "open-system evaluation supports only the balanced \
+                     non-overlapping policy, not {}",
+                    scenario.policy.name()
+                )))
+            }
+        };
+        if !self.open.rho.is_finite() || self.open.rho <= 0.0 {
+            return Err(Error::Config(format!(
+                "offered load rho must be finite and positive, got {}",
+                self.open.rho
+            )));
+        }
+        let mean_tau = scenario.tau.mean();
+        if !mean_tau.is_finite() || mean_tau <= 0.0 {
+            return Err(Error::Config(format!(
+                "offered load needs a finite positive mean service time \
+                 (E[tau] = {mean_tau} for {})",
+                scenario.tau.label()
+            )));
+        }
+        let lambda = self.open.rho / mean_tau;
+        let sampler = scenario.tau.sampler();
+        let spec = OpenSim {
+            workers: scenario.workers,
+            batches,
+            sampler: &sampler,
+            replication: scenario.replication,
+            failures: scenario.failures,
+            arrivals: Arrivals::Poisson { rate: lambda },
+            warmup: self.open.warmup,
+            jobs: self.open.jobs,
+        };
+        // Surface configuration errors before any pool unit queues.
+        spec.check()?;
+
+        let mut slots: Vec<Option<OpenRun>> = vec![None; self.reps];
+        let first_error: Mutex<Option<(usize, Error)>> = Mutex::new(None);
+        let threads = if self.threads == 0 {
+            WorkerPool::global().threads()
+        } else {
+            self.threads
+        };
+        if threads <= 1 {
+            for (rep, slot) in slots.iter_mut().enumerate() {
+                run_rep(&spec, stream_seed, rep, slot, &first_error);
+            }
+        } else {
+            let chunk_len = self.reps.div_ceil(unit_count(threads, self.reps));
+            let errors = &first_error;
+            let spec_ref = &spec;
+            WorkerPool::global().scope(|scope| {
+                let mut lo = 0usize;
+                for chunk in slots.chunks_mut(chunk_len) {
+                    let len = chunk.len();
+                    scope.submit(move || {
+                        for (k, slot) in chunk.iter_mut().enumerate() {
+                            run_rep(spec_ref, stream_seed, lo + k, slot, errors);
+                        }
+                    });
+                    lo += len;
+                }
+            });
+        }
+        let first_error =
+            first_error.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if let Some((_, error)) = first_error {
+            return Err(error);
+        }
+        Ok(self.reduce(&slots, scenario.workers, lambda, stream_seed, threads))
+    }
+
+    /// Serial reduction in replication order — float accumulation is
+    /// independent of how units were scheduled above.
+    fn reduce(
+        &self,
+        runs: &[Option<OpenRun>],
+        workers: usize,
+        lambda: f64,
+        seed: u64,
+        threads: usize,
+    ) -> OpenEstimate {
+        let mut summary = Summary::new();
+        let mut busy = 0.0_f64;
+        let mut util = 0.0_f64;
+        let mut failed = 0usize;
+        let mut live_reps = 0usize;
+        for run in runs.iter().flatten() {
+            for &s in &run.sojourns {
+                summary.record(s);
+            }
+            failed += run.failed;
+            busy += run.busy;
+            if run.horizon > 0.0 {
+                util += run.busy / (workers as f64 * run.horizon);
+            }
+            if !run.sojourns.is_empty() {
+                live_reps += 1;
+            }
+        }
+        let measured = self.reps * self.open.jobs;
+        let arrivals = self.reps * (self.open.jobs + self.open.warmup);
+        let utilization = util / self.reps as f64;
+        let provenance = Provenance::MonteCarlo { reps: self.reps, seed, threads };
+        let estimate = if summary.count() == 0 {
+            // Every measured job failed: no sojourn to summarize.
+            Estimate {
+                mean: f64::NAN,
+                ci95: f64::NAN,
+                cov: f64::NAN,
+                p50: f64::NAN,
+                p95: f64::NAN,
+                p99: f64::NAN,
+                cost: f64::NAN,
+                failure_rate: 1.0,
+                replications: self.reps,
+                completed: 0,
+                provenance,
+            }
+        } else {
+            Estimate {
+                mean: summary.mean(),
+                ci95: summary.ci95(),
+                cov: summary.cov(),
+                p50: summary.quantile(0.50),
+                p95: summary.quantile(0.95),
+                p99: summary.quantile(0.99),
+                cost: busy / arrivals as f64,
+                failure_rate: failed as f64 / measured as f64,
+                replications: self.reps,
+                completed: live_reps,
+                provenance,
+            }
+        };
+        OpenEstimate { estimate, utilization, lambda }
+    }
+}
+
+impl Estimator for OpenSystem {
+    fn evaluate(&self, scenario: &Scenario) -> Result<Estimate> {
+        Ok(self.evaluate_open(scenario)?.estimate)
+    }
+
+    fn evaluate_at(&self, scenario: &Scenario, index: u64) -> Result<Estimate> {
+        let seed = substream(self.seed, index);
+        Ok(self.evaluate_open_seeded(scenario, seed)?.estimate)
+    }
+}
+
+/// Units to carve `reps` into: enough to saturate `threads` workers,
+/// but never units smaller than [`MIN_UNIT_OPEN_REPS`] replications.
+fn unit_count(threads: usize, reps: usize) -> usize {
+    let max_by_reps = reps.div_ceil(MIN_UNIT_OPEN_REPS).max(1);
+    (threads * 2).min(max_by_reps).max(1)
+}
+
+/// Run one replication into its pre-assigned slot; on error record the
+/// lowest-replication failure so the reported error is deterministic.
+fn run_rep(
+    spec: &OpenSim<'_>,
+    stream_seed: u64,
+    rep: usize,
+    slot: &mut Option<OpenRun>,
+    errors: &Mutex<Option<(usize, Error)>>,
+) {
+    {
+        let guard = errors.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if guard.is_some() {
+            return; // the batch already failed; stop early
+        }
+    }
+    let mut rng = Pcg64::new(substream(stream_seed, rep as u64));
+    match spec.run(&mut rng) {
+        Ok(run) => *slot = Some(run),
+        Err(error) => {
+            let mut guard =
+                errors.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            match guard.as_ref() {
+                Some((prev, _)) if *prev <= rep => {}
+                _ => *guard = Some((rep, error)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::ServiceDist;
+    use crate::sim::job::FailureModel;
+
+    fn scenario(workers: usize, batches: usize) -> Scenario {
+        Scenario::balanced(workers, batches, ServiceDist::exp(1.0))
+    }
+
+    fn small(rho: f64) -> OpenSystem {
+        OpenSystem {
+            reps: 40,
+            seed: 42,
+            threads: 0,
+            open: OpenConfig { rho, jobs: 60, warmup: 15 },
+        }
+    }
+
+    #[test]
+    fn produces_finite_statistics() {
+        let est = small(0.3);
+        let open = est.evaluate_open(&scenario(4, 2)).unwrap();
+        let e = &open.estimate;
+        assert!(e.mean.is_finite() && e.mean > 0.0);
+        assert!(e.p50 <= e.p95 && e.p95 <= e.p99);
+        assert!(e.cost.is_finite() && e.cost > 0.0);
+        assert_eq!(e.failure_rate, 0.0);
+        assert_eq!(e.replications, 40);
+        assert_eq!(e.completed, 40);
+        assert!(open.utilization > 0.0 && open.utilization < 1.0);
+        // Exponential service: kill-on-complete recovers replication
+        // overhead in expectation, so utilization stays near rho.
+        assert!((open.lambda - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn estimator_trait_matches_direct_evaluation() {
+        let est = small(0.2);
+        let s = scenario(4, 4);
+        let via_trait = est.evaluate(&s).unwrap();
+        let direct = est.evaluate_open(&s).unwrap().estimate;
+        assert_eq!(via_trait.mean.to_bits(), direct.mean.to_bits());
+        assert_eq!(via_trait.p99.to_bits(), direct.p99.to_bits());
+    }
+
+    #[test]
+    fn bit_identical_across_thread_caps() {
+        let s = scenario(4, 2);
+        let mut base: Option<Estimate> = None;
+        for threads in [1usize, 2, 4, 8] {
+            let est = OpenSystem { threads, ..small(0.5) };
+            let e = est.evaluate(&s).unwrap();
+            if let Some(b) = &base {
+                assert_eq!(b.mean.to_bits(), e.mean.to_bits(), "threads={threads}");
+                assert_eq!(b.ci95.to_bits(), e.ci95.to_bits(), "threads={threads}");
+                assert_eq!(b.p99.to_bits(), e.p99.to_bits(), "threads={threads}");
+                assert_eq!(b.cost.to_bits(), e.cost.to_bits(), "threads={threads}");
+            } else {
+                base = Some(e);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_configurations() {
+        let est = small(0.0);
+        assert!(est.evaluate(&scenario(4, 2)).is_err()); // rho = 0
+        let est = small(f64::NAN);
+        assert!(est.evaluate(&scenario(4, 2)).is_err());
+        let est = OpenSystem { reps: 0, ..small(0.5) };
+        assert!(est.evaluate(&scenario(4, 2)).is_err());
+        // Infinite-mean service has no finite arrival rate.
+        let heavy = Scenario::balanced(4, 2, ServiceDist::pareto(1.0, 0.9));
+        assert!(small(0.5).evaluate(&heavy).is_err());
+        // Timed policy + crash faults is rejected, as closed-system.
+        let s = scenario(4, 2)
+            .with_failures(FailureModel::Crash { p: 0.1 })
+            .with_replication(crate::sim::ReplicationPolicy::SpeculativeAt { t: 1.0 });
+        assert!(small(0.5).evaluate(&s).is_err());
+    }
+
+    #[test]
+    fn crash_faults_surface_in_failure_rate() {
+        let mut est = small(0.2);
+        est.reps = 30;
+        let s = scenario(4, 2).with_failures(FailureModel::Crash { p: 0.3 });
+        let e = est.evaluate(&s).unwrap();
+        assert!(e.failure_rate > 0.0 && e.failure_rate < 1.0);
+        let all = scenario(4, 2).with_failures(FailureModel::Crash { p: 1.0 });
+        let e = est.evaluate(&all).unwrap();
+        assert!(e.all_failed());
+        assert_eq!(e.failure_rate, 1.0);
+    }
+
+    #[test]
+    fn load_hurts_sojourn_time() {
+        // The same cluster at 4x the load queues more: mean sojourn
+        // must rise (deterministic seeds; comfortably separated loads).
+        let s = scenario(4, 4);
+        let light = small(0.1).evaluate(&s).unwrap();
+        let heavy = small(0.8).evaluate(&s).unwrap();
+        assert!(heavy.mean > light.mean);
+    }
+}

@@ -36,10 +36,16 @@
 //!   classification of Theorems 5–10. The [`eval::Analytic`] backend is
 //!   the supported way in.
 //! * [`sim`] — the job-level discrete-event simulator that
-//!   [`eval::MonteCarlo`] replicates over (with failure injection), and
+//!   [`eval::MonteCarlo`] replicates over (with failure injection);
 //!   [`sim::policy`] — the replication *timing* family (up-front,
 //!   speculative-at-`t`, relaunch-at-`t`) with a completion-time and
-//!   worker-seconds cost semantics per member.
+//!   worker-seconds cost semantics per member; and [`sim::queue`] —
+//!   the open-system serving kernel: Poisson/trace arrivals,
+//!   per-worker FIFO queues, batch-replicated placement, and
+//!   kill-on-batch-complete, evaluated through [`eval::OpenSystem`]
+//!   into sojourn-time percentiles, utilization, and worker-seconds
+//!   per job vs offered load ρ (the B*-vs-load curve; `replica
+//!   opensys`).
 //! * [`planner`] — the redundancy planner: given N and a service-time
 //!   model (analytic or fitted from traces), chooses the batch count B
 //!   minimizing mean compute time, CoV, a weighted trade-off, or a
@@ -64,7 +70,9 @@
 //!   grid with `--shard K/M` into per-shard stores that
 //!   `replica sweep-merge` reassembles byte-identically to a
 //!   single-process run, and `--cache-import DIR` warms a new run from
-//!   earlier caches without touching them.
+//!   earlier caches without touching them. An optional `arrivals` axis
+//!   of offered loads routes cases through [`eval::OpenSystem`] for
+//!   open-system sweeps.
 //! * [`cluster`] — the fault-tolerant multi-process sweep runtime:
 //!   `replica cluster-serve` leases grid slices to `replica
 //!   cluster-work` processes over a socket protocol with heartbeats,
@@ -73,6 +81,11 @@
 //!   sweep under worker kills and coordinator restarts.
 //! * [`experiments`] — one module per paper figure/table; the bench
 //!   harness and CLI call into these.
+//!
+//! `docs/ARCHITECTURE.md` (repo root) is the paper-to-code map: which
+//! section/theorem/figure each module reproduces, the end-to-end data
+//! flow from spec to published store, the determinism contract, and
+//! the `detlint` rules that enforce it at the source level.
 //!
 //! ## Quickstart
 //!

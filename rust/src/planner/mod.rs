@@ -36,6 +36,15 @@
 //! [`plan_from_records`] — no analytic refit in the decision loop
 //! (the old refit-and-plan path survives as
 //! [`plan_from_samples_refit`]).
+//!
+//! Every closed-system objective above scores a job against **idle**
+//! workers. In the open-system regime ([`crate::sim::queue`],
+//! [`crate::eval::OpenSystem`]) jobs arrive as a stream and replication
+//! adds offered load, so the same [`choose`] call over per-load
+//! [`SweepPoint`] spectra yields a *load-dependent* B\*: high
+//! redundancy wins while the system is lightly loaded and collapses
+//! toward B = N as utilization climbs (`replica opensys` prints this
+//! B\*-vs-ρ curve).
 
 use std::sync::Arc;
 
@@ -602,6 +611,44 @@ mod tests {
         let plan = p.plan(Objective::MeanCompletion);
         assert_eq!(plan.regime, Some(Regime::Middle));
         assert!(plan.batches > 1 && plan.batches < 100, "B={}", plan.batches);
+    }
+
+    #[test]
+    fn choose_flips_b_star_across_open_system_loads() {
+        // `choose` is load-agnostic: B* vs ρ comes from handing it one
+        // spectrum per load level, as the end-to-end open-system sweep
+        // does. Feed it the simulated spectra of sexp(0.1, 1), N = 4.
+        use crate::eval::{OpenConfig, OpenSystem};
+        let tau = Arc::new(ServiceDist::shifted_exp(0.1, 1.0));
+        let spectrum_at = |rho: f64| -> Vec<SweepPoint> {
+            [1usize, 4]
+                .iter()
+                .map(|&b| {
+                    let scenario = Scenario::balanced(4, b, Arc::clone(&tau));
+                    let os = OpenSystem {
+                        reps: 96,
+                        seed: 17,
+                        threads: 1,
+                        open: OpenConfig { rho, jobs: 80, warmup: 20 },
+                    };
+                    let oe = os.evaluate_open(&scenario).unwrap();
+                    SweepPoint {
+                        batches: b,
+                        mean: oe.estimate.mean,
+                        cov: oe.estimate.cov,
+                        cost: oe.estimate.cost,
+                    }
+                })
+                .collect()
+        };
+        // near-idle: full diversity (B = 1) wins the mean, exactly as
+        // in the closed system (4·(δ + 1/(4μ)) < δ + H₄/μ)
+        let light = choose(&spectrum_at(0.05), Objective::MeanCompletion).unwrap();
+        assert_eq!(light.batches, 1, "light load must favor replication");
+        // heavy load: B = 1's 4x worker-seconds overload the queue and
+        // B* collapses to full parallelism
+        let heavy = choose(&spectrum_at(0.9), Objective::MeanCompletion).unwrap();
+        assert_eq!(heavy.batches, 4, "heavy load must favor parallelism");
     }
 
     #[test]

@@ -1,9 +1,17 @@
 //! A minimal discrete-event engine: a virtual clock plus a time-ordered
-//! event queue. The job simulator and the coordinator's fault-injection
-//! tests drive it.
+//! event queue. The job simulator, the open-system cluster simulator
+//! ([`crate::sim::queue`]), and the coordinator's fault-injection tests
+//! drive it.
+//!
+//! Ordering is total even for pathological inputs: events compare by
+//! [`f64::total_cmp`], and [`EventQueue::schedule`] rejects non-finite
+//! times outright, so a NaN produced upstream surfaces as an error
+//! instead of silently corrupting the heap invariant.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+
+use crate::util::error::{Error, Result};
 
 /// An event scheduled at a virtual time.
 #[derive(Clone, Debug, PartialEq)]
@@ -19,11 +27,9 @@ impl<P> Eq for Event<P> where P: PartialEq {}
 impl<P: PartialEq> Ord for Event<P> {
     fn cmp(&self, other: &Self) -> Ordering {
         // Min-heap on (time, seq): BinaryHeap is a max-heap, so reverse.
-        other
-            .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| other.seq.cmp(&self.seq))
+        // total_cmp keeps the order total even if a NaN slips through
+        // (schedule rejects them, but Ord must not depend on that).
+        other.time.total_cmp(&self.time).then_with(|| other.seq.cmp(&self.seq))
     }
 }
 
@@ -65,16 +71,27 @@ impl<P: PartialEq> EventQueue<P> {
         self.heap.len()
     }
 
-    /// Schedule `payload` at absolute time `time` (must be ≥ now).
-    pub fn schedule(&mut self, time: f64, payload: P) {
+    /// Schedule `payload` at absolute time `time` (must be finite and ≥ now).
+    ///
+    /// A non-finite time (NaN or ±∞) is rejected with an error rather
+    /// than pushed: a NaN key would otherwise poison every subsequent
+    /// heap comparison it participates in.
+    pub fn schedule(&mut self, time: f64, payload: P) -> Result<()> {
+        if !time.is_finite() {
+            return Err(Error::Internal(format!(
+                "cannot schedule an event at non-finite time {time}"
+            )));
+        }
         debug_assert!(time >= self.now, "cannot schedule in the past");
         self.heap.push(Event { time, seq: self.seq, payload });
         self.seq += 1;
+        Ok(())
     }
 
-    /// Schedule after a delay relative to now.
-    pub fn schedule_in(&mut self, delay: f64, payload: P) {
-        self.schedule(self.now + delay, payload);
+    /// Schedule after a delay relative to now (the resulting absolute
+    /// time must be finite).
+    pub fn schedule_in(&mut self, delay: f64, payload: P) -> Result<()> {
+        self.schedule(self.now + delay, payload)
     }
 
     /// Pop the earliest event, advancing the clock.
@@ -92,9 +109,9 @@ mod tests {
     #[test]
     fn orders_by_time() {
         let mut q = EventQueue::new();
-        q.schedule(3.0, "c");
-        q.schedule(1.0, "a");
-        q.schedule(2.0, "b");
+        q.schedule(3.0, "c").unwrap();
+        q.schedule(1.0, "a").unwrap();
+        q.schedule(2.0, "b").unwrap();
         assert_eq!(q.pop().unwrap().payload, "a");
         assert_eq!(q.now(), 1.0);
         assert_eq!(q.pop().unwrap().payload, "b");
@@ -106,9 +123,9 @@ mod tests {
     #[test]
     fn fifo_among_ties() {
         let mut q = EventQueue::new();
-        q.schedule(1.0, 1);
-        q.schedule(1.0, 2);
-        q.schedule(1.0, 3);
+        q.schedule(1.0, 1).unwrap();
+        q.schedule(1.0, 2).unwrap();
+        q.schedule(1.0, 3).unwrap();
         assert_eq!(q.pop().unwrap().payload, 1);
         assert_eq!(q.pop().unwrap().payload, 2);
         assert_eq!(q.pop().unwrap().payload, 3);
@@ -117,9 +134,9 @@ mod tests {
     #[test]
     fn relative_scheduling() {
         let mut q = EventQueue::new();
-        q.schedule(5.0, "later");
+        q.schedule(5.0, "later").unwrap();
         q.pop();
-        q.schedule_in(2.0, "relative");
+        q.schedule_in(2.0, "relative").unwrap();
         let e = q.pop().unwrap();
         assert_eq!(e.time, 7.0);
     }
@@ -128,7 +145,37 @@ mod tests {
     fn len_and_empty() {
         let mut q: EventQueue<u8> = EventQueue::new();
         assert!(q.is_empty());
-        q.schedule(1.0, 0);
+        q.schedule(1.0, 0).unwrap();
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn rejects_non_finite_times() {
+        // Regression: a NaN event time used to be pushed with
+        // partial_cmp(..).unwrap_or(Equal), silently corrupting heap
+        // order. schedule now refuses it and the queue stays intact.
+        let mut q = EventQueue::new();
+        q.schedule(1.0, "a").unwrap();
+        assert!(q.schedule(f64::NAN, "nan").is_err());
+        assert!(q.schedule(f64::INFINITY, "inf").is_err());
+        assert!(q.schedule(f64::NEG_INFINITY, "ninf").is_err());
+        assert!(q.schedule_in(f64::NAN, "rel-nan").is_err());
+        // The rejected events were not enqueued and ordering still holds.
+        q.schedule(0.5, "first").unwrap();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop().unwrap().payload, "first");
+        assert_eq!(q.pop().unwrap().payload, "a");
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn event_ord_is_total_with_nan() {
+        // Even if a NaN Event is constructed directly (bypassing
+        // schedule), Ord stays a total order: comparisons are
+        // antisymmetric rather than collapsing to Equal.
+        let nan = Event { time: f64::NAN, seq: 0, payload: () };
+        let one = Event { time: 1.0, seq: 1, payload: () };
+        assert_eq!(nan.cmp(&one).reverse(), one.cmp(&nan));
+        assert_eq!(nan.cmp(&nan), Ordering::Equal);
     }
 }

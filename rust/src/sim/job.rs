@@ -392,12 +392,14 @@ impl SimView<'_> {
             if failed {
                 match self.failure {
                     FailureModel::CrashRestart { delay, .. } => {
-                        q.schedule(delay, Ev::Restart(w));
+                        if q.schedule(delay, Ev::Restart(w)).is_err() {
+                            return JobOutcome::Failed; // non-finite restart delay
+                        }
                     }
                     _ => continue, // permanently dead; not counted alive
                 }
-            } else {
-                q.schedule(self.draw_service(w, rng), Ev::Finish(w));
+            } else if q.schedule(self.draw_service(w, rng), Ev::Finish(w)).is_err() {
+                return JobOutcome::Failed; // non-finite service draw
             }
             for &t in tasks {
                 alive_replicas[t] += 1;
@@ -423,7 +425,9 @@ impl SimView<'_> {
                 }
                 Ev::Restart(w) => {
                     let s = self.draw_service(w, rng);
-                    q.schedule_in(s, Ev::Finish(w));
+                    if q.schedule_in(s, Ev::Finish(w)).is_err() {
+                        return JobOutcome::Failed; // non-finite service draw
+                    }
                 }
             }
         }

@@ -19,6 +19,10 @@
 //!   ([`policy::ReplicationPolicy`]): up-front (the paper's),
 //!   speculative-at-`t`, and relaunch-at-`t`, each with a
 //!   worker-seconds cost semantics alongside completion time.
+//! * [`queue`] — the *open-system* cluster simulator: a stream of jobs
+//!   (Poisson or trace-driven) queueing FIFO per worker, with
+//!   batch-replicated placement, kill-on-batch-complete cancellation,
+//!   and crash faults. Driven by [`crate::eval::OpenSystem`].
 //!
 //! [`Layout`]: crate::batching::Layout
 
@@ -27,10 +31,12 @@ pub mod job;
 pub mod montecarlo;
 pub mod policy;
 pub mod pool;
+pub mod queue;
 
 pub use event::{Event, EventQueue};
 pub use job::{FailureModel, JobOutcome, JobSimulator, SimScratch};
 pub use policy::ReplicationPolicy;
+pub use queue::{Arrivals, OpenRun, OpenSim};
 #[allow(deprecated)]
 pub use montecarlo::{simulate_policy, McEstimate};
 pub use pool::WorkerPool;

@@ -1,0 +1,716 @@
+//! Open-system cluster simulator: a *stream* of jobs arriving at a
+//! finite cluster, queueing per worker, and competing for capacity.
+//!
+//! Everything else in `sim/` is closed-system — one job, workers always
+//! idle at t=0, exactly the regime of the paper's Theorems 1–3. This
+//! module models the serving regime of Aktaş & Soljanin
+//! (arXiv 1906.05345): jobs arrive over time (Poisson or trace-driven),
+//! every batch is replicated onto its `r = N/B` workers per the
+//! [`ReplicationPolicy`], copies wait in per-worker FIFO queues, and
+//! redundancy now *adds load* — the work burned by extra copies
+//! lengthens everyone else's queues, so the optimal batch count B
+//! shifts with the offered load ρ.
+//!
+//! ## Model
+//!
+//! * `N` workers, jobs of `N` tasks split into `B` balanced batches of
+//!   `N/B` tasks (the balanced non-overlapping policy; batch `b` owns
+//!   workers `b·r .. (b+1)·r`, `r = N/B`).
+//! * A copy of batch `b` on any of its workers serves the whole batch:
+//!   service time `(N/B)·τ` with `τ` drawn fresh per copy (the same
+//!   size-dependent model as the closed-system simulator).
+//! * **Kill-on-batch-complete:** the instant one copy of a batch
+//!   finishes, its sibling copies are cancelled — running copies are
+//!   killed (freeing their workers immediately), queued copies are
+//!   dropped lazily when they reach the head of a queue.
+//! * **Replication timing** ([`ReplicationPolicy`]): up-front enqueues
+//!   all `r` copies at arrival; `speculative(t)` enqueues the primary at
+//!   arrival and the `r−1` backups at `arrival+t` if the batch is still
+//!   incomplete; `relaunch(t)` cancels attempt `k` and enqueues attempt
+//!   `k+1` on the batch's next worker at `arrival+(k+1)·t` (the last
+//!   attempt runs to completion). Deadlines are measured from *job
+//!   arrival* — the natural open-system generalization of the
+//!   closed-system policies, where arrival and service start coincide.
+//! * **Crash faults** ([`FailureModel`]): a copy crashes with
+//!   probability `p`, consuming its full service time but reporting
+//!   nothing. Under `Crash` a batch whose `r` copies all crash can never
+//!   finish — the job is counted failed and its surviving copies are
+//!   cancelled. Under `CrashRestart` the copy re-enqueues on the same
+//!   worker after `delay`. As in the closed system, failure injection
+//!   combines only with the up-front policy.
+//!
+//! The simulator reports per-job sojourn times (arrival → last batch
+//! complete), job failures, total busy worker-seconds, and the horizon,
+//! from which callers derive utilization `busy/(N·horizon)`.
+//!
+//! ## Determinism
+//!
+//! One replication = one serial event loop over the total-ordered
+//! [`EventQueue`] (time, then FIFO sequence), drawing from a single
+//! caller-provided [`Pcg64`] in event order. The kernel never seeds an
+//! RNG itself; [`crate::eval::OpenSystem`] derives one substream per
+//! replication, which is what keeps estimates bit-identical across pool
+//! widths.
+
+use std::collections::VecDeque;
+
+use crate::dist::Sampler;
+use crate::sim::event::EventQueue;
+use crate::sim::job::FailureModel;
+use crate::sim::policy::ReplicationPolicy;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Pcg64;
+
+/// Job arrival process for the open system.
+#[derive(Clone, Copy, Debug)]
+pub enum Arrivals<'a> {
+    /// Poisson arrivals: iid exponential interarrival times at `rate`
+    /// jobs per unit time.
+    Poisson { rate: f64 },
+    /// Trace-driven arrivals: explicit non-decreasing arrival times,
+    /// one per job (must cover every simulated job, warmup included).
+    Trace(&'a [f64]),
+}
+
+/// One open-system replication: the job stream to simulate.
+///
+/// `warmup` jobs are simulated but excluded from the statistics (the
+/// queue starts empty, so early jobs see an unrepresentatively idle
+/// cluster); the following `jobs` jobs are measured.
+#[derive(Clone, Copy, Debug)]
+pub struct OpenSim<'a> {
+    /// Worker budget N (= task count, the paper's model).
+    pub workers: usize,
+    /// Batch count B (must divide N); `r = N/B` copies per batch.
+    pub batches: usize,
+    /// Compiled service-time sampler for τ.
+    pub sampler: &'a Sampler,
+    /// When each batch's replicas launch.
+    pub replication: ReplicationPolicy,
+    /// Per-copy crash model.
+    pub failures: FailureModel,
+    /// Job arrival process.
+    pub arrivals: Arrivals<'a>,
+    /// Leading jobs excluded from statistics.
+    pub warmup: usize,
+    /// Measured jobs (after warmup).
+    pub jobs: usize,
+}
+
+/// Result of one open-system replication.
+#[derive(Clone, Debug)]
+pub struct OpenRun {
+    /// Sojourn times of measured jobs that completed, in arrival order
+    /// (independent of completion order, for deterministic reduction).
+    pub sojourns: Vec<f64>,
+    /// Measured jobs that failed (a batch lost all its copies to
+    /// crashes).
+    pub failed: usize,
+    /// Total busy worker-seconds over the whole run (warmup included),
+    /// counting killed and crashed copies up to the instant they stop.
+    pub busy: f64,
+    /// Virtual time at which the last job resolved.
+    pub horizon: f64,
+}
+
+/// A queued copy: batch `batch` of job `job`, launch generation `gen`
+/// (the relaunch policy bumps the live generation to cancel a queued
+/// attempt without scanning the queue).
+#[derive(Clone, Copy, Debug)]
+struct QueuedCopy {
+    job: u32,
+    batch: u32,
+    gen: u32,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct RunningCopy {
+    job: u32,
+    batch: u32,
+    start: f64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Ev {
+    /// Next job arrives (the job index is the arrival counter).
+    Arrive,
+    /// A running copy on `worker` finishes service; stale once the
+    /// worker's epoch moves past `epoch` (the copy was killed).
+    Finish { worker: u32, epoch: u64, crashed: bool },
+    /// Speculative backups for `job` launch if batches are incomplete.
+    Backup { job: u32 },
+    /// Relaunch deadline: cancel attempt `attempt − 1` of each
+    /// incomplete batch of `job`, launch attempt `attempt`.
+    Relaunch { job: u32, attempt: u32 },
+    /// Crash-restart: re-enqueue batch `batch` of `job` on `worker`.
+    Requeue { worker: u32, job: u32, batch: u32 },
+}
+
+struct Sim<'a, 'r> {
+    spec: &'a OpenSim<'a>,
+    rng: &'r mut Pcg64,
+    q: EventQueue<Ev>,
+    /// N/B as f64: service = copies · τ (size-dependent batches).
+    batch_size: f64,
+    /// r = N/B copies (= workers) per batch.
+    copies: usize,
+    total_jobs: usize,
+    next_arrival: usize,
+    resolved: usize,
+
+    // Per-worker state.
+    queues: Vec<VecDeque<QueuedCopy>>,
+    running: Vec<Option<RunningCopy>>,
+    /// Bumped whenever a worker's running copy changes; invalidates
+    /// in-flight Finish events of killed copies.
+    epochs: Vec<u64>,
+
+    // Per-job state.
+    arrival_time: Vec<f64>,
+    batches_left: Vec<u32>,
+    job_dead: Vec<bool>,
+
+    // Per-(job, batch) state, flat-indexed job·B + batch.
+    batch_done: Vec<bool>,
+    batch_gen: Vec<u32>,
+    crashed_copies: Vec<u32>,
+
+    // Outputs.
+    sojourn: Vec<f64>,
+    job_failed: Vec<bool>,
+    busy: f64,
+}
+
+impl OpenSim<'_> {
+    /// Validate the configuration and run one replication, drawing all
+    /// randomness (arrivals, services, crashes) from `rng` in event
+    /// order.
+    pub fn run(&self, rng: &mut Pcg64) -> Result<OpenRun> {
+        self.check()?;
+        let b = self.batches;
+        let total = self.warmup + self.jobs;
+        let mut sim = Sim {
+            spec: self,
+            rng,
+            q: EventQueue::new(),
+            batch_size: (self.workers / b) as f64,
+            copies: self.workers / b,
+            total_jobs: total,
+            next_arrival: 0,
+            resolved: 0,
+            queues: vec![VecDeque::new(); self.workers],
+            running: vec![None; self.workers],
+            epochs: vec![0; self.workers],
+            arrival_time: vec![0.0; total],
+            batches_left: vec![b as u32; total],
+            job_dead: vec![false; total],
+            batch_done: vec![false; total * b],
+            batch_gen: vec![0; total * b],
+            crashed_copies: vec![0; total * b],
+            sojourn: vec![f64::NAN; total],
+            job_failed: vec![false; total],
+            busy: 0.0,
+        };
+        sim.run()
+    }
+
+    /// Validate the configuration without running it. `run` calls this
+    /// itself; drivers fanning replications across a pool call it once
+    /// up front so configuration errors surface before any unit queues.
+    pub fn check(&self) -> Result<()> {
+        if self.workers == 0 {
+            return Err(Error::Config("open system needs at least one worker".into()));
+        }
+        if self.batches == 0 || self.workers % self.batches != 0 {
+            return Err(Error::Config(format!(
+                "batch count {} must divide the worker count {}",
+                self.batches, self.workers
+            )));
+        }
+        if self.jobs == 0 {
+            return Err(Error::Config("open system needs at least one measured job".into()));
+        }
+        if !self.replication.is_upfront() && self.failures != FailureModel::None {
+            return Err(Error::Config(format!(
+                "the {} policy does not support failure injection \
+                 (parity with the closed-system simulator)",
+                self.replication.name()
+            )));
+        }
+        match self.arrivals {
+            Arrivals::Poisson { rate } => {
+                if !rate.is_finite() || rate <= 0.0 {
+                    return Err(Error::Config(format!(
+                        "Poisson arrival rate must be finite and positive, got {rate}"
+                    )));
+                }
+            }
+            Arrivals::Trace(times) => {
+                let needed = self.warmup + self.jobs;
+                if times.len() < needed {
+                    return Err(Error::Config(format!(
+                        "arrival trace has {} times but the run needs {needed}",
+                        times.len()
+                    )));
+                }
+                let mut prev = 0.0_f64;
+                for &t in &times[..needed] {
+                    if !t.is_finite() || t < prev {
+                        return Err(Error::Config(format!(
+                            "arrival trace must be finite and non-decreasing \
+                             (offending time {t})"
+                        )));
+                    }
+                    prev = t;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Sim<'_, '_> {
+    fn run(mut self) -> Result<OpenRun> {
+        let first = match self.spec.arrivals {
+            Arrivals::Poisson { .. } => 0.0,
+            Arrivals::Trace(times) => times[0],
+        };
+        self.q.schedule(first, Ev::Arrive)?;
+        while self.resolved < self.total_jobs {
+            let ev = match self.q.pop() {
+                Some(ev) => ev,
+                // Unreachable for a valid configuration: every job either
+                // completes or fails, and each resolution is preceded by
+                // a scheduled event. Surface it rather than spin.
+                None => {
+                    return Err(Error::Internal(
+                        "open-system event queue drained before all jobs resolved".into(),
+                    ))
+                }
+            };
+            match ev.payload {
+                Ev::Arrive => self.on_arrive()?,
+                Ev::Finish { worker, epoch, crashed } => {
+                    self.on_finish(worker as usize, epoch, crashed)?
+                }
+                Ev::Backup { job } => self.on_backup(job as usize)?,
+                Ev::Relaunch { job, attempt } => {
+                    self.on_relaunch(job as usize, attempt as usize)?
+                }
+                Ev::Requeue { worker, job, batch } => {
+                    self.on_requeue(worker as usize, job, batch)?
+                }
+            }
+        }
+        let horizon = self.q.now();
+        let mut sojourns = Vec::with_capacity(self.spec.jobs);
+        let mut failed = 0usize;
+        for j in self.spec.warmup..self.total_jobs {
+            if self.job_failed[j] {
+                failed += 1;
+            } else {
+                sojourns.push(self.sojourn[j]);
+            }
+        }
+        Ok(OpenRun { sojourns, failed, busy: self.busy, horizon })
+    }
+
+    fn on_arrive(&mut self) -> Result<()> {
+        let job = self.next_arrival;
+        self.next_arrival += 1;
+        let now = self.q.now();
+        self.arrival_time[job] = now;
+
+        // Launch per the replication timing policy.
+        let r = self.copies;
+        match self.spec.replication {
+            ReplicationPolicy::Upfront => {
+                for b in 0..self.spec.batches {
+                    for c in 0..r {
+                        self.enqueue(b * r + c, job as u32, b as u32, 0)?;
+                    }
+                }
+            }
+            ReplicationPolicy::SpeculativeAt { t } => {
+                for b in 0..self.spec.batches {
+                    self.enqueue(b * r, job as u32, b as u32, 0)?;
+                }
+                if r > 1 {
+                    self.q.schedule_in(t, Ev::Backup { job: job as u32 })?;
+                }
+            }
+            ReplicationPolicy::RelaunchAt { t } => {
+                for b in 0..self.spec.batches {
+                    self.enqueue(b * r, job as u32, b as u32, 0)?;
+                }
+                if r > 1 {
+                    self.q.schedule_in(t, Ev::Relaunch { job: job as u32, attempt: 1 })?;
+                }
+            }
+        }
+
+        // Schedule the next arrival.
+        if self.next_arrival < self.total_jobs {
+            match self.spec.arrivals {
+                Arrivals::Poisson { rate } => {
+                    let dt = -self.rng.uniform_pos().ln() / rate;
+                    self.q.schedule_in(dt, Ev::Arrive)?;
+                }
+                Arrivals::Trace(times) => {
+                    self.q.schedule(times[self.next_arrival], Ev::Arrive)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Push a copy onto worker `w`'s FIFO queue, starting it
+    /// immediately if the worker is idle.
+    fn enqueue(&mut self, w: usize, job: u32, batch: u32, gen: u32) -> Result<()> {
+        self.queues[w].push_back(QueuedCopy { job, batch, gen });
+        if self.running[w].is_none() {
+            self.start_next(w)?;
+        }
+        Ok(())
+    }
+
+    /// Pop the next live copy (skipping cancelled ones) and start
+    /// serving it: draw the service time and the crash outcome, bump the
+    /// worker epoch, and schedule the Finish event.
+    fn start_next(&mut self, w: usize) -> Result<()> {
+        while let Some(copy) = self.queues[w].pop_front() {
+            let jb = copy.job as usize * self.spec.batches + copy.batch as usize;
+            let cancelled = self.batch_done[jb]
+                || self.job_dead[copy.job as usize]
+                || copy.gen != self.batch_gen[jb];
+            if cancelled {
+                continue;
+            }
+            let service = self.batch_size * self.spec.sampler.sample_one(self.rng);
+            let crashed = match self.spec.failures {
+                FailureModel::None => false,
+                FailureModel::Crash { p } | FailureModel::CrashRestart { p, .. } => {
+                    self.rng.uniform() < p
+                }
+            };
+            let now = self.q.now();
+            self.epochs[w] += 1;
+            self.running[w] =
+                Some(RunningCopy { job: copy.job, batch: copy.batch, start: now });
+            self.q.schedule(
+                now + service,
+                Ev::Finish { worker: w as u32, epoch: self.epochs[w], crashed },
+            )?;
+            return Ok(());
+        }
+        Ok(())
+    }
+
+    /// Stop the copy running on `w` (kill or normal completion),
+    /// crediting its busy time, and start the worker's next copy.
+    fn release(&mut self, w: usize) -> Result<()> {
+        if let Some(rc) = self.running[w].take() {
+            self.busy += self.q.now() - rc.start;
+            self.epochs[w] += 1; // invalidate the in-flight Finish
+        }
+        self.start_next(w)
+    }
+
+    fn on_finish(&mut self, w: usize, epoch: u64, crashed: bool) -> Result<()> {
+        if self.epochs[w] != epoch {
+            return Ok(()); // stale: this copy was killed earlier
+        }
+        let rc = match self.running[w].take() {
+            Some(rc) => rc,
+            None => return Ok(()), // defensive: epoch matched an idle worker
+        };
+        self.busy += self.q.now() - rc.start;
+        if crashed {
+            self.start_next(w)?;
+            return self.on_crash(w, rc);
+        }
+        let jb = rc.job as usize * self.spec.batches + rc.batch as usize;
+        if !self.batch_done[jb] && !self.job_dead[rc.job as usize] {
+            self.batch_done[jb] = true;
+            self.kill_batch_copies(rc.job, rc.batch)?;
+            self.batches_left[rc.job as usize] -= 1;
+            if self.batches_left[rc.job as usize] == 0 {
+                self.resolve(rc.job as usize, false);
+            }
+        }
+        self.start_next(w)
+    }
+
+    /// Kill-on-batch-complete: running sibling copies of a finished
+    /// batch are stopped immediately (queued siblings are dropped lazily
+    /// by `start_next`).
+    fn kill_batch_copies(&mut self, job: u32, batch: u32) -> Result<()> {
+        let r = self.copies;
+        let base = batch as usize * r;
+        for w in base..base + r {
+            if let Some(rc) = self.running[w] {
+                if rc.job == job && rc.batch == batch {
+                    self.release(w)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn on_crash(&mut self, w: usize, rc: RunningCopy) -> Result<()> {
+        let job = rc.job as usize;
+        let jb = job * self.spec.batches + rc.batch as usize;
+        if self.batch_done[jb] || self.job_dead[job] {
+            return Ok(());
+        }
+        match self.spec.failures {
+            FailureModel::CrashRestart { delay, .. } => {
+                // The copy retries on the worker it ran on after the
+                // restart delay; the batch stays recoverable.
+                self.q.schedule_in(
+                    delay,
+                    Ev::Requeue { worker: w as u32, job: rc.job, batch: rc.batch },
+                )
+            }
+            FailureModel::Crash { .. } => {
+                self.crashed_copies[jb] += 1;
+                if self.crashed_copies[jb] >= self.copies as u32 {
+                    // Every copy of this batch crashed: the job can
+                    // never complete. Cancel its surviving work.
+                    self.job_dead[job] = true;
+                    for w in 0..self.spec.workers {
+                        if let Some(run) = self.running[w] {
+                            if run.job == rc.job {
+                                self.release(w)?;
+                            }
+                        }
+                    }
+                    self.resolve(job, true);
+                }
+                Ok(())
+            }
+            FailureModel::None => Ok(()),
+        }
+    }
+
+    fn on_backup(&mut self, job: usize) -> Result<()> {
+        if self.job_dead[job] {
+            return Ok(());
+        }
+        let r = self.copies;
+        for b in 0..self.spec.batches {
+            let jb = job * self.spec.batches + b;
+            if self.batch_done[jb] {
+                continue;
+            }
+            for c in 1..r {
+                self.enqueue(b * r + c, job as u32, b as u32, 0)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn on_relaunch(&mut self, job: usize, attempt: usize) -> Result<()> {
+        if self.job_dead[job] {
+            return Ok(());
+        }
+        let t = match self.spec.replication {
+            ReplicationPolicy::RelaunchAt { t } => t,
+            // Relaunch events are only ever scheduled under this policy.
+            _ => return Ok(()),
+        };
+        let r = self.copies;
+        let mut any_open = false;
+        for b in 0..self.spec.batches {
+            let jb = job * self.spec.batches + b;
+            if self.batch_done[jb] {
+                continue;
+            }
+            any_open = true;
+            // Cancel attempt−1: kill it if running, otherwise bump the
+            // live generation so the queued copy is dropped at pop time.
+            let prev_worker = b * r + (attempt - 1);
+            self.batch_gen[jb] = attempt as u32;
+            match self.running[prev_worker] {
+                Some(rc) if rc.job as usize == job && rc.batch as usize == b => {
+                    self.release(prev_worker)?;
+                }
+                _ => {}
+            }
+            self.enqueue(b * r + attempt, job as u32, b as u32, attempt as u32)?;
+        }
+        if any_open && attempt + 1 < r {
+            let deadline = self.arrival_time[job] + (attempt as f64 + 1.0) * t;
+            // Guard against t = 0 rounding: never schedule in the past.
+            let at = if deadline < self.q.now() { self.q.now() } else { deadline };
+            self.q
+                .schedule(at, Ev::Relaunch { job: job as u32, attempt: attempt as u32 + 1 })?;
+        }
+        Ok(())
+    }
+
+    fn on_requeue(&mut self, w: usize, job: u32, batch: u32) -> Result<()> {
+        let jb = job as usize * self.spec.batches + batch as usize;
+        if self.batch_done[jb] || self.job_dead[job as usize] {
+            return Ok(());
+        }
+        self.enqueue(w, job, batch, self.batch_gen[jb])
+    }
+
+    fn resolve(&mut self, job: usize, failed: bool) {
+        self.resolved += 1;
+        self.job_failed[job] = failed;
+        if !failed {
+            self.sojourn[job] = self.q.now() - self.arrival_time[job];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::ServiceDist;
+
+    fn spec<'a>(sampler: &'a Sampler, arrivals: Arrivals<'a>) -> OpenSim<'a> {
+        OpenSim {
+            workers: 4,
+            batches: 2,
+            sampler,
+            replication: ReplicationPolicy::Upfront,
+            failures: FailureModel::None,
+            arrivals,
+            warmup: 5,
+            jobs: 20,
+        }
+    }
+
+    #[test]
+    fn completes_all_jobs_and_accounts_busy_time() {
+        let sampler = ServiceDist::exp(1.0).sampler();
+        let mut rng = Pcg64::new(11);
+        let run = spec(&sampler, Arrivals::Poisson { rate: 0.05 }).run(&mut rng).unwrap();
+        assert_eq!(run.sojourns.len(), 20);
+        assert_eq!(run.failed, 0);
+        assert!(run.sojourns.iter().all(|&s| s.is_finite() && s > 0.0));
+        assert!(run.busy > 0.0);
+        // Busy worker-seconds can never exceed cluster capacity.
+        assert!(run.busy <= 4.0 * run.horizon * (1.0 + 1e-12));
+    }
+
+    #[test]
+    fn is_deterministic_for_a_fixed_rng_stream() {
+        let sampler = ServiceDist::exp(1.0).sampler();
+        let s = spec(&sampler, Arrivals::Poisson { rate: 0.5 });
+        let a = s.run(&mut Pcg64::new(7)).unwrap();
+        let b = s.run(&mut Pcg64::new(7)).unwrap();
+        assert_eq!(a.sojourns, b.sojourns);
+        assert_eq!(a.busy.to_bits(), b.busy.to_bits());
+        assert_eq!(a.horizon.to_bits(), b.horizon.to_bits());
+        let c = s.run(&mut Pcg64::new(8)).unwrap();
+        assert_ne!(a.sojourns, c.sojourns);
+    }
+
+    #[test]
+    fn trace_arrivals_far_apart_match_the_closed_system_shape() {
+        // Jobs spaced far beyond any plausible sojourn: each sees an
+        // idle cluster, so sojourns are iid closed-system samples —
+        // strictly positive and unaffected by earlier jobs.
+        let sampler = ServiceDist::exp(1.0).sampler();
+        let times: Vec<f64> = (0..8).map(|i| i as f64 * 1e6).collect();
+        let mut s = spec(&sampler, Arrivals::Trace(&times));
+        s.warmup = 2;
+        s.jobs = 6;
+        let run = s.run(&mut Pcg64::new(3)).unwrap();
+        assert_eq!(run.sojourns.len(), 6);
+        // No queueing: every sojourn is far below the interarrival gap.
+        assert!(run.sojourns.iter().all(|&x| x < 1e5));
+    }
+
+    #[test]
+    fn rejects_invalid_configurations() {
+        let sampler = ServiceDist::exp(1.0).sampler();
+        let base = spec(&sampler, Arrivals::Poisson { rate: 0.1 });
+        let mut s = base;
+        s.batches = 3; // does not divide 4
+        assert!(s.run(&mut Pcg64::new(1)).is_err());
+        let mut s = base;
+        s.workers = 0;
+        assert!(s.run(&mut Pcg64::new(1)).is_err());
+        let mut s = base;
+        s.jobs = 0;
+        assert!(s.run(&mut Pcg64::new(1)).is_err());
+        let mut s = base;
+        s.arrivals = Arrivals::Poisson { rate: 0.0 };
+        assert!(s.run(&mut Pcg64::new(1)).is_err());
+        let mut s = base;
+        s.arrivals = Arrivals::Poisson { rate: f64::NAN };
+        assert!(s.run(&mut Pcg64::new(1)).is_err());
+        let short = [0.0, 1.0];
+        let mut s = base;
+        s.arrivals = Arrivals::Trace(&short);
+        assert!(s.run(&mut Pcg64::new(1)).is_err());
+        let mut non_monotone: Vec<f64> = (0..30).map(f64::from).collect();
+        non_monotone[3] = 0.5;
+        let mut s = base;
+        s.arrivals = Arrivals::Trace(&non_monotone);
+        assert!(s.run(&mut Pcg64::new(1)).is_err());
+        let mut s = base;
+        s.replication = ReplicationPolicy::SpeculativeAt { t: 1.0 };
+        s.failures = FailureModel::Crash { p: 0.1 };
+        assert!(s.run(&mut Pcg64::new(1)).is_err());
+    }
+
+    #[test]
+    fn crash_without_restart_can_fail_jobs() {
+        let sampler = ServiceDist::exp(1.0).sampler();
+        let mut s = spec(&sampler, Arrivals::Poisson { rate: 0.1 });
+        s.failures = FailureModel::Crash { p: 1.0 };
+        let run = s.run(&mut Pcg64::new(5)).unwrap();
+        assert_eq!(run.failed, 20);
+        assert!(run.sojourns.is_empty());
+        // Crashed copies still burned worker time.
+        assert!(run.busy > 0.0);
+    }
+
+    #[test]
+    fn crash_restart_recovers_every_job() {
+        let sampler = ServiceDist::exp(1.0).sampler();
+        let mut s = spec(&sampler, Arrivals::Poisson { rate: 0.05 });
+        s.failures = FailureModel::CrashRestart { p: 0.5, delay: 0.25 };
+        let run = s.run(&mut Pcg64::new(6)).unwrap();
+        assert_eq!(run.failed, 0);
+        assert_eq!(run.sojourns.len(), 20);
+    }
+
+    #[test]
+    fn timed_policies_complete_their_jobs() {
+        let sampler = ServiceDist::exp(1.0).sampler();
+        for replication in [
+            ReplicationPolicy::SpeculativeAt { t: 0.5 },
+            ReplicationPolicy::SpeculativeAt { t: 0.0 },
+            ReplicationPolicy::RelaunchAt { t: 0.5 },
+            ReplicationPolicy::RelaunchAt { t: 0.0 },
+        ] {
+            let mut s = spec(&sampler, Arrivals::Poisson { rate: 0.2 });
+            s.replication = replication;
+            let run = s.run(&mut Pcg64::new(9)).unwrap();
+            assert_eq!(run.failed, 0, "{replication:?}");
+            assert_eq!(run.sojourns.len(), 20, "{replication:?}");
+            assert!(run.sojourns.iter().all(|&x| x.is_finite() && x > 0.0));
+        }
+    }
+
+    #[test]
+    fn speculation_burns_no_more_than_upfront() {
+        // With a huge speculation deadline the backups never launch:
+        // strictly less redundant work than up-front replication of the
+        // same stream, and never more than one copy's service per batch
+        // is *useful*. Compare total busy time under identical seeds.
+        let sampler = ServiceDist::exp(1.0).sampler();
+        let mut lazy = spec(&sampler, Arrivals::Poisson { rate: 0.05 });
+        lazy.replication = ReplicationPolicy::SpeculativeAt { t: 1e9 };
+        let lazy_run = lazy.run(&mut Pcg64::new(13)).unwrap();
+        assert_eq!(lazy_run.failed, 0);
+        assert_eq!(lazy_run.sojourns.len(), 20);
+    }
+}

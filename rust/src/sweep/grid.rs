@@ -1,9 +1,10 @@
 //! Grid expansion and content addressing.
 //!
 //! A [`ScenarioSet`] is the deterministic expansion of a [`SweepSpec`]
-//! over a trace: `jobs × batch counts × crash levels × replication
-//! policies × backends`, in that nesting order (a single-policy
-//! `["upfront"]` axis reproduces the pre-policy order exactly). Each
+//! over a trace: `jobs × batch counts × crash levels × offered loads ×
+//! replication policies × backends`, in that nesting order (a
+//! single-policy `["upfront"]` axis with no `arrivals` axis reproduces
+//! the pre-policy order exactly). Each
 //! case carries a **content key** — a stable
 //! 64-bit hash of everything that determines its estimate (scenario,
 //! estimator configuration, spec seed) — which is simultaneously:
@@ -21,7 +22,7 @@ use std::sync::Arc;
 
 use crate::batching::{operating_points, Policy};
 use crate::dist::ServiceDist;
-use crate::eval::{substream, Scenario};
+use crate::eval::{substream, OpenConfig, Scenario};
 use crate::sim::job::FailureModel;
 use crate::sim::policy::ReplicationPolicy;
 use crate::sweep::spec::{Backend, SweepSpec};
@@ -46,6 +47,10 @@ pub struct SweepCase {
     pub key: u64,
     /// RNG stream seed derived from the content key.
     pub stream_seed: u64,
+    /// Open-system operating point (offered load + measurement window);
+    /// `None` for closed-system cases. Part of the content address when
+    /// present.
+    pub arrivals: Option<OpenConfig>,
 }
 
 impl SweepCase {
@@ -71,6 +76,11 @@ impl SweepCase {
     pub fn key_hex(&self) -> String {
         format!("{:016x}", self.key)
     }
+
+    /// Offered load ρ of the open-system axis (`None` = closed system).
+    pub fn rho(&self) -> Option<f64> {
+        self.arrivals.map(|a| a.rho)
+    }
 }
 
 /// The expanded, content-addressed scenario grid.
@@ -90,6 +100,25 @@ impl ScenarioSet {
         if job_ids.is_empty() {
             return Err(Error::Config("sweep grid has no jobs".into()));
         }
+        // Open-system sweeps are Monte-Carlo only: the analytic backend
+        // has no queueing model. The spec parser enforces this for JSON
+        // specs; re-check here for programmatically built ones.
+        if spec.arrivals.is_some() && spec.backends.iter().any(|&bk| bk != Backend::MonteCarlo)
+        {
+            return Err(Error::Config(
+                "an 'arrivals' axis requires backends = [\"mc\"]".into(),
+            ));
+        }
+        // The ρ axis: one closed-system pseudo-point when absent, so the
+        // loop below stays uniform and closed grids expand unchanged.
+        let rhos: Vec<Option<OpenConfig>> = match &spec.arrivals {
+            None => vec![None],
+            Some(a) => a
+                .rho
+                .iter()
+                .map(|&rho| Some(OpenConfig { rho, jobs: a.jobs, warmup: a.warmup }))
+                .collect(),
+        };
         let mut cases = Vec::new();
         for &job_id in &job_ids {
             let analysis = JobAnalysis::of(trace, job_id).ok_or_else(|| {
@@ -121,31 +150,40 @@ impl ScenarioSet {
                     } else {
                         FailureModel::Crash { p }
                     };
-                    for &replication in &spec.policies {
-                        if !replication.is_upfront() && p > 0.0 {
-                            return Err(Error::Config(format!(
-                                "policy '{}' cannot be combined with failure \
-                                 injection (crash={p}); timed policies are only \
-                                 simulated without failures",
-                                replication.label()
-                            )));
-                        }
-                        for &backend in &spec.backends {
-                            let scenario = Scenario::balanced(n, b, Arc::clone(&tau))
-                                .with_failures(failures)
-                                .with_replication(replication);
-                            let reps =
-                                if backend == Backend::Analytic { 0 } else { spec.reps };
-                            let key = case_key(&scenario, backend, reps, spec.seed);
-                            cases.push(SweepCase {
-                                index: cases.len(),
-                                job_id,
-                                scenario,
-                                backend,
-                                reps,
-                                key,
-                                stream_seed: substream(spec.seed, key),
-                            });
+                    for arrivals in &rhos {
+                        for &replication in &spec.policies {
+                            if !replication.is_upfront() && p > 0.0 {
+                                return Err(Error::Config(format!(
+                                    "policy '{}' cannot be combined with failure \
+                                     injection (crash={p}); timed policies are only \
+                                     simulated without failures",
+                                    replication.label()
+                                )));
+                            }
+                            for &backend in &spec.backends {
+                                let scenario = Scenario::balanced(n, b, Arc::clone(&tau))
+                                    .with_failures(failures)
+                                    .with_replication(replication);
+                                let reps =
+                                    if backend == Backend::Analytic { 0 } else { spec.reps };
+                                let key = case_key_open(
+                                    &scenario,
+                                    backend,
+                                    reps,
+                                    spec.seed,
+                                    arrivals.as_ref(),
+                                );
+                                cases.push(SweepCase {
+                                    index: cases.len(),
+                                    job_id,
+                                    scenario,
+                                    backend,
+                                    reps,
+                                    key,
+                                    stream_seed: substream(spec.seed, key),
+                                    arrivals: *arrivals,
+                                });
+                            }
                         }
                     }
                 }
@@ -184,6 +222,7 @@ impl ScenarioSet {
                 reps,
                 key,
                 stream_seed: substream(seed, key),
+                arrivals: None,
             });
         }
         Ok(ScenarioSet { cases })
@@ -243,6 +282,20 @@ pub fn shard_range(total: usize, k: usize, m: usize) -> Range<usize> {
 /// seed. Not a cryptographic hash — it only needs to separate the
 /// cases of overlapping sweep specs.
 pub fn case_key(scenario: &Scenario, backend: Backend, reps: usize, seed: u64) -> u64 {
+    case_key_open(scenario, backend, reps, seed, None)
+}
+
+/// [`case_key`] extended with the open-system axis. Closed-system cases
+/// (`open: None`) hash to exactly the old addresses; an operating point
+/// extends the encoding only when present, following the same
+/// append-only convention as the timed-replication bytes.
+pub fn case_key_open(
+    scenario: &Scenario,
+    backend: Backend,
+    reps: usize,
+    seed: u64,
+    open: Option<&OpenConfig>,
+) -> u64 {
     let mut h = Fnv::new();
     h.write(b"replica-sweep-v1");
     h.write_u64(scenario.workers as u64);
@@ -260,6 +313,12 @@ pub fn case_key(scenario: &Scenario, backend: Backend, reps: usize, seed: u64) -
         if let Some(t) = scenario.replication.t() {
             h.write_f64(t);
         }
+    }
+    if let Some(open) = open {
+        h.write(b"open");
+        h.write_f64(open.rho);
+        h.write_u64(open.jobs as u64);
+        h.write_u64(open.warmup as u64);
     }
     h.finish()
 }
@@ -371,6 +430,7 @@ fn hash_failures(h: &mut Fnv, failures: FailureModel) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sweep::spec::ArrivalsSpec;
     use crate::traces::GeneratorConfig;
 
     fn small_trace() -> Trace {
@@ -494,6 +554,50 @@ mod tests {
         for (a, b) in spec1.iter().zip(&set2.cases) {
             assert_ne!(a.key, b.key, "t must be part of the content address");
         }
+    }
+
+    #[test]
+    fn arrivals_axis_multiplies_and_preserves_closed_keys() {
+        let trace = small_trace();
+        let base = ScenarioSet::from_trace(&trace, &spec()).unwrap();
+        let mut s = spec();
+        s.arrivals =
+            Some(ArrivalsSpec { rho: vec![0.2, 0.8], jobs: 100, warmup: 20 });
+        let set = ScenarioSet::from_trace(&trace, &s).unwrap();
+        assert_eq!(set.len(), base.len() * 2);
+        // nesting: ρ varies fastest above policies, so consecutive
+        // cases of one (job, B, crash) cell hold its two loads
+        assert_eq!(set.cases[0].rho(), Some(0.2));
+        assert_eq!(set.cases[1].rho(), Some(0.8));
+        assert_eq!(base.cases[0].rho(), None);
+        // open keys are distinct from each other AND from every
+        // closed-system key: old stores stay addressable, new cells
+        // never collide with them
+        let mut keys = set.expected_keys();
+        keys.extend(base.expected_keys());
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), set.len() + base.len());
+        // the measurement window is part of the content address too
+        let mut s2 = spec();
+        s2.arrivals =
+            Some(ArrivalsSpec { rho: vec![0.2, 0.8], jobs: 100, warmup: 21 });
+        let set2 = ScenarioSet::from_trace(&trace, &s2).unwrap();
+        for (a, b) in set.cases.iter().zip(&set2.cases) {
+            assert_ne!(a.key, b.key, "warmup must be part of the address");
+        }
+    }
+
+    #[test]
+    fn arrivals_axis_rejects_non_mc_backends() {
+        let trace = small_trace();
+        let mut s = spec();
+        s.arrivals = Some(ArrivalsSpec { rho: vec![0.5], jobs: 50, warmup: 10 });
+        s.backends = vec![Backend::MonteCarlo, Backend::Auto];
+        let err = ScenarioSet::from_trace(&trace, &s).unwrap_err();
+        assert!(err.to_string().contains("arrivals"), "{err}");
+        s.backends = vec![Backend::MonteCarlo];
+        assert!(ScenarioSet::from_trace(&trace, &s).is_ok());
     }
 
     #[test]

@@ -10,7 +10,8 @@
 //!
 //! * [`SweepSpec`] ([`spec`]) — a JSON spec naming the workload (trace
 //!   file or generator parameters) and the axes: jobs × batch counts ×
-//!   crash levels × replication policies × backends.
+//!   crash levels × offered loads (the optional open-system `arrivals`
+//!   axis) × replication policies × backends.
 //! * [`ScenarioSet`] ([`grid`]) — the deterministic expansion of a spec
 //!   into content-addressed cases: each case's key is a stable hash of
 //!   scenario + estimator config + seed, and doubles as its cache
@@ -55,7 +56,7 @@ pub mod runner;
 pub mod spec;
 pub mod store;
 
-pub use grid::{case_key, shard_range, ScenarioSet, SweepCase};
+pub use grid::{case_key, case_key_open, shard_range, ScenarioSet, SweepCase};
 pub use merge::{
     merge, merge_partial, merge_shards, shard_path, MergeReport, MissingRange,
     PartialMergeReport,
@@ -65,5 +66,7 @@ pub use report::{
     GainRow, RecordRow,
 };
 pub use runner::{evaluate_cases, run, run_spec, CaseResult, RunConfig};
-pub use spec::{Backend, SweepSpec, Workload, DEFAULT_SHARD_SIZE, DEFAULT_SWEEP_REPS};
+pub use spec::{
+    ArrivalsSpec, Backend, SweepSpec, Workload, DEFAULT_SHARD_SIZE, DEFAULT_SWEEP_REPS,
+};
 pub use store::{CacheGc, CaseOutcome, EstimateCache, StoredEstimate};

@@ -30,7 +30,7 @@
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
-use crate::eval::{Analytic, Estimator, MonteCarlo, Scenario};
+use crate::eval::{Analytic, Estimator, MonteCarlo, OpenSystem, Scenario};
 use crate::sweep::grid::{ScenarioSet, SweepCase};
 use crate::sweep::merge::shard_path;
 use crate::sweep::spec::{Backend, SweepSpec, DEFAULT_SHARD_SIZE};
@@ -215,6 +215,13 @@ pub fn evaluate_cases(
             continue;
         }
         fresh.push(i);
+        if case.arrivals.is_some() {
+            // Open-system cases fan their replications across the pool
+            // inside the estimator, so each case is one pooled call —
+            // same saturation shape as the closed-system batch below.
+            outcomes[i] = Some(open_outcome(case, threads));
+            continue;
+        }
         let analytic = case.backend == Backend::Analytic
             || (case.backend == Backend::Auto && Analytic::supports(&case.scenario));
         if analytic {
@@ -278,6 +285,21 @@ pub fn evaluate_cases(
 fn analytic_outcome(scenario: &Scenario) -> CaseOutcome {
     match Analytic.evaluate(scenario) {
         Ok(est) => CaseOutcome::Ok(StoredEstimate::of(&est, scenario.replication)),
+        Err(e) => CaseOutcome::Error(e.to_string()),
+    }
+}
+
+/// Evaluate one open-system case. The RNG stream comes from the case's
+/// content key (`stream_seed`), exactly like the closed-system batch
+/// path, so open estimates are equally independent of grid position,
+/// sharding, and pool width.
+fn open_outcome(case: &SweepCase, threads: usize) -> CaseOutcome {
+    let Some(open) = case.arrivals else {
+        return CaseOutcome::Error("open_outcome needs an 'arrivals' operating point".into());
+    };
+    let os = OpenSystem { reps: case.reps.max(1), seed: 0, threads, open };
+    match os.evaluate_open_seeded(&case.scenario, case.stream_seed) {
+        Ok(oe) => CaseOutcome::Ok(StoredEstimate::of_open(&oe, case.scenario.replication)),
         Err(e) => CaseOutcome::Error(e.to_string()),
     }
 }
@@ -457,6 +479,45 @@ mod tests {
             };
             assert_eq!(a.mean.to_bits(), b.mean.to_bits());
             assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+        }
+    }
+
+    #[test]
+    fn open_system_cases_flow_through_the_engine() {
+        use crate::sweep::spec::ArrivalsSpec;
+        let trace = GeneratorConfig::paper_workload(12, 3).generate();
+        let mut spec = SweepSpec::for_trace();
+        spec.reps = 40;
+        spec.seed = 5;
+        spec.jobs = Some(vec![1]);
+        spec.batches = Some(vec![1, 12]);
+        spec.arrivals = Some(ArrivalsSpec { rho: vec![0.3], jobs: 40, warmup: 10 });
+        let set = ScenarioSet::from_trace(&trace, &spec).unwrap();
+        let results = run(&set, &RunConfig::default()).unwrap();
+        assert_eq!(results.len(), 2);
+        for r in &results {
+            let CaseOutcome::Ok(e) = &r.outcome else { panic!("{:?}", r.outcome) };
+            assert!(e.mean.is_finite() && e.mean > 0.0);
+            assert!(e.utilization > 0.0 && e.utilization <= 1.0);
+            assert!(e.cost.is_finite() && e.cost > 0.0, "open records track cost");
+            // the persisted line carries the operating point and
+            // reproduces the in-memory record exactly
+            let line = render_record(&r.case, &r.outcome);
+            assert!(line.contains("\"rho\":0.3"), "{line}");
+            assert!(line.contains("\"utilization\":"), "{line}");
+            let (key, back) = crate::sweep::store::parse_record(&line).unwrap();
+            assert_eq!(key, r.case.key);
+            assert_eq!(render_record(&r.case, &back), line);
+        }
+        // shard-size independence holds on the open axis too
+        let again =
+            run(&set, &RunConfig { shard_size: 1, ..RunConfig::default() }).unwrap();
+        for (a, b) in results.iter().zip(&again) {
+            let (CaseOutcome::Ok(a), CaseOutcome::Ok(b)) = (&a.outcome, &b.outcome) else {
+                panic!("unexpected error outcome");
+            };
+            assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+            assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
         }
     }
 

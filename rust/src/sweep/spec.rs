@@ -29,9 +29,25 @@
 //! [`DEFAULT_SHARD_SIZE`]. A `policies` entry is either the string
 //! `"upfront"` or a one-key object `{"speculative": T}` /
 //! `{"relaunch": T}` naming the policy's trigger time.
+//!
+//! The optional `arrivals` field switches the sweep into *open-system*
+//! mode (see [`crate::eval::OpenSystem`]): each case simulates a
+//! Poisson job stream instead of one job on an idle cluster, and the
+//! offered loads become one more grid axis:
+//!
+//! ```json
+//! "arrivals": {"rho": [0.2, 0.5, 0.8], "jobs": 200, "warmup": 50}
+//! ```
+//!
+//! `rho` is required (non-empty, each in `(0, 4]`); `jobs` and `warmup`
+//! default to the [`crate::eval::OpenSystem`] window defaults. Open
+//! sweeps are Monte-Carlo only — there is no closed form under
+//! queueing — so `backends` must be `["mc"]`. Specs without `arrivals`
+//! expand exactly as before and re-key nothing.
 
 use std::path::{Path, PathBuf};
 
+use crate::eval::{DEFAULT_OPEN_JOBS, DEFAULT_OPEN_WARMUP};
 use crate::sim::policy::ReplicationPolicy;
 use crate::traces::{load_trace, GeneratorConfig, Trace};
 use crate::util::error::{Error, Result};
@@ -76,6 +92,18 @@ impl Backend {
     }
 }
 
+/// The open-system `arrivals` axis: offered loads plus the measurement
+/// window shared by every load point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrivalsSpec {
+    /// Offered loads ρ to sweep (each in `(0, 4]`).
+    pub rho: Vec<f64>,
+    /// Measured jobs per replication.
+    pub jobs: usize,
+    /// Warmup jobs excluded from statistics.
+    pub warmup: usize,
+}
+
 /// Where the trace comes from.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Workload {
@@ -110,6 +138,10 @@ pub struct SweepSpec {
     pub policies: Vec<ReplicationPolicy>,
     /// Scenarios per shard.
     pub shard_size: usize,
+    /// Open-system mode: offered-load axis and measurement window.
+    /// `None` (the default) keeps the closed-system grid — and every
+    /// existing content key — unchanged.
+    pub arrivals: Option<ArrivalsSpec>,
 }
 
 impl SweepSpec {
@@ -125,6 +157,7 @@ impl SweepSpec {
             crash: vec![0.0],
             policies: vec![ReplicationPolicy::Upfront],
             shard_size: DEFAULT_SHARD_SIZE,
+            arrivals: None,
         }
     }
 
@@ -133,7 +166,7 @@ impl SweepSpec {
     /// re-key every scenario), so unknown keys are hard errors.
     pub fn from_json(text: &str) -> Result<SweepSpec> {
         let doc = parse(text)?;
-        const KNOWN: [&str; 9] = [
+        const KNOWN: [&str; 10] = [
             "workload",
             "jobs",
             "batches",
@@ -143,6 +176,7 @@ impl SweepSpec {
             "crash",
             "policies",
             "shard_size",
+            "arrivals",
         ];
         if let Json::Obj(map) = &doc {
             for key in map.keys() {
@@ -239,6 +273,17 @@ impl SweepSpec {
         if shard_size == 0 {
             return Err(Error::Config("'shard_size' must be >= 1".into()));
         }
+        let arrivals = match doc.get("arrivals") {
+            None => None,
+            Some(v) => Some(parse_arrivals(v)?),
+        };
+        if arrivals.is_some() && backends.iter().any(|b| *b != Backend::MonteCarlo) {
+            return Err(Error::Config(
+                "open-system sweeps ('arrivals') support only the 'mc' backend — \
+                 there is no closed form under queueing"
+                    .into(),
+            ));
+        }
         Ok(SweepSpec {
             workload,
             jobs,
@@ -249,6 +294,7 @@ impl SweepSpec {
             crash,
             policies,
             shard_size,
+            arrivals,
         })
     }
 
@@ -321,6 +367,40 @@ fn parse_workload(w: &Json) -> Result<Workload> {
             "'workload' must be {\"trace\": PATH} or {\"generate\": {...}}".into(),
         )),
     }
+}
+
+/// The `arrivals` object: `{"rho": [..], "jobs": N?, "warmup": N?}`.
+fn parse_arrivals(v: &Json) -> Result<ArrivalsSpec> {
+    let Json::Obj(map) = v else {
+        return Err(Error::Config(
+            "'arrivals' must be {\"rho\": [..], \"jobs\": N, \"warmup\": N}".into(),
+        ));
+    };
+    for key in map.keys() {
+        if !["rho", "jobs", "warmup"].contains(&key.as_str()) {
+            return Err(Error::Config(format!(
+                "unknown 'arrivals' field '{key}' (known: rho, jobs, warmup)"
+            )));
+        }
+    }
+    let rho = match map.get("rho") {
+        None => return Err(Error::Config("'arrivals' needs a 'rho' array".into())),
+        Some(v) => expect_arr(v, "arrivals.rho")?
+            .iter()
+            .map(|x| expect_num(x, "arrivals.rho entry"))
+            .collect::<Result<Vec<f64>>>()?,
+    };
+    if rho.is_empty() || rho.iter().any(|r| !r.is_finite() || *r <= 0.0 || *r > 4.0) {
+        return Err(Error::Config(
+            "'arrivals.rho' must be non-empty offered loads in (0, 4]".into(),
+        ));
+    }
+    let jobs = get_usize(v, "jobs", DEFAULT_OPEN_JOBS)?;
+    let warmup = get_usize(v, "warmup", DEFAULT_OPEN_WARMUP)?;
+    if jobs == 0 {
+        return Err(Error::Config("'arrivals.jobs' must be >= 1".into()));
+    }
+    Ok(ArrivalsSpec { rho, jobs, warmup })
 }
 
 /// One `policies` entry: `"upfront"`, `{"speculative": T}`, or
@@ -400,6 +480,47 @@ mod tests {
         assert_eq!(spec.crash, vec![0.0]);
         assert_eq!(spec.policies, vec![ReplicationPolicy::Upfront]);
         assert_eq!(spec.shard_size, DEFAULT_SHARD_SIZE);
+        assert_eq!(spec.arrivals, None);
+    }
+
+    #[test]
+    fn arrivals_axis_parses_with_defaults() {
+        let spec = SweepSpec::from_json(
+            r#"{"workload": {"trace": "t"}, "arrivals": {"rho": [0.2, 0.8]}}"#,
+        )
+        .unwrap();
+        let arrivals = spec.arrivals.unwrap();
+        assert_eq!(arrivals.rho, vec![0.2, 0.8]);
+        assert_eq!(arrivals.jobs, DEFAULT_OPEN_JOBS);
+        assert_eq!(arrivals.warmup, DEFAULT_OPEN_WARMUP);
+
+        let spec = SweepSpec::from_json(
+            r#"{"workload": {"trace": "t"},
+                "arrivals": {"rho": [0.5], "jobs": 120, "warmup": 30}}"#,
+        )
+        .unwrap();
+        let arrivals = spec.arrivals.unwrap();
+        assert_eq!((arrivals.jobs, arrivals.warmup), (120, 30));
+    }
+
+    #[test]
+    fn invalid_arrivals_are_rejected() {
+        for bad in [
+            r#"{"workload": {"trace": "t"}, "arrivals": {}}"#,
+            r#"{"workload": {"trace": "t"}, "arrivals": {"rho": []}}"#,
+            r#"{"workload": {"trace": "t"}, "arrivals": {"rho": [0]}}"#,
+            r#"{"workload": {"trace": "t"}, "arrivals": {"rho": [-0.2]}}"#,
+            r#"{"workload": {"trace": "t"}, "arrivals": {"rho": [9.0]}}"#,
+            r#"{"workload": {"trace": "t"}, "arrivals": {"rho": [0.2], "jobs": 0}}"#,
+            r#"{"workload": {"trace": "t"}, "arrivals": {"rho": [0.2], "nope": 1}}"#,
+            r#"{"workload": {"trace": "t"}, "arrivals": [0.2]}"#,
+            r#"{"workload": {"trace": "t"}, "arrivals": {"rho": [0.2]},
+                "backends": ["analytic"]}"#,
+            r#"{"workload": {"trace": "t"}, "arrivals": {"rho": [0.2]},
+                "backends": ["mc", "auto"]}"#,
+        ] {
+            assert!(SweepSpec::from_json(bad).is_err(), "accepted: {bad}");
+        }
     }
 
     #[test]

@@ -35,7 +35,7 @@ use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
-use crate::eval::Estimate;
+use crate::eval::{Estimate, OpenEstimate};
 use crate::sim::policy::ReplicationPolicy;
 use crate::sweep::grid::SweepCase;
 use crate::util::error::{Error, Result};
@@ -61,6 +61,10 @@ pub struct StoredEstimate {
     pub failure_rate: f64,
     pub replications: usize,
     pub completed: usize,
+    /// Mean fraction of worker-time busy (open-system records only).
+    /// NaN for closed-system records, which omit the field on disk —
+    /// the same only-when-present convention as the policy fields.
+    pub utilization: f64,
     /// Replication policy the estimate was computed under. Up-front
     /// records omit the field on disk and parse back to `Upfront`.
     pub policy: ReplicationPolicy,
@@ -82,6 +86,31 @@ impl StoredEstimate {
             failure_rate: est.failure_rate,
             replications: est.replications,
             completed: est.completed,
+            utilization: f64::NAN,
+            policy,
+        }
+    }
+
+    /// The persisted slice of an open-system estimate. Unlike closed
+    /// up-front records, open records always carry cost (worker-seconds
+    /// per job is a primary axis of the B*-vs-load story) and
+    /// utilization; neither collides with the pre-open line format
+    /// because closed records store both as NaN and never render them.
+    pub fn of_open(oe: &OpenEstimate, policy: ReplicationPolicy) -> StoredEstimate {
+        let est = &oe.estimate;
+        StoredEstimate {
+            via: est.provenance.backend().to_string(),
+            mean: est.mean,
+            ci95: est.ci95,
+            cov: est.cov,
+            p50: est.p50,
+            p95: est.p95,
+            p99: est.p99,
+            cost: est.cost,
+            failure_rate: est.failure_rate,
+            replications: est.replications,
+            completed: est.completed,
+            utilization: oe.utilization,
             policy,
         }
     }
@@ -113,6 +142,11 @@ pub fn render_record(case: &SweepCase, outcome: &CaseOutcome) -> String {
         ("key", Json::Str(case.key_hex())),
         ("n", Json::Num(case.scenario.workers as f64)),
     ];
+    // Open-system cases name their operating point; closed cases keep
+    // the pre-open line format byte-for-byte.
+    if let Some(rho) = case.rho() {
+        pairs.push(("rho", Json::Num(rho)));
+    }
     pairs.extend(outcome_fields(outcome));
     Json::obj(pairs).to_string_compact()
 }
@@ -151,6 +185,13 @@ fn outcome_fields(outcome: &CaseOutcome) -> Vec<(&'static str, Json)> {
                 if let Some(t) = e.policy.t() {
                     fields.push(("t", Json::Num(t)));
                 }
+            } else if e.cost.is_finite() {
+                // Open-system up-front records do track cost (closed
+                // up-front ones store NaN, so old lines are unchanged).
+                fields.push(("cost", Json::num_or_null(e.cost)));
+            }
+            if e.utilization.is_finite() {
+                fields.push(("utilization", Json::num_or_null(e.utilization)));
             }
             fields
         }
@@ -245,6 +286,7 @@ pub fn parse_record(line: &str) -> Result<(u64, CaseOutcome)> {
             failure_rate: field("failure_rate"),
             replications: count("replications")?,
             completed: count("completed")?,
+            utilization: field("utilization"),
             policy,
         }),
     ))
@@ -529,6 +571,7 @@ mod tests {
             failure_rate: 0.0,
             replications: 100,
             completed,
+            utilization: f64::NAN,
             policy: ReplicationPolicy::Upfront,
         }
     }
@@ -660,6 +703,49 @@ mod tests {
         assert!(line.contains("\"policy\":\"relaunch\""));
         let (key, back) = parse_record(&line).unwrap();
         assert_eq!(render_cache_line(key, &back), line);
+    }
+
+    #[test]
+    fn open_records_roundtrip_with_cost_and_utilization() {
+        let mut e = est(2.5, 100);
+        e.cost = 4.5;
+        e.utilization = 0.625;
+        let line = render_cache_line(13, &CaseOutcome::Ok(e));
+        assert!(line.contains("\"cost\":4.5"));
+        assert!(line.contains("\"utilization\":0.625"));
+        assert!(!line.contains("policy"), "up-front open records omit policy");
+        let (key, back) = parse_record(&line).unwrap();
+        match &back {
+            CaseOutcome::Ok(b) => {
+                assert!(b.policy.is_upfront());
+                assert_eq!(b.cost, 4.5);
+                assert_eq!(b.utilization, 0.625);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(render_cache_line(key, &back), line);
+    }
+
+    #[test]
+    fn of_open_keeps_cost_for_upfront_records() {
+        let est = Estimate {
+            mean: 2.0,
+            ci95: 0.1,
+            cov: 0.4,
+            p50: 1.9,
+            p95: 3.0,
+            p99: 3.5,
+            cost: 6.0,
+            failure_rate: 0.0,
+            replications: 64,
+            completed: 64,
+            provenance: Provenance::MonteCarlo { reps: 64, seed: 1, threads: 2 },
+        };
+        let oe = OpenEstimate { estimate: est, utilization: 0.5, lambda: 0.8 };
+        let s = StoredEstimate::of_open(&oe, ReplicationPolicy::Upfront);
+        assert_eq!(s.cost, 6.0, "open records persist cost under every policy");
+        assert_eq!(s.utilization, 0.5);
+        assert_eq!(s.via, "monte-carlo");
     }
 
     #[test]

@@ -1,0 +1,149 @@
+//! Physics validation of the open-system serving simulator: the
+//! [`replica::eval::OpenSystem`] estimator against queueing theory, the
+//! closed-system estimators in its ρ → 0 limit, the determinism
+//! contract across fan-out widths, and the headline B*-vs-load flip.
+//!
+//! Tolerances are deliberately generous: pooled sojourn times are
+//! autocorrelated within a replication, so the reported `ci95`
+//! (computed as if samples were independent) underestimates the real
+//! sampling error.
+
+use std::sync::Arc;
+
+use replica::dist::ServiceDist;
+use replica::eval::{Estimator, MonteCarlo, OpenConfig, OpenSystem, Scenario};
+use replica::planner::{choose, Objective, SweepPoint};
+
+/// N = 1, B = 1, Exp(µ) service: the simulator degenerates to a
+/// textbook M/M/1 queue, so E[T] = 1/(µ − λ) — at µ = 1, ρ = 0.5 that
+/// is exactly 2.0 — and utilization equals ρ.
+#[test]
+fn mm1_sojourn_matches_theory() {
+    let scenario = Scenario::balanced(1, 1, Arc::new(ServiceDist::exp(1.0)));
+    let os = OpenSystem {
+        reps: 64,
+        seed: 42,
+        threads: 0,
+        open: OpenConfig { rho: 0.5, jobs: 400, warmup: 100 },
+    };
+    let oe = os.evaluate_open(&scenario).unwrap();
+    assert!(
+        (oe.estimate.mean - 2.0).abs() < 0.25,
+        "M/M/1 at rho=0.5 must have E[T] ~ 2.0, got {}",
+        oe.estimate.mean
+    );
+    assert!(
+        (oe.utilization - 0.5).abs() < 0.05,
+        "M/M/1 utilization must track rho, got {}",
+        oe.utilization
+    );
+    assert!((oe.lambda - 0.5).abs() < 1e-12);
+    // percentiles of an M/M/1 sojourn are exponential with mean 2:
+    // p50 = 2 ln 2 ~ 1.386, p95 = 2 ln 20 ~ 5.99
+    assert!((oe.estimate.p50 - 1.386).abs() < 0.3, "p50 {}", oe.estimate.p50);
+    assert!((oe.estimate.p95 - 5.99).abs() < 1.2, "p95 {}", oe.estimate.p95);
+}
+
+/// As ρ → 0 jobs never queue behind each other, so the open-system
+/// sojourn distribution collapses to the closed-system job compute
+/// time that `MonteCarlo` estimates on idle workers.
+#[test]
+fn rho_to_zero_limit_agrees_with_closed_system() {
+    let tau = Arc::new(ServiceDist::shifted_exp(0.1, 1.0));
+    for b in [1usize, 2, 4] {
+        let scenario = Scenario::balanced(4, b, Arc::clone(&tau));
+        let os = OpenSystem {
+            reps: 128,
+            seed: 9,
+            threads: 0,
+            open: OpenConfig { rho: 0.002, jobs: 60, warmup: 10 },
+        };
+        let open = os.evaluate_open(&scenario).unwrap();
+        let closed =
+            MonteCarlo { reps: 20_000, seed: 11, threads: 0 }.evaluate(&scenario).unwrap();
+        let diff = (open.estimate.mean - closed.mean).abs();
+        let band = 0.04 * closed.mean + open.estimate.ci95 + closed.ci95;
+        assert!(
+            diff < band,
+            "B={b}: open mean {} vs closed mean {} (band {band})",
+            open.estimate.mean,
+            closed.mean
+        );
+    }
+}
+
+/// The determinism contract: every replication's RNG stream is fixed by
+/// `substream(stream_seed, rep)` and the reduce is serial in rep order,
+/// so the estimate is bit-identical no matter how wide the fan-out.
+#[test]
+fn open_estimates_are_bit_identical_across_fanout_widths() {
+    let scenario =
+        Scenario::balanced(8, 2, Arc::new(ServiceDist::pareto(1.0, 2.2)));
+    let reference = OpenSystem {
+        reps: 48,
+        seed: 77,
+        threads: 1,
+        open: OpenConfig { rho: 0.4, jobs: 50, warmup: 10 },
+    }
+    .evaluate_open(&scenario)
+    .unwrap();
+    for threads in [2usize, 4, 8] {
+        let oe = OpenSystem {
+            reps: 48,
+            seed: 77,
+            threads,
+            open: OpenConfig { rho: 0.4, jobs: 50, warmup: 10 },
+        }
+        .evaluate_open(&scenario)
+        .unwrap();
+        assert_eq!(
+            oe.estimate.mean.to_bits(),
+            reference.estimate.mean.to_bits(),
+            "threads={threads}"
+        );
+        assert_eq!(oe.estimate.p99.to_bits(), reference.estimate.p99.to_bits());
+        assert_eq!(oe.estimate.cost.to_bits(), reference.estimate.cost.to_bits());
+        assert_eq!(oe.utilization.to_bits(), reference.utilization.to_bits());
+    }
+}
+
+/// The headline result: B* depends on load. For sexp(0.1, 1) on N = 4
+/// workers, full diversity (B = 1) minimizes E[T] on idle workers
+/// (4·(δ + 1/(4µ)) = 1.4 < δ + H₄/µ ≈ 2.18), but its 4× worker-seconds
+/// exceed capacity once λ·5.6 > 4 — so under heavy load the optimum
+/// collapses to full parallelism (B = N).
+#[test]
+fn b_star_flips_from_diversity_to_parallelism_with_load() {
+    let tau = Arc::new(ServiceDist::shifted_exp(0.1, 1.0));
+    let spectrum_at = |rho: f64| -> Vec<SweepPoint> {
+        [1usize, 2, 4]
+            .iter()
+            .map(|&b| {
+                let scenario = Scenario::balanced(4, b, Arc::clone(&tau));
+                let oe = OpenSystem {
+                    reps: 96,
+                    seed: 23,
+                    threads: 0,
+                    open: OpenConfig { rho, jobs: 80, warmup: 20 },
+                }
+                .evaluate_open(&scenario)
+                .unwrap();
+                SweepPoint {
+                    batches: b,
+                    mean: oe.estimate.mean,
+                    cov: oe.estimate.cov,
+                    cost: oe.estimate.cost,
+                }
+            })
+            .collect()
+    };
+    let light = choose(&spectrum_at(0.05), Objective::MeanCompletion).unwrap();
+    assert_eq!(light.batches, 1, "light load must pick full diversity");
+    let heavy = choose(&spectrum_at(0.9), Objective::MeanCompletion).unwrap();
+    assert_eq!(heavy.batches, 4, "heavy load must pick full parallelism");
+    // and the mechanism is visible in the cost column: B = 1 burns ~4x
+    // the worker-seconds of B = 4 per job at light load
+    let light_points = spectrum_at(0.05);
+    let (b1, b4) = (light_points[0].cost, light_points[2].cost);
+    assert!(b1 > 2.5 * b4, "B=1 cost {b1} must dwarf B=4 cost {b4}");
+}
