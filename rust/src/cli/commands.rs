@@ -198,6 +198,9 @@ pub fn sweep(args: &mut Args) -> Result<()> {
     if let Some(spec_path) = args.get("spec") {
         return sweep_from_spec(args, &spec_path);
     }
+    if args.get_bool("paired") {
+        return sweep_paired_cmd(args);
+    }
     let n = args.get_usize("workers", 100)?;
     let tau = service_from(args)?;
     let replication = replication_from(args)?;
@@ -217,7 +220,13 @@ pub fn sweep(args: &mut Args) -> Result<()> {
         let estimates = MonteCarlo::new(reps, seed).evaluate_many(&scenarios)?;
         bs.iter()
             .zip(estimates.iter())
-            .map(|(&b, e)| SweepPoint { batches: b, mean: e.mean, cov: e.cov, cost: e.cost })
+            .map(|(&b, e)| SweepPoint {
+                batches: b,
+                mean: e.mean,
+                cov: e.cov,
+                cost: e.cost,
+                ci95: e.ci95,
+            })
             .collect()
     };
     let mut t = Table::new(
@@ -243,6 +252,157 @@ pub fn sweep(args: &mut Args) -> Result<()> {
         ]);
     }
     t.print();
+    Ok(())
+}
+
+/// `replica sweep --paired`: the common-random-numbers spectrum. Every
+/// B consumes the same per-replication service draws, so the table
+/// reports the ci95 of each point's *difference* from the best B —
+/// usually far tighter than the per-point ci95 — and `--eps E`
+/// replaces `--reps` with adaptive doubling that stops once every
+/// difference is resolved to ±E (ceiling `--max-reps`).
+fn sweep_paired_cmd(args: &mut Args) -> Result<()> {
+    let n = args.get_usize("workers", 100)?;
+    let tau = service_from(args)?;
+    if !replication_from(args)?.is_upfront() {
+        return Err(Error::Config(
+            "--paired sweeps the up-front spectrum; timed policies are not supported"
+                .into(),
+        ));
+    }
+    let seed = args.get_u64("seed", 0)?;
+    let planner = Planner::new(n, tau.clone());
+    let spectrum = match args.get("eps") {
+        Some(v) => {
+            let eps =
+                v.parse::<f64>().map_err(|e| Error::Config(format!("--eps {v}: {e}")))?;
+            let max = args.get_usize("max-reps", 1 << 16)?;
+            planner.sweep_paired_until(eps, max, seed)?
+        }
+        None => {
+            let reps = args.get_usize("reps", DEFAULT_REPS)?;
+            planner.sweep_paired(reps, seed)?
+        }
+    };
+    let mut t = Table::new(
+        &format!(
+            "Paired (CRN) spectrum: N={n}, tau ~ {}, {} replications",
+            tau.label(),
+            spectrum.replications
+        ),
+        vec!["B", "batch size", "E[T]", "ci95", "dE[T] vs best", "ci95(diff)", "paired"],
+    );
+    for (i, p) in spectrum.points.iter().enumerate() {
+        let (diff, diff_ci, paired) = if i == spectrum.reference {
+            ("best".into(), "-".into(), "-".into())
+        } else {
+            (fnum(p.diff_mean), fnum(p.diff_ci95), p.paired.to_string())
+        };
+        t.row(vec![
+            p.point.batches.to_string(),
+            (n / p.point.batches).to_string(),
+            fnum(p.point.mean),
+            fnum(p.point.ci95),
+            diff,
+            diff_ci,
+            paired,
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// `replica crn-bench`: measure how many replications the paired
+/// (common-random-numbers) spectrum needs to resolve every B's
+/// difference from the best to ±eps, versus independent per-scenario
+/// streams reaching the same target (difference CIs combined by
+/// quadrature). Both arms use the same doubling schedule, so the
+/// printed ratio is the variance-efficiency gain CI gates on
+/// (scripts/check_variance_floor.sh). Deterministic: both arms derive
+/// every stream from `--seed`.
+pub fn crn_bench(args: &mut Args) -> Result<()> {
+    let (n, tau) = match args.get("spec") {
+        Some(spec_path) => {
+            let spec = crate::sweep::SweepSpec::from_file(Path::new(&spec_path))?;
+            let trace = spec.load_trace()?;
+            let job = match args.get("job") {
+                Some(v) => {
+                    v.parse::<u64>().map_err(|e| Error::Config(format!("--job {v}: {e}")))?
+                }
+                None => *trace.job_ids().first().ok_or_else(|| {
+                    Error::Config("crn-bench: the spec's trace has no jobs".into())
+                })?,
+            };
+            let analysis = JobAnalysis::of(&trace, job).ok_or_else(|| {
+                Error::Config(format!("job {job} has no completed tasks in the trace"))
+            })?;
+            (analysis.n_tasks, analysis.service_dist())
+        }
+        None => (args.get_usize("workers", 100)?, service_from(args)?),
+    };
+    let seed = args.get_u64("seed", 0)?;
+    let max = args.get_usize("max-reps", 1 << 15)?;
+    if max == 0 {
+        return Err(Error::Config("--max-reps must be >= 1".into()));
+    }
+    let planner = Planner::new(n, tau.clone());
+    // the target: --eps absolute, or --eps-rel (default 2%) of the
+    // best arm's mean from a small pilot
+    let eps = match args.get("eps") {
+        Some(v) => v.parse::<f64>().map_err(|e| Error::Config(format!("--eps {v}: {e}")))?,
+        None => {
+            let rel = args.get_f64("eps-rel", 0.02)?;
+            if !rel.is_finite() || rel <= 0.0 {
+                return Err(Error::Config("--eps-rel must be finite and > 0".into()));
+            }
+            let pilot = planner.sweep_paired(64.min(max), seed)?;
+            let reference = pilot.points.get(pilot.reference).ok_or_else(|| {
+                Error::Internal("paired pilot produced no reference point".into())
+            })?;
+            rel * reference.point.mean
+        }
+    };
+    let paired = planner.sweep_paired_until(eps, max, seed)?;
+    // independent arm: the same spectrum on per-scenario substreams
+    // (evaluate_many), doubling until every quadrature diff CI <= eps
+    let bs = crate::analysis::optimizer::feasible_b(n);
+    let scenarios: Vec<Scenario> =
+        bs.iter().map(|&b| Scenario::balanced(n, b, tau.clone())).collect();
+    let mut reps = 64usize.min(max);
+    let independent = loop {
+        let ests = MonteCarlo::new(reps, seed).evaluate_many(&scenarios)?;
+        let mut reference = 0usize;
+        for (i, e) in ests.iter().enumerate() {
+            if e.mean.is_finite()
+                && (!ests[reference].mean.is_finite() || e.mean < ests[reference].mean)
+            {
+                reference = i;
+            }
+        }
+        let mut worst = 0.0f64;
+        for (i, e) in ests.iter().enumerate() {
+            if i == reference {
+                continue;
+            }
+            let d = (e.ci95 * e.ci95 + ests[reference].ci95 * ests[reference].ci95).sqrt();
+            if d.is_nan() {
+                worst = f64::INFINITY;
+            } else if d > worst {
+                worst = d;
+            }
+        }
+        if worst <= eps || reps == max {
+            break reps;
+        }
+        reps = reps.saturating_mul(2).min(max);
+    };
+    let ratio = independent as f64 / paired.replications.max(1) as f64;
+    println!(
+        "{{\"workers\":{n},\"points\":{},\"eps\":{eps},\"paired_reps\":{},\
+         \"independent_reps\":{independent},\"ratio\":{ratio}}}",
+        bs.len(),
+        paired.replications
+    );
     Ok(())
 }
 
@@ -272,6 +432,21 @@ fn spec_with_overrides(args: &mut Args, spec_path: &str) -> Result<crate::sweep:
     spec.reps = args.get_usize("reps", spec.reps)?;
     if spec.reps == 0 {
         return Err(Error::Config("--reps must be >= 1".into()));
+    }
+    // under `reps: auto` the ceiling rides the reps budget, so a --reps
+    // override moves both and every command resolves the same keys
+    if let Some(auto) = &mut spec.auto_reps {
+        auto.max = spec.reps;
+    }
+    // --eps E turns any spec into a precision-targeted one (ceiling =
+    // the resolved reps budget), re-keying the grid exactly as the
+    // spec's own `reps: {"auto": ...}` form would
+    if let Some(v) = args.get("eps") {
+        let eps = v.parse::<f64>().map_err(|e| Error::Config(format!("--eps {v}: {e}")))?;
+        if !eps.is_finite() || eps <= 0.0 {
+            return Err(Error::Config("--eps must be finite and > 0".into()));
+        }
+        spec.auto_reps = Some(crate::sweep::AutoReps { eps, max: spec.reps });
     }
     spec.seed = args.get_u64("seed", spec.seed)?;
     Ok(spec)
@@ -555,6 +730,7 @@ pub fn opensys(args: &mut Args) -> Result<()> {
                 mean: r.est.mean,
                 cov: r.est.cov,
                 cost: r.est.cost,
+                ci95: r.est.ci95,
             })
             .collect();
         let Some(best) = crate::planner::choose(&points, objective) else {
@@ -1648,5 +1824,99 @@ mod tests {
     #[test]
     fn unknown_experiment_is_error() {
         assert!(experiment(&mut args("experiment fig99")).is_err());
+    }
+
+    #[test]
+    fn paired_sweep_runs_fixed_and_precision_modes() {
+        sweep(&mut args(
+            "sweep --workers 12 --family exp --paired=true --reps 300 --seed 3",
+        ))
+        .unwrap();
+        sweep(&mut args(
+            "sweep --workers 12 --family exp --paired=true --eps 0.5 --max-reps 256",
+        ))
+        .unwrap();
+        // the paired spectrum couples the up-front policy's draws; a
+        // timed policy is refused, not silently un-paired
+        assert!(sweep(&mut args(
+            "sweep --workers 12 --family exp --paired=true --policy relaunch --spec-t 2",
+        ))
+        .is_err());
+        // the precision target is validated before any wave runs
+        assert!(sweep(&mut args(
+            "sweep --workers 12 --family exp --paired=true --eps 0",
+        ))
+        .is_err());
+        assert!(sweep(&mut args(
+            "sweep --workers 12 --family exp --paired=true --eps lots",
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn crn_bench_prints_the_efficiency_line() {
+        crn_bench(&mut args(
+            "crn-bench --workers 12 --family exp --eps-rel 0.05 --max-reps 1024 --seed 7",
+        ))
+        .unwrap();
+        crn_bench(&mut args("crn-bench --workers 12 --family exp --eps 0.5 --max-reps 256"))
+            .unwrap();
+        assert!(crn_bench(&mut args("crn-bench --workers 12 --eps-rel 0")).is_err());
+        assert!(crn_bench(&mut args("crn-bench --workers 12 --max-reps 0")).is_err());
+    }
+
+    #[test]
+    fn crn_bench_resolves_the_arm_from_a_spec() {
+        let dir = std::env::temp_dir().join("replica_cli_crn_spec");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = dir.join("spec.json");
+        std::fs::write(
+            &spec,
+            r#"{"workload": {"generate": {"jobs": 2, "tasks_per_job": 12, "seed": 3}},
+                "reps": 100, "seed": 1}"#,
+        )
+        .unwrap();
+        crn_bench(&mut args(&format!(
+            "crn-bench --spec {} --eps 0.5 --max-reps 256 --seed 5",
+            spec.display()
+        )))
+        .unwrap();
+        // a job id absent from the trace is a config error
+        assert!(crn_bench(&mut args(&format!(
+            "crn-bench --spec {} --job 999 --eps 0.5",
+            spec.display()
+        )))
+        .is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_spec_eps_override_targets_precision_and_resumes() {
+        let dir = std::env::temp_dir().join("replica_cli_sweep_eps");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = dir.join("spec.json");
+        std::fs::write(
+            &spec,
+            r#"{"workload": {"generate": {"jobs": 2, "tasks_per_job": 12, "seed": 3}},
+                "reps": 512, "seed": 1, "shard_size": 4}"#,
+        )
+        .unwrap();
+        let out = dir.join("results.jsonl");
+        let cmd = format!(
+            "sweep --spec {} --out {} --eps 0.3",
+            spec.display(),
+            out.display()
+        );
+        sweep(&mut args(&cmd)).unwrap();
+        let first = std::fs::read_to_string(&out).unwrap();
+        assert_eq!(first.lines().count(), 12);
+        assert!(first.contains("\"replications\":"), "realized counts must be stored");
+        // the same precision target resolves the same content keys, so
+        // a rerun is a pure resume: byte-identical store
+        sweep(&mut args(&cmd)).unwrap();
+        assert_eq!(std::fs::read_to_string(&out).unwrap(), first);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -8,9 +8,12 @@
 //!                    [--policy upfront|speculative|relaunch --spec-t T]
 //! replica sweep      --workers 100 --family sexp --delta 0.05 --mu 1
 //!                    [--policy upfront|speculative|relaunch --spec-t T]
+//!                    [--paired [--eps E --max-reps N]]
 //! replica sweep      --spec sweep.json [--out results.jsonl] [--cache cache.jsonl]
-//!                    [--limit-shards K] [--shard K/M] [--cache-gc]
+//!                    [--limit-shards K] [--shard K/M] [--cache-gc] [--eps E]
 //!                    [--cache-import DIR] [--objective mean|cov|tradeoff=0.5|cost=0.5]
+//! replica crn-bench  [--spec sweep.json | --workers N --family F ...]
+//!                    [--eps E | --eps-rel R] [--max-reps N] [--seed N]
 //! replica opensys    --spec open_system.json [--pool-threads 0] [--threads 0]
 //!                    [--objective mean|cov|tradeoff=0.5|cost=0.5]
 //! replica sweep-merge --spec sweep.json --out results.jsonl --shards M
@@ -44,7 +47,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
     let argv: Vec<String> = argv
         .into_iter()
         .map(|tok| match tok.as_str() {
-            "--cache-gc" | "--report-only" | "--joint" | "--allow-partial" => {
+            "--cache-gc" | "--report-only" | "--joint" | "--allow-partial" | "--paired" => {
                 format!("{tok}=true")
             }
             _ => tok,
@@ -64,6 +67,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         Some("plan") => commands::plan(&mut args),
         Some("simulate") => commands::simulate(&mut args),
         Some("sweep") => commands::sweep(&mut args),
+        Some("crn-bench") => commands::crn_bench(&mut args),
         Some("opensys") => commands::opensys(&mut args),
         Some("sweep-merge") => commands::sweep_merge(&mut args),
         Some("cluster-serve") => commands::cluster_serve(&mut args),
@@ -95,7 +99,12 @@ COMMANDS:
               with --spec FILE: the sharded, resumable trace-sweep engine
               (scenario grid -> JSONL store + estimate cache + gain report;
               rerunning the same command resumes a killed run); with
-              --shard K/M: one process of an M-way distributed sweep
+              --shard K/M: one process of an M-way distributed sweep;
+              with --paired: the common-random-numbers spectrum (every B
+              shares one draw stream; the table adds difference CIs)
+  crn-bench   replications needed by the paired (CRN) spectrum vs
+              independent streams for the same ±eps difference
+              resolution; prints one JSON line (the CI variance floor)
   opensys     the open-system serving sweep: jobs arrive as a stream
               (spec needs an \"arrivals\" axis of offered loads rho),
               each case reports sojourn-time percentiles, worker
@@ -138,6 +147,16 @@ COMMON FLAGS:
                         --objective cost=W)
   --backend B           mc | analytic | auto (simulate; default mc)
   --reps N              Monte-Carlo replications
+  --paired              (sweep) evaluate the spectrum on one shared draw
+                        stream (common random numbers) and report the
+                        ci95 of each point's difference from the best B
+  --eps E               precision target: with --paired (or crn-bench),
+                        double replications until every difference CI
+                        <= E; with --spec, rewrite the spec's budget to
+                        reps: {"auto": {"eps": E, "max": reps}}
+  --max-reps N          replication ceiling for --eps / crn-bench
+  --eps-rel R           (crn-bench) derive eps as R x the best arm's
+                        pilot mean (default 0.02)
   --seed N              RNG seed
   --pool-threads N      size of the persistent simulation worker pool,
                         shared by every evaluation (0 = all cores)

@@ -40,6 +40,6 @@ mod tailfit;
 
 pub use alias::AliasTable;
 pub use empirical::Empirical;
-pub use sampler::Sampler;
+pub use sampler::{FillMode, Sampler};
 pub use service::ServiceDist;
 pub use tailfit::{TailClass, TailFit};

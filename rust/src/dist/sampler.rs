@@ -20,6 +20,33 @@
 //! like the scalar path. `Bimodal`/`Empirical` use the alias path
 //! instead, which is identical **in distribution** (property-tested in
 //! `tests/sampler_properties.rs`) but consumes the stream differently.
+//!
+//! # Variance-reduced fills
+//!
+//! Two extra fill strategies exist for the single-uniform inverse-CDF
+//! families (Exp, SExp, Pareto, Weibull):
+//!
+//! * [`Sampler::fill_antithetic`] — u/1−u pairing: adjacent slots share
+//!   one uniform and its complement. The per-draw marginal is exact, so
+//!   any *mean over draws* (E\[τ\], E\[h(τ)\] for monotone h) stays
+//!   unbiased while its variance drops.
+//! * [`Sampler::fill_stratified`] — one draw per equal-probability
+//!   stratum of the batch: slot `i` of an n-slot fill lands in CDF cell
+//!   `[i/n, (i+1)/n)`. Again exact marginals, near-zero quantile noise.
+//!
+//! Both are for estimating **expectations that are symmetric (or
+//! linear) in the batch**. They are deliberately *not* wired into the
+//! job simulator's per-replication fills: a replication's completion
+//! time `T = max_b min_w τ_w` is a nonlinear function of the joint
+//! draw vector, and draws that are dependent *within one replication*
+//! (an antithetic pair, a stratified grid) would bias E\[T\]. The
+//! simulator's variance reduction is common random numbers across the
+//! B-spectrum instead (see `planner::PairedSpectrum`).
+//!
+//! Families without a single-uniform inverse CDF (Gamma's rejection
+//! loop, the alias-table-backed Bimodal/Empirical) fall back to the
+//! plain [`Sampler::fill`]; the returned [`FillMode`] records which
+//! strategy actually ran so callers can carry it into provenance.
 
 use crate::dist::alias::AliasTable;
 use crate::dist::ServiceDist;
@@ -62,6 +89,37 @@ pub(crate) fn gamma_draw(rng: &mut Pcg64, shape: f64) -> f64 {
         let u = rng.uniform_pos();
         if u.ln() < 0.5 * z * z + d - d * v + d * v.ln() {
             return d * v;
+        }
+    }
+}
+
+// ------------------------------------------------ variance-reduced fills
+
+/// The smallest value `Pcg64::uniform_pos` can return (2⁻⁵³); clamping
+/// a derived uniform to this floor keeps it inside the kernels' (0, 1]
+/// domain so `ln` never sees zero.
+const U_MIN: f64 = 1.0 / 9_007_199_254_740_992.0;
+
+/// The fill strategy that actually ran for a variance-reduced fill
+/// request — `Plain` when the family forced a fallback.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FillMode {
+    /// u/1−u pairing in adjacent slots (closed-form inverse-CDF only).
+    Antithetic,
+    /// One draw per equal-probability CDF stratum of the batch.
+    Stratified,
+    /// Independent draws — the fallback for Gamma (rejection loop) and
+    /// the alias-table families (Bimodal, Empirical).
+    Plain,
+}
+
+impl FillMode {
+    /// Stable lowercase label for provenance records and CLI output.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FillMode::Antithetic => "antithetic",
+            FillMode::Stratified => "stratified",
+            FillMode::Plain => "plain",
         }
     }
 }
@@ -199,6 +257,87 @@ impl Sampler {
             }
         }
     }
+
+    /// True when this family draws through a single-uniform inverse-CDF
+    /// kernel, so the variance-reduced fills apply without fallback.
+    pub fn supports_inverse_cdf(&self) -> bool {
+        matches!(
+            self,
+            Sampler::Exp { .. }
+                | Sampler::ShiftedExp { .. }
+                | Sampler::Pareto { .. }
+                | Sampler::Weibull { .. }
+        )
+    }
+
+    /// Map one uniform `u ∈ (0, 1]` through the family's inverse-CDF
+    /// kernel — the same arithmetic [`Sampler::fill`] applies to
+    /// `rng.uniform_pos()`, so feeding the RNG's own uniform through
+    /// here reproduces the plain draw bit-for-bit.
+    ///
+    /// Only meaningful for the [`Sampler::supports_inverse_cdf`]
+    /// families; for the rest it returns NaN (total, never panics).
+    #[inline]
+    fn from_uniform(&self, u: f64) -> f64 {
+        match self {
+            Sampler::Exp { mu } => -u.ln() / mu,
+            Sampler::ShiftedExp { delta, mu } => delta - u.ln() / mu,
+            Sampler::Pareto { sigma, alpha } => sigma * u.powf(-1.0 / alpha),
+            Sampler::Weibull { shape, scale } => {
+                scale * (-u.ln()).powf(1.0 / shape)
+            }
+            Sampler::Gamma { .. }
+            | Sampler::Bimodal { .. }
+            | Sampler::Empirical { .. } => f64::NAN,
+        }
+    }
+
+    /// Fill `out` with antithetic pairs: slot `2k` draws `u`, slot
+    /// `2k+1` reuses its complement `1 − u` (clamped into (0, 1]), both
+    /// through the family's inverse-CDF kernel. A trailing odd slot
+    /// gets an independent draw. Families without a single-uniform
+    /// inverse CDF fall back to [`Sampler::fill`].
+    ///
+    /// Returns the strategy that actually ran so callers can record
+    /// fallbacks in provenance.
+    pub fn fill_antithetic(&self, rng: &mut Pcg64, out: &mut [f64]) -> FillMode {
+        if !self.supports_inverse_cdf() {
+            self.fill(rng, out);
+            return FillMode::Plain;
+        }
+        let mut i = 0;
+        while i + 1 < out.len() {
+            let u = rng.uniform_pos();
+            out[i] = self.from_uniform(u);
+            out[i + 1] = self.from_uniform((1.0 - u).max(U_MIN));
+            i += 2;
+        }
+        if i < out.len() {
+            out[i] = self.from_uniform(rng.uniform_pos());
+        }
+        FillMode::Antithetic
+    }
+
+    /// Fill `out` with one draw per equal-probability stratum: slot `i`
+    /// of an n-slot fill uses `u = 1 − (i + V)/n` with `V ∈ [0, 1)`, so
+    /// its CDF value lands in `[i/n, (i+1)/n)`. One uniform is consumed
+    /// per slot, exactly like the plain fill. Families without a
+    /// single-uniform inverse CDF fall back to [`Sampler::fill`].
+    ///
+    /// Returns the strategy that actually ran so callers can record
+    /// fallbacks in provenance.
+    pub fn fill_stratified(&self, rng: &mut Pcg64, out: &mut [f64]) -> FillMode {
+        if !self.supports_inverse_cdf() || out.is_empty() {
+            self.fill(rng, out);
+            return FillMode::Plain;
+        }
+        let n = out.len() as f64;
+        for (i, x) in out.iter_mut().enumerate() {
+            let u = 1.0 - (i as f64 + rng.uniform()) / n;
+            *x = self.from_uniform(u.max(U_MIN));
+        }
+        FillMode::Stratified
+    }
 }
 
 #[cfg(test)]
@@ -307,7 +446,113 @@ mod tests {
     }
 
     #[test]
-    fn bimodal_degenerate_weights_collapse() {
+    fn antithetic_pairs_are_complements() {
+        // For Exp(μ) the survival function S(x) = exp(−μx) recovers the
+        // uniform that produced x, so each pair's survival values must
+        // sum to exactly 1.
+        let sampler = Sampler::compile(&ServiceDist::exp(1.3));
+        let mut rng = Pcg64::new(7);
+        let mut buf = vec![0.0; 64];
+        let mode = sampler.fill_antithetic(&mut rng, &mut buf);
+        assert_eq!(mode, FillMode::Antithetic);
+        for pair in buf.chunks_exact(2) {
+            let u0 = (-1.3 * pair[0]).exp();
+            let u1 = (-1.3 * pair[1]).exp();
+            assert!((u0 + u1 - 1.0).abs() < 1e-12, "{u0} + {u1}");
+        }
+    }
+
+    #[test]
+    fn antithetic_handles_odd_lengths() {
+        let sampler = Sampler::compile(&ServiceDist::weibull(0.7, 1.5));
+        let mut rng = Pcg64::new(11);
+        let mut buf = vec![0.0; 7];
+        let mode = sampler.fill_antithetic(&mut rng, &mut buf);
+        assert_eq!(mode, FillMode::Antithetic);
+        assert!(buf.iter().all(|x| x.is_finite() && *x > 0.0));
+    }
+
+    #[test]
+    fn fallback_families_match_plain_fill_bitwise() {
+        // Gamma (rejection loop) and the alias-table families must fall
+        // back to the plain fill, draw-for-draw identical.
+        for dist in [
+            ServiceDist::gamma_dist(2.5, 0.8),
+            ServiceDist::bimodal(0.15, (0.1, 10.0), (5.0, 1.0)),
+            ServiceDist::empirical(vec![1.0, 2.0, 3.0, 5.0]),
+        ] {
+            let sampler = Sampler::compile(&dist);
+            let mut plain = vec![0.0; 100];
+            let mut reduced = vec![0.0; 100];
+            let mut rng = Pcg64::new(13);
+            sampler.fill(&mut rng, &mut plain);
+
+            let mut rng = Pcg64::new(13);
+            let mode = sampler.fill_antithetic(&mut rng, &mut reduced);
+            assert_eq!(mode, FillMode::Plain, "{}", dist.label());
+            for (a, b) in plain.iter().zip(&reduced) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}", dist.label());
+            }
+
+            let mut rng = Pcg64::new(13);
+            let mode = sampler.fill_stratified(&mut rng, &mut reduced);
+            assert_eq!(mode, FillMode::Plain, "{}", dist.label());
+            for (a, b) in plain.iter().zip(&reduced) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}", dist.label());
+            }
+        }
+    }
+
+    #[test]
+    fn stratified_slots_land_in_their_strata() {
+        // Pareto CDF F(x) = 1 − (σ/x)^α recovers the stratum position:
+        // slot i of an n-slot fill must have F(x_i) ∈ [i/n, (i+1)/n).
+        let (sigma, alpha) = (1.0, 3.0);
+        let sampler = Sampler::compile(&ServiceDist::pareto(sigma, alpha));
+        let mut rng = Pcg64::new(19);
+        let mut buf = vec![0.0; 128];
+        let mode = sampler.fill_stratified(&mut rng, &mut buf);
+        assert_eq!(mode, FillMode::Stratified);
+        let n = buf.len() as f64;
+        for (i, &x) in buf.iter().enumerate() {
+            let f = 1.0 - (sigma / x).powf(alpha);
+            let (lo, hi) = (i as f64 / n, (i as f64 + 1.0) / n);
+            assert!(f >= lo - 1e-12 && f < hi + 1e-12, "slot {i}: {f}");
+        }
+    }
+
+    #[test]
+    fn antithetic_reduces_variance_of_the_mean() {
+        // Mean-of-Exp estimation: antithetic pairs are negatively
+        // correlated, so block means must spread less than independent
+        // block means. Deterministic seeds; generous margin.
+        let sampler = Sampler::compile(&ServiceDist::exp(1.0));
+        let spread = |fill_antithetic: bool| {
+            let mut rng = Pcg64::new(101);
+            let mut buf = vec![0.0; 512];
+            let mut means = Vec::new();
+            for _ in 0..200 {
+                if fill_antithetic {
+                    sampler.fill_antithetic(&mut rng, &mut buf);
+                } else {
+                    sampler.fill(&mut rng, &mut buf);
+                }
+                let mut s = 0.0;
+                for &x in &buf {
+                    s += x;
+                }
+                means.push(s / buf.len() as f64);
+            }
+            let m = means.iter().sum::<f64>() / means.len() as f64;
+            means.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+                / (means.len() - 1) as f64
+        };
+        let (v_plain, v_anti) = (spread(false), spread(true));
+        assert!(
+            v_anti < 0.7 * v_plain,
+            "antithetic {v_anti} vs plain {v_plain}"
+        );
+    }
         let fast = (0.1, 10.0);
         let slow = (5.0, 1.0);
         let all_fast = Sampler::compile(&ServiceDist::bimodal(0.0, fast, slow));

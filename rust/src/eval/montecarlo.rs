@@ -35,6 +35,13 @@ const MIN_UNIT_REPS: usize = 256;
 /// many slots so memory stays bounded by the wave, not the sweep.
 const MAX_WAVE_SLOTS: usize = 1 << 22;
 
+/// First wave size for precision-targeted ([`MonteCarlo::until_ci95`])
+/// evaluation. Waves double from here and each wave recomputes from
+/// replication 0, so total work is at most 2× the realized count and
+/// the returned estimate is exactly the fixed-reps estimate at that
+/// count — shard- and position-independent by construction.
+const AUTO_WAVE_START: usize = 64;
+
 /// The Monte-Carlo estimator.
 ///
 /// Every replication draws from its own counter-based RNG stream
@@ -104,6 +111,24 @@ impl MonteCarlo {
 
     /// One wave of `run_batch`: prepare, fan out, reduce.
     fn run_wave(&self, items: &[(&Scenario, u64)]) -> Result<Vec<Estimate>> {
+        let (outcomes, costs, threads) = self.run_wave_raw(items)?;
+        let mut estimates = Vec::with_capacity(items.len());
+        for (i, (_, seed)) in items.iter().enumerate() {
+            let slots = &outcomes[i * self.reps..(i + 1) * self.reps];
+            let cost_slots = &costs[i * self.reps..(i + 1) * self.reps];
+            estimates.push(self.reduce(slots, cost_slots, *seed, threads));
+        }
+        Ok(estimates)
+    }
+
+    /// The fan-out core of a wave: prepare each item, run every
+    /// replication into its pre-assigned slot, and hand back the raw
+    /// outcome/cost buffers (scenario `i` owns slots
+    /// `[i·reps, (i+1)·reps)`) plus the resolved thread count.
+    fn run_wave_raw(
+        &self,
+        items: &[(&Scenario, u64)],
+    ) -> Result<(Vec<JobOutcome>, Vec<f64>, usize)> {
         // Prepare serially: feasibility problems surface here, lowest
         // item first, before any unit is queued.
         let preps = items
@@ -169,14 +194,85 @@ impl MonteCarlo {
         if let Some((_, _, error)) = first_error {
             return Err(error);
         }
+        Ok((outcomes, costs, threads))
+    }
 
-        let mut estimates = Vec::with_capacity(n_scen);
-        for (i, (_, seed)) in items.iter().enumerate() {
-            let slots = &outcomes[i * self.reps..(i + 1) * self.reps];
-            let cost_slots = &costs[i * self.reps..(i + 1) * self.reps];
-            estimates.push(self.reduce(slots, cost_slots, *seed, threads));
+    /// Like [`MonteCarlo::run_batch`], but additionally return each
+    /// item's per-replication completion times in replication order
+    /// (NaN = failed replication) — the raw material for
+    /// paired-difference (common-random-numbers) estimation in
+    /// `planner::PairedSpectrum`. Pass every item the **same** stream
+    /// seed and replication `r` of every item consumes the same
+    /// `substream(seed, r)` draw stream.
+    pub(crate) fn run_batch_retained(
+        &self,
+        items: &[(&Scenario, u64)],
+    ) -> Result<Vec<(Estimate, Vec<f64>)>> {
+        if self.reps == 0 {
+            return Err(Error::Config("MonteCarlo needs reps >= 1".into()));
         }
-        Ok(estimates)
+        let window = (MAX_WAVE_SLOTS / self.reps).max(1);
+        let mut out = Vec::with_capacity(items.len());
+        for wave in items.chunks(window) {
+            let (outcomes, costs, threads) = self.run_wave_raw(wave)?;
+            for (i, (_, seed)) in wave.iter().enumerate() {
+                let slots = &outcomes[i * self.reps..(i + 1) * self.reps];
+                let cost_slots = &costs[i * self.reps..(i + 1) * self.reps];
+                let est = self.reduce(slots, cost_slots, *seed, threads);
+                let mut times = Vec::with_capacity(self.reps);
+                for outcome in slots {
+                    times.push(match outcome {
+                        JobOutcome::Done(t) => *t,
+                        JobOutcome::Failed => f64::NAN,
+                    });
+                }
+                out.push((est, times));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Precision-targeted evaluation: double the replication count in
+    /// waves (starting at [`AUTO_WAVE_START`]) until the estimate's
+    /// ci95 half-width drops to `eps` or the count reaches `max`, and
+    /// return that estimate. Each wave recomputes from replication 0 on
+    /// `substream(stream_seed, rep)`, so the result is **exactly** the
+    /// fixed-reps estimate at the realized count
+    /// (`Estimate::replications`) — byte-identical across thread
+    /// counts, shards, and resume, with total work bounded by 2× the
+    /// realized count.
+    ///
+    /// The stopping rule is a function of the accumulated estimate
+    /// only — never wall-clock — and a NaN ci95 (fewer than two
+    /// completed replications) never satisfies the target, so sparse
+    /// coverage keeps doubling until `max`.
+    pub fn until_ci95(
+        &self,
+        scenario: &Scenario,
+        stream_seed: u64,
+        eps: f64,
+        max: usize,
+    ) -> Result<Estimate> {
+        if !(eps.is_finite() && eps > 0.0) {
+            return Err(Error::Config(format!(
+                "auto-reps eps must be finite and > 0, got {eps}"
+            )));
+        }
+        if max == 0 {
+            return Err(Error::Config("auto-reps max must be >= 1".into()));
+        }
+        let mut reps = AUTO_WAVE_START.min(max);
+        loop {
+            let wave = MonteCarlo { reps, seed: self.seed, threads: self.threads };
+            let mut batch = wave.run_batch(&[(scenario, stream_seed)])?;
+            let est = batch.pop().ok_or_else(|| {
+                Error::Internal("one item in, zero estimates out".into())
+            })?;
+            if est.ci95 <= eps || reps == max {
+                return Ok(est);
+            }
+            reps = reps.saturating_mul(2).min(max);
+        }
     }
 
     /// Serial reduction in replication order: float accumulation is
@@ -748,6 +844,91 @@ mod tests {
         let err = MonteCarlo::new(100, 0).evaluate_many(&scenarios).unwrap_err();
         // the first infeasible item (B=3) is the one reported
         assert!(format!("{err}").contains("B=3"), "{err}");
+    }
+
+    #[test]
+    fn until_ci95_is_the_fixed_reps_estimate_at_the_realized_count() {
+        let scenario = Scenario::balanced(12, 3, ServiceDist::exp(1.0));
+        let mc = MonteCarlo::new(1, 0); // reps field is ignored by auto
+        let auto = mc.until_ci95(&scenario, 77, 0.05, 1 << 14).unwrap();
+        assert!(auto.ci95 <= 0.05, "ci95 {}", auto.ci95);
+        assert!(auto.replications >= AUTO_WAVE_START);
+        let fixed = MonteCarlo::new(auto.replications, 0)
+            .run_batch(&[(&scenario, 77)])
+            .unwrap()
+            .pop()
+            .unwrap();
+        assert_eq!(auto.mean.to_bits(), fixed.mean.to_bits());
+        assert_eq!(auto.ci95.to_bits(), fixed.ci95.to_bits());
+        assert_eq!(auto.cost.to_bits(), fixed.cost.to_bits());
+        assert_eq!(auto.provenance, fixed.provenance);
+    }
+
+    #[test]
+    fn until_ci95_respects_max_and_thread_invariance() {
+        let scenario = Scenario::balanced(12, 3, ServiceDist::pareto(1.0, 2.5));
+        // unreachable eps: stops exactly at max
+        let capped =
+            MonteCarlo::serial(1, 5).until_ci95(&scenario, 9, 1e-12, 1000).unwrap();
+        assert_eq!(capped.replications, 1000);
+        // loose eps: stops at the first wave
+        let first = MonteCarlo::new(1, 5).until_ci95(&scenario, 9, 1e9, 1000).unwrap();
+        assert_eq!(first.replications, AUTO_WAVE_START);
+        // realized count and bits are thread-invariant
+        let wide = MonteCarlo { reps: 1, seed: 5, threads: 4 }
+            .until_ci95(&scenario, 9, 1e-12, 1000)
+            .unwrap();
+        assert_eq!(capped.mean.to_bits(), wide.mean.to_bits());
+        assert_eq!(capped.replications, wide.replications);
+    }
+
+    #[test]
+    fn until_ci95_rejects_bad_targets() {
+        let scenario = Scenario::balanced(4, 2, ServiceDist::exp(1.0));
+        let mc = MonteCarlo::new(1, 0);
+        assert!(mc.until_ci95(&scenario, 0, f64::NAN, 100).is_err());
+        assert!(mc.until_ci95(&scenario, 0, 0.0, 100).is_err());
+        assert!(mc.until_ci95(&scenario, 0, -1.0, 100).is_err());
+        assert!(mc.until_ci95(&scenario, 0, f64::INFINITY, 100).is_err());
+        assert!(mc.until_ci95(&scenario, 0, 0.1, 0).is_err());
+    }
+
+    #[test]
+    fn retained_times_reproduce_the_estimate() {
+        let scenario = Scenario::balanced(10, 2, ServiceDist::exp(1.0));
+        let mc = MonteCarlo::new(500, 3);
+        let mut retained = mc.run_batch_retained(&[(&scenario, 42)]).unwrap();
+        let (est, times) = retained.pop().unwrap();
+        assert_eq!(times.len(), 500);
+        let plain = mc.run_batch(&[(&scenario, 42)]).unwrap().pop().unwrap();
+        assert_eq!(est.mean.to_bits(), plain.mean.to_bits());
+        // replication-order mean of the retained times is the estimate
+        let mut s = Summary::new();
+        for &t in &times {
+            if !t.is_nan() {
+                s.record(t);
+            }
+        }
+        assert_eq!(s.mean().to_bits(), est.mean.to_bits());
+        assert_eq!(s.ci95().to_bits(), est.ci95.to_bits());
+    }
+
+    #[test]
+    fn retained_times_mark_failures_as_nan() {
+        let scenario = Scenario::balanced(8, 2, ServiceDist::exp(1.0))
+            .with_failures(FailureModel::Crash { p: 0.5 });
+        let mut retained = MonteCarlo::new(400, 1)
+            .run_batch_retained(&[(&scenario, 7)])
+            .unwrap();
+        let (est, times) = retained.pop().unwrap();
+        let mut failed = 0;
+        for &t in &times {
+            if t.is_nan() {
+                failed += 1;
+            }
+        }
+        assert_eq!(failed, 400 - est.completed);
+        assert!(failed > 0, "crash p=0.5 should fail some replications");
     }
 
     #[test]

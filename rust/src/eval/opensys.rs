@@ -61,6 +61,11 @@ pub const DEFAULT_OPEN_WARMUP: usize = 50;
 /// orders of magnitude heavier than a closed-system job draw.
 const MIN_UNIT_OPEN_REPS: usize = 8;
 
+/// First wave size for precision-targeted ([`OpenSystem::until_ci95`])
+/// evaluation — smaller than the closed-system start because one
+/// open-system replication is a whole stream simulation.
+const AUTO_OPEN_WAVE_START: usize = 8;
+
 /// Open-system operating point: the offered load and the measurement
 /// window, carried per sweep case and hashed into its content key.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -209,6 +214,42 @@ impl OpenSystem {
             return Err(error);
         }
         Ok(self.reduce(&slots, scenario.workers, lambda, stream_seed, threads))
+    }
+
+    /// Precision-targeted evaluation, mirroring
+    /// [`crate::eval::MonteCarlo::until_ci95`]: double the stream count
+    /// in waves (from [`AUTO_OPEN_WAVE_START`]) until the sojourn
+    /// estimate's ci95 half-width drops to `eps` or the count reaches
+    /// `max`. Each wave recomputes from replication 0 on
+    /// `substream(stream_seed, rep)`, so the result is exactly the
+    /// fixed-reps estimate at the realized count — byte-identical
+    /// across thread counts, shards, and resume. The stopping rule
+    /// depends only on the accumulated estimate (never wall-clock); a
+    /// NaN ci95 keeps doubling until `max`.
+    pub fn until_ci95(
+        &self,
+        scenario: &Scenario,
+        stream_seed: u64,
+        eps: f64,
+        max: usize,
+    ) -> Result<OpenEstimate> {
+        if !(eps.is_finite() && eps > 0.0) {
+            return Err(Error::Config(format!(
+                "auto-reps eps must be finite and > 0, got {eps}"
+            )));
+        }
+        if max == 0 {
+            return Err(Error::Config("auto-reps max must be >= 1".into()));
+        }
+        let mut reps = AUTO_OPEN_WAVE_START.min(max);
+        loop {
+            let wave = OpenSystem { reps, ..*self };
+            let open = wave.evaluate_open_seeded(scenario, stream_seed)?;
+            if open.estimate.ci95 <= eps || reps == max {
+                return Ok(open);
+            }
+            reps = reps.saturating_mul(2).min(max);
+        }
     }
 
     /// Serial reduction in replication order — float accumulation is
@@ -417,6 +458,31 @@ mod tests {
         let e = est.evaluate(&all).unwrap();
         assert!(e.all_failed());
         assert_eq!(e.failure_rate, 1.0);
+    }
+
+    #[test]
+    fn until_ci95_matches_fixed_reps_at_the_realized_count() {
+        let s = scenario(4, 2);
+        let base = small(0.3);
+        let auto = base.until_ci95(&s, 11, 0.2, 256).unwrap();
+        assert!(auto.estimate.ci95 <= 0.2, "ci95 {}", auto.estimate.ci95);
+        let fixed = OpenSystem { reps: auto.estimate.replications, ..base }
+            .evaluate_open_seeded(&s, 11)
+            .unwrap();
+        assert_eq!(auto.estimate.mean.to_bits(), fixed.estimate.mean.to_bits());
+        assert_eq!(auto.estimate.ci95.to_bits(), fixed.estimate.ci95.to_bits());
+        assert_eq!(auto.utilization.to_bits(), fixed.utilization.to_bits());
+        // unreachable target stops exactly at max, thread-invariantly
+        let capped = base.until_ci95(&s, 11, 1e-12, 24).unwrap();
+        assert_eq!(capped.estimate.replications, 24);
+        let wide = OpenSystem { threads: 4, ..base }
+            .until_ci95(&s, 11, 1e-12, 24)
+            .unwrap();
+        assert_eq!(capped.estimate.mean.to_bits(), wide.estimate.mean.to_bits());
+        // bad targets are rejected
+        assert!(base.until_ci95(&s, 11, 0.0, 24).is_err());
+        assert!(base.until_ci95(&s, 11, f64::NAN, 24).is_err());
+        assert!(base.until_ci95(&s, 11, 0.1, 0).is_err());
     }
 
     #[test]

@@ -52,6 +52,7 @@ use crate::analysis::optimizer::{self, Regime};
 use crate::batching::Policy;
 use crate::dist::{ServiceDist, TailFit};
 use crate::eval::{Auto, Estimator, MonteCarlo, Scenario};
+use crate::metrics::Summary;
 use crate::sim::policy::ReplicationPolicy;
 use crate::sweep::{self, CaseOutcome, CaseResult, ScenarioSet};
 use crate::util::error::{Error, Result};
@@ -101,19 +102,31 @@ pub struct Plan {
 /// One row of a spectrum sweep. `cost` is expected total
 /// worker-seconds (NaN when the evaluation path does not track it —
 /// NaN costs only matter under [`Objective::CostLatency`]).
+///
+/// `ci95` is the half-width of the point's mean estimate: `0.0` for
+/// exact (analytic) points, finite for Monte-Carlo points with at
+/// least two completed replications, and NaN for a single-completed-
+/// replication estimate (see `eval::Estimate`). A NaN ci95 marks a
+/// mean that carries **no** uncertainty information, so
+/// [`score_point`] makes such candidates lose deterministically
+/// rather than letting a one-sample fluke win the sweep.
 #[derive(Clone, Copy, Debug)]
 pub struct SweepPoint {
     pub batches: usize,
     pub mean: f64,
     pub cov: f64,
     pub cost: f64,
+    pub ci95: f64,
 }
 
 /// Score one operating point under `objective`, given the sweep-wide
 /// normalization anchors (the minimum mean, CoV, and cost over the
 /// spectrum — only the blended objectives use them). Lower is better;
 /// NaN points (e.g. all-failed Monte-Carlo estimates, or missing cost
-/// under the cost objective) score +∞ so they can never win.
+/// under the cost objective) score +∞ so they can never win, and so
+/// does a NaN `ci95` — a single-completed-replication estimate whose
+/// mean is a lone sample with no attached uncertainty (`reps: auto`
+/// with a small `max` under heavy failure injection produces these).
 pub fn score_point(
     p: &SweepPoint,
     objective: Objective,
@@ -121,6 +134,9 @@ pub fn score_point(
     min_cov: f64,
     min_cost: f64,
 ) -> f64 {
+    if p.ci95.is_nan() {
+        return f64::INFINITY;
+    }
     let score = match objective {
         Objective::MeanCompletion => p.mean,
         Objective::Predictability => p.cov,
@@ -315,6 +331,7 @@ impl Planner {
                 mean: est.mean,
                 cov: est.cov,
                 cost: est.cost,
+                ci95: est.ci95,
             })
             .collect())
     }
@@ -342,9 +359,13 @@ impl Planner {
     /// (in score) than the pure-B plan on the same sweep.
     ///
     /// All candidates — including those with closed forms — are
-    /// evaluated by Monte-Carlo on per-candidate substreams, so scores
-    /// compare simulation to simulation rather than mixing estimator
-    /// noise floors.
+    /// evaluated by Monte-Carlo on **one shared draw stream** (common
+    /// random numbers): replication `r` of every (B, t) candidate
+    /// consumes the same `substream(seed, r)` service draws, so
+    /// candidate scores compare paired samples instead of stacking two
+    /// independent noise floors on every difference. Timed policies
+    /// drain unused draws, so the per-replication stream layout is
+    /// identical across the whole candidate set.
     pub fn plan_joint(
         &self,
         objective: Objective,
@@ -372,7 +393,8 @@ impl Planner {
                 tags.push((b, policy));
             }
         }
-        let estimates = MonteCarlo::new(reps, seed).evaluate_many(&scenarios)?;
+        let items: Vec<(&Scenario, u64)> = scenarios.iter().map(|s| (s, seed)).collect();
+        let estimates = MonteCarlo::new(reps, seed).run_batch(&items)?;
         let points: Vec<SweepPoint> = tags
             .iter()
             .zip(estimates.iter())
@@ -381,6 +403,7 @@ impl Planner {
                 mean: est.mean,
                 cov: est.cov,
                 cost: est.cost,
+                ci95: est.ci95,
             })
             .collect();
         let min_mean = points.iter().map(|p| p.mean).fold(f64::INFINITY, f64::min);
@@ -419,6 +442,207 @@ impl Planner {
             regime: None, // theorem regimes only classify up-front plans
         })
     }
+
+    /// Paired spectrum sweep with common random numbers: every feasible
+    /// B consumes the **same** per-replication task-service draws
+    /// (`substream(seed, rep)` keyed by replication index, not by
+    /// operating point), and each row reports the CI of the paired
+    /// *difference* against the best-mean reference row. Differences of
+    /// monotone-coupled completion times are far less noisy than the
+    /// points themselves, so the spectrum resolves B-vs-B comparisons
+    /// in a small fraction of the replications independent streams
+    /// need.
+    ///
+    /// Each row's own estimate is bit-identical to
+    /// `MonteCarlo::new(reps, seed).evaluate(scenario_b)` — the paired
+    /// mode changes which streams are *shared*, never what any single
+    /// point computes.
+    pub fn sweep_paired(&self, reps: usize, seed: u64) -> Result<PairedSpectrum> {
+        self.sweep_paired_mc(&MonteCarlo::new(reps, seed))
+    }
+
+    /// [`Planner::sweep_paired`] with an explicit estimator config
+    /// (thread caps for tests, a custom seed): `mc.seed` is the shared
+    /// stream seed.
+    pub fn sweep_paired_mc(&self, mc: &MonteCarlo) -> Result<PairedSpectrum> {
+        let feasible = optimizer::feasible_b(self.n);
+        let scenarios: Vec<Scenario> = feasible
+            .iter()
+            .map(|&b| Scenario::balanced(self.n, b, self.tau.clone()))
+            .collect();
+        // CRN: every item gets the same stream seed.
+        let items: Vec<(&Scenario, u64)> =
+            scenarios.iter().map(|s| (s, mc.seed)).collect();
+        let retained = mc.run_batch_retained(&items)?;
+        pair_spectrum(&feasible, &retained, mc.reps)
+    }
+
+    /// Precision-targeted paired spectrum: double the replication count
+    /// in waves (from [`PAIRED_WAVE_START`]) until every non-reference
+    /// row's paired-difference ci95 half-width drops to `eps`, or the
+    /// count reaches `max`. The stopping rule is a function of the
+    /// accumulated estimates only (never wall-clock), and each wave
+    /// recomputes from replication 0, so the result is exactly
+    /// [`Planner::sweep_paired`] at the realized count
+    /// (`PairedSpectrum::replications`).
+    pub fn sweep_paired_until(
+        &self,
+        eps: f64,
+        max: usize,
+        seed: u64,
+    ) -> Result<PairedSpectrum> {
+        if !(eps.is_finite() && eps > 0.0) {
+            return Err(Error::Config(format!(
+                "paired-spectrum eps must be finite and > 0, got {eps}"
+            )));
+        }
+        if max == 0 {
+            return Err(Error::Config("paired-spectrum max must be >= 1".into()));
+        }
+        let mut reps = PAIRED_WAVE_START.min(max);
+        loop {
+            let spectrum = self.sweep_paired(reps, seed)?;
+            let worst = spectrum.max_diff_ci95();
+            if worst <= eps || reps == max {
+                return Ok(spectrum);
+            }
+            reps = reps.saturating_mul(2).min(max);
+        }
+    }
+}
+
+/// First wave size for [`Planner::sweep_paired_until`]; waves double
+/// from here, so total work stays within 2× the realized count.
+const PAIRED_WAVE_START: usize = 64;
+
+/// One row of a paired (common-random-numbers) spectrum: the usual
+/// sweep columns plus the paired-difference statistics against the
+/// spectrum's reference row.
+#[derive(Clone, Copy, Debug)]
+pub struct PairedPoint {
+    /// The operating point's own estimate columns, scoreable by
+    /// [`choose`] like any independent sweep row.
+    pub point: SweepPoint,
+    /// Mean of the per-replication difference `T_B(r) − T_ref(r)` over
+    /// replications where both completed (0 for the reference row).
+    pub diff_mean: f64,
+    /// ci95 half-width of that paired difference — the quantity the
+    /// paper's B-vs-B comparisons actually need. 0 for the reference
+    /// row; NaN when fewer than two replications paired up.
+    pub diff_ci95: f64,
+    /// Replications entering the paired difference (both sides
+    /// completed).
+    pub paired: usize,
+}
+
+/// A spectrum evaluated under common random numbers — see
+/// [`Planner::sweep_paired`]. Rows are in feasible-B order; `reference`
+/// indexes the row every difference is taken against.
+#[derive(Clone, Debug)]
+pub struct PairedSpectrum {
+    pub points: Vec<PairedPoint>,
+    /// Index of the reference row: the best (smallest) finite mean,
+    /// ties broken toward the lower B.
+    pub reference: usize,
+    /// Replications each row consumed (realized count under
+    /// [`Planner::sweep_paired_until`]).
+    pub replications: usize,
+}
+
+impl PairedSpectrum {
+    /// The rows as plain sweep points, for [`choose`],
+    /// [`score_point`], and report code that is agnostic to pairing.
+    pub fn sweep_points(&self) -> Vec<SweepPoint> {
+        let mut points = Vec::with_capacity(self.points.len());
+        for p in &self.points {
+            points.push(p.point);
+        }
+        points
+    }
+
+    /// Pick the best row under `objective` (same rule as [`choose`]).
+    pub fn choose(&self, objective: Objective) -> Option<SweepPoint> {
+        choose(&self.sweep_points(), objective)
+    }
+
+    /// Worst (largest) paired-difference ci95 over the non-reference
+    /// rows — the quantity [`Planner::sweep_paired_until`] drives below
+    /// ε. NaN rows (nothing paired yet) count as +∞ so they keep the
+    /// wave loop running; an empty or single-row spectrum reports 0.
+    pub fn max_diff_ci95(&self) -> f64 {
+        let mut worst = 0.0_f64;
+        for (i, p) in self.points.iter().enumerate() {
+            if i == self.reference {
+                continue;
+            }
+            if p.diff_ci95.is_nan() {
+                return f64::INFINITY;
+            }
+            if p.diff_ci95 > worst {
+                worst = p.diff_ci95;
+            }
+        }
+        worst
+    }
+}
+
+/// Build the paired spectrum from retained per-replication completion
+/// times (NaN = failed replication). The reference row is the best
+/// finite mean (ties toward the lower B); every other row's difference
+/// summary runs over the replications where both rows completed, in
+/// replication order.
+fn pair_spectrum(
+    batches: &[usize],
+    retained: &[(crate::eval::Estimate, Vec<f64>)],
+    reps: usize,
+) -> Result<PairedSpectrum> {
+    let mut reference: Option<usize> = None;
+    for (i, (est, _)) in retained.iter().enumerate() {
+        let better = match reference {
+            None => est.mean.is_finite(),
+            Some(r) => est.mean.is_finite() && est.mean < retained[r].0.mean,
+        };
+        if better {
+            reference = Some(i);
+        }
+    }
+    let reference = reference.ok_or_else(|| {
+        Error::Config("no paired spectrum point produced a finite estimate".into())
+    })?;
+    let ref_times = &retained[reference].1;
+    let mut points = Vec::with_capacity(retained.len());
+    for (i, (est, times)) in retained.iter().enumerate() {
+        let point = SweepPoint {
+            batches: batches[i],
+            mean: est.mean,
+            cov: est.cov,
+            cost: est.cost,
+            ci95: est.ci95,
+        };
+        if i == reference {
+            points.push(PairedPoint {
+                point,
+                diff_mean: 0.0,
+                diff_ci95: 0.0,
+                paired: est.completed,
+            });
+            continue;
+        }
+        let mut diff = Summary::moments_only();
+        for (t, r) in times.iter().zip(ref_times.iter()) {
+            let d = t - r;
+            if !d.is_nan() {
+                diff.record(d);
+            }
+        }
+        points.push(PairedPoint {
+            point,
+            diff_mean: diff.mean(),
+            diff_ci95: diff.ci95(),
+            paired: diff.count() as usize,
+        });
+    }
+    Ok(PairedSpectrum { points, reference, replications: reps })
 }
 
 /// Quantiles of τ whose batch-level values (`(N/B)·Q_τ(q)`) serve as
@@ -519,6 +743,7 @@ pub fn plan_from_records(results: &[CaseResult], objective: Objective) -> Result
                 mean: e.mean,
                 cov: e.cov,
                 cost: e.cost,
+                ci95: e.ci95,
             }),
             CaseOutcome::Error(_) => None,
         })
@@ -637,6 +862,7 @@ mod tests {
                         mean: oe.estimate.mean,
                         cov: oe.estimate.cov,
                         cost: oe.estimate.cost,
+                        ci95: oe.estimate.ci95,
                     }
                 })
                 .collect()
@@ -708,17 +934,17 @@ mod tests {
 
     #[test]
     fn nan_cost_makes_the_cost_axis_a_tie() {
-        let a = SweepPoint { batches: 1, mean: 1.0, cov: 0.5, cost: f64::NAN };
-        let b = SweepPoint { batches: 2, mean: 2.0, cov: 0.5, cost: 1.0 };
+        let a = SweepPoint { batches: 1, mean: 1.0, cov: 0.5, cost: f64::NAN, ci95: 0.0 };
+        let b = SweepPoint { batches: 2, mean: 2.0, cov: 0.5, cost: 1.0, ci95: 0.0 };
         // b is worse on mean; its tracked cost cannot rescue it, and
         // a's untracked cost cannot count against it
         assert!(dominates(&a, &b));
         assert!(!dominates(&b, &a));
         // equal tracked metrics + NaN cost on one side: no domination
-        let c = SweepPoint { batches: 4, mean: 1.0, cov: 0.5, cost: 0.1 };
+        let c = SweepPoint { batches: 4, mean: 1.0, cov: 0.5, cost: 0.1, ci95: 0.0 };
         assert!(!dominates(&a, &c) && !dominates(&c, &a));
         // with cost tracked on both sides it breaks the tie
-        let d = SweepPoint { batches: 5, mean: 1.0, cov: 0.5, cost: 0.2 };
+        let d = SweepPoint { batches: 5, mean: 1.0, cov: 0.5, cost: 0.2, ci95: 0.0 };
         assert!(dominates(&c, &d) && !dominates(&d, &c));
     }
 
@@ -832,9 +1058,15 @@ mod tests {
     #[test]
     fn choose_skips_nan_points_and_matches_plan() {
         let pts = vec![
-            SweepPoint { batches: 1, mean: f64::NAN, cov: f64::NAN, cost: f64::NAN },
-            SweepPoint { batches: 2, mean: 3.0, cov: 0.5, cost: 10.0 },
-            SweepPoint { batches: 4, mean: 2.0, cov: 0.9, cost: 30.0 },
+            SweepPoint {
+                batches: 1,
+                mean: f64::NAN,
+                cov: f64::NAN,
+                cost: f64::NAN,
+                ci95: f64::NAN,
+            },
+            SweepPoint { batches: 2, mean: 3.0, cov: 0.5, cost: 10.0, ci95: 0.1 },
+            SweepPoint { batches: 4, mean: 2.0, cov: 0.9, cost: 30.0, ci95: 0.1 },
         ];
         let best = choose(&pts, Objective::MeanCompletion).unwrap();
         assert_eq!(best.batches, 4);
@@ -851,13 +1083,14 @@ mod tests {
             mean: f64::NAN,
             cov: f64::NAN,
             cost: f64::NAN,
+            ci95: f64::NAN,
         }];
         assert!(choose(&all_nan, Objective::MeanCompletion).is_none());
         // a NaN cost can never win the cost objective, even when every
         // competitor is more expensive on the tracked axes
         let missing_cost = vec![
-            SweepPoint { batches: 1, mean: 1.0, cov: 0.1, cost: f64::NAN },
-            SweepPoint { batches: 2, mean: 5.0, cov: 0.5, cost: 10.0 },
+            SweepPoint { batches: 1, mean: 1.0, cov: 0.1, cost: f64::NAN, ci95: 0.0 },
+            SweepPoint { batches: 2, mean: 5.0, cov: 0.5, cost: 10.0, ci95: 0.0 },
         ];
         let best = choose(&missing_cost, Objective::CostLatency(0.5)).unwrap();
         assert_eq!(best.batches, 2);
@@ -866,6 +1099,148 @@ mod tests {
         let plan = p.plan(Objective::MeanCompletion);
         let direct = choose(&p.sweep(), Objective::MeanCompletion).unwrap();
         assert_eq!(plan.batches, direct.batches);
+    }
+
+    #[test]
+    fn nan_ci95_candidates_lose_deterministically() {
+        // Regression: a single-completed-replication estimate carries a
+        // finite (lone-sample) mean but a NaN ci95. Before the guard it
+        // could win `choose` on that fluke mean; now it must lose under
+        // every objective.
+        let pts = vec![
+            SweepPoint { batches: 1, mean: 0.5, cov: 0.1, cost: 1.0, ci95: f64::NAN },
+            SweepPoint { batches: 2, mean: 3.0, cov: 0.5, cost: 10.0, ci95: 0.2 },
+        ];
+        for objective in [
+            Objective::MeanCompletion,
+            Objective::Predictability,
+            Objective::Tradeoff(0.5),
+            Objective::CostLatency(0.5),
+        ] {
+            let best = choose(&pts, objective).unwrap();
+            assert_eq!(best.batches, 2, "{objective:?}");
+            assert!(
+                score_point(&pts[0], objective, 0.5, 0.1, 1.0).is_infinite(),
+                "{objective:?}"
+            );
+        }
+        // every candidate degenerate: no winner, not an arbitrary one
+        let all_lone = vec![SweepPoint {
+            batches: 1,
+            mean: 0.5,
+            cov: 0.1,
+            cost: 1.0,
+            ci95: f64::NAN,
+        }];
+        assert!(choose(&all_lone, Objective::MeanCompletion).is_none());
+        // and an end-to-end producer of such estimates: reps=1 Monte
+        // Carlo gives ci95 = NaN, which plan_from_records now rejects
+        let e = MonteCarlo::new(1, 3)
+            .evaluate(&Scenario::balanced(4, 2, ServiceDist::exp(1.0)))
+            .unwrap();
+        assert_eq!(e.completed, 1);
+        assert!(e.ci95.is_nan());
+    }
+
+    #[test]
+    fn paired_spectrum_rows_match_independent_evaluation_bitwise() {
+        // CRN changes which streams are shared, never what any single
+        // point computes: row B must equal MonteCarlo::evaluate on the
+        // same stream seed, bit for bit.
+        let tau = ServiceDist::shifted_exp(0.05, 1.0);
+        let p = Planner::new(12, tau.clone());
+        let spectrum = p.sweep_paired(2_000, 77).unwrap();
+        assert_eq!(spectrum.points.len(), 6); // divisors of 12
+        assert_eq!(spectrum.replications, 2_000);
+        let mc = MonteCarlo::new(2_000, 77);
+        for row in &spectrum.points {
+            let single = mc
+                .evaluate(&Scenario::balanced(12, row.point.batches, tau.clone()))
+                .unwrap();
+            assert_eq!(row.point.mean.to_bits(), single.mean.to_bits());
+            assert_eq!(row.point.cov.to_bits(), single.cov.to_bits());
+            assert_eq!(row.point.cost.to_bits(), single.cost.to_bits());
+            assert_eq!(row.point.ci95.to_bits(), single.ci95.to_bits());
+        }
+        // reference row: best mean, zero self-difference
+        let r = &spectrum.points[spectrum.reference];
+        assert!(spectrum
+            .points
+            .iter()
+            .all(|q| !q.point.mean.is_finite() || q.point.mean >= r.point.mean));
+        assert_eq!(r.diff_mean, 0.0);
+        assert_eq!(r.diff_ci95, 0.0);
+    }
+
+    #[test]
+    fn paired_differences_beat_independent_differences() {
+        // The point of CRN: the paired-difference CI must be much
+        // tighter than the two independent CIs stacked. SExp couples
+        // strongly across B (shared exponential draws).
+        let p = Planner::new(12, ServiceDist::shifted_exp(0.05, 1.0));
+        let spectrum = p.sweep_paired(2_000, 21).unwrap();
+        for (i, row) in spectrum.points.iter().enumerate() {
+            if i == spectrum.reference {
+                continue;
+            }
+            let independent = (row.point.ci95.powi(2)
+                + spectrum.points[spectrum.reference].point.ci95.powi(2))
+            .sqrt();
+            assert!(
+                row.diff_ci95 < independent,
+                "B={}: paired {} vs independent {}",
+                row.point.batches,
+                row.diff_ci95,
+                independent
+            );
+            assert!(row.paired > 0 && row.paired <= 2_000);
+            assert!(row.diff_mean >= 0.0, "reference is the best mean");
+        }
+    }
+
+    #[test]
+    fn paired_spectrum_is_thread_and_entrypoint_invariant() {
+        let tau = ServiceDist::pareto(1.0, 2.5);
+        let p = Planner::new(8, tau);
+        let golden = p
+            .sweep_paired_mc(&MonteCarlo { reps: 1_500, seed: 9, threads: 1 })
+            .unwrap();
+        for threads in [2usize, 4, 8] {
+            let wide = p
+                .sweep_paired_mc(&MonteCarlo { reps: 1_500, seed: 9, threads })
+                .unwrap();
+            assert_eq!(golden.reference, wide.reference, "{threads} threads");
+            for (a, b) in golden.points.iter().zip(wide.points.iter()) {
+                assert_eq!(a.point.mean.to_bits(), b.point.mean.to_bits());
+                assert_eq!(a.diff_mean.to_bits(), b.diff_mean.to_bits());
+                assert_eq!(a.diff_ci95.to_bits(), b.diff_ci95.to_bits());
+                assert_eq!(a.paired, b.paired);
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_paired_until_stops_at_the_fixed_reps_spectrum() {
+        let p = Planner::new(12, ServiceDist::shifted_exp(0.05, 1.0));
+        let auto = p.sweep_paired_until(0.02, 1 << 14, 5).unwrap();
+        assert!(auto.max_diff_ci95() <= 0.02, "{}", auto.max_diff_ci95());
+        let fixed = p.sweep_paired(auto.replications, 5).unwrap();
+        for (a, b) in auto.points.iter().zip(fixed.points.iter()) {
+            assert_eq!(a.point.mean.to_bits(), b.point.mean.to_bits());
+            assert_eq!(a.diff_ci95.to_bits(), b.diff_ci95.to_bits());
+        }
+        // unreachable target stops at max
+        let capped = p.sweep_paired_until(1e-12, 128, 5).unwrap();
+        assert_eq!(capped.replications, 128);
+        // bad targets rejected
+        assert!(p.sweep_paired_until(0.0, 128, 5).is_err());
+        assert!(p.sweep_paired_until(f64::NAN, 128, 5).is_err());
+        assert!(p.sweep_paired_until(0.02, 0, 5).is_err());
+        // choose() on the paired spectrum agrees with choose() on its
+        // flattened rows
+        let via_method = auto.choose(Objective::MeanCompletion).unwrap();
+        let via_points = choose(&auto.sweep_points(), Objective::MeanCompletion).unwrap();
+        assert_eq!(via_method.batches, via_points.batches);
     }
 
     #[test]

@@ -25,7 +25,7 @@ use crate::dist::ServiceDist;
 use crate::eval::{substream, OpenConfig, Scenario};
 use crate::sim::job::FailureModel;
 use crate::sim::policy::ReplicationPolicy;
-use crate::sweep::spec::{Backend, SweepSpec};
+use crate::sweep::spec::{AutoReps, Backend, SweepSpec};
 use crate::traces::{JobAnalysis, Trace};
 use crate::util::error::{Error, Result};
 
@@ -51,6 +51,11 @@ pub struct SweepCase {
     /// `None` for closed-system cases. Part of the content address when
     /// present.
     pub arrivals: Option<OpenConfig>,
+    /// Precision target (`reps: auto` specs): stop doubling at ci95
+    /// half-width ≤ `eps` or at `max` (= `reps`) replications. `None`
+    /// for fixed budgets and for analytic cases, which are exact. Part
+    /// of the content address when present.
+    pub auto: Option<AutoReps>,
 }
 
 impl SweepCase {
@@ -166,12 +171,21 @@ impl ScenarioSet {
                                     .with_replication(replication);
                                 let reps =
                                     if backend == Backend::Analytic { 0 } else { spec.reps };
-                                let key = case_key_open(
+                                // The analytic backend is exact, so a
+                                // precision target neither changes its
+                                // estimate nor belongs in its address.
+                                let auto = if backend == Backend::Analytic {
+                                    None
+                                } else {
+                                    spec.auto_reps
+                                };
+                                let key = case_key_auto(
                                     &scenario,
                                     backend,
                                     reps,
                                     spec.seed,
                                     arrivals.as_ref(),
+                                    auto.as_ref(),
                                 );
                                 cases.push(SweepCase {
                                     index: cases.len(),
@@ -182,6 +196,7 @@ impl ScenarioSet {
                                     key,
                                     stream_seed: substream(spec.seed, key),
                                     arrivals: *arrivals,
+                                    auto,
                                 });
                             }
                         }
@@ -223,6 +238,7 @@ impl ScenarioSet {
                 key,
                 stream_seed: substream(seed, key),
                 arrivals: None,
+                auto: None,
             });
         }
         Ok(ScenarioSet { cases })
@@ -296,6 +312,22 @@ pub fn case_key_open(
     seed: u64,
     open: Option<&OpenConfig>,
 ) -> u64 {
+    case_key_auto(scenario, backend, reps, seed, open, None)
+}
+
+/// [`case_key_open`] extended with the precision-target axis. Fixed-reps
+/// cases (`auto: None`) hash to exactly the old addresses; a target
+/// extends the encoding only when present, following the same
+/// append-only convention as the timed-replication and open-system
+/// bytes.
+pub fn case_key_auto(
+    scenario: &Scenario,
+    backend: Backend,
+    reps: usize,
+    seed: u64,
+    open: Option<&OpenConfig>,
+    auto: Option<&AutoReps>,
+) -> u64 {
     let mut h = Fnv::new();
     h.write(b"replica-sweep-v1");
     h.write_u64(scenario.workers as u64);
@@ -319,6 +351,11 @@ pub fn case_key_open(
         h.write_f64(open.rho);
         h.write_u64(open.jobs as u64);
         h.write_u64(open.warmup as u64);
+    }
+    if let Some(auto) = auto {
+        h.write(b"auto");
+        h.write_f64(auto.eps);
+        h.write_u64(auto.max as u64);
     }
     h.finish()
 }
@@ -598,6 +635,40 @@ mod tests {
         assert!(err.to_string().contains("arrivals"), "{err}");
         s.backends = vec![Backend::MonteCarlo];
         assert!(ScenarioSet::from_trace(&trace, &s).is_ok());
+    }
+
+    #[test]
+    fn auto_reps_rekeys_mc_cases_but_not_analytic_ones() {
+        let trace = small_trace();
+        let mut s = spec();
+        s.backends = vec![Backend::MonteCarlo, Backend::Analytic, Backend::Auto];
+        let base = ScenarioSet::from_trace(&trace, &s).unwrap();
+        let mut s2 = s.clone();
+        s2.reps = 200; // == base ceiling, so only the auto bytes differ
+        s2.auto_reps = Some(AutoReps { eps: 0.05, max: 200 });
+        let set = ScenarioSet::from_trace(&trace, &s2).unwrap();
+        assert_eq!(set.len(), base.len());
+        for (a, b) in base.cases.iter().zip(&set.cases) {
+            if b.backend == Backend::Analytic {
+                // exact estimates: a precision target must not move
+                // analytic addresses (their cache entries stay valid)
+                assert_eq!(a.key, b.key);
+                assert_eq!(b.auto, None);
+            } else {
+                assert_ne!(a.key, b.key, "eps/max must be part of the address");
+                assert_ne!(a.stream_seed, b.stream_seed);
+                assert_eq!(b.auto, Some(AutoReps { eps: 0.05, max: 200 }));
+            }
+        }
+        // a different target addresses different estimates
+        let mut s3 = s2.clone();
+        s3.auto_reps = Some(AutoReps { eps: 0.1, max: 200 });
+        let set3 = ScenarioSet::from_trace(&trace, &s3).unwrap();
+        for (a, b) in set.cases.iter().zip(&set3.cases) {
+            if a.backend != Backend::Analytic {
+                assert_ne!(a.key, b.key);
+            }
+        }
     }
 
     #[test]

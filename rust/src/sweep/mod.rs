@@ -56,7 +56,7 @@ pub mod runner;
 pub mod spec;
 pub mod store;
 
-pub use grid::{case_key, case_key_open, shard_range, ScenarioSet, SweepCase};
+pub use grid::{case_key, case_key_auto, case_key_open, shard_range, ScenarioSet, SweepCase};
 pub use merge::{
     merge, merge_partial, merge_shards, shard_path, MergeReport, MissingRange,
     PartialMergeReport,
@@ -67,6 +67,7 @@ pub use report::{
 };
 pub use runner::{evaluate_cases, run, run_spec, CaseResult, RunConfig};
 pub use spec::{
-    ArrivalsSpec, Backend, SweepSpec, Workload, DEFAULT_SHARD_SIZE, DEFAULT_SWEEP_REPS,
+    ArrivalsSpec, AutoReps, Backend, SweepSpec, Workload, DEFAULT_SHARD_SIZE,
+    DEFAULT_SWEEP_REPS,
 };
 pub use store::{CacheGc, CaseOutcome, EstimateCache, StoredEstimate};

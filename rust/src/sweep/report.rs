@@ -217,6 +217,7 @@ fn gain_rows(
                     mean: e.mean,
                     cov: e.cov,
                     cost: e.cost,
+                    ci95: e.ci95,
                 }),
             }
         }

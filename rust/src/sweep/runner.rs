@@ -226,6 +226,11 @@ pub fn evaluate_cases(
             || (case.backend == Backend::Auto && Analytic::supports(&case.scenario));
         if analytic {
             outcomes[i] = Some(analytic_outcome(&case.scenario));
+        } else if case.auto.is_some() {
+            // Precision-targeted cases stop at their own realized
+            // counts, so each runs its private doubling loop (every
+            // wave is still one pooled call).
+            outcomes[i] = Some(auto_outcome(case, threads));
         } else {
             mc_groups.entry(case.reps.max(1)).or_default().push(i);
         }
@@ -289,6 +294,21 @@ fn analytic_outcome(scenario: &Scenario) -> CaseOutcome {
     }
 }
 
+/// Evaluate one precision-targeted closed-system case
+/// (`reps: {"auto": ...}`): double the replication count until the ci95
+/// half-width reaches the case's `eps` or its `max` ceiling. The
+/// realized count lands in the record's `replications` field.
+fn auto_outcome(case: &SweepCase, threads: usize) -> CaseOutcome {
+    let Some(auto) = case.auto else {
+        return CaseOutcome::Error("auto_outcome needs a 'reps: auto' target".into());
+    };
+    let mc = MonteCarlo { reps: auto.max, seed: 0, threads };
+    match mc.until_ci95(&case.scenario, case.stream_seed, auto.eps, auto.max) {
+        Ok(est) => CaseOutcome::Ok(StoredEstimate::of(&est, case.scenario.replication)),
+        Err(e) => CaseOutcome::Error(e.to_string()),
+    }
+}
+
 /// Evaluate one open-system case. The RNG stream comes from the case's
 /// content key (`stream_seed`), exactly like the closed-system batch
 /// path, so open estimates are equally independent of grid position,
@@ -298,7 +318,11 @@ fn open_outcome(case: &SweepCase, threads: usize) -> CaseOutcome {
         return CaseOutcome::Error("open_outcome needs an 'arrivals' operating point".into());
     };
     let os = OpenSystem { reps: case.reps.max(1), seed: 0, threads, open };
-    match os.evaluate_open_seeded(&case.scenario, case.stream_seed) {
+    let evaluated = match case.auto {
+        Some(auto) => os.until_ci95(&case.scenario, case.stream_seed, auto.eps, auto.max),
+        None => os.evaluate_open_seeded(&case.scenario, case.stream_seed),
+    };
+    match evaluated {
         Ok(oe) => CaseOutcome::Ok(StoredEstimate::of_open(&oe, case.scenario.replication)),
         Err(e) => CaseOutcome::Error(e.to_string()),
     }
@@ -518,6 +542,87 @@ mod tests {
             };
             assert_eq!(a.mean.to_bits(), b.mean.to_bits());
             assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+        }
+    }
+
+    #[test]
+    fn auto_reps_cases_stop_early_and_stay_deterministic() {
+        use crate::sweep::spec::AutoReps;
+        let trace = GeneratorConfig::paper_workload(12, 3).generate();
+        let mut spec = SweepSpec::for_trace();
+        spec.jobs = Some(vec![1]);
+        spec.seed = 5;
+        spec.reps = 4096;
+        spec.auto_reps = Some(AutoReps { eps: 0.2, max: 4096 });
+        let set = ScenarioSet::from_trace(&trace, &spec).unwrap();
+        let results = run(&set, &RunConfig::default()).unwrap();
+        assert_eq!(results.len(), 6);
+        for r in &results {
+            let CaseOutcome::Ok(e) = &r.outcome else { panic!("{:?}", r.outcome) };
+            // the realized count is persisted, honors the ceiling, and
+            // only stops short of it once the target is met
+            assert!(e.replications >= 1 && e.replications <= 4096);
+            assert!(e.ci95 <= 0.2 || e.replications == 4096, "{e:?}");
+            // exactly the fixed-budget estimate at the realized count
+            let fixed = MonteCarlo { reps: e.replications, seed: 0, threads: 0 }
+                .run_batch(&[(&r.case.scenario, r.case.stream_seed)])
+                .unwrap()
+                .pop()
+                .unwrap();
+            assert_eq!(e.mean.to_bits(), fixed.mean.to_bits());
+            assert_eq!(e.ci95.to_bits(), fixed.ci95.to_bits());
+        }
+        // the target must bite somewhere, or this test is vacuous
+        assert!(results.iter().any(
+            |r| matches!(&r.outcome, CaseOutcome::Ok(e) if e.replications < 4096)
+        ));
+        // realized counts and estimates are independent of shard size
+        // and pool width
+        let again = run(
+            &set,
+            &RunConfig { shard_size: 2, threads: 4, ..RunConfig::default() },
+        )
+        .unwrap();
+        for (a, b) in results.iter().zip(&again) {
+            let (CaseOutcome::Ok(a), CaseOutcome::Ok(b)) = (&a.outcome, &b.outcome) else {
+                panic!("unexpected error outcome");
+            };
+            assert_eq!(a.replications, b.replications);
+            assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+            assert_eq!(a.ci95.to_bits(), b.ci95.to_bits());
+        }
+    }
+
+    #[test]
+    fn auto_reps_open_cases_flow_through_the_engine() {
+        use crate::sweep::spec::{ArrivalsSpec, AutoReps};
+        let trace = GeneratorConfig::paper_workload(12, 3).generate();
+        let mut spec = SweepSpec::for_trace();
+        spec.jobs = Some(vec![1]);
+        spec.batches = Some(vec![1, 12]);
+        spec.seed = 5;
+        spec.reps = 64;
+        spec.auto_reps = Some(AutoReps { eps: 0.5, max: 64 });
+        spec.arrivals = Some(ArrivalsSpec { rho: vec![0.3], jobs: 40, warmup: 10 });
+        let set = ScenarioSet::from_trace(&trace, &spec).unwrap();
+        let results = run(&set, &RunConfig::default()).unwrap();
+        assert_eq!(results.len(), 2);
+        for r in &results {
+            let CaseOutcome::Ok(e) = &r.outcome else { panic!("{:?}", r.outcome) };
+            assert!(e.replications >= 1 && e.replications <= 64);
+            assert!(e.ci95 <= 0.5 || e.replications == 64, "{e:?}");
+            assert!(e.utilization > 0.0, "open auto records keep utilization");
+            // exactly the fixed-budget open estimate at that count
+            let os = OpenSystem {
+                reps: e.replications,
+                seed: 0,
+                threads: 0,
+                open: r.case.arrivals.unwrap(),
+            };
+            let fixed =
+                os.evaluate_open_seeded(&r.case.scenario, r.case.stream_seed).unwrap();
+            assert_eq!(e.mean.to_bits(), fixed.estimate.mean.to_bits());
+            assert_eq!(e.utilization.to_bits(), fixed.utilization.to_bits());
         }
     }
 

@@ -44,6 +44,23 @@
 //! sweeps are Monte-Carlo only — there is no closed form under
 //! queueing — so `backends` must be `["mc"]`. Specs without `arrivals`
 //! expand exactly as before and re-key nothing.
+//!
+//! The `reps` field also accepts the precision-targeted form
+//!
+//! ```json
+//! "reps": {"auto": {"eps": 0.05, "max": 4096}}
+//! ```
+//!
+//! which replaces the fixed per-case budget with adaptive stopping:
+//! each Monte-Carlo case doubles its replication count in waves until
+//! its ci95 half-width drops to `eps` or the count reaches `max` (see
+//! `MonteCarlo::until_ci95`). Both keys are required. The realized
+//! count lands in each store record's `replications` field, and the
+//! stopping rule is a function of the accumulated estimate only —
+//! never wall-clock — so shard, cluster, and resume runs stay
+//! byte-identical. Analytic cases are exact and ignore the target;
+//! `auto`-backend cases apply it only where they fall back to
+//! Monte-Carlo.
 
 use std::path::{Path, PathBuf};
 
@@ -104,6 +121,18 @@ pub struct ArrivalsSpec {
     pub warmup: usize,
 }
 
+/// Precision-targeted replication budget, the
+/// `reps: {"auto": {"eps": E, "max": M}}` spec form: stop doubling a
+/// case's replication count once its ci95 half-width reaches `eps`, or
+/// at `max` replications.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AutoReps {
+    /// Target ci95 half-width (finite, > 0).
+    pub eps: f64,
+    /// Replication-count ceiling (>= 1).
+    pub max: usize,
+}
+
 /// Where the trace comes from.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Workload {
@@ -127,8 +156,14 @@ pub struct SweepSpec {
     pub batches: Option<Vec<usize>>,
     /// Estimator backends (one grid axis).
     pub backends: Vec<Backend>,
-    /// Monte-Carlo replications per scenario.
+    /// Monte-Carlo replications per scenario. Under `reps: auto` this
+    /// holds the ceiling (`auto_reps.max`), so shard math and existing
+    /// validation see a concrete count.
     pub reps: usize,
+    /// Precision-targeted stopping (`reps: {"auto": ...}`); `None` (the
+    /// default) keeps fixed budgets — and every existing content key —
+    /// unchanged.
+    pub auto_reps: Option<AutoReps>,
     /// Base seed; every scenario derives its own stream from it and its
     /// content key.
     pub seed: u64,
@@ -153,6 +188,7 @@ impl SweepSpec {
             batches: None,
             backends: vec![Backend::MonteCarlo],
             reps: DEFAULT_SWEEP_REPS,
+            auto_reps: None,
             seed: 0,
             crash: vec![0.0],
             policies: vec![ReplicationPolicy::Upfront],
@@ -236,10 +272,7 @@ impl SweepSpec {
                     .collect::<Result<Vec<Backend>>>()?
             }
         };
-        let reps = get_usize(&doc, "reps", DEFAULT_SWEEP_REPS)?;
-        if reps == 0 {
-            return Err(Error::Config("'reps' must be >= 1".into()));
-        }
+        let (reps, auto_reps) = parse_reps(&doc)?;
         let seed = get_usize(&doc, "seed", 0)? as u64;
         let crash = match doc.get("crash") {
             None => vec![0.0],
@@ -290,6 +323,7 @@ impl SweepSpec {
             batches,
             backends,
             reps,
+            auto_reps,
             seed,
             crash,
             policies,
@@ -403,6 +437,66 @@ fn parse_arrivals(v: &Json) -> Result<ArrivalsSpec> {
     Ok(ArrivalsSpec { rho, jobs, warmup })
 }
 
+/// The `reps` field: a fixed count, or the precision-targeted form
+/// `{"auto": {"eps": E, "max": M}}`. Auto resolves `reps` to the
+/// ceiling so downstream shard math needs no special case.
+fn parse_reps(doc: &Json) -> Result<(usize, Option<AutoReps>)> {
+    match doc.get("reps") {
+        None => Ok((DEFAULT_SWEEP_REPS, None)),
+        Some(Json::Obj(map)) => {
+            for key in map.keys() {
+                if key != "auto" {
+                    return Err(Error::Config(format!(
+                        "unknown 'reps' field '{key}' (object form is {{\"auto\": \
+                         {{\"eps\": E, \"max\": M}}}})"
+                    )));
+                }
+            }
+            let Some(auto) = map.get("auto") else {
+                return Err(Error::Config(
+                    "'reps' object form needs an 'auto' key: \
+                     {\"auto\": {\"eps\": E, \"max\": M}}"
+                        .into(),
+                ));
+            };
+            let Json::Obj(inner) = auto else {
+                return Err(Error::Config(
+                    "'reps.auto' must be an object {\"eps\": E, \"max\": M}".into(),
+                ));
+            };
+            for key in inner.keys() {
+                if !["eps", "max"].contains(&key.as_str()) {
+                    return Err(Error::Config(format!(
+                        "unknown 'reps.auto' field '{key}' (known: eps, max)"
+                    )));
+                }
+            }
+            let eps = match inner.get("eps") {
+                None => return Err(Error::Config("'reps.auto' needs an 'eps' target".into())),
+                Some(v) => expect_num(v, "reps.auto.eps")?,
+            };
+            if !eps.is_finite() || eps <= 0.0 {
+                return Err(Error::Config("'reps.auto.eps' must be finite and > 0".into()));
+            }
+            if inner.get("max").is_none() {
+                return Err(Error::Config("'reps.auto' needs a 'max' ceiling".into()));
+            }
+            let max = get_usize(auto, "max", 0)?;
+            if max == 0 {
+                return Err(Error::Config("'reps.auto.max' must be >= 1".into()));
+            }
+            Ok((max, Some(AutoReps { eps, max })))
+        }
+        Some(_) => {
+            let reps = get_usize(doc, "reps", DEFAULT_SWEEP_REPS)?;
+            if reps == 0 {
+                return Err(Error::Config("'reps' must be >= 1".into()));
+            }
+            Ok((reps, None))
+        }
+    }
+}
+
 /// One `policies` entry: `"upfront"`, `{"speculative": T}`, or
 /// `{"relaunch": T}`.
 fn parse_policy_entry(v: &Json) -> Result<ReplicationPolicy> {
@@ -477,6 +571,7 @@ mod tests {
         assert_eq!(spec.batches, None);
         assert_eq!(spec.backends, vec![Backend::MonteCarlo]);
         assert_eq!(spec.reps, DEFAULT_SWEEP_REPS);
+        assert_eq!(spec.auto_reps, None);
         assert_eq!(spec.crash, vec![0.0]);
         assert_eq!(spec.policies, vec![ReplicationPolicy::Upfront]);
         assert_eq!(spec.shard_size, DEFAULT_SHARD_SIZE);
@@ -588,6 +683,40 @@ mod tests {
             r#"{"workload": {"trace": "t"}, "policies": [{"speculative": 1, "relaunch": 2}]}"#,
             r#"{"workload": {"trace": "t"}, "policies": [7]}"#,
             r#"[1, 2]"#,
+        ] {
+            assert!(SweepSpec::from_json(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn auto_reps_parses_and_pins_reps_to_the_ceiling() {
+        let spec = SweepSpec::from_json(
+            r#"{"workload": {"trace": "t"},
+                "reps": {"auto": {"eps": 0.05, "max": 4096}}}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.reps, 4096);
+        assert_eq!(spec.auto_reps, Some(AutoReps { eps: 0.05, max: 4096 }));
+        // fixed-number form still parses and leaves auto off
+        let spec = SweepSpec::from_json(r#"{"workload": {"trace": "t"}, "reps": 32}"#).unwrap();
+        assert_eq!((spec.reps, spec.auto_reps), (32, None));
+    }
+
+    #[test]
+    fn malformed_auto_reps_are_rejected() {
+        for bad in [
+            r#"{"workload": {"trace": "t"}, "reps": {}}"#,
+            r#"{"workload": {"trace": "t"}, "reps": {"eps": 0.05, "max": 10}}"#,
+            r#"{"workload": {"trace": "t"}, "reps": {"auto": 100}}"#,
+            r#"{"workload": {"trace": "t"}, "reps": {"auto": {}}}"#,
+            r#"{"workload": {"trace": "t"}, "reps": {"auto": {"eps": 0.05}}}"#,
+            r#"{"workload": {"trace": "t"}, "reps": {"auto": {"max": 100}}}"#,
+            r#"{"workload": {"trace": "t"}, "reps": {"auto": {"eps": 0, "max": 100}}}"#,
+            r#"{"workload": {"trace": "t"}, "reps": {"auto": {"eps": -0.1, "max": 100}}}"#,
+            r#"{"workload": {"trace": "t"}, "reps": {"auto": {"eps": 0.05, "max": 0}}}"#,
+            r#"{"workload": {"trace": "t"}, "reps": {"auto": {"eps": 0.05, "max": 1.5}}}"#,
+            r#"{"workload": {"trace": "t"}, "reps": {"auto": {"eps": 0.05, "max": 10, "min": 2}}}"#,
+            r#"{"workload": {"trace": "t"}, "reps": {"auto": {"eps": 0.05, "max": 10}, "x": 1}}"#,
         ] {
             assert!(SweepSpec::from_json(bad).is_err(), "accepted: {bad}");
         }

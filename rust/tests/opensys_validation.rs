@@ -133,6 +133,7 @@ fn b_star_flips_from_diversity_to_parallelism_with_load() {
                     mean: oe.estimate.mean,
                     cov: oe.estimate.cov,
                     cost: oe.estimate.cost,
+                    ci95: oe.estimate.ci95,
                 }
             })
             .collect()

@@ -6,11 +6,17 @@
 //!   (moments + a KS-style quantile-grid check);
 //! * pooled two-level execution is bit-identical to
 //!   `MonteCarlo::serial` for fixed seeds across thread counts
-//!   {1, 2, 4, 8}, including `evaluate_many` item ordering.
+//!   {1, 2, 4, 8}, including `evaluate_many` item ordering;
+//! * the variance-reduced fills (`fill_antithetic`, `fill_stratified`)
+//!   keep each inverse-CDF family's marginal distribution exact
+//!   (moments + quantile grid), fall back to the plain fill bitwise
+//!   for the alias/rejection families, and the paired (CRN) spectrum
+//!   built on them is bit-identical across pool widths.
 
 use replica::batching::Policy;
-use replica::dist::{Sampler, ServiceDist};
+use replica::dist::{FillMode, Sampler, ServiceDist};
 use replica::eval::{Estimator, MonteCarlo, Scenario};
+use replica::planner::Planner;
 use replica::sim::FailureModel;
 use replica::util::rng::Pcg64;
 
@@ -156,6 +162,205 @@ fn determinism_scenarios() -> Vec<Scenario> {
         Scenario::balanced(10, 2, ServiceDist::exp(1.0))
             .with_failures(FailureModel::CrashRestart { p: 0.3, delay: 2.0 }),
     ]
+}
+
+/// Draw `n` samples through a variance-reduced fill and return them
+/// sorted, plus the strategy that actually ran.
+fn batch_sorted_reduced(
+    dist: &ServiceDist,
+    n: usize,
+    seed: u64,
+    antithetic: bool,
+) -> (Vec<f64>, FillMode) {
+    let sampler = Sampler::compile(dist);
+    let mut rng = Pcg64::new(seed);
+    let mut samples = vec![0.0; n];
+    let mode = if antithetic {
+        sampler.fill_antithetic(&mut rng, &mut samples)
+    } else {
+        sampler.fill_stratified(&mut rng, &mut samples)
+    };
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (samples, mode)
+}
+
+/// The closed-form inverse-CDF families the variance-reduced fills
+/// cover without fallback.
+fn inverse_cdf_families() -> Vec<ServiceDist> {
+    vec![
+        ServiceDist::exp(1.3),
+        ServiceDist::shifted_exp(0.5, 2.0),
+        ServiceDist::pareto(1.0, 3.0),
+        ServiceDist::weibull(0.7, 1.5),
+    ]
+}
+
+#[test]
+fn variance_reduced_fills_keep_the_marginal_distribution_exact() {
+    // a u/1−u pair (antithetic) and a per-stratum draw (stratified)
+    // are each marginally distributed as the target, so the pooled
+    // batch must still pass the same quantile-grid check as plain
+    // fills — variance reduction must never shift the distribution
+    for dist in inverse_cdf_families() {
+        for (antithetic, want) in [(true, FillMode::Antithetic), (false, FillMode::Stratified)]
+        {
+            let (sorted, mode) = batch_sorted_reduced(&dist, 200_000, 41, antithetic);
+            assert_eq!(mode, want, "{}", dist.label());
+            for i in 1..100 {
+                let q = i as f64 / 100.0;
+                let t = dist.quantile(q);
+                let have = ecdf(&sorted, t);
+                let wantq = dist.cdf(t);
+                assert!(
+                    (have - wantq).abs() < 0.01,
+                    "{} {:?} at q={q}: ecdf {have} vs cdf {wantq}",
+                    dist.label(),
+                    mode
+                );
+            }
+            let nf = sorted.len() as f64;
+            let mean = sorted.iter().sum::<f64>() / nf;
+            assert!(
+                (mean - dist.mean()).abs() / dist.mean() < 0.02,
+                "{} {:?}: mean {mean} vs {}",
+                dist.label(),
+                mode,
+                dist.mean()
+            );
+            // the sample-variance estimator needs a finite 4th moment
+            // to settle at n = 200k; Pareto(α=3) does not have one, so
+            // its spread is covered by the quantile grid above
+            if !matches!(dist, ServiceDist::Pareto { .. }) {
+                let var =
+                    sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / nf;
+                assert!(
+                    (var - dist.variance()).abs() / dist.variance() < 0.06,
+                    "{} {:?}: var {var} vs {}",
+                    dist.label(),
+                    mode,
+                    dist.variance()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn stratified_fill_is_super_uniform_on_the_stratum_grid() {
+    // slot i's CDF value lands in [i/n, (i+1)/n) by construction, so
+    // at every stratum boundary the empirical CDF is *exact* — far
+    // beyond the 3/sqrt(n) a plain fill can promise
+    let dist = ServiceDist::shifted_exp(0.1, 1.0);
+    let n = 10_000usize;
+    let (sorted, mode) = batch_sorted_reduced(&dist, n, 43, false);
+    assert_eq!(mode, FillMode::Stratified);
+    for i in (500..n).step_by(500) {
+        let q = i as f64 / n as f64;
+        let have = ecdf(&sorted, dist.quantile(q));
+        assert!(
+            (have - q).abs() <= 1.0 / n as f64 + 1e-12,
+            "stratum boundary q={q}: ecdf {have}"
+        );
+    }
+}
+
+#[test]
+fn antithetic_pairing_cuts_the_mean_estimator_variance() {
+    // the point of u/1−u pairing: for a monotone kernel the pair means
+    // are negatively correlated, so the batch-mean estimator must beat
+    // independent draws by a wide margin at equal draw count
+    let dist = ServiceDist::exp(1.0);
+    let sampler = Sampler::compile(&dist);
+    let (batches, width) = (400usize, 64usize);
+    let mut plain_means = Vec::with_capacity(batches);
+    let mut anti_means = Vec::with_capacity(batches);
+    let mut buf = vec![0.0; width];
+    let mut rng_plain = Pcg64::new(51);
+    let mut rng_anti = Pcg64::new(52);
+    for _ in 0..batches {
+        sampler.fill(&mut rng_plain, &mut buf);
+        plain_means.push(buf.iter().sum::<f64>() / width as f64);
+        assert_eq!(sampler.fill_antithetic(&mut rng_anti, &mut buf), FillMode::Antithetic);
+        anti_means.push(buf.iter().sum::<f64>() / width as f64);
+    }
+    let var_of = |xs: &[f64]| {
+        let m = xs.iter().sum::<f64>() / xs.len() as f64;
+        xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+    };
+    let (vp, va) = (var_of(&plain_means), var_of(&anti_means));
+    assert!(
+        va < vp / 2.0,
+        "antithetic batch-mean variance {va} not well below plain {vp}"
+    );
+}
+
+#[test]
+fn alias_and_rejection_families_fall_back_to_plain_fills_bitwise() {
+    // Gamma (rejection loop) and the alias-table families have no
+    // single-uniform inverse-CDF kernel; a variance-reduced fill
+    // request must degrade to exactly the plain fill — same draws,
+    // same RNG consumption — and report the fallback
+    let mut rng = Pcg64::new(3);
+    let base = ServiceDist::pareto(1.0, 2.5);
+    let observed: Vec<f64> = (0..100).map(|_| base.sample(&mut rng)).collect();
+    for dist in [
+        ServiceDist::gamma_dist(2.5, 0.8),
+        ServiceDist::bimodal(0.15, (0.1, 10.0), (5.0, 1.0)),
+        ServiceDist::empirical(observed),
+    ] {
+        let sampler = Sampler::compile(&dist);
+        let mut plain = vec![0.0; 1001];
+        sampler.fill(&mut Pcg64::new(17), &mut plain);
+        let mut reduced = vec![0.0; 1001];
+        assert_eq!(
+            sampler.fill_antithetic(&mut Pcg64::new(17), &mut reduced),
+            FillMode::Plain,
+            "{}",
+            dist.label()
+        );
+        assert_eq!(to_bits(&plain), to_bits(&reduced), "{} antithetic", dist.label());
+        assert_eq!(
+            sampler.fill_stratified(&mut Pcg64::new(17), &mut reduced),
+            FillMode::Plain,
+            "{}",
+            dist.label()
+        );
+        assert_eq!(to_bits(&plain), to_bits(&reduced), "{} stratified", dist.label());
+    }
+}
+
+fn to_bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn paired_spectrum_is_bit_identical_across_pool_widths() {
+    // the CRN spectrum shares one stream seed across every B; sharing
+    // must not reintroduce any thread-count dependence
+    let tau = ServiceDist::shifted_exp(0.1, 1.0);
+    let golden = Planner::new(12, tau.clone())
+        .sweep_paired_mc(&MonteCarlo { reps: 2_000, seed: 9, threads: 1 })
+        .unwrap();
+    for threads in [2usize, 4, 8] {
+        let spectrum = Planner::new(12, tau.clone())
+            .sweep_paired_mc(&MonteCarlo { reps: 2_000, seed: 9, threads })
+            .unwrap();
+        assert_eq!(spectrum.reference, golden.reference, "threads={threads}");
+        assert_eq!(spectrum.replications, golden.replications, "threads={threads}");
+        for (i, (a, b)) in golden.points.iter().zip(&spectrum.points).enumerate() {
+            let tag = format!("threads={threads} point {i}");
+            assert_eq!(a.point.batches, b.point.batches, "{tag}");
+            assert_eq!(a.point.mean.to_bits(), b.point.mean.to_bits(), "{tag} mean");
+            assert_eq!(a.point.ci95.to_bits(), b.point.ci95.to_bits(), "{tag} ci95");
+            assert_eq!(a.diff_mean.to_bits(), b.diff_mean.to_bits(), "{tag} diff");
+            assert_eq!(
+                a.diff_ci95.to_bits(),
+                b.diff_ci95.to_bits(),
+                "{tag} diff ci95"
+            );
+            assert_eq!(a.paired, b.paired, "{tag} paired");
+        }
+    }
 }
 
 #[test]

@@ -1,0 +1,25 @@
+//@path: src/eval/until.rs
+//! A precision-targeted stopping loop must be a function of the
+//! accumulated estimate alone; this one reads the wall clock and the
+//! process environment, so sharded and resumed runs would disagree.
+use std::time::Instant;
+
+pub fn until_ci95_wallclock(eps: f64, max: usize) -> usize {
+    let start = Instant::now();
+    let budget: u64 = match std::env::var("REPLICA_AUTO_BUDGET_SECS") {
+        Ok(v) => v.parse().unwrap_or(60),
+        Err(_) => 60,
+    };
+    let mut reps = 64usize.min(max);
+    loop {
+        let ci95 = wave_ci95(reps);
+        if ci95 <= eps || reps == max || start.elapsed().as_secs() >= budget {
+            return reps;
+        }
+        reps = reps.saturating_mul(2).min(max);
+    }
+}
+
+fn wave_ci95(reps: usize) -> f64 {
+    1.0 / reps as f64
+}

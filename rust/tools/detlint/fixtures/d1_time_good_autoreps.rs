@@ -1,0 +1,22 @@
+//@path: src/eval/until.rs
+//! The deterministic form of the same loop: waves double until the
+//! accumulated ci95 half-width meets the target or the rep ceiling —
+//! no clocks, no environment reads, so shards and resumes agree
+//! bitwise on the realized count.
+
+pub fn until_ci95(eps: f64, max: usize) -> usize {
+    let mut reps = 64usize.min(max);
+    loop {
+        let ci95 = wave_ci95(reps);
+        // NaN ci95 (fewer than two completions) compares false and
+        // keeps doubling toward the ceiling
+        if ci95 <= eps || reps == max {
+            return reps;
+        }
+        reps = reps.saturating_mul(2).min(max);
+    }
+}
+
+fn wave_ci95(reps: usize) -> f64 {
+    1.0 / reps as f64
+}

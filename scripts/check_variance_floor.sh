@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# Gate the variance efficiency of the paired (CRN) spectrum: to resolve
+# every B-vs-best difference to the same ±eps, common random numbers
+# must need at most 1/FLOOR of the replications that independent
+# per-scenario streams need on the same spec.
+#
+# Usage: scripts/check_variance_floor.sh [SPEC] [FLOOR]
+# The floor defaults to $CRN_REPS_FLOOR, then 5 — deliberately below
+# the ~10x typically measured, because both arms double their
+# replication counts in power-of-2 waves (a true 9x gain can quantize
+# down to 8x realized; it cannot quantize below 5x unless the real
+# gain is gone).
+set -euo pipefail
+SPEC="${1:-specs/trace_scale.json}"
+FLOOR="${2:-${CRN_REPS_FLOOR:-5}}"
+
+root="$(cd "$(dirname "$0")/.." && pwd)"
+bin="$root/rust/target/release/replica"
+if [ ! -x "$bin" ]; then
+  (cd "$root/rust" && cargo build --release)
+fi
+
+line="$("$bin" crn-bench --spec "$SPEC" --eps-rel 0.02 --max-reps 32768 --seed 0)"
+echo "$line"
+
+python3 - "$line" "$FLOOR" <<'EOF'
+import json
+import sys
+
+snap, floor = json.loads(sys.argv[1]), float(sys.argv[2])
+paired = snap["paired_reps"]
+independent = snap["independent_reps"]
+ratio = snap["ratio"]
+print(f"paired {paired} reps vs independent {independent} reps for "
+      f"eps {snap['eps']:.4g}: {ratio:.2f}x (floor {floor:.2f}x)")
+if independent < floor * paired:
+    sys.exit(f"FAIL: CRN used {paired} reps, independent streams "
+             f"{independent}; ratio {ratio:.2f}x is below the "
+             f"{floor:.2f}x variance-efficiency floor")
+print("OK: variance-efficiency floor holds")
+EOF
